@@ -1,0 +1,86 @@
+//! Quickstart: serve the real AOT-compiled model and run a handful of
+//! mixed-QoS requests through the full stack — Niyama scheduler, PJRT
+//! backend, streaming events.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the end-to-end validation driver recorded in EXPERIMENTS.md:
+//! real HLO execution on the request path, Python nowhere in sight.
+
+use niyama::config::{Config, HardwareModel};
+use niyama::engine::Engine;
+use niyama::qos::Importance;
+use niyama::runtime::{ModelRuntime, PjrtBackend};
+use niyama::server::{PromptSpec, ServeRequest, Server};
+use niyama::simulator::CostModel;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    if !Path::new(&artifacts).join("manifest.json").exists() {
+        anyhow::bail!("no artifacts at '{artifacts}' — run `make artifacts` first");
+    }
+
+    println!("starting server over {artifacts}/ ...");
+    let artifacts_dir = artifacts.clone();
+    let server = Server::start(move || {
+        let rt = ModelRuntime::load(Path::new(&artifacts_dir)).expect("load artifacts");
+        println!(
+            "model: {} params | chunk buckets {:?} | decode buckets {:?}",
+            rt.manifest.model.param_count,
+            rt.manifest.chunk_buckets(),
+            rt.manifest.decode_buckets()
+        );
+        let mut cfg = Config::default();
+        cfg.hardware = HardwareModel::tiny_cpu();
+        cfg.scheduler.max_chunk_size = rt.max_chunk() as u32;
+        cfg.scheduler.chunk_size = 64;
+        let scheduler = niyama::engine::build_scheduler(
+            &cfg,
+            Arc::new(CostModel::new(cfg.hardware.clone())),
+        );
+        Engine::new(&cfg, scheduler, PjrtBackend::new(rt))
+    });
+
+    // A chat-style interactive request, a summarization batch job, and a
+    // background job — the three Table-2 tiers.
+    let requests = [
+        ("interactive-chat", 0usize, 96u32, 12u32),
+        ("summarize-doc", 1, 256, 8),
+        ("background-gen", 2, 128, 10),
+    ];
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (name, tier, prompt_len, max_new) in requests {
+        let rx = server.client.submit(ServeRequest {
+            prompt: PromptSpec::Synthetic { len: prompt_len, seed: 42 },
+            tier,
+            max_new_tokens: max_new,
+            importance: Importance::High,
+        })?;
+        handles.push((name, rx));
+    }
+
+    for (name, rx) in handles {
+        let mut ttft = f64::NAN;
+        for ev in rx {
+            match ev {
+                niyama::server::Event::FirstToken { ttft_s } => ttft = ttft_s,
+                niyama::server::Event::Done { tokens, ttlt_s } => {
+                    println!(
+                        "{name:<18} ttft={ttft:.3}s ttlt={ttlt_s:.3}s tokens={:?}",
+                        &tokens[..tokens.len().min(8)]
+                    );
+                    break;
+                }
+            }
+        }
+    }
+    println!("total wall time: {:.2}s", t0.elapsed().as_secs_f64());
+    server.stop();
+    println!("quickstart OK");
+    Ok(())
+}

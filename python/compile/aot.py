@@ -1,0 +1,180 @@
+"""AOT compile path: lower the L2 model to HLO text for the Rust runtime.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Emits:
+
+  artifacts/
+    manifest.json          — model config, param contract, executable index
+    params.bin             — weights (see params_io.py)
+    prefill_c{C}.hlo.txt   — one per chunk-size bucket
+    decode_b{B}.hlo.txt    — one per decode-batch bucket
+
+HLO **text** is the interchange format, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs only here, at build time. The emitted artifacts are the entire
+model as far as the Rust serving binary is concerned.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .params_io import save_params
+
+# Chunk-size buckets for prefill executables. Dynamic chunking (L3)
+# quantizes its solved chunk size down to the nearest bucket. Must all be
+# <= ModelConfig.max_seq and multiples of the Pallas KV tile where
+# possible (smaller buckets are fine: the KV loop tiles the cache, not the
+# chunk).
+CHUNK_BUCKETS = (16, 32, 64, 128, 256)
+# Decode batch-size buckets; L3 pads the decode batch up to a bucket.
+DECODE_BUCKETS = (1, 2, 4, 8)
+
+PARAMS_SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: M.ModelConfig, chunk: int) -> str:
+    """Lower ``prefill_chunk`` for one chunk-size bucket.
+
+    Argument order (the Rust contract): ``*params, kv, tokens, cache_len,
+    valid_len`` — params in ``param_entries`` order. Returns a 1-tuple
+    ``(last_logits, new_kv)``.
+    """
+    entries = M.param_entries(cfg)
+    n = len(entries)
+
+    def fn(*args):
+        params = list(args[:n])
+        kv, tokens, cache_len, valid_len = args[n:]
+        return M.prefill_chunk(cfg, params, kv, tokens, cache_len, valid_len)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in entries]
+    specs += [
+        jax.ShapeDtypeStruct(cfg.kv_cache_shape(), jnp.float32),
+        jax.ShapeDtypeStruct((chunk,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> str:
+    """Lower ``decode_step`` for one batch-size bucket.
+
+    Argument order: ``*params, kv, tokens, positions``. Returns
+    ``(logits, new_kv)``.
+    """
+    entries = M.param_entries(cfg)
+    n = len(entries)
+
+    def fn(*args):
+        params = list(args[:n])
+        kv, tokens, positions = args[n:]
+        return M.decode_step(cfg, params, kv, tokens, positions)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in entries]
+    specs += [
+        jax.ShapeDtypeStruct((batch,) + cfg.kv_cache_shape(), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_manifest(cfg: M.ModelConfig, chunks, batches):
+    entries = M.param_entries(cfg)
+    return {
+        "format_version": 1,
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "param_count": cfg.param_count(),
+        },
+        "params_file": "params.bin",
+        "param_order": [name for name, _ in entries],
+        "kv_cache_shape": list(cfg.kv_cache_shape()),
+        "executables": (
+            [
+                {
+                    "name": f"prefill_c{c}",
+                    "kind": "prefill",
+                    "chunk": c,
+                    "file": f"prefill_c{c}.hlo.txt",
+                }
+                for c in chunks
+            ]
+            + [
+                {
+                    "name": f"decode_b{b}",
+                    "kind": "decode",
+                    "batch": b,
+                    "file": f"decode_b{b}.hlo.txt",
+                }
+                for b in batches
+            ]
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--chunks", type=int, nargs="*", default=list(CHUNK_BUCKETS))
+    ap.add_argument("--batches", type=int, nargs="*", default=list(DECODE_BUCKETS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    print(f"model: {cfg.param_count()} params, kv cache {cfg.kv_cache_shape()}")
+
+    params = M.init_params(jax.random.PRNGKey(PARAMS_SEED), cfg)
+    named = [(name, np.asarray(p)) for (name, _), p in zip(M.param_entries(cfg), params)]
+    save_params(os.path.join(args.out_dir, "params.bin"), named)
+    print(f"wrote params.bin ({sum(a.nbytes for _, a in named)} bytes)")
+
+    for c in args.chunks:
+        text = lower_prefill(cfg, c)
+        path = os.path.join(args.out_dir, f"prefill_c{c}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b in args.batches:
+        text = lower_decode(cfg, b)
+        path = os.path.join(args.out_dir, f"decode_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = build_manifest(cfg, args.chunks, args.batches)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

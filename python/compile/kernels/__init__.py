@@ -1,0 +1,5 @@
+"""Layer-1 Pallas kernels for the Niyama serving stack."""
+
+from .chunked_attention import chunked_attention, decode_attention
+
+__all__ = ["chunked_attention", "decode_attention"]

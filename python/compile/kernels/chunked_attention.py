@@ -1,0 +1,177 @@
+"""Layer-1 Pallas kernels: the chunked-prefill serving hot-spot.
+
+Two kernels, both flash-attention style (single pass, online softmax):
+
+- ``chunked_attention``: a C-token prefill chunk attends over the KV cache
+  prefix plus itself (causal within the chunk). This is the kernel behind
+  Sarathi-style chunked prefills — the operation whose cost/chunk-size
+  tradeoff (paper Fig. 4) Niyama's dynamic chunking exploits.
+- ``decode_attention``: batched single-token decode attention with
+  per-sequence cache lengths.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the Q-chunk tile lives in
+VMEM for the whole kernel while KV streams through in ``KV_TILE``-sized
+blocks — the BlockSpec expression of what a CUDA implementation does with
+threadblock shared-memory staging. Lowered with ``interpret=True`` so the
+emitted HLO runs on any PJRT backend (the CPU plugin cannot execute Mosaic
+custom-calls); on a real TPU the same kernel body compiles via Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+# KV tile length for the online-softmax loop. 128 keys * 32 head-dim * 4 B
+# * 2 (K and V) = 32 KiB per tile — two tiles double-buffered stay well
+# under a TPU core's ~16 MiB VMEM alongside a 512-token Q chunk (64 KiB).
+KV_TILE = 128
+
+
+def _chunked_attention_kernel(q_ref, k_ref, v_ref, cache_len_ref, o_ref, *, kv_tile):
+    """One grid step = one query head; streams KV tiles with online softmax.
+
+    Refs (blocked shapes):
+      q_ref: (C, 1, D)   — this head's query chunk.
+      k_ref: (1, S, D)   — this head's KV-group key cache.
+      v_ref: (1, S, D)
+      cache_len_ref: (1, 1) int32 — tokens already cached before the chunk.
+      o_ref: (C, 1, D)
+    """
+    c, _, d = q_ref.shape
+    _, s, _ = k_ref.shape
+    q = q_ref[:, 0, :]  # (C, D)
+    cache_len = cache_len_ref[0, 0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    q_pos = cache_len + jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)  # (C,1)
+
+    num_tiles = s // kv_tile
+
+    def body(t, carry):
+        m, l, acc = carry
+        k_t = pl.load(k_ref, (0, pl.dslice(t * kv_tile, kv_tile), slice(None)))
+        v_t = pl.load(v_ref, (0, pl.dslice(t * kv_tile, kv_tile), slice(None)))
+        scores = jnp.dot(q, k_t.T) * scale  # (C, T)
+        k_pos = t * kv_tile + jax.lax.broadcasted_iota(jnp.int32, (1, kv_tile), 1)
+        mask = k_pos <= q_pos  # causal incl. self
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))  # (C,)
+        # Explicitly zero masked probabilities: on an all-masked tile
+        # exp(NEG_INF - NEG_INF) would otherwise contribute 1.
+        p = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)  # (C, T)
+        corr = jnp.exp(m - m_new)  # (C,)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(p, v_t)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((c,), jnp.float32)
+    acc0 = jnp.zeros((c, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_tiles, body, (m0, l0, acc0))
+    # Causality guarantees >=1 valid key per row (key j=0 for every query),
+    # so l > 0.
+    o_ref[:, 0, :] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("kv_tile", "interpret"))
+def chunked_attention(q, k, v, cache_len, valid_len, *, kv_tile=KV_TILE, interpret=True):
+    """Chunked-prefill attention.
+
+    Args:
+      q: (C, Hq, D) query chunk (RoPE already applied).
+      k: (Hkv, S, D) key cache; chunk keys already written at
+        ``cache_len..cache_len+valid_len``.
+      v: (Hkv, S, D) value cache.
+      cache_len: scalar int32 — cache tokens preceding this chunk.
+      valid_len: scalar int32 — real tokens in the chunk; padded rows are
+        zeroed in the output.
+
+    Returns:
+      (C, Hq, D) float32 attention output.
+    """
+    c, hq, d = q.shape
+    hkv, s, _ = k.shape
+    assert hq % hkv == 0, "query heads must be a multiple of KV heads"
+    assert s % kv_tile == 0, "cache capacity must be a multiple of the KV tile"
+    group = hq // hkv
+    cache_len_arr = jnp.reshape(cache_len.astype(jnp.int32), (1, 1))
+
+    kernel = functools.partial(_chunked_attention_kernel, kv_tile=kv_tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=(hq,),
+        in_specs=[
+            pl.BlockSpec((c, 1, d), lambda h: (0, h, 0)),  # q: one head
+            pl.BlockSpec((1, s, d), lambda h: (h // group, 0, 0)),  # k: KV group
+            pl.BlockSpec((1, s, d), lambda h: (h // group, 0, 0)),  # v
+            pl.BlockSpec((1, 1), lambda h: (0, 0)),  # cache_len
+        ],
+        out_specs=pl.BlockSpec((c, 1, d), lambda h: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, hq, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, cache_len_arr)
+
+    pad = jnp.arange(c)[:, None, None] < valid_len
+    return jnp.where(pad, out, 0.0)
+
+
+def _decode_attention_kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+    """One grid step = one (sequence, head) pair.
+
+    Refs (blocked shapes):
+      q_ref: (1, 1, D)     — this sequence+head's query vector.
+      k_ref: (1, 1, S, D)  — its KV-group key cache.
+      v_ref: (1, 1, S, D)
+      len_ref: (1, 1) int32 — valid cache length (incl. current token).
+      o_ref: (1, 1, D)
+    """
+    _, _, s, d = k_ref.shape
+    q = q_ref[0, 0, :]  # (D,)
+    k = k_ref[0, 0]  # (S, D)
+    v = v_ref[0, 0]
+    length = len_ref[0, 0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    scores = jnp.dot(k, q) * scale  # (S,)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (s,), 0)
+    mask = k_pos < length
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = scores.max()
+    p = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    o_ref[0, 0, :] = jnp.dot(p, v) / p.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k, v, lengths, *, interpret=True):
+    """Batched single-token decode attention.
+
+    Args:
+      q: (B, Hq, D) current-token queries (RoPE applied).
+      k: (B, Hkv, S, D) key caches (current token's key already written).
+      v: (B, Hkv, S, D) value caches.
+      lengths: (B,) int32 — valid cache length per sequence, >= 1.
+
+    Returns:
+      (B, Hq, D) float32 attention output.
+    """
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    len_arr = lengths.astype(jnp.int32).reshape(b, 1)
+
+    return pl.pallas_call(
+        _decode_attention_kernel,
+        grid=(b, hq),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, h: (i, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, h: (i, h // group, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, h: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, len_arr)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: deliberately naive, numerically
+transparent implementations that pytest/hypothesis compare the Pallas
+kernels against. Nothing here is ever lowered into the serving artifacts.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_attention_ref(q, k, v, cache_len, valid_len):
+    """Reference chunked-prefill attention.
+
+    A chunk of ``C`` query tokens (positions ``cache_len .. cache_len+C-1``)
+    attends over the KV cache ``k``/``v`` of capacity ``S``. Entry ``j`` of
+    the cache is a valid key for query ``i`` iff ``j <= cache_len + i``
+    (causal, including the chunk's own freshly-written keys). Queries at
+    index ``i >= valid_len`` are padding; their output is zeroed.
+
+    Args:
+      q: (C, Hq, D) query chunk.
+      k: (Hkv, S, D) key cache (chunk keys already written at
+         ``cache_len..``).
+      v: (Hkv, S, D) value cache.
+      cache_len: scalar int32 — tokens already in the cache before this
+         chunk.
+      valid_len: scalar int32 — number of real (non-pad) tokens in the
+         chunk.
+
+    Returns:
+      (C, Hq, D) attention output.
+    """
+    c, hq, d = q.shape
+    hkv, s, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    q_pos = cache_len + jnp.arange(c)  # (C,)
+    k_pos = jnp.arange(s)  # (S,)
+    causal = k_pos[None, :] <= q_pos[:, None]  # (C, S)
+
+    outs = []
+    for h in range(hq):
+        kh = k[h // group]  # (S, D)
+        vh = v[h // group]
+        scores = (q[:, h, :] @ kh.T) * scale  # (C, S)
+        scores = jnp.where(causal, scores, NEG_INF)
+        probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+        probs = probs / probs.sum(axis=-1, keepdims=True)
+        outs.append(probs @ vh)  # (C, D)
+    out = jnp.stack(outs, axis=1)  # (C, Hq, D)
+
+    pad = jnp.arange(c)[:, None, None] < valid_len
+    return jnp.where(pad, out, 0.0)
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Reference single-token batched decode attention.
+
+    Each sequence ``b`` has one query vector attending over its first
+    ``lengths[b]`` cache entries (which already include the current
+    token's key/value).
+
+    Args:
+      q: (B, Hq, D) one query token per sequence.
+      k: (B, Hkv, S, D) key caches.
+      v: (B, Hkv, S, D) value caches.
+      lengths: (B,) int32 — valid cache length per sequence (>= 1).
+
+    Returns:
+      (B, Hq, D) attention output.
+    """
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    k_pos = jnp.arange(s)  # (S,)
+    mask = k_pos[None, :] < lengths[:, None]  # (B, S)
+
+    outs = []
+    for h in range(hq):
+        kh = k[:, h // group]  # (B, S, D)
+        vh = v[:, h // group]
+        scores = jnp.einsum("bd,bsd->bs", q[:, h, :], kh) * scale  # (B, S)
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+        probs = probs / probs.sum(axis=-1, keepdims=True)
+        outs.append(jnp.einsum("bs,bsd->bd", probs, vh))
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,299 @@
+"""Layer-2 JAX model: a small Llama-style decoder served by the Rust stack.
+
+Two entry points are AOT-lowered to HLO text by ``aot.py`` and executed by
+the Rust runtime on the request path:
+
+- ``prefill_chunk`` — processes one chunk of a request's prompt against its
+  KV cache. Compiled once per chunk-size bucket; Niyama's dynamic chunking
+  (L3) picks the bucket per iteration.
+- ``decode_step``  — one auto-regressive step over a batch of sequences.
+  Compiled once per batch-size bucket.
+
+Both call the Layer-1 Pallas attention kernels so the whole hot path lowers
+into a single HLO module per variant. Everything is float32: the CPU PJRT
+plugin used for validation has no bf16 fast path, and the model is small
+enough that numerics-transparent f32 is the right default for a
+correctness substrate (a TPU build would flip matmuls to bf16).
+
+Parameter layout contract with Rust: ``param_entries`` defines the flat
+argument order; ``aot.py`` writes the same order into ``params.bin`` and
+``manifest.json`` and the Rust runtime feeds buffers back in that order.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chunked_attention, decode_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of the served model.
+
+    Defaults give a ~7.7M-parameter model: large enough to be a real
+    transformer with GQA + RoPE + SwiGLU, small enough that the CPU PJRT
+    validation path serves it interactively.
+    """
+
+    vocab_size: int = 8192
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 768
+    max_seq: int = 640
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def kv_cache_shape(self):
+        """Per-sequence KV cache: (layers, k/v, kv_heads, max_seq, head_dim)."""
+        return (self.n_layers, 2, self.n_kv_heads, self.max_seq, self.head_dim)
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_entries(self))
+
+
+def param_entries(cfg: ModelConfig):
+    """Flat (name, shape) list — THE parameter-ordering contract with Rust."""
+    entries = [("embed", (cfg.vocab_size, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        entries += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.q_dim)),
+            (p + "wk", (cfg.d_model, cfg.kv_dim)),
+            (p + "wv", (cfg.d_model, cfg.kv_dim)),
+            (p + "wo", (cfg.q_dim, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ff)),
+            (p + "w_up", (cfg.d_model, cfg.d_ff)),
+            (p + "w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    entries += [
+        ("final_norm", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab_size)),
+    ]
+    return entries
+
+
+def init_params(key, cfg: ModelConfig):
+    """Initialize parameters as a flat list of arrays in contract order."""
+    entries = param_entries(cfg)
+    keys = jax.random.split(key, len(entries))
+    params = []
+    for k, (name, shape) in zip(keys, entries):
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params.append(jax.random.normal(k, shape, jnp.float32) * scale)
+    return params
+
+
+def _unflatten(cfg: ModelConfig, flat):
+    """Rebuild the structured view from the flat contract-order list."""
+    it = iter(flat)
+    embed = next(it)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            dict(
+                attn_norm=next(it),
+                wq=next(it),
+                wk=next(it),
+                wv=next(it),
+                wo=next(it),
+                mlp_norm=next(it),
+                w_gate=next(it),
+                w_up=next(it),
+                w_down=next(it),
+            )
+        )
+    final_norm = next(it)
+    lm_head = next(it)
+    return embed, layers, final_norm, lm_head
+
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta):
+    """Rotary position embedding over the last (head_dim) axis.
+
+    Args:
+      x: (..., T, H, D) with D even.
+      positions: (T,) int32 absolute positions.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)  # (half,)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (T, half)
+    cos = jnp.cos(angles)[..., None, :]  # (T, 1, half) broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _layer_prefill(layer, cfg, x, kv_layer, cache_len, valid_len, interpret):
+    """One transformer layer over a prefill chunk. Returns (x, new_kv_layer)."""
+    c = x.shape[0]
+    positions = cache_len + jnp.arange(c, dtype=jnp.int32)
+
+    h = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+    q = (h @ layer["wq"]).reshape(c, cfg.n_heads, cfg.head_dim)
+    k = (h @ layer["wk"]).reshape(c, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ layer["wv"]).reshape(c, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    # Write the chunk's K/V into the cache at cache_len (layout Hkv,S,D).
+    k_cache = jax.lax.dynamic_update_slice(
+        kv_layer[0], jnp.transpose(k, (1, 0, 2)), (0, cache_len, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        kv_layer[1], jnp.transpose(v, (1, 0, 2)), (0, cache_len, 0)
+    )
+
+    attn = chunked_attention(q, k_cache, v_cache, cache_len, valid_len, interpret=interpret)
+    x = x + attn.reshape(c, cfg.q_dim) @ layer["wo"]
+
+    h = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+    x = x + (jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])) @ layer["w_down"]
+    return x, jnp.stack([k_cache, v_cache])
+
+
+def prefill_chunk(cfg: ModelConfig, flat_params, kv, tokens, cache_len, valid_len, *, interpret=True):
+    """Process one prefill chunk of a single sequence.
+
+    Args:
+      flat_params: parameter arrays in ``param_entries`` order.
+      kv: (L, 2, Hkv, S, D) this sequence's KV cache.
+      tokens: (C,) int32 chunk token ids (padded to the bucket size).
+      cache_len: (1,) int32 — tokens already in the cache.
+      valid_len: (1,) int32 — real tokens in this chunk.
+
+    Returns:
+      (last_logits, new_kv): logits of the last valid token (V,) and the
+      updated cache. ``last_logits`` is only meaningful on the final chunk
+      of a prompt, where Rust uses it to sample the first output token.
+    """
+    embed, layers, final_norm, lm_head = _unflatten(cfg, flat_params)
+    cache_len = cache_len.reshape(())
+    valid_len = valid_len.reshape(())
+
+    x = embed[tokens]  # (C, d_model)
+    new_kv = []
+    for i, layer in enumerate(layers):
+        x, kv_layer = _layer_prefill(layer, cfg, x, kv[i], cache_len, valid_len, interpret)
+        new_kv.append(kv_layer)
+
+    x = rms_norm(x, final_norm, cfg.norm_eps)
+    last = jax.lax.dynamic_index_in_dim(x, valid_len - 1, axis=0, keepdims=False)
+    logits = last @ lm_head  # (V,)
+    return logits, jnp.stack(new_kv)
+
+
+def _layer_decode(layer, cfg, x, kv_layer, positions, interpret):
+    """One transformer layer over a batch of single decode tokens.
+
+    Args:
+      x: (B, d_model) current-token activations.
+      kv_layer: (B, 2, Hkv, S, D).
+      positions: (B,) int32 — this token's position (== cache len before it).
+    """
+    b = x.shape[0]
+    h = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+    q = (h @ layer["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+    k = (h @ layer["wk"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ layer["wv"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+
+    # RoPE on a per-sequence position: vmap the (T=1) case.
+    rope1 = jax.vmap(lambda xi, p: rope(xi[None], p[None], cfg.rope_theta)[0])
+    q = rope1(q, positions)
+    k = rope1(k, positions)
+
+    # Write this token's K/V at its position in each sequence's cache.
+    def write(cache, kv_new, pos):
+        # cache: (Hkv, S, D); kv_new: (Hkv, D)
+        return jax.lax.dynamic_update_slice(cache, kv_new[:, None, :], (0, pos, 0))
+
+    k_cache = jax.vmap(write)(kv_layer[:, 0], k, positions)
+    v_cache = jax.vmap(write)(kv_layer[:, 1], v, positions)
+
+    attn = decode_attention(q, k_cache, v_cache, positions + 1, interpret=interpret)
+    x = x + attn.reshape(b, cfg.q_dim) @ layer["wo"]
+
+    h = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+    x = x + (jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])) @ layer["w_down"]
+    return x, jnp.stack([k_cache, v_cache], axis=1)
+
+
+def decode_step(cfg: ModelConfig, flat_params, kv, tokens, positions, *, interpret=True):
+    """One auto-regressive step for a batch of sequences.
+
+    Args:
+      kv: (B, L, 2, Hkv, S, D) per-sequence caches.
+      tokens: (B,) int32 current input token per sequence.
+      positions: (B,) int32 position of that token (cache length before it).
+        Inactive (padding) slots should pass position 0; their outputs are
+        ignored by Rust.
+
+    Returns:
+      (logits, new_kv): (B, V) next-token logits and updated caches.
+    """
+    embed, layers, final_norm, lm_head = _unflatten(cfg, flat_params)
+    x = embed[tokens]  # (B, d_model)
+    new_kv = []
+    for i, layer in enumerate(layers):
+        x, kv_layer = _layer_decode(layer, cfg, x, kv[:, i], positions, interpret)
+        new_kv.append(kv_layer)
+    x = rms_norm(x, final_norm, cfg.norm_eps)
+    logits = x @ lm_head  # (B, V)
+    return logits, jnp.stack(new_kv, axis=1)
+
+
+def reference_forward(cfg: ModelConfig, flat_params, tokens):
+    """Full-sequence forward pass used only by tests as an oracle.
+
+    Computes logits for every position of ``tokens`` (T,) with ordinary
+    dense causal attention — no cache, no chunking, no Pallas.
+    """
+    embed, layers, final_norm, lm_head = _unflatten(cfg, flat_params)
+    t = tokens.shape[0]
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = embed[tokens]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    group = cfg.n_heads // cfg.n_kv_heads
+
+    for layer in layers:
+        h = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        q = rope((h @ layer["wq"]).reshape(t, cfg.n_heads, cfg.head_dim), positions, cfg.rope_theta)
+        k = rope((h @ layer["wk"]).reshape(t, cfg.n_kv_heads, cfg.head_dim), positions, cfg.rope_theta)
+        v = (h @ layer["wv"]).reshape(t, cfg.n_kv_heads, cfg.head_dim)
+        k = jnp.repeat(k, group, axis=1)  # expand GQA groups
+        v = jnp.repeat(v, group, axis=1)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+        scores = jnp.where(mask[None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", probs, v)
+        x = x + attn.reshape(t, cfg.q_dim) @ layer["wo"]
+        h = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + (jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])) @ layer["w_down"]
+
+    return rms_norm(x, final_norm, cfg.norm_eps) @ lm_head

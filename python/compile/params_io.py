@@ -1,0 +1,63 @@
+"""Binary parameter serialization shared with the Rust runtime.
+
+Format of ``artifacts/params.bin`` (all little-endian):
+
+    magic   b"NYMP"
+    version u32           (currently 1)
+    count   u32           number of tensors
+    then per tensor, in ``param_entries`` contract order:
+      name_len u32, name  utf-8 bytes
+      dtype    u32        (0 = f32, 1 = i32)
+      ndim     u32, dims  u64 * ndim
+      nbytes   u64, data  raw bytes (row-major)
+
+The Rust reader is ``rust/src/runtime/params.rs``; keep the two in sync.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"NYMP"
+VERSION = 1
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def save_params(path, named_arrays):
+    """Write ``[(name, np.ndarray), ...]`` to ``path`` in contract order."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(named_arrays)))
+        for name, arr in named_arrays:
+            arr = np.ascontiguousarray(arr)
+            code = _DTYPES[arr.dtype]
+            name_b = name.encode("utf-8")
+            f.write(struct.pack("<I", len(name_b)))
+            f.write(name_b)
+            f.write(struct.pack("<II", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load_params(path):
+    """Read the file back as ``[(name, np.ndarray), ...]`` (test round-trip)."""
+    inv = {v: k for k, v in _DTYPES.items()}
+    out = []
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError("bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"unsupported version {version}")
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<II", f.read(8))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            arr = np.frombuffer(f.read(nbytes), dtype=inv[code]).reshape(dims)
+            out.append((name, arr))
+    return out

@@ -1,0 +1,145 @@
+"""AOT pipeline tests: params serialization round-trip, manifest schema,
+and — critically — that the emitted HLO text parses and yields the same
+numbers as the jitted jax function (the exact path Rust executes).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as M
+from compile.params_io import load_params, save_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = M.ModelConfig(
+    vocab_size=64,
+    d_model=32,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=48,
+    max_seq=128,
+)
+
+
+class TestParamsIO:
+    def test_round_trip(self, tmp_path):
+        params = M.init_params(jax.random.PRNGKey(0), SMALL)
+        named = [(n, np.asarray(p)) for (n, _), p in zip(M.param_entries(SMALL), params)]
+        path = tmp_path / "params.bin"
+        save_params(path, named)
+        loaded = load_params(path)
+        assert [n for n, _ in loaded] == [n for n, _ in named]
+        for (_, a), (_, b) in zip(named, loaded):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(a, b)
+
+    def test_rejects_bad_magic(self, tmp_path):
+        path = tmp_path / "bad.bin"
+        path.write_bytes(b"XXXX" + b"\0" * 16)
+        with pytest.raises(ValueError, match="magic"):
+            load_params(path)
+
+    def test_int32_tensors(self, tmp_path):
+        path = tmp_path / "p.bin"
+        save_params(path, [("idx", np.arange(7, dtype=np.int32))])
+        [(name, arr)] = load_params(path)
+        assert name == "idx" and arr.dtype == np.int32
+        np.testing.assert_array_equal(arr, np.arange(7))
+
+
+class TestManifest:
+    def test_schema(self):
+        man = aot.build_manifest(SMALL, [16, 32], [1, 2])
+        assert man["format_version"] == 1
+        assert man["model"]["param_count"] == SMALL.param_count()
+        assert man["param_order"] == [n for n, _ in M.param_entries(SMALL)]
+        kinds = [(e["kind"], e.get("chunk") or e.get("batch")) for e in man["executables"]]
+        assert kinds == [("prefill", 16), ("prefill", 32), ("decode", 1), ("decode", 2)]
+        assert man["kv_cache_shape"] == list(SMALL.kv_cache_shape())
+
+    def test_manifest_is_json_serializable(self):
+        json.dumps(aot.build_manifest(SMALL, list(aot.CHUNK_BUCKETS), list(aot.DECODE_BUCKETS)))
+
+
+class TestHloRoundTrip:
+    """Lower -> HLO text -> parse -> compile -> execute == direct jax call.
+
+    Mirrors what the Rust runtime does with the same artifact (text parse,
+    compile on a CPU PJRT client, execute with concrete buffers).
+    """
+
+    def _exec_text(self, text, np_args):
+        from jax._src.interpreters import mlir as jmlir
+        from jax._src.lib.mlir import ir
+
+        module = xc._xla.hlo_module_from_text(text)
+        stablehlo_bc = xc._xla.mlir.hlo_to_stablehlo(
+            module.as_serialized_hlo_module_proto()
+        )
+        with jmlir.make_ir_context():
+            mlir_text = str(ir.Module.parse(stablehlo_bc))
+        backend = jax.devices("cpu")[0].client
+        devs = xc._xla.DeviceList(tuple(backend.local_devices()))
+        exe = backend.compile_and_load(mlir_text, devs)
+        bufs = [backend.buffer_from_pyval(np.ascontiguousarray(a)) for a in np_args]
+        return [np.asarray(o) for o in exe.execute(bufs)]
+
+    def test_prefill_hlo_matches_jax(self):
+        chunk = 16
+        text = aot.lower_prefill(SMALL, chunk)
+        params = M.init_params(jax.random.PRNGKey(0), SMALL)
+        kv = jnp.zeros(SMALL.kv_cache_shape(), jnp.float32)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (chunk,), 0, SMALL.vocab_size)
+        cache_len = jnp.array([0], jnp.int32)
+        valid_len = jnp.array([10], jnp.int32)
+
+        want_logits, want_kv = M.prefill_chunk(
+            SMALL, params, kv, tokens, cache_len, valid_len
+        )
+        np_args = [np.asarray(p) for p in params] + [
+            np.asarray(kv), np.asarray(tokens), np.asarray(cache_len), np.asarray(valid_len)
+        ]
+        outs = self._exec_text(text, np_args)
+        # return_tuple=True -> a single tuple result, which the python
+        # client returns as a flat list of its elements.
+        assert len(outs) == 2
+        np.testing.assert_allclose(outs[0], want_logits, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(outs[1], want_kv, rtol=1e-4, atol=1e-4)
+
+    def test_decode_hlo_matches_jax(self):
+        batch = 2
+        text = aot.lower_decode(SMALL, batch)
+        params = M.init_params(jax.random.PRNGKey(0), SMALL)
+        kv = jax.random.normal(
+            jax.random.PRNGKey(2), (batch,) + SMALL.kv_cache_shape(), jnp.float32
+        ) * 0.1
+        tokens = jnp.array([3, 9], jnp.int32)
+        positions = jnp.array([5, 17], jnp.int32)
+
+        want_logits, want_kv = M.decode_step(SMALL, params, kv, tokens, positions)
+        np_args = [np.asarray(p) for p in params] + [
+            np.asarray(kv), np.asarray(tokens), np.asarray(positions)
+        ]
+        outs = self._exec_text(text, np_args)
+        assert len(outs) == 2
+        np.testing.assert_allclose(outs[0], want_logits, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(outs[1], want_kv, rtol=1e-4, atol=1e-4)
+
+    def test_hlo_text_has_no_custom_calls(self):
+        """interpret=True must lower Pallas to plain HLO — a Mosaic
+        custom-call would be unloadable by the CPU PJRT plugin."""
+        text = aot.lower_prefill(SMALL, 16)
+        assert "custom-call" not in text, "found custom-call in lowered HLO"
+
+    def test_bucket_lists_sane(self):
+        assert list(aot.CHUNK_BUCKETS) == sorted(set(aot.CHUNK_BUCKETS))
+        assert list(aot.DECODE_BUCKETS) == sorted(set(aot.DECODE_BUCKETS))
+        assert max(aot.CHUNK_BUCKETS) <= M.ModelConfig().max_seq

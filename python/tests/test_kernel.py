@@ -1,0 +1,184 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes / cache states; fixed cases pin the edge
+conditions (empty cache, full cache, single-token chunk, padded chunk).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import chunked_attention, decode_attention
+from compile.kernels.ref import chunked_attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def mk_chunk_inputs(seed, c, hq, hkv, d, s, cache_len, valid_len):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (c, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (hkv, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (hkv, s, d), jnp.float32)
+    return q, k, v, jnp.int32(cache_len), jnp.int32(valid_len)
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("c", [1, 8, 16, 64])
+    def test_matches_ref_basic(self, c):
+        q, k, v, cl, vl = mk_chunk_inputs(0, c, 8, 4, 32, 256, 64, c)
+        np.testing.assert_allclose(
+            chunked_attention(q, k, v, cl, vl), chunked_attention_ref(q, k, v, cl, vl), **TOL
+        )
+
+    def test_empty_cache(self):
+        """First chunk of a prompt: cache_len = 0."""
+        q, k, v, cl, vl = mk_chunk_inputs(1, 16, 8, 4, 32, 128, 0, 16)
+        np.testing.assert_allclose(
+            chunked_attention(q, k, v, cl, vl), chunked_attention_ref(q, k, v, cl, vl), **TOL
+        )
+
+    def test_chunk_fills_cache_exactly(self):
+        """Chunk ends exactly at cache capacity."""
+        s, c = 256, 32
+        q, k, v, cl, vl = mk_chunk_inputs(2, c, 8, 4, 32, s, s - c, c)
+        np.testing.assert_allclose(
+            chunked_attention(q, k, v, cl, vl), chunked_attention_ref(q, k, v, cl, vl), **TOL
+        )
+
+    def test_padded_chunk_rows_zeroed(self):
+        """Rows past valid_len are exactly zero."""
+        q, k, v, cl, vl = mk_chunk_inputs(3, 32, 8, 4, 32, 256, 10, 5)
+        out = np.asarray(chunked_attention(q, k, v, cl, vl))
+        assert np.all(out[5:] == 0.0)
+        np.testing.assert_allclose(out, chunked_attention_ref(q, k, v, cl, vl), **TOL)
+
+    def test_mha_no_gqa(self):
+        """Hq == Hkv (plain multi-head) must also work."""
+        q, k, v, cl, vl = mk_chunk_inputs(4, 16, 4, 4, 16, 128, 32, 16)
+        np.testing.assert_allclose(
+            chunked_attention(q, k, v, cl, vl), chunked_attention_ref(q, k, v, cl, vl), **TOL
+        )
+
+    def test_causality_first_token_attends_only_itself(self):
+        """With cache_len=0, query 0 sees only key 0: its output equals v[...,0,:]."""
+        q, k, v, cl, vl = mk_chunk_inputs(5, 8, 8, 4, 32, 128, 0, 8)
+        out = np.asarray(chunked_attention(q, k, v, cl, vl))
+        for h in range(8):
+            np.testing.assert_allclose(out[0, h], np.asarray(v)[h // 2, 0], **TOL)
+
+    def test_future_keys_ignored(self):
+        """Garbage beyond the causal frontier must not change the output."""
+        q, k, v, cl, vl = mk_chunk_inputs(6, 16, 8, 4, 32, 256, 20, 16)
+        out1 = chunked_attention(q, k, v, cl, vl)
+        k2 = k.at[:, 40:, :].set(1e6)  # beyond cache_len + c = 36
+        v2 = v.at[:, 40:, :].set(-1e6)
+        out2 = chunked_attention(q, k2, v2, cl, vl)
+        np.testing.assert_allclose(out1, out2, **TOL)
+
+    @hypothesis.settings(deadline=None, max_examples=25)
+    @hypothesis.given(
+        c=st.sampled_from([1, 4, 16, 32]),
+        heads=st.sampled_from([(2, 1), (4, 2), (8, 4), (4, 4)]),
+        d=st.sampled_from([8, 16, 32]),
+        s_tiles=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+        data=st.data(),
+    )
+    def test_hypothesis_sweep(self, c, heads, d, s_tiles, seed, data):
+        hq, hkv = heads
+        s = 128 * s_tiles
+        cache_len = data.draw(st.integers(0, s - c))
+        valid_len = data.draw(st.integers(1, c))
+        q, k, v, cl, vl = mk_chunk_inputs(seed, c, hq, hkv, d, s, cache_len, valid_len)
+        np.testing.assert_allclose(
+            chunked_attention(q, k, v, cl, vl),
+            chunked_attention_ref(q, k, v, cl, vl),
+            **TOL,
+        )
+
+
+def mk_decode_inputs(seed, b, hq, hkv, d, s, lengths):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32)
+    return q, k, v, jnp.asarray(lengths, jnp.int32)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b", [1, 2, 4, 8])
+    def test_matches_ref_basic(self, b):
+        lens = [(i * 37) % 200 + 1 for i in range(b)]
+        q, k, v, ln = mk_decode_inputs(0, b, 8, 4, 32, 256, lens)
+        np.testing.assert_allclose(
+            decode_attention(q, k, v, ln), decode_attention_ref(q, k, v, ln), **TOL
+        )
+
+    def test_length_one(self):
+        """A sequence whose cache holds only the current token."""
+        q, k, v, ln = mk_decode_inputs(1, 2, 8, 4, 32, 128, [1, 1])
+        out = np.asarray(decode_attention(q, k, v, ln))
+        for b in range(2):
+            for h in range(8):
+                np.testing.assert_allclose(out[b, h], np.asarray(v)[b, h // 2, 0], **TOL)
+
+    def test_full_cache(self):
+        q, k, v, ln = mk_decode_inputs(2, 2, 8, 4, 32, 128, [128, 128])
+        np.testing.assert_allclose(
+            decode_attention(q, k, v, ln), decode_attention_ref(q, k, v, ln), **TOL
+        )
+
+    def test_stale_cache_ignored(self):
+        """Entries beyond lengths[b] must not affect the result."""
+        q, k, v, ln = mk_decode_inputs(3, 2, 8, 4, 32, 128, [10, 20])
+        out1 = decode_attention(q, k, v, ln)
+        k2 = k.at[:, :, 30:, :].set(1e6)
+        v2 = v.at[:, :, 30:, :].set(-1e6)
+        out2 = decode_attention(q, k2, v2, ln)
+        np.testing.assert_allclose(out1, out2, **TOL)
+
+    @hypothesis.settings(deadline=None, max_examples=25)
+    @hypothesis.given(
+        b=st.integers(1, 8),
+        heads=st.sampled_from([(2, 1), (4, 2), (8, 4), (4, 4)]),
+        d=st.sampled_from([8, 16, 32]),
+        s=st.sampled_from([64, 128, 256]),
+        seed=st.integers(0, 2**16),
+        data=st.data(),
+    )
+    def test_hypothesis_sweep(self, b, heads, d, s, seed, data):
+        hq, hkv = heads
+        lens = [data.draw(st.integers(1, s)) for _ in range(b)]
+        q, k, v, ln = mk_decode_inputs(seed, b, hq, hkv, d, s, lens)
+        np.testing.assert_allclose(
+            decode_attention(q, k, v, ln), decode_attention_ref(q, k, v, ln), **TOL
+        )
+
+
+class TestKernelNumerics:
+    def test_large_logits_stable(self):
+        """Online softmax must not overflow with large score magnitudes."""
+        q, k, v, cl, vl = mk_chunk_inputs(7, 8, 4, 2, 16, 128, 0, 8)
+        out = chunked_attention(q * 100.0, k * 100.0, v, cl, vl)
+        assert np.all(np.isfinite(np.asarray(out)))
+        np.testing.assert_allclose(
+            out, chunked_attention_ref(q * 100.0, k * 100.0, v, cl, vl), rtol=1e-4, atol=1e-4
+        )
+
+    def test_uniform_scores_average_values(self):
+        """Zero queries -> uniform attention -> output is the mean of valid V."""
+        c, hkv, s, d = 4, 2, 128, 16
+        q = jnp.zeros((c, 4, d), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(8), (hkv, s, d), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(9), (hkv, s, d), jnp.float32)
+        cl, vl = jnp.int32(10), jnp.int32(c)
+        out = np.asarray(chunked_attention(q, k, v, cl, vl))
+        for i in range(c):
+            for h in range(4):
+                expect = np.asarray(v)[h // 2, : 10 + i + 1].mean(axis=0)
+                np.testing.assert_allclose(out[i, h], expect, rtol=1e-4, atol=1e-4)

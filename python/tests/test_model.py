@@ -1,0 +1,216 @@
+"""L2 model correctness: chunked-prefill + decode path vs dense oracle.
+
+The serving path (prefill in chunks, then token-by-token decode through
+the KV cache) must be numerically equivalent to ``reference_forward``,
+the plain dense-causal transformer, for every chunking schedule — this is
+exactly the invariant Niyama's dynamic chunking relies on: chunk size is
+a *scheduling* knob and must never change model outputs.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(
+    vocab_size=128,
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    max_seq=128,
+)
+PARAMS = M.init_params(jax.random.PRNGKey(0), CFG)
+TOL = dict(rtol=1e-3, atol=1e-3)
+
+
+def empty_kv(cfg=CFG):
+    return jnp.zeros(cfg.kv_cache_shape(), jnp.float32)
+
+
+def run_prefill(tokens, chunk_sizes, cfg=CFG, params=PARAMS):
+    """Prefill ``tokens`` using the given per-iteration chunk sizes.
+
+    The final chunk may be partially filled (padded) — mirroring how the
+    Rust engine pads a short tail chunk up to a compiled bucket.
+    Returns (last_logits, kv, consumed).
+    """
+    kv = empty_kv(cfg)
+    pos = 0
+    logits = None
+    for c in chunk_sizes:
+        valid = min(c, len(tokens) - pos)
+        assert valid > 0, "chunk schedule overruns the prompt"
+        chunk = jnp.concatenate(
+            [tokens[pos : pos + valid], jnp.zeros(c - valid, tokens.dtype)]
+        )
+        logits, kv = M.prefill_chunk(
+            cfg, params, kv, chunk,
+            jnp.array([pos], jnp.int32), jnp.array([valid], jnp.int32),
+        )
+        pos += valid
+    return logits, kv, pos
+
+
+class TestPrefillChunking:
+    @pytest.mark.parametrize(
+        "schedule",
+        [
+            [20],               # single chunk == prompt
+            [8, 8, 8],          # uniform, padded tail
+            [4, 16],            # growing chunks (dynamic chunking's shape)
+            [16, 4],            # shrinking
+            [1] * 20,           # degenerate single-token chunks
+        ],
+    )
+    def test_any_chunk_schedule_matches_dense(self, schedule):
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (20,), 0, CFG.vocab_size)
+        ref = M.reference_forward(CFG, PARAMS, tokens)
+        logits, _, consumed = run_prefill(tokens, schedule)
+        assert consumed == 20
+        np.testing.assert_allclose(logits, ref[19], **TOL)
+
+    def test_chunk_schedules_agree_with_each_other(self):
+        """Two different schedules produce bit-comparable KV states."""
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (24,), 0, CFG.vocab_size)
+        _, kv_a, _ = run_prefill(tokens, [8, 8, 8])
+        _, kv_b, _ = run_prefill(tokens, [16, 8])
+        np.testing.assert_allclose(
+            np.asarray(kv_a)[:, :, :, :24], np.asarray(kv_b)[:, :, :, :24], **TOL
+        )
+
+    def test_single_token_prompt(self):
+        tokens = jnp.array([7], jnp.int32)
+        ref = M.reference_forward(CFG, PARAMS, tokens)
+        logits, _, _ = run_prefill(tokens, [4])  # padded chunk
+        np.testing.assert_allclose(logits, ref[0], **TOL)
+
+    @hypothesis.settings(deadline=None, max_examples=15)
+    @hypothesis.given(
+        prompt_len=st.integers(2, 40),
+        seed=st.integers(0, 2**16),
+        data=st.data(),
+    )
+    def test_hypothesis_random_schedules(self, prompt_len, seed, data):
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(seed), (prompt_len,), 0, CFG.vocab_size
+        )
+        # Draw a random chunk schedule covering the prompt.
+        schedule, left = [], prompt_len
+        while left > 0:
+            c = data.draw(st.integers(1, min(16, left + 4)))
+            schedule.append(c)
+            left -= min(c, left)
+        ref = M.reference_forward(CFG, PARAMS, tokens)
+        logits, _, _ = run_prefill(tokens, schedule)
+        np.testing.assert_allclose(logits, ref[prompt_len - 1], **TOL)
+
+
+class TestDecode:
+    def test_decode_continues_prefill(self):
+        """Prefill 16 tokens, decode 5 more; every step matches the oracle."""
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (16,), 0, CFG.vocab_size)
+        extra = jax.random.randint(jax.random.PRNGKey(4), (5,), 0, CFG.vocab_size)
+        _, kv, _ = run_prefill(tokens, [8, 8])
+        kv_b = kv[None]
+        seq = tokens
+        for i in range(5):
+            tok = extra[i : i + 1]
+            logits, kv_b = M.decode_step(
+                CFG, PARAMS, kv_b, tok, jnp.array([16 + i], jnp.int32)
+            )
+            seq = jnp.concatenate([seq, tok])
+            ref = M.reference_forward(CFG, PARAMS, seq)
+            np.testing.assert_allclose(logits[0], ref[15 + i + 1], **TOL)
+
+    def test_batched_decode_matches_individual(self):
+        """A batch-4 decode step equals four independent batch-1 steps."""
+        kvs, toks, poss = [], [], []
+        for b in range(4):
+            n_tok = 8 + 4 * b
+            prompt = jax.random.randint(
+                jax.random.PRNGKey(10 + b), (n_tok,), 0, CFG.vocab_size
+            )
+            _, kv, n = run_prefill(prompt, [16] * ((n_tok + 15) // 16))
+            kvs.append(kv)
+            toks.append(int(prompt[-1]) % CFG.vocab_size)
+            poss.append(n)
+
+        kv_batch = jnp.stack(kvs)
+        logits_b, kv_b2 = M.decode_step(
+            CFG, PARAMS, kv_batch,
+            jnp.asarray(toks, jnp.int32), jnp.asarray(poss, jnp.int32),
+        )
+        for b in range(4):
+            logits_1, kv_12 = M.decode_step(
+                CFG, PARAMS, kvs[b][None],
+                jnp.asarray(toks[b : b + 1], jnp.int32),
+                jnp.asarray(poss[b : b + 1], jnp.int32),
+            )
+            np.testing.assert_allclose(logits_b[b], logits_1[0], **TOL)
+            np.testing.assert_allclose(kv_b2[b], kv_12[0], **TOL)
+
+    def test_padding_slot_does_not_disturb_real_slots(self):
+        """Inactive batch slots (pos 0, token 0) leave real outputs unchanged."""
+        prompt = jax.random.randint(jax.random.PRNGKey(20), (12,), 0, CFG.vocab_size)
+        _, kv, n = run_prefill(prompt, [16])
+        tok = jnp.array([5], jnp.int32)
+        logits_1, _ = M.decode_step(CFG, PARAMS, kv[None], tok, jnp.array([n], jnp.int32))
+
+        kv_pad = jnp.stack([kv, jnp.zeros_like(kv)])
+        logits_2, _ = M.decode_step(
+            CFG, PARAMS, kv_pad,
+            jnp.array([5, 0], jnp.int32), jnp.array([n, 0], jnp.int32),
+        )
+        np.testing.assert_allclose(logits_2[0], logits_1[0], **TOL)
+
+
+class TestModelStructure:
+    def test_param_entries_match_init(self):
+        entries = M.param_entries(CFG)
+        assert len(entries) == len(PARAMS)
+        for (name, shape), p in zip(entries, PARAMS):
+            assert tuple(shape) == p.shape, name
+
+    def test_param_count(self):
+        assert CFG.param_count() == sum(int(np.prod(s)) for _, s in M.param_entries(CFG))
+
+    def test_full_size_config_param_count(self):
+        cfg = M.ModelConfig()
+        # embed + head dominate: 2 * 8192 * 256 = 4.19M; total ~7.3M.
+        assert 7_000_000 < cfg.param_count() < 8_000_000
+
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (6, 4, 16), jnp.float32)
+        pos = jnp.arange(6, dtype=jnp.int32)
+        y = M.rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rope_position_zero_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(6), (1, 4, 16), jnp.float32)
+        y = M.rope(x, jnp.zeros(1, jnp.int32), 10000.0)
+        np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6)
+
+    def test_rope_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n (per 2-dim pair)."""
+        d = 16
+        q = jax.random.normal(jax.random.PRNGKey(7), (1, 1, d), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(8), (1, 1, d), jnp.float32)
+
+        def dot(m, n):
+            qm = M.rope(q, jnp.array([m], jnp.int32), 10000.0)
+            kn = M.rope(k, jnp.array([n], jnp.int32), 10000.0)
+            return float(jnp.sum(qm * kn))
+
+        np.testing.assert_allclose(dot(5, 3), dot(12, 10), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(dot(0, 0), dot(9, 9), rtol=1e-4, atol=1e-4)

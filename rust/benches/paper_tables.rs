@@ -1,0 +1,32 @@
+//! End-to-end benchmark: regenerates reduced versions of every paper
+//! table/figure and reports wall time per experiment (`cargo bench`).
+//!
+//! The full-resolution versions run via `niyama repro --id <...>`
+//! (standard scale) or `--full` (paper scale); this bench uses the quick
+//! scale so `cargo bench` finishes in minutes while still exercising
+//! every experiment path end-to-end.
+
+use niyama::repro::{self, Scale};
+use std::time::Instant;
+
+fn main() {
+    let scale = Scale::quick();
+    println!("== paper experiment regeneration (quick scale) ==\n");
+    let mut failures = 0;
+    for id in repro::ALL_IDS {
+        let t0 = Instant::now();
+        println!("--- {id} ---");
+        match repro::run(id, scale) {
+            Ok(()) => println!("[{id}] ok in {:.2}s\n", t0.elapsed().as_secs_f64()),
+            Err(e) => {
+                failures += 1;
+                println!("[{id}] FAILED: {e}\n");
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures} experiment(s) failed");
+        std::process::exit(1);
+    }
+    println!("all experiments regenerated");
+}

@@ -1,0 +1,151 @@
+//! Scheduler hot-path microbenchmarks (`cargo bench`).
+//!
+//! No criterion in the offline environment, so this is a minimal
+//! measured-loop harness: warmup, N timed iterations, median/p99 of
+//! per-iteration time. The L3 perf target (DESIGN.md §Perf): one
+//! scheduling decision must stay well under 1 ms so the coordinator
+//! never bottlenecks a ~25 ms GPU iteration.
+
+use niyama::config::{Config, HardwareModel, Policy, SchedulerConfig};
+use niyama::predictor::LatencyPredictor;
+use niyama::qos::{Importance, Slo};
+use niyama::request::{RequestSpec, RequestStore};
+use niyama::scheduler::{NiyamaScheduler, PlanContext, SarathiPolicy, SarathiScheduler, Scheduler};
+use niyama::simulator::{BatchShape, CostModel, PrefillSegment};
+use niyama::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let p99 = samples[(samples.len() as f64 * 0.99) as usize % samples.len()];
+    let total: f64 = samples.iter().sum();
+    println!(
+        "{name:<44} {:>10.3} us/iter (p99 {:>10.3} us, {:>8.0} it/s)",
+        med * 1e6,
+        p99 * 1e6,
+        iters as f64 / total
+    );
+}
+
+/// Build a scheduler state with `n_prefill` queued prompts and
+/// `n_decode` in-flight decodes.
+fn populate(
+    sched: &mut dyn Scheduler,
+    store: &mut RequestStore,
+    n_prefill: usize,
+    n_decode: usize,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n_prefill + n_decode {
+        let slo = match i % 3 {
+            0 => Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 },
+            1 => Slo::NonInteractive { ttlt_s: 600.0 },
+            _ => Slo::NonInteractive { ttlt_s: 1800.0 },
+        };
+        let prompt = 64 + rng.below(4000) as u32;
+        let id = store.insert(
+            RequestSpec {
+                arrival_s: i as f64 * 0.01,
+                prompt_tokens: prompt,
+                decode_tokens: 1 + rng.below(400) as u32,
+                tier: i % 3,
+                app_id: (i % 3) as u32,
+                importance: if i % 5 == 0 { Importance::Low } else { Importance::High },
+            },
+            slo,
+        );
+        sched.on_arrival(id, store);
+        if i >= n_prefill {
+            {
+                let r = store.get_mut(id);
+                r.prefilled = r.spec.prompt_tokens;
+                r.phase = niyama::request::Phase::Decode;
+                r.emit_token(r.spec.arrival_s + 0.5);
+            }
+            sched.on_prefill_complete(id, store);
+        }
+    }
+}
+
+fn main() {
+    println!("== scheduler hot path (lower is better) ==");
+    let cfg = Config::default();
+    let model = Arc::new(CostModel::new(HardwareModel::llama3_8b_a100()));
+
+    for (np, nd) in [(8usize, 16usize), (64, 64), (256, 128), (1024, 256)] {
+        let mut sched = NiyamaScheduler::new(cfg.scheduler.clone(), model.clone());
+        let mut store = RequestStore::new();
+        populate(&mut sched, &mut store, np, nd, 42);
+        let ctx = PlanContext { now: 5.0, kv_capacity: 4_000_000, kv_used: 0 };
+        bench(&format!("niyama.plan  q={np:<5} decodes={nd}"), 300, || {
+            let b = sched.plan(ctx, &mut store);
+            std::hint::black_box(b);
+        });
+    }
+
+    for policy in [SarathiPolicy::Fcfs, SarathiPolicy::Edf, SarathiPolicy::Srpf] {
+        let mut sched = SarathiScheduler::new(
+            policy,
+            SchedulerConfig::sarathi(Policy::SarathiFcfs, 256),
+            model.clone(),
+        );
+        let mut store = RequestStore::new();
+        populate(&mut sched, &mut store, 256, 128, 43);
+        let ctx = PlanContext { now: 5.0, kv_capacity: 4_000_000, kv_used: 0 };
+        bench(&format!("sarathi.plan {policy:?} q=256 decodes=128"), 300, || {
+            let b = sched.plan(ctx, &mut store);
+            std::hint::black_box(b);
+        });
+    }
+
+    println!("\n== latency models ==");
+    let cm = CostModel::new(HardwareModel::llama3_8b_a100());
+    let mut shape = BatchShape::default();
+    shape.prefill.push(PrefillSegment { cache_len: 2048, chunk: 256 });
+    shape.decode_kv_lens = (0..128).map(|i| 256 + i * 16).collect();
+    bench("cost_model.iteration_latency (128 decodes)", 10_000, || {
+        std::hint::black_box(cm.iteration_latency(&shape));
+    });
+    let pred = LatencyPredictor::calibrate(&cm, 0);
+    bench("predictor.predict            (128 decodes)", 10_000, || {
+        std::hint::black_box(pred.predict(&shape));
+    });
+
+    println!("\n== end-to-end simulation throughput ==");
+    use niyama::engine::Engine;
+    use niyama::workload::datasets::Dataset;
+    use niyama::workload::WorkloadSpec;
+    for (name, policy) in [("niyama", None), ("sarathi-fcfs", Some(Policy::SarathiFcfs))] {
+        let mut c = Config::default();
+        if let Some(p) = policy {
+            c.scheduler = SchedulerConfig::sarathi(p, 256);
+        }
+        let spec = WorkloadSpec::uniform(Dataset::azure_code(), 3.0, 300.0);
+        let trace = spec.generate(&mut Rng::new(9));
+        let n = trace.len();
+        let t0 = Instant::now();
+        let mut eng = Engine::sim(&c);
+        eng.submit_trace(trace);
+        eng.run(4000.0);
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "sim {name:<14} {n} reqs, {} iters in {wall:.3}s ({:.0} iters/s, {:.0}x real-time)",
+            eng.stats.iterations,
+            eng.stats.iterations as f64 / wall,
+            eng.now() / wall
+        );
+    }
+}

@@ -1,0 +1,489 @@
+//! Configuration system: model/hardware presets, scheduler knobs, QoS
+//! tiers, cluster topology. Loadable from JSON files; every field has a
+//! paper-faithful default so `Config::default()` reproduces the paper's
+//! evaluation setup (Llama3-8B on one A100, Table 2 tiers).
+
+use crate::qos::{table2_tiers, QosTier, Slo};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Model + hardware description used by the analytic cost model.
+/// Defaults describe Llama3-8B (fp16) on a single A100-80GB — the paper's
+/// primary testbed.
+#[derive(Debug, Clone)]
+pub struct HardwareModel {
+    pub name: String,
+    /// Model parameters (weights), count.
+    pub n_params: f64,
+    /// Transformer layer count.
+    pub n_layers: f64,
+    /// Attention hidden size (q heads * head dim).
+    pub d_model: f64,
+    /// KV-cache bytes per token (all layers, K+V).
+    pub kv_bytes_per_token: f64,
+    /// Weight bytes resident in HBM.
+    pub weight_bytes: f64,
+    /// Peak matmul throughput, FLOP/s (A100 fp16 dense: 312e12).
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_bytes: f64,
+    /// Half-saturation batch size of the MFU curve: efficiency =
+    /// tokens / (tokens + mfu_half). Calibrated so chunk 256 runs ~28%
+    /// below chunk 2048 throughput (paper Fig. 4).
+    pub mfu_half: f64,
+    /// Fixed per-iteration overhead, seconds (launch + scheduler).
+    pub iteration_overhead_s: f64,
+    /// Tensor-parallel degree (adds a per-iteration collective term).
+    pub tp_degree: u32,
+    /// Per-iteration collective overhead per TP rank pair, seconds.
+    pub tp_overhead_s: f64,
+}
+
+impl HardwareModel {
+    /// Llama3-8B on one A100-80GB (paper's primary setup).
+    pub fn llama3_8b_a100() -> Self {
+        HardwareModel {
+            name: "llama3-8b-a100".into(),
+            n_params: 8.0e9,
+            n_layers: 32.0,
+            d_model: 4096.0,
+            // GQA: 8 KV heads * 128 dim * 2 (K+V) * 2 bytes * 32 layers.
+            kv_bytes_per_token: 8.0 * 128.0 * 2.0 * 2.0 * 32.0,
+            weight_bytes: 16.0e9,
+            peak_flops: 312.0e12,
+            hbm_bw: 2.0e12,
+            hbm_bytes: 80.0e9,
+            mfu_half: 120.0,
+            iteration_overhead_s: 1.5e-3,
+            tp_degree: 1,
+            tp_overhead_s: 0.0,
+        }
+    }
+
+    /// Qwen-7B across two A100s with tensor parallelism (paper's second
+    /// setup).
+    pub fn qwen_7b_a100_tp2() -> Self {
+        HardwareModel {
+            name: "qwen-7b-a100-tp2".into(),
+            n_params: 7.0e9,
+            n_layers: 32.0,
+            d_model: 4096.0,
+            // MHA: 32 KV heads * 128 dim * 2 * 2 bytes * 32 layers.
+            kv_bytes_per_token: 32.0 * 128.0 * 2.0 * 2.0 * 32.0,
+            weight_bytes: 14.0e9,
+            peak_flops: 2.0 * 312.0e12 * 0.9, // TP efficiency factor
+            hbm_bw: 2.0 * 2.0e12,
+            hbm_bytes: 2.0 * 80.0e9,
+            mfu_half: 150.0,
+            iteration_overhead_s: 1.5e-3,
+            tp_degree: 2,
+            tp_overhead_s: 0.7e-3,
+        }
+    }
+
+    /// The validation model served by the real PJRT CPU path: the ~7.3M
+    /// parameter transformer in `artifacts/`. Constants approximate a
+    /// laptop-class CPU; the serving loop refits a predictor from
+    /// measured iterations anyway (`runtime::calibrate`).
+    pub fn tiny_cpu() -> Self {
+        HardwareModel {
+            name: "tiny-cpu".into(),
+            n_params: 7.3e6,
+            n_layers: 4.0,
+            d_model: 256.0,
+            // 4 KV heads * 32 dim * 2 (K+V) * 4 bytes * 4 layers.
+            kv_bytes_per_token: 4.0 * 32.0 * 2.0 * 4.0 * 4.0,
+            weight_bytes: 30.0e6,
+            peak_flops: 5.0e10,
+            hbm_bw: 2.0e10,
+            hbm_bytes: 2.0e9,
+            mfu_half: 64.0,
+            iteration_overhead_s: 10.0e-3,
+            tp_degree: 1,
+            tp_overhead_s: 0.0,
+        }
+    }
+
+    /// KV-cache token capacity after weights + activation reserve.
+    pub fn kv_capacity_tokens(&self) -> u64 {
+        let reserve = 0.1 * self.hbm_bytes; // activations + fragmentation
+        let avail = self.hbm_bytes - self.weight_bytes * self.tp_degree as f64 - reserve;
+        (avail.max(0.0) / self.kv_bytes_per_token) as u64
+    }
+}
+
+/// Scheduling policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's system: dynamic chunking + hybrid priority + relegation.
+    Niyama,
+    /// Sarathi with first-come-first-served prefill order.
+    SarathiFcfs,
+    /// Sarathi with earliest-deadline-first prefill order.
+    SarathiEdf,
+    /// Sarathi with shortest-remaining-prompt-first prefill order.
+    SarathiSrpf,
+    /// Sarathi with shortest-job-first (total estimated work) order.
+    SarathiSjf,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "niyama" => Policy::Niyama,
+            "fcfs" | "sarathi-fcfs" => Policy::SarathiFcfs,
+            "edf" | "sarathi-edf" => Policy::SarathiEdf,
+            "srpf" | "sarathi-srpf" => Policy::SarathiSrpf,
+            "sjf" | "sarathi-sjf" => Policy::SarathiSjf,
+            other => bail!("unknown policy '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Niyama => "niyama",
+            Policy::SarathiFcfs => "sarathi-fcfs",
+            Policy::SarathiEdf => "sarathi-edf",
+            Policy::SarathiSrpf => "sarathi-srpf",
+            Policy::SarathiSjf => "sarathi-sjf",
+        }
+    }
+}
+
+/// Scheduler knobs (paper §3 + §4.4 ablations).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub policy: Policy,
+    /// Fixed chunk size for the Sarathi baselines; also Niyama's floor.
+    pub chunk_size: u32,
+    /// Upper bound for dynamic chunking.
+    pub max_chunk_size: u32,
+    /// Max decode requests batched per iteration.
+    pub max_batch_decodes: usize,
+    /// Hybrid-prioritization interpolation factor alpha (eqs. 4-5).
+    pub alpha: f64,
+    /// Scale alpha with observed load (paper §4.2: "adjusts the alpha
+    /// parameter" during overload).
+    pub adaptive_alpha: bool,
+    /// Ablation switches (Table 3).
+    pub dynamic_chunking: bool,
+    pub eager_relegation: bool,
+    pub hybrid_priority: bool,
+    /// Selective preemption of in-prefill requests (paper §3.4).
+    pub selective_preemption: bool,
+    /// Cap on the fraction of requests that may be relegated (Fig. 5
+    /// sweeps this; 1.0 = unlimited).
+    pub relegation_cap: f64,
+    /// Safety margin subtracted from predicted latency headroom, seconds.
+    pub slack_margin_s: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            policy: Policy::Niyama,
+            chunk_size: 256,
+            max_chunk_size: 2048,
+            max_batch_decodes: 256,
+            alpha: 0.5,
+            adaptive_alpha: true,
+            dynamic_chunking: true,
+            eager_relegation: true,
+            hybrid_priority: true,
+            selective_preemption: true,
+            relegation_cap: 1.0,
+            slack_margin_s: 2.0e-3,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// The paper's Sarathi baseline at a given policy: fixed chunks, no
+    /// Niyama machinery.
+    pub fn sarathi(policy: Policy, chunk_size: u32) -> Self {
+        SchedulerConfig {
+            policy,
+            chunk_size,
+            max_chunk_size: chunk_size,
+            dynamic_chunking: false,
+            eager_relegation: false,
+            hybrid_priority: false,
+            selective_preemption: false,
+            adaptive_alpha: false,
+            alpha: 0.0,
+            ..SchedulerConfig::default()
+        }
+    }
+}
+
+/// Cluster topology for multi-replica serving / silo experiments.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of identical replicas sharing the workload.
+    pub replicas: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { replicas: 1 }
+    }
+}
+
+/// Top-level system configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub hardware: HardwareModel,
+    pub scheduler: SchedulerConfig,
+    pub tiers: Vec<QosTier>,
+    pub cluster: ClusterConfig,
+    /// Random seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            hardware: HardwareModel::llama3_8b_a100(),
+            scheduler: SchedulerConfig::default(),
+            tiers: table2_tiers(),
+            cluster: ClusterConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+impl Config {
+    /// Load a config from a JSON file; unspecified fields keep defaults.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Config> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+        let mut cfg = Config::default();
+
+        if let Some(hw) = j.get("hardware") {
+            if let Some(name) = hw.get("preset").and_then(|v| v.as_str()) {
+                cfg.hardware = match name {
+                    "llama3-8b-a100" => HardwareModel::llama3_8b_a100(),
+                    "qwen-7b-a100-tp2" => HardwareModel::qwen_7b_a100_tp2(),
+                    other => bail!("unknown hardware preset '{other}'"),
+                };
+            }
+            override_f64(hw, "peak_flops", &mut cfg.hardware.peak_flops);
+            override_f64(hw, "hbm_bw", &mut cfg.hardware.hbm_bw);
+            override_f64(hw, "hbm_bytes", &mut cfg.hardware.hbm_bytes);
+            override_f64(hw, "mfu_half", &mut cfg.hardware.mfu_half);
+            override_f64(hw, "iteration_overhead_s", &mut cfg.hardware.iteration_overhead_s);
+        }
+
+        if let Some(s) = j.get("scheduler") {
+            if let Some(p) = s.get("policy").and_then(|v| v.as_str()) {
+                cfg.scheduler.policy = Policy::parse(p)?;
+            }
+            override_u32(s, "chunk_size", &mut cfg.scheduler.chunk_size)?;
+            override_u32(s, "max_chunk_size", &mut cfg.scheduler.max_chunk_size)?;
+            override_f64(s, "alpha", &mut cfg.scheduler.alpha);
+            override_f64(s, "relegation_cap", &mut cfg.scheduler.relegation_cap);
+            override_bool(s, "dynamic_chunking", &mut cfg.scheduler.dynamic_chunking);
+            override_bool(s, "eager_relegation", &mut cfg.scheduler.eager_relegation);
+            override_bool(s, "hybrid_priority", &mut cfg.scheduler.hybrid_priority);
+            override_bool(s, "adaptive_alpha", &mut cfg.scheduler.adaptive_alpha);
+            override_bool(s, "selective_preemption", &mut cfg.scheduler.selective_preemption);
+            if let Some(v) = s.get("max_batch_decodes").and_then(|v| v.as_usize()) {
+                cfg.scheduler.max_batch_decodes = v;
+            }
+        }
+
+        if let Some(tiers) = j.get("tiers").and_then(|v| v.as_arr()) {
+            cfg.tiers = tiers.iter().map(parse_tier).collect::<Result<_>>()?;
+        }
+
+        if let Some(c) = j.get("cluster") {
+            if let Some(v) = c.get("replicas").and_then(|v| v.as_usize()) {
+                cfg.cluster.replicas = v;
+            }
+        }
+
+        if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+            cfg.seed = v as u64;
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.tiers.is_empty() {
+            bail!("at least one QoS tier is required");
+        }
+        if self.scheduler.chunk_size == 0 {
+            bail!("chunk_size must be positive");
+        }
+        if self.scheduler.max_chunk_size < self.scheduler.chunk_size {
+            bail!("max_chunk_size must be >= chunk_size");
+        }
+        if !(0.0..=1.0).contains(&self.scheduler.relegation_cap) {
+            bail!("relegation_cap must be in [0, 1]");
+        }
+        if self.cluster.replicas == 0 {
+            bail!("cluster needs at least one replica");
+        }
+        Ok(())
+    }
+}
+
+fn parse_tier(j: &Json) -> Result<QosTier> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("tier missing 'name'"))?;
+    let slo = if let Some(ttlt) = j.get("ttlt_s").and_then(|v| v.as_f64()) {
+        Slo::NonInteractive { ttlt_s: ttlt }
+    } else {
+        let ttft = j
+            .get("ttft_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("tier '{name}' needs ttft_s+tbt_s or ttlt_s"))?;
+        let tbt = j
+            .get("tbt_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("tier '{name}' needs tbt_s"))?;
+        Slo::Interactive { ttft_s: ttft, tbt_s: tbt }
+    };
+    Ok(QosTier { name: name.to_string(), slo })
+}
+
+fn override_f64(j: &Json, key: &str, slot: &mut f64) {
+    if let Some(v) = j.get(key).and_then(|v| v.as_f64()) {
+        *slot = v;
+    }
+}
+
+fn override_u32(j: &Json, key: &str, slot: &mut u32) -> Result<()> {
+    if let Some(v) = j.get(key) {
+        let n = v.as_usize().ok_or_else(|| anyhow!("'{key}' must be a non-negative integer"))?;
+        *slot = n as u32;
+    }
+    Ok(())
+}
+
+fn override_bool(j: &Json, key: &str, slot: &mut bool) {
+    if let Some(v) = j.get(key).and_then(|v| v.as_bool()) {
+        *slot = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_setup() {
+        let c = Config::default();
+        assert_eq!(c.tiers.len(), 3);
+        assert_eq!(c.scheduler.policy, Policy::Niyama);
+        assert_eq!(c.scheduler.chunk_size, 256);
+        assert_eq!(c.hardware.name, "llama3-8b-a100");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn kv_capacity_reasonable_for_a100() {
+        let hw = HardwareModel::llama3_8b_a100();
+        let cap = hw.kv_capacity_tokens();
+        // ~(80 - 16 - 8) GB / 131 KB ≈ 430k tokens.
+        assert!(cap > 300_000 && cap < 600_000, "capacity {cap}");
+    }
+
+    #[test]
+    fn json_overrides() {
+        let c = Config::from_json_str(
+            r#"{
+                "scheduler": {"policy": "sarathi-edf", "chunk_size": 128,
+                              "dynamic_chunking": false, "alpha": 0.25},
+                "cluster": {"replicas": 4},
+                "seed": 7
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.policy, Policy::SarathiEdf);
+        assert_eq!(c.scheduler.chunk_size, 128);
+        assert!(!c.scheduler.dynamic_chunking);
+        assert_eq!(c.scheduler.alpha, 0.25);
+        assert_eq!(c.cluster.replicas, 4);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn json_custom_tiers() {
+        let c = Config::from_json_str(
+            r#"{"tiers": [
+                {"name": "chat", "ttft_s": 2.0, "tbt_s": 0.03},
+                {"name": "batch", "ttlt_s": 900}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.tiers.len(), 2);
+        assert_eq!(c.tiers[0].slo, Slo::Interactive { ttft_s: 2.0, tbt_s: 0.03 });
+        assert_eq!(c.tiers[1].slo, Slo::NonInteractive { ttlt_s: 900.0 });
+    }
+
+    #[test]
+    fn rejects_bad_policy() {
+        assert!(Config::from_json_str(r#"{"scheduler": {"policy": "lifo"}}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_chunk_relation() {
+        let r = Config::from_json_str(
+            r#"{"scheduler": {"chunk_size": 512, "max_chunk_size": 128}}"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_zero_replicas() {
+        assert!(Config::from_json_str(r#"{"cluster": {"replicas": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [
+            Policy::Niyama,
+            Policy::SarathiFcfs,
+            Policy::SarathiEdf,
+            Policy::SarathiSrpf,
+            Policy::SarathiSjf,
+        ] {
+            assert_eq!(Policy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn shipped_config_files_load() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        for name in ["shared_niyama.json", "sarathi_edf_baseline.json", "qwen_tp2.json"] {
+            let path = dir.join(name);
+            let cfg = Config::from_file(path.to_str().unwrap())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            cfg.validate().unwrap();
+        }
+        // And spot-check a value from each.
+        let edf = Config::from_file(dir.join("sarathi_edf_baseline.json").to_str().unwrap()).unwrap();
+        assert_eq!(edf.scheduler.policy, Policy::SarathiEdf);
+        let qwen = Config::from_file(dir.join("qwen_tp2.json").to_str().unwrap()).unwrap();
+        assert_eq!(qwen.hardware.tp_degree, 2);
+    }
+
+    #[test]
+    fn sarathi_preset_disables_niyama_features() {
+        let s = SchedulerConfig::sarathi(Policy::SarathiFcfs, 256);
+        assert!(!s.dynamic_chunking && !s.eager_relegation && !s.hybrid_priority);
+        assert_eq!(s.max_chunk_size, 256);
+    }
+}

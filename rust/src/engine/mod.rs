@@ -1,0 +1,442 @@
+//! The iteration engine: drives scheduler → backend → request state.
+//!
+//! One engine instance is one serving replica. The same engine runs in
+//! two modes through the [`ExecutionBackend`] trait:
+//!
+//! - [`SimBackend`]: latency from the analytic cost model, virtual time —
+//!   the substrate for every paper experiment;
+//! - `PjrtBackend` (in [`crate::runtime`]): real execution of the AOT
+//!   artifacts on the PJRT CPU client, wall-clock time.
+//!
+//! The scheduler code is identical in both — that equivalence is what
+//! makes the simulator results meaningful.
+
+use crate::config::Config;
+use crate::metrics::{summarize, RollingLatency, Summary};
+use crate::predictor::LatencyPredictor;
+use crate::request::{Phase, RequestId, RequestSpec, RequestStore};
+use crate::scheduler::{
+    Batch, NiyamaScheduler, PlanContext, SarathiPolicy, SarathiScheduler, Scheduler,
+};
+use crate::simulator::{BatchShape, CostModel};
+use std::sync::Arc;
+
+/// Result of executing one batch.
+#[derive(Debug, Clone, Copy)]
+pub struct IterationResult {
+    /// Iteration latency in seconds.
+    pub latency_s: f64,
+}
+
+/// Execution substrate for one iteration's batch.
+pub trait ExecutionBackend {
+    /// Execute the batch; returns its latency. Token *content* is backend
+    /// business (the simulator has none; PJRT samples real logits).
+    fn execute(&mut self, batch: &Batch, store: &RequestStore) -> IterationResult;
+
+    /// A request fully left the system — backends holding per-request
+    /// state (KV buffers) release it here.
+    fn release(&mut self, id: RequestId);
+}
+
+/// Simulation backend: prices batches with the cost model.
+pub struct SimBackend {
+    model: CostModel,
+}
+
+impl SimBackend {
+    pub fn new(model: CostModel) -> Self {
+        SimBackend { model }
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn execute(&mut self, batch: &Batch, store: &RequestStore) -> IterationResult {
+        let shape: BatchShape = batch.shape(store);
+        IterationResult { latency_s: self.model.iteration_latency(&shape) }
+    }
+
+    fn release(&mut self, _id: RequestId) {}
+}
+
+/// Outcome counters of a completed run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub iterations: u64,
+    pub scheduled_prefill_tokens: u64,
+    pub scheduled_decode_tokens: u64,
+    pub sim_time_s: f64,
+}
+
+/// One serving replica: request store + scheduler + backend + clock.
+pub struct Engine<B: ExecutionBackend> {
+    pub store: RequestStore,
+    scheduler: Box<dyn Scheduler>,
+    backend: B,
+    kv_capacity: u64,
+    now: f64,
+    pending: Vec<(f64, RequestSpec)>,
+    next_pending: usize,
+    pub stats: RunStats,
+    pub rolling: RollingLatency,
+    n_tiers: usize,
+    tiers: Vec<crate::qos::QosTier>,
+}
+
+/// Build the configured scheduler over a latency model.
+pub fn build_scheduler(
+    cfg: &Config,
+    model: Arc<dyn crate::scheduler::LatencyModel>,
+) -> Box<dyn Scheduler> {
+    use crate::config::Policy;
+    match cfg.scheduler.policy {
+        Policy::Niyama => Box::new(NiyamaScheduler::new(cfg.scheduler.clone(), model)),
+        Policy::SarathiFcfs => {
+            Box::new(SarathiScheduler::new(SarathiPolicy::Fcfs, cfg.scheduler.clone(), model))
+        }
+        Policy::SarathiEdf => {
+            Box::new(SarathiScheduler::new(SarathiPolicy::Edf, cfg.scheduler.clone(), model))
+        }
+        Policy::SarathiSrpf => {
+            Box::new(SarathiScheduler::new(SarathiPolicy::Srpf, cfg.scheduler.clone(), model))
+        }
+        Policy::SarathiSjf => {
+            Box::new(SarathiScheduler::new(SarathiPolicy::Sjf, cfg.scheduler.clone(), model))
+        }
+    }
+}
+
+impl Engine<SimBackend> {
+    /// Simulation engine with the config's hardware cost model as both
+    /// execution substrate and (idealized) latency predictor.
+    pub fn sim(cfg: &Config) -> Self {
+        let model = CostModel::new(cfg.hardware.clone());
+        let scheduler = build_scheduler(cfg, Arc::new(model.clone()));
+        Self::new(cfg, scheduler, SimBackend::new(model))
+    }
+
+    /// Simulation engine that schedules with a *fitted* predictor instead
+    /// of the exact cost model (predictor-fidelity ablation).
+    pub fn sim_with_predictor(cfg: &Config, predictor: LatencyPredictor) -> Self {
+        let model = CostModel::new(cfg.hardware.clone());
+        let scheduler = build_scheduler(cfg, Arc::new(predictor));
+        Self::new(cfg, scheduler, SimBackend::new(model))
+    }
+}
+
+impl<B: ExecutionBackend> Engine<B> {
+    pub fn new(cfg: &Config, scheduler: Box<dyn Scheduler>, backend: B) -> Self {
+        Engine {
+            store: RequestStore::new(),
+            scheduler,
+            backend,
+            kv_capacity: cfg.hardware.kv_capacity_tokens(),
+            now: 0.0,
+            pending: Vec::new(),
+            next_pending: 0,
+            stats: RunStats::default(),
+            rolling: RollingLatency::new(cfg.tiers.len(), 60.0),
+            n_tiers: cfg.tiers.len(),
+            tiers: cfg.tiers.clone(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance the engine clock to (at least) `t` — used by the real-time
+    /// serving loop to keep virtual time aligned with the wall clock
+    /// across idle periods.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    /// Queue a trace of requests for arrival-time admission. Must be
+    /// called before `run`; arrivals need not be sorted.
+    pub fn submit_trace(&mut self, trace: Vec<RequestSpec>) {
+        for spec in trace {
+            self.pending.push((spec.arrival_s, spec));
+        }
+        self.pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+
+    /// Inject a request immediately (server path).
+    pub fn submit_now(&mut self, mut spec: RequestSpec) -> RequestId {
+        spec.arrival_s = self.now;
+        let slo = self.tiers[spec.tier.min(self.tiers.len() - 1)].slo;
+        let id = self.store.insert(spec, slo);
+        self.scheduler.on_arrival(id, &self.store);
+        id
+    }
+
+    fn admit_due(&mut self) {
+        while self.next_pending < self.pending.len() && self.pending[self.next_pending].0 <= self.now
+        {
+            let spec = self.pending[self.next_pending].1.clone();
+            let slo = self.tiers[spec.tier.min(self.tiers.len() - 1)].slo;
+            let id = self.store.insert(spec, slo);
+            self.scheduler.on_arrival(id, &self.store);
+            self.next_pending += 1;
+        }
+    }
+
+    fn has_active(&self) -> bool {
+        self.store.iter().any(|r| r.is_active())
+    }
+
+    /// Run one scheduling iteration. Returns false when there is nothing
+    /// left to do (no active work and no future arrivals).
+    pub fn step(&mut self) -> bool {
+        self.admit_due();
+
+        let ctx = PlanContext {
+            now: self.now,
+            kv_capacity: self.kv_capacity,
+            kv_used: self.store.total_kv_tokens(),
+        };
+        let batch = self.scheduler.plan(ctx, &mut self.store);
+
+        if batch.is_empty() {
+            // Idle: jump to the next arrival, or stop.
+            if self.next_pending < self.pending.len() {
+                self.now = self.pending[self.next_pending].0;
+                return true;
+            }
+            return false;
+        }
+
+        let result = self.backend.execute(&batch, &self.store);
+        let t_end = self.now + result.latency_s;
+        self.apply(&batch, t_end);
+        self.now = t_end;
+        self.stats.iterations += 1;
+        self.stats.sim_time_s = self.now;
+        true
+    }
+
+    /// Apply batch effects at completion time `t`.
+    fn apply(&mut self, batch: &Batch, t: f64) {
+        // Prefill progress; the iteration that finishes a prompt also
+        // emits its first output token (Sarathi semantics: the final
+        // chunk's logits sample token 1).
+        for w in &batch.prefill {
+            self.stats.scheduled_prefill_tokens += w.tokens as u64;
+            let was_relegated;
+            {
+                let r = self.store.get_mut(w.id);
+                debug_assert!(r.prefill_remaining() >= w.tokens);
+                was_relegated = r.phase == Phase::Relegated;
+                r.prefilled += w.tokens;
+            }
+            let done = {
+                let r = self.store.get(w.id);
+                r.prefill_remaining() == 0
+            };
+            if done {
+                let finished = {
+                    let r = self.store.get_mut(w.id);
+                    r.emit_token(t)
+                };
+                self.stats.scheduled_decode_tokens += 1;
+                if finished {
+                    self.finish(w.id);
+                } else {
+                    {
+                        let r = self.store.get_mut(w.id);
+                        // Relegated requests stay relegated through decode.
+                        r.phase = if was_relegated { Phase::Relegated } else { Phase::Decode };
+                    }
+                    self.scheduler.on_prefill_complete(w.id, &self.store);
+                }
+            }
+        }
+
+        // Decode tokens.
+        for &id in &batch.decodes {
+            let finished = {
+                let r = self.store.get_mut(id);
+                debug_assert!(r.prefill_remaining() == 0);
+                r.emit_token(t)
+            };
+            self.stats.scheduled_decode_tokens += 1;
+            if finished {
+                self.finish(id);
+            }
+        }
+    }
+
+    fn finish(&mut self, id: RequestId) {
+        self.scheduler.on_finished(id, &self.store);
+        self.rolling.record(self.store.get(id));
+        self.backend.release(id);
+    }
+
+    /// Run to completion: all arrivals admitted and no active requests,
+    /// or `horizon_s` reached (stragglers then count as violations).
+    pub fn run(&mut self, horizon_s: f64) {
+        loop {
+            if self.now >= horizon_s {
+                break;
+            }
+            if !self.step() {
+                break;
+            }
+        }
+        let _ = self.has_active();
+    }
+
+    /// Evaluation summary at the current time.
+    pub fn summary(&self, long_threshold: u32) -> Summary {
+        summarize(&self.store, self.now, long_threshold, self.n_tiers)
+    }
+
+    pub fn scheduler_backlog(&self) -> usize {
+        self.scheduler.backlog()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, Policy};
+    use crate::qos::Importance;
+
+    fn spec(arrival: f64, prompt: u32, decode: u32, tier: usize) -> RequestSpec {
+        RequestSpec {
+            arrival_s: arrival,
+            prompt_tokens: prompt,
+            decode_tokens: decode,
+            tier,
+            app_id: tier as u32,
+            importance: Importance::High,
+        }
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_trace(vec![spec(0.0, 1000, 20, 0)]);
+        eng.run(1e6);
+        let r = eng.store.get(0);
+        assert_eq!(r.phase, Phase::Finished);
+        assert_eq!(r.decoded, 20);
+        assert!(r.met_slo(), "idle system must meet SLO: ttft={:?}", r.ttft());
+        assert!(eng.stats.scheduled_prefill_tokens == 1000);
+        assert_eq!(eng.stats.scheduled_decode_tokens, 20);
+    }
+
+    #[test]
+    fn ttft_reasonable_when_idle() {
+        // 2048-token prompt on an idle Niyama replica: a couple of big
+        // chunks => well under a second.
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_trace(vec![spec(0.0, 2048, 5, 0)]);
+        eng.run(1e6);
+        let ttft = eng.store.get(0).ttft().unwrap();
+        assert!(ttft < 0.5, "ttft {ttft}");
+    }
+
+    #[test]
+    fn tbt_respected_for_interactive_under_load() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        // One interactive + several batch jobs competing.
+        let mut trace = vec![spec(0.0, 512, 100, 0)];
+        for i in 0..5 {
+            trace.push(spec(0.1 * i as f64, 4000, 200, 1));
+        }
+        eng.submit_trace(trace);
+        eng.run(1e6);
+        let r = eng.store.get(0);
+        assert_eq!(r.phase, Phase::Finished);
+        assert!(
+            r.met_slo(),
+            "interactive token deadlines violated: lateness {}",
+            r.max_lateness
+        );
+    }
+
+    #[test]
+    fn fcfs_blocks_urgent_behind_long() {
+        // Head-of-line blocking, the paper's core FCFS criticism: a giant
+        // batch prompt ahead of an interactive one delays its TTFT.
+        let mut cfg = Config::default();
+        cfg.scheduler = crate::config::SchedulerConfig::sarathi(Policy::SarathiFcfs, 256);
+        cfg.scheduler.policy = Policy::SarathiFcfs;
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_trace(vec![spec(0.0, 60_000, 5, 2), spec(0.01, 512, 5, 0)]);
+        eng.run(1e6);
+        let urgent = eng.store.get(1);
+        assert!(
+            urgent.ttft().unwrap() > 3.0,
+            "expected HoL blocking, ttft {:?}",
+            urgent.ttft()
+        );
+
+        // Niyama schedules the urgent one first.
+        let cfg2 = Config::default();
+        let mut eng2 = Engine::sim(&cfg2);
+        eng2.submit_trace(vec![spec(0.0, 60_000, 5, 2), spec(0.01, 512, 5, 0)]);
+        eng2.run(1e6);
+        let urgent2 = eng2.store.get(1);
+        assert!(
+            urgent2.ttft().unwrap() < 1.0,
+            "niyama must dodge HoL blocking, ttft {:?}",
+            urgent2.ttft()
+        );
+    }
+
+    #[test]
+    fn idle_gaps_skip_to_next_arrival() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_trace(vec![spec(0.0, 100, 2, 0), spec(1000.0, 100, 2, 0)]);
+        eng.run(1e6);
+        assert_eq!(eng.store.iter().filter(|r| r.phase == Phase::Finished).count(), 2);
+        // Time jumped across the gap rather than spinning.
+        assert!(eng.stats.iterations < 100, "iterations {}", eng.stats.iterations);
+    }
+
+    #[test]
+    fn horizon_caps_runaway() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        let trace: Vec<_> = (0..500).map(|i| spec(i as f64 * 0.01, 8000, 500, 1)).collect();
+        eng.submit_trace(trace);
+        eng.run(30.0); // hard stop
+        assert!(eng.now() <= 31.0);
+    }
+
+    #[test]
+    fn summary_reflects_completions() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_trace(vec![spec(0.0, 500, 10, 0), spec(0.0, 500, 10, 1)]);
+        eng.run(1e6);
+        let s = eng.summary(5000);
+        assert_eq!(s.total, 2);
+        assert_eq!(s.finished, 2);
+        assert_eq!(s.violations, 0);
+    }
+
+    #[test]
+    fn submit_now_assigns_current_time() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        let id = eng.submit_now(spec(123.0, 10, 2, 0));
+        assert_eq!(eng.store.get(id).spec.arrival_s, 0.0);
+    }
+}

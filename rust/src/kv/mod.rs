@@ -1,0 +1,199 @@
+//! KV-cache management.
+//!
+//! Two layers:
+//! - [`BlockLedger`]: paged block accounting (vLLM-style) — allocation,
+//!   growth and release in fixed-size token blocks, used for admission
+//!   control and memory-pressure accounting on both backends.
+//! - [`KvStore`]: host-side cache storage for the real PJRT path — one
+//!   `(L,2,Hkv,S,D)` f32 buffer per in-flight request, recycled through a
+//!   free pool to keep the serving loop allocation-free in steady state.
+
+use crate::request::RequestId;
+use std::collections::HashMap;
+
+/// Paged block accounting (no data, just occupancy).
+#[derive(Debug)]
+pub struct BlockLedger {
+    block_tokens: u32,
+    total_blocks: u64,
+    free_blocks: u64,
+    held: HashMap<RequestId, u64>,
+}
+
+impl BlockLedger {
+    pub fn new(capacity_tokens: u64, block_tokens: u32) -> Self {
+        assert!(block_tokens > 0);
+        let total_blocks = capacity_tokens / block_tokens as u64;
+        BlockLedger { block_tokens, total_blocks, free_blocks: total_blocks, held: HashMap::new() }
+    }
+
+    fn blocks_for(&self, tokens: u32) -> u64 {
+        ((tokens + self.block_tokens - 1) / self.block_tokens) as u64
+    }
+
+    /// Ensure `id` holds enough blocks for `tokens`; allocates the delta.
+    /// Returns false (and changes nothing) if capacity is insufficient.
+    pub fn reserve(&mut self, id: RequestId, tokens: u32) -> bool {
+        let need = self.blocks_for(tokens);
+        let have = *self.held.get(&id).unwrap_or(&0);
+        if need <= have {
+            return true;
+        }
+        let delta = need - have;
+        if delta > self.free_blocks {
+            return false;
+        }
+        self.free_blocks -= delta;
+        self.held.insert(id, need);
+        true
+    }
+
+    /// Release all blocks held by `id`.
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(blocks) = self.held.remove(&id) {
+            self.free_blocks += blocks;
+        }
+    }
+
+    pub fn free_tokens(&self) -> u64 {
+        self.free_blocks * self.block_tokens as u64
+    }
+
+    pub fn used_tokens(&self) -> u64 {
+        (self.total_blocks - self.free_blocks) * self.block_tokens as u64
+    }
+
+    pub fn holders(&self) -> usize {
+        self.held.len()
+    }
+}
+
+/// Host-side KV buffers for the PJRT path.
+#[derive(Debug, Default)]
+pub struct KvStore {
+    elements_per_seq: usize,
+    caches: HashMap<RequestId, Vec<f32>>,
+    /// Recycled buffers (avoid realloc+zeroing cost per request).
+    pool: Vec<Vec<f32>>,
+}
+
+impl KvStore {
+    pub fn new(elements_per_seq: usize) -> Self {
+        KvStore { elements_per_seq, caches: HashMap::new(), pool: Vec::new() }
+    }
+
+    /// Get (allocating if needed) the cache buffer for a request.
+    pub fn entry(&mut self, id: RequestId) -> &mut Vec<f32> {
+        if !self.caches.contains_key(&id) {
+            let mut buf = self.pool.pop().unwrap_or_default();
+            buf.clear();
+            buf.resize(self.elements_per_seq, 0.0);
+            self.caches.insert(id, buf);
+        }
+        self.caches.get_mut(&id).unwrap()
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.caches.contains_key(&id)
+    }
+
+    /// Release a request's buffer back to the pool.
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(buf) = self.caches.remove(&id) {
+            self.pool.push(buf);
+        }
+    }
+
+    /// Mutable access to several caches at once (decode batch assembly).
+    /// Panics if an id is missing or duplicated.
+    pub fn get_many_mut(&mut self, ids: &[RequestId]) -> Vec<&mut [f32]> {
+        // Safety dance via raw pointers: ids are checked for uniqueness.
+        for (i, a) in ids.iter().enumerate() {
+            for b in &ids[i + 1..] {
+                assert_ne!(a, b, "duplicate request id in decode batch");
+            }
+        }
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let buf = self.caches.get_mut(&id).expect("kv cache missing") as *mut Vec<f32>;
+            // SAFETY: uniqueness checked above; lifetimes tied to &mut self.
+            out.push(unsafe { (*buf).as_mut_slice() });
+        }
+        out
+    }
+
+    pub fn live(&self) -> usize {
+        self.caches.len()
+    }
+
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_reserve_and_release() {
+        let mut l = BlockLedger::new(1000, 16); // 62 blocks
+        assert!(l.reserve(1, 100)); // 7 blocks
+        assert_eq!(l.used_tokens(), 7 * 16);
+        assert!(l.reserve(1, 100), "idempotent");
+        assert_eq!(l.used_tokens(), 7 * 16);
+        assert!(l.reserve(1, 200)); // grow to 13 blocks
+        assert_eq!(l.used_tokens(), 13 * 16);
+        l.release(1);
+        assert_eq!(l.used_tokens(), 0);
+        assert_eq!(l.holders(), 0);
+    }
+
+    #[test]
+    fn ledger_denies_over_capacity() {
+        let mut l = BlockLedger::new(100, 10); // 10 blocks
+        assert!(l.reserve(1, 60));
+        assert!(!l.reserve(2, 50), "only 4 blocks left");
+        assert!(l.reserve(2, 40));
+        assert_eq!(l.free_tokens(), 0);
+    }
+
+    #[test]
+    fn ledger_rounds_to_blocks() {
+        let mut l = BlockLedger::new(100, 16);
+        assert!(l.reserve(1, 1)); // one whole block
+        assert_eq!(l.used_tokens(), 16);
+    }
+
+    #[test]
+    fn kvstore_allocates_and_recycles() {
+        let mut s = KvStore::new(64);
+        s.entry(1)[0] = 5.0;
+        s.entry(2);
+        assert_eq!(s.live(), 2);
+        s.release(1);
+        assert_eq!(s.live(), 1);
+        assert_eq!(s.pooled(), 1);
+        // Recycled buffer is zeroed.
+        assert_eq!(s.entry(3)[0], 0.0);
+        assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn kvstore_get_many_mut() {
+        let mut s = KvStore::new(4);
+        s.entry(1)[0] = 1.0;
+        s.entry(2)[0] = 2.0;
+        let bufs = s.get_many_mut(&[1, 2]);
+        assert_eq!(bufs[0][0], 1.0);
+        assert_eq!(bufs[1][0], 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn kvstore_rejects_duplicates() {
+        let mut s = KvStore::new(4);
+        s.entry(1);
+        let _ = s.get_many_mut(&[1, 1]);
+    }
+}

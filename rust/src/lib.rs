@@ -1,0 +1,33 @@
+//! # Niyama: QoS-driven LLM inference serving
+//!
+//! A full-system reproduction of *"Niyama: Breaking the Silos of LLM
+//! Inference Serving"* (Goel et al., 2025) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the serving coordinator: QoS classes and
+//!   deadlines ([`qos`]), dynamic chunking, hybrid prioritization, eager
+//!   relegation and selective preemption ([`scheduler`]), the iteration
+//!   engine ([`engine`]), the discrete-event execution substrate
+//!   ([`simulator`]) and the PJRT runtime for real execution ([`runtime`]).
+//! - **Layer 2** — a JAX transformer (`python/compile/model.py`), AOT
+//!   lowered to HLO text per chunk-size bucket.
+//! - **Layer 1** — Pallas chunked-prefill / decode attention kernels
+//!   (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: `make artifacts` compiles the
+//! model once; the Rust binary is self-contained afterwards.
+
+pub mod config;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod predictor;
+pub mod qos;
+pub mod request;
+pub mod repro;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod simulator;
+pub mod util;
+pub mod workload;

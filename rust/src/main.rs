@@ -1,0 +1,226 @@
+//! `niyama` — QoS-driven LLM serving CLI.
+//!
+//! Subcommands:
+//!   serve     — load AOT artifacts and serve the JSON-lines protocol
+//!   simulate  — run one workload through the simulator, print a summary
+//!   repro     — regenerate a paper figure/table (see `repro --list`)
+//!   calibrate — fit and print the latency predictor vs the cost model
+//!
+//! No CLI framework ships in this environment; flags are parsed by a
+//! small `Args` helper below (`--key value` / `--flag`).
+
+use anyhow::{anyhow, bail, Result};
+use niyama::config::{Config, Policy};
+use niyama::engine::Engine;
+use niyama::predictor::LatencyPredictor;
+use niyama::repro::{self, Scale};
+use niyama::runtime::{ModelRuntime, PjrtBackend};
+use niyama::server::{listen, Server};
+use niyama::simulator::CostModel;
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::WorkloadSpec;
+use std::collections::HashMap;
+use std::path::Path;
+
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // "--key value" unless the next token is another flag or
+                // absent, in which case it's a boolean flag.
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    if let Some(p) = args.get("policy") {
+        cfg.scheduler.policy = Policy::parse(p)?;
+        if cfg.scheduler.policy != Policy::Niyama {
+            cfg.scheduler =
+                niyama::config::SchedulerConfig::sarathi(cfg.scheduler.policy, cfg.scheduler.chunk_size);
+        }
+    }
+    if let Some(a) = args.get("alpha") {
+        cfg.scheduler.alpha = a.parse().map_err(|_| anyhow!("bad --alpha"))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dataset = args.get("dataset").unwrap_or("azure-code");
+    let ds = Dataset::by_name(dataset).ok_or_else(|| anyhow!("unknown dataset '{dataset}'"))?;
+    let qps = args.get_f64("qps", 2.0)?;
+    let duration = args.get_f64("duration", 300.0)?;
+    let seed = args.get_f64("seed", 7.0)? as u64;
+
+    println!(
+        "simulate: policy={} dataset={} qps={} duration={}s",
+        cfg.scheduler.policy.name(),
+        ds.name,
+        qps,
+        duration
+    );
+    let spec = WorkloadSpec::uniform(ds.clone(), qps, duration);
+    let trace = spec.generate(&mut Rng::new(seed));
+    let n = trace.len();
+    let mut eng = Engine::sim(&cfg);
+    eng.submit_trace(trace);
+    let t0 = std::time::Instant::now();
+    eng.run(duration + repro::drain_budget(&cfg));
+    let wall = t0.elapsed().as_secs_f64();
+    let s = eng.summary(ds.long_prompt_threshold());
+
+    println!("requests: {n}   iterations: {}", eng.stats.iterations);
+    println!(
+        "sim time: {:.1}s   wall: {:.2}s ({:.0}x real-time)",
+        eng.now(),
+        wall,
+        eng.now() / wall.max(1e-9)
+    );
+    println!("violations: {:.2}%  (important: {:.2}%)", s.violation_pct, s.important_violation_pct);
+    println!("ttft p50/p95/p99: {:.3}/{:.3}/{:.3} s", s.ttft_p50, s.ttft_p95, s.ttft_p99);
+    println!("ttlt p50/p95/p99: {:.1}/{:.1}/{:.1} s", s.ttlt_p50, s.ttlt_p95, s.ttlt_p99);
+    println!("goodput: {:.3} req/s   relegated: {:.2}%", s.goodput_rps, s.relegated_pct);
+    for t in 0..cfg.tiers.len() {
+        println!("  tier {} ({}): {:.2}% violations", t, cfg.tiers[t].name, s.tier_violation_pct(t));
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    if args.has("list") {
+        println!("available experiment ids: {:?}", repro::ALL_IDS);
+        return Ok(());
+    }
+    let id = args
+        .get("id")
+        .or_else(|| args.positional.get(1).map(|s| s.as_str()))
+        .ok_or_else(|| anyhow!("repro needs --id <figN|tabN|all>"))?;
+    let scale = if args.has("quick") {
+        Scale::quick()
+    } else if args.has("full") {
+        Scale::full()
+    } else {
+        Scale::standard()
+    };
+    repro::run(id, scale)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7440");
+    let mut cfg = load_config(args)?;
+    cfg.hardware = niyama::config::HardwareModel::tiny_cpu();
+    let artifacts_dir = artifacts.to_string();
+    let addr = addr.to_string();
+    // PJRT handles are not Send: the engine is built inside the server
+    // thread.
+    let server = Server::start(move || {
+        let runtime = ModelRuntime::load(Path::new(&artifacts_dir)).expect("loading artifacts");
+        // Chunk ceiling = the largest compiled bucket.
+        cfg.scheduler.max_chunk_size = runtime.max_chunk() as u32;
+        cfg.scheduler.chunk_size = cfg.scheduler.chunk_size.min(cfg.scheduler.max_chunk_size);
+        eprintln!(
+            "loaded model: {} params, chunk buckets {:?}, decode buckets {:?}",
+            runtime.manifest.model.param_count,
+            runtime.manifest.chunk_buckets(),
+            runtime.manifest.decode_buckets()
+        );
+        let backend = PjrtBackend::new(runtime);
+        let scheduler = niyama::engine::build_scheduler(
+            &cfg,
+            std::sync::Arc::new(CostModel::new(cfg.hardware.clone())),
+        );
+        Engine::new(&cfg, scheduler, backend)
+    });
+    listen(&addr, server.client.clone())
+}
+
+fn cmd_calibrate(_args: &Args) -> Result<()> {
+    let cfg = Config::default();
+    let model = CostModel::new(cfg.hardware.clone());
+    let predictor = LatencyPredictor::calibrate(&model, cfg.seed);
+    println!("predictor calibrated against {}", cfg.hardware.name);
+    for (chunk, nd, kv) in [(256u32, 16usize, 1024u32), (2048, 64, 2048), (64, 4, 256)] {
+        let mut b = niyama::simulator::BatchShape::default();
+        b.prefill.push(niyama::simulator::PrefillSegment { cache_len: 0, chunk });
+        b.decode_kv_lens = vec![kv; nd];
+        println!(
+            "  chunk={chunk:<5} decodes={nd:<3} kv={kv:<5} cost_model={:.4}s predictor={:.4}s",
+            model.iteration_latency(&b),
+            predictor.predict(&b)
+        );
+    }
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "usage: niyama <serve|simulate|repro|calibrate> [flags]\n\
+     \n\
+     serve     --artifacts DIR --addr HOST:PORT [--policy P]\n\
+     simulate  --policy P --dataset D --qps N --duration S [--config FILE]\n\
+     repro     --id <fig1|fig2|fig4|fig5|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|tab1|tab3|all>\n\
+               [--quick|--full]   (or: repro --list)\n\
+     calibrate\n\
+     \n\
+     policies: niyama, sarathi-fcfs, sarathi-edf, sarathi-srpf, sarathi-sjf\n\
+     datasets: sharegpt, azure-conv, azure-code"
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some(other) => bail!("unknown command '{other}'\n{}", usage()),
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Metrics: latency distributions, SLO-violation accounting, goodput.
+//!
+//! Everything the evaluation section reports is computed here from the
+//! finished `RequestStore`: median/p95/p99 TTFT/TBT/TTLT (Figs. 2, 8, 11),
+//! violation percentages overall / per QoS bucket / by request length
+//! (Fig. 9), goodput (Fig. 7b) and capacity search support (Fig. 7a).
+
+use crate::qos::Slo;
+use crate::request::{Request, RequestStore};
+use crate::util::{Quantiles, RollingQuantile};
+
+/// Violation verdict for one request at evaluation time `horizon_s`
+/// (unfinished requests past their deadline count as violations, like the
+/// paper's overload analysis).
+pub fn violated(req: &Request, horizon_s: f64) -> bool {
+    if req.finished_at.is_some() {
+        return !req.met_slo();
+    }
+    // Unfinished: violated if any deadline already passed.
+    match req.slo {
+        Slo::Interactive { ttft_s, .. } => match req.first_token_at {
+            Some(t) => t - req.spec.arrival_s > ttft_s || req.max_lateness > 1e-9,
+            None => horizon_s > req.spec.arrival_s + ttft_s,
+        },
+        Slo::NonInteractive { ttlt_s } => horizon_s > req.spec.arrival_s + ttlt_s,
+    }
+}
+
+/// Full evaluation summary over a finished run.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub total: usize,
+    pub finished: usize,
+    pub violations: usize,
+    pub violation_pct: f64,
+    /// Violations among requests flagged high-importance.
+    pub important_violation_pct: f64,
+    /// Per-tier (violations, total).
+    pub per_tier: Vec<(usize, usize)>,
+    /// Long-request split (prompt >= threshold).
+    pub long_violation_pct: f64,
+    pub short_violation_pct: f64,
+    /// Latency quantiles.
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    pub ttlt_p50: f64,
+    pub ttlt_p95: f64,
+    pub ttlt_p99: f64,
+    pub max_tbt_p99: f64,
+    /// Requests/s served within SLO (goodput, Fig. 7b).
+    pub goodput_rps: f64,
+    /// Fraction of requests that were ever relegated.
+    pub relegated_pct: f64,
+}
+
+/// Compute the summary at horizon `horizon_s` (typically the workload end
+/// plus drain time) with the given long-prompt threshold.
+pub fn summarize(store: &RequestStore, horizon_s: f64, long_threshold: u32, n_tiers: usize) -> Summary {
+    summarize_many(&[store], horizon_s, long_threshold, n_tiers)
+}
+
+/// Merged summary across several replicas' request stores (cluster runs).
+pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: u32, n_tiers: usize) -> Summary {
+    let mut ttft = Quantiles::new();
+    let mut ttlt = Quantiles::new();
+    let mut max_tbt = Quantiles::new();
+    let mut per_tier = vec![(0usize, 0usize); n_tiers];
+    let (mut total, mut finished, mut violations) = (0usize, 0usize, 0usize);
+    let (mut long_total, mut long_viol, mut short_total, mut short_viol) = (0, 0, 0, 0);
+    let (mut imp_total, mut imp_viol) = (0usize, 0usize);
+    let mut relegated = 0usize;
+
+    for req in stores.iter().flat_map(|s| s.iter()) {
+        total += 1;
+        let v = violated(req, horizon_s);
+        if v {
+            violations += 1;
+        }
+        if req.finished_at.is_some() {
+            finished += 1;
+        }
+        if req.was_relegated {
+            relegated += 1;
+        }
+        if req.spec.tier < n_tiers {
+            per_tier[req.spec.tier].1 += 1;
+            if v {
+                per_tier[req.spec.tier].0 += 1;
+            }
+        }
+        if req.spec.prompt_tokens >= long_threshold {
+            long_total += 1;
+            if v {
+                long_viol += 1;
+            }
+        } else {
+            short_total += 1;
+            if v {
+                short_viol += 1;
+            }
+        }
+        if req.spec.importance == crate::qos::Importance::High {
+            imp_total += 1;
+            if v {
+                imp_viol += 1;
+            }
+        }
+        if let Some(t) = req.ttft() {
+            ttft.push(t);
+        }
+        if let Some(t) = req.ttlt() {
+            ttlt.push(t);
+        }
+        if req.decoded > 1 {
+            max_tbt.push(req.max_tbt);
+        }
+    }
+
+    let pct = |num: usize, den: usize| if den == 0 { 0.0 } else { 100.0 * num as f64 / den as f64 };
+    let served_ok = finished
+        - stores
+            .iter()
+            .flat_map(|s| s.iter())
+            .filter(|r| r.finished_at.is_some() && !r.met_slo())
+            .count();
+
+    Summary {
+        total,
+        finished,
+        violations,
+        violation_pct: pct(violations, total),
+        important_violation_pct: pct(imp_viol, imp_total),
+        per_tier,
+        long_violation_pct: pct(long_viol, long_total),
+        short_violation_pct: pct(short_viol, short_total),
+        ttft_p50: ttft.quantile(0.5).unwrap_or(f64::NAN),
+        ttft_p95: ttft.quantile(0.95).unwrap_or(f64::NAN),
+        ttft_p99: ttft.quantile(0.99).unwrap_or(f64::NAN),
+        ttlt_p50: ttlt.quantile(0.5).unwrap_or(f64::NAN),
+        ttlt_p95: ttlt.quantile(0.95).unwrap_or(f64::NAN),
+        ttlt_p99: ttlt.quantile(0.99).unwrap_or(f64::NAN),
+        max_tbt_p99: max_tbt.quantile(0.99).unwrap_or(0.0),
+        goodput_rps: served_ok as f64 / horizon_s.max(1e-9),
+        relegated_pct: pct(relegated, total),
+    }
+}
+
+impl Summary {
+    pub fn tier_violation_pct(&self, tier: usize) -> f64 {
+        let (v, t) = self.per_tier[tier];
+        if t == 0 {
+            0.0
+        } else {
+            100.0 * v as f64 / t as f64
+        }
+    }
+}
+
+/// Rolling latency recorder (Fig. 11's 60-second p99 windows). Fed by the
+/// engine as requests finish.
+#[derive(Debug)]
+pub struct RollingLatency {
+    per_tier: Vec<RollingQuantile>,
+}
+
+impl RollingLatency {
+    pub fn new(n_tiers: usize, window_s: f64) -> Self {
+        RollingLatency {
+            per_tier: (0..n_tiers).map(|_| RollingQuantile::new(window_s)).collect(),
+        }
+    }
+
+    /// Record a finished request's normalized latency: TTFT for
+    /// interactive tiers, TTLT for non-interactive.
+    pub fn record(&mut self, req: &Request) {
+        let (Some(finish), Some(_)) = (req.finished_at, req.first_token_at) else {
+            return;
+        };
+        let lat = match req.slo {
+            Slo::Interactive { .. } => req.ttft().unwrap(),
+            Slo::NonInteractive { .. } => req.ttlt().unwrap(),
+        };
+        if req.spec.tier < self.per_tier.len() {
+            self.per_tier[req.spec.tier].push(finish, lat);
+        }
+    }
+
+    pub fn series(&self, tier: usize, q: f64) -> Vec<(f64, f64)> {
+        self.per_tier[tier].series(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::Importance;
+    use crate::request::{Phase, RequestSpec};
+
+    fn add_request(
+        store: &mut RequestStore,
+        arrival: f64,
+        prompt: u32,
+        decode: u32,
+        tier: usize,
+        slo: Slo,
+    ) -> crate::request::RequestId {
+        store.insert(
+            RequestSpec {
+                arrival_s: arrival,
+                prompt_tokens: prompt,
+                decode_tokens: decode,
+                tier,
+                app_id: tier as u32,
+                importance: Importance::High,
+            },
+            slo,
+        )
+    }
+
+    fn finish(store: &mut RequestStore, id: crate::request::RequestId, times: &[f64]) {
+        let r = store.get_mut(id);
+        r.prefilled = r.spec.prompt_tokens;
+        r.phase = Phase::Decode;
+        for &t in times {
+            r.emit_token(t);
+        }
+    }
+
+    const INT: Slo = Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
+    const BATCH: Slo = Slo::NonInteractive { ttlt_s: 600.0 };
+
+    #[test]
+    fn summary_counts_violations() {
+        let mut store = RequestStore::new();
+        let ok = add_request(&mut store, 0.0, 100, 2, 0, INT);
+        finish(&mut store, ok, &[1.0, 1.04]);
+        let bad = add_request(&mut store, 0.0, 100, 1, 0, INT);
+        finish(&mut store, bad, &[10.0]); // TTFT 10 > 6
+        let s = summarize(&store, 100.0, 1000, 3);
+        assert_eq!(s.total, 2);
+        assert_eq!(s.violations, 1);
+        assert_eq!(s.violation_pct, 50.0);
+        assert_eq!(s.per_tier[0], (1, 2));
+    }
+
+    #[test]
+    fn unfinished_past_deadline_violates() {
+        let mut store = RequestStore::new();
+        add_request(&mut store, 0.0, 100, 5, 0, INT); // never runs
+        let s_before = summarize(&store, 3.0, 1000, 1);
+        assert_eq!(s_before.violations, 0, "deadline not yet passed");
+        let s_after = summarize(&store, 10.0, 1000, 1);
+        assert_eq!(s_after.violations, 1, "TTFT deadline passed unserved");
+    }
+
+    #[test]
+    fn long_short_split() {
+        let mut store = RequestStore::new();
+        let long = add_request(&mut store, 0.0, 5000, 1, 0, INT);
+        finish(&mut store, long, &[10.0]); // violated
+        let short = add_request(&mut store, 0.0, 10, 1, 0, INT);
+        finish(&mut store, short, &[1.0]); // fine
+        let s = summarize(&store, 100.0, 1000, 1);
+        assert_eq!(s.long_violation_pct, 100.0);
+        assert_eq!(s.short_violation_pct, 0.0);
+    }
+
+    #[test]
+    fn goodput_counts_only_in_slo() {
+        let mut store = RequestStore::new();
+        for i in 0..10 {
+            let id = add_request(&mut store, i as f64, 10, 1, 1, BATCH);
+            let t = if i < 7 { i as f64 + 1.0 } else { i as f64 + 700.0 };
+            finish(&mut store, id, &[t]);
+        }
+        let s = summarize(&store, 100.0, 1000, 3);
+        assert_eq!(s.finished, 10);
+        assert!((s.goodput_rps - 7.0 / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ttft_quantiles() {
+        let mut store = RequestStore::new();
+        for i in 1..=9 {
+            let id = add_request(&mut store, 0.0, 10, 1, 1, BATCH);
+            finish(&mut store, id, &[i as f64]);
+        }
+        let mut s = summarize(&store, 1000.0, 1000, 3);
+        assert!((s.ttft_p50 - 5.0).abs() < 1e-9);
+        assert!(s.ttft_p99 > 8.5);
+        s.finished = s.finished; // keep mutable binding exercised
+    }
+
+    #[test]
+    fn important_violations_tracked_separately() {
+        let mut store = RequestStore::new();
+        let low = store.insert(
+            RequestSpec {
+                arrival_s: 0.0,
+                prompt_tokens: 10,
+                decode_tokens: 1,
+                tier: 0,
+                app_id: 0,
+                importance: Importance::Low,
+            },
+            INT,
+        );
+        finish(&mut store, low, &[20.0]); // low-importance violation
+        let hi = add_request(&mut store, 0.0, 10, 1, 0, INT);
+        finish(&mut store, hi, &[1.0]);
+        let s = summarize(&store, 100.0, 1000, 1);
+        assert_eq!(s.violation_pct, 50.0);
+        assert_eq!(s.important_violation_pct, 0.0);
+    }
+
+    #[test]
+    fn rolling_latency_series() {
+        let mut store = RequestStore::new();
+        let mut roll = RollingLatency::new(1, 10.0);
+        for i in 0..5 {
+            let id = add_request(&mut store, 10.0 * i as f64, 10, 1, 0, INT);
+            finish(&mut store, id, &[10.0 * i as f64 + 2.0]);
+            roll.record(store.get(id));
+        }
+        let series = roll.series(0, 0.99);
+        assert!(!series.is_empty());
+        // Every request had TTFT 2.0.
+        for (_, v) in series {
+            assert!((v - 2.0).abs() < 1e-9);
+        }
+    }
+}

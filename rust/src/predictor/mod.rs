@@ -1,0 +1,194 @@
+//! Lightweight batch-latency predictor (paper §3.6).
+//!
+//! The paper trains a random forest on Vidur profiles; we use ridge
+//! regression over hand-chosen features of the batch shape, fit from
+//! calibration runs against the execution backend. The cost surface is
+//! smooth and near-linear in these features, prediction is a dot product
+//! (allocation-free on the scheduling hot path), and the fitted model is
+//! backend-agnostic — calibrate against the simulator for experiments or
+//! against the real PJRT runtime for serving.
+
+use crate::simulator::cost_model::{BatchShape, CostModel};
+use crate::util::linalg::ridge_fit;
+use crate::util::Rng;
+
+/// Feature vector of a batch: see `features()` for the definition.
+pub const N_FEATURES: usize = 6;
+
+/// Extract predictor features from a batch shape.
+///
+/// [1, prefill_tokens, n_decodes, decode_kv_sum/1e3,
+///  prefill_attn_reads/1e6, total_tokens^2/1e6]
+pub fn features(batch: &BatchShape) -> [f64; N_FEATURES] {
+    let prefill_tokens = batch.total_prefill_tokens() as f64;
+    let n_decodes = batch.decode_kv_lens.len() as f64;
+    let decode_kv_sum: f64 = batch.decode_kv_lens.iter().map(|&k| k as f64).sum();
+    let mut attn_reads = 0.0;
+    for seg in &batch.prefill {
+        let c = seg.chunk as f64;
+        attn_reads += c * seg.cache_len as f64 + 0.5 * c * (c + 1.0);
+    }
+    let total = prefill_tokens + n_decodes;
+    [
+        1.0,
+        prefill_tokens,
+        n_decodes,
+        decode_kv_sum / 1e3,
+        attn_reads / 1e6,
+        total * total / 1e6,
+    ]
+}
+
+/// Linear latency predictor over `features()`.
+#[derive(Debug, Clone)]
+pub struct LatencyPredictor {
+    weights: [f64; N_FEATURES],
+    /// Residual safety floor: predictions are clamped to >= this.
+    floor_s: f64,
+}
+
+impl LatencyPredictor {
+    /// Predict iteration latency in seconds.
+    pub fn predict(&self, batch: &BatchShape) -> f64 {
+        let f = features(batch);
+        let mut y = 0.0;
+        for i in 0..N_FEATURES {
+            y += self.weights[i] * f[i];
+        }
+        y.max(self.floor_s)
+    }
+
+    /// Fit from (batch, measured latency) samples.
+    pub fn fit(samples: &[(BatchShape, f64)]) -> Option<LatencyPredictor> {
+        if samples.len() < N_FEATURES {
+            return None;
+        }
+        let xs: Vec<Vec<f64>> = samples.iter().map(|(b, _)| features(b).to_vec()).collect();
+        let ys: Vec<f64> = samples.iter().map(|&(_, y)| y).collect();
+        let w = ridge_fit(&xs, &ys, 1e-6)?;
+        let mut weights = [0.0; N_FEATURES];
+        weights.copy_from_slice(&w);
+        let floor_s = ys.iter().cloned().fold(f64::INFINITY, f64::min).max(0.0) * 0.5;
+        Some(LatencyPredictor { weights, floor_s })
+    }
+
+    /// Calibrate against a cost model by sweeping representative batch
+    /// shapes — the simulator-backed analogue of profiling the real
+    /// engine (the paper's "performance profiles collected from Vidur").
+    pub fn calibrate(model: &CostModel, seed: u64) -> LatencyPredictor {
+        let mut rng = Rng::new(seed ^ 0xCA11B7A7E);
+        let mut samples = Vec::new();
+        // Structured grid: chunk x cache_len x decode load.
+        for &chunk in &[0u32, 16, 32, 64, 128, 256, 512, 1024, 2048] {
+            for &cache in &[0u32, 512, 2048, 8192] {
+                for &nd in &[0usize, 1, 8, 32, 128] {
+                    for &kv in &[128u32, 1024, 4096] {
+                        if chunk == 0 && nd == 0 {
+                            continue;
+                        }
+                        let mut b = BatchShape::default();
+                        if chunk > 0 {
+                            b.prefill.push(crate::simulator::cost_model::PrefillSegment {
+                                cache_len: cache,
+                                chunk,
+                            });
+                        }
+                        b.decode_kv_lens = vec![kv; nd];
+                        let y = model.iteration_latency(&b);
+                        samples.push((b, y));
+                    }
+                }
+            }
+        }
+        // Random shapes to cover mixed segments.
+        for _ in 0..200 {
+            let mut b = BatchShape::default();
+            let n_seg = rng.below(3) as usize;
+            for _ in 0..n_seg {
+                b.prefill.push(crate::simulator::cost_model::PrefillSegment {
+                    cache_len: rng.below(8192) as u32,
+                    chunk: 1 + rng.below(1024) as u32,
+                });
+            }
+            let nd = rng.below(192) as usize;
+            b.decode_kv_lens = (0..nd).map(|_| 1 + rng.below(6000) as u32).collect();
+            if b.is_empty() {
+                continue;
+            }
+            let y = model.iteration_latency(&b);
+            samples.push((b, y));
+        }
+        Self::fit(&samples).expect("calibration produces a well-posed fit")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareModel;
+    use crate::simulator::cost_model::PrefillSegment;
+
+    fn model() -> CostModel {
+        CostModel::new(HardwareModel::llama3_8b_a100())
+    }
+
+    fn shape(chunk: u32, cache: u32, nd: usize, kv: u32) -> BatchShape {
+        let mut b = BatchShape::default();
+        if chunk > 0 {
+            b.prefill.push(PrefillSegment { cache_len: cache, chunk });
+        }
+        b.decode_kv_lens = vec![kv; nd];
+        b
+    }
+
+    #[test]
+    fn calibrated_predictor_tracks_cost_model() {
+        let m = model();
+        let p = LatencyPredictor::calibrate(&m, 0);
+        // Out-of-grid probe points: within 25% relative error.
+        for (c, s0, nd, kv) in
+            [(192u32, 700u32, 20usize, 900u32), (384, 3000, 60, 2000), (96, 100, 4, 300)]
+        {
+            let b = shape(c, s0, nd, kv);
+            let want = m.iteration_latency(&b);
+            let got = p.predict(&b);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.25, "chunk {c}: want {want}, got {got} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn predictions_monotone_in_chunk() {
+        let m = model();
+        let p = LatencyPredictor::calibrate(&m, 0);
+        let mut prev = 0.0;
+        for chunk in [64u32, 256, 512, 1024, 2048] {
+            let y = p.predict(&shape(chunk, 1000, 16, 1000));
+            assert!(y > prev, "chunk {chunk}: {y} <= {prev}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn fit_requires_enough_samples() {
+        let b = shape(64, 0, 0, 0);
+        assert!(LatencyPredictor::fit(&[(b, 0.01)]).is_none());
+    }
+
+    #[test]
+    fn predictions_have_floor() {
+        let m = model();
+        let p = LatencyPredictor::calibrate(&m, 0);
+        let tiny = shape(1, 0, 0, 0);
+        assert!(p.predict(&tiny) > 0.0);
+    }
+
+    #[test]
+    fn features_reflect_batch_content() {
+        let a = features(&shape(256, 0, 0, 0));
+        let b = features(&shape(256, 0, 32, 1024));
+        assert_eq!(a[1], 256.0);
+        assert_eq!(b[2], 32.0);
+        assert!(b[3] > a[3]);
+    }
+}

@@ -1,0 +1,195 @@
+//! QoS classes, SLO targets and deadline arithmetic (paper §3.2).
+//!
+//! Niyama defines two QoS *classes* — interactive (TTFT + TBT SLOs) and
+//! non-interactive (TTLT SLO) — and lets applications declare arbitrary
+//! *tiers* within them (Table 2). All deadline math from eqs. (1)–(3)
+//! lives here. Times are f64 seconds on a workload-relative clock.
+
+/// Service-level objectives of a QoS class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Slo {
+    /// User-facing: deadline on the first token and on every subsequent
+    /// token gap.
+    Interactive {
+        /// Time-to-first-token target, seconds.
+        ttft_s: f64,
+        /// Time-between-tokens target, seconds.
+        tbt_s: f64,
+    },
+    /// Batch-oriented: a single deadline on total completion.
+    NonInteractive {
+        /// Time-to-last-token target, seconds.
+        ttlt_s: f64,
+    },
+}
+
+impl Slo {
+    pub fn is_interactive(&self) -> bool {
+        matches!(self, Slo::Interactive { .. })
+    }
+}
+
+/// A QoS tier: a named SLO an application signs up for.
+#[derive(Debug, Clone)]
+pub struct QosTier {
+    pub name: String,
+    pub slo: Slo,
+}
+
+impl QosTier {
+    pub fn interactive(name: &str, ttft_s: f64, tbt_s: f64) -> Self {
+        QosTier { name: name.to_string(), slo: Slo::Interactive { ttft_s, tbt_s } }
+    }
+
+    pub fn non_interactive(name: &str, ttlt_s: f64) -> Self {
+        QosTier { name: name.to_string(), slo: Slo::NonInteractive { ttlt_s } }
+    }
+}
+
+/// The paper's Table 2 tiers: Q1 interactive (TTFT 6 s, TBT 50 ms),
+/// Q2 non-interactive (TTLT 600 s), Q3 non-interactive (TTLT 1800 s).
+pub fn table2_tiers() -> Vec<QosTier> {
+    vec![
+        QosTier::interactive("Q1", 6.0, 0.050),
+        QosTier::non_interactive("Q2", 600.0),
+        QosTier::non_interactive("Q3", 1800.0),
+    ]
+}
+
+/// Deadline calculator for one request under a given SLO.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadlines {
+    pub arrival_s: f64,
+    pub slo: Slo,
+}
+
+impl Deadlines {
+    pub fn new(arrival_s: f64, slo: Slo) -> Self {
+        Deadlines { arrival_s, slo }
+    }
+
+    /// Eq. (1): D_first = t_arrival + SLO_TTFT. For non-interactive
+    /// requests the first token has no deadline of its own; we return the
+    /// TTLT deadline (the only constraint that exists).
+    pub fn first_token(&self) -> f64 {
+        match self.slo {
+            Slo::Interactive { ttft_s, .. } => self.arrival_s + ttft_s,
+            Slo::NonInteractive { ttlt_s } => self.arrival_s + ttlt_s,
+        }
+    }
+
+    /// Eq. (2): D_n = t_arrival + SLO_TTFT + (n-1) * SLO_TBT for the n-th
+    /// token (1-based) of an interactive request. For non-interactive
+    /// requests, per-token pacing is derived by `paced_token_deadline`.
+    pub fn token(&self, n: u32) -> f64 {
+        debug_assert!(n >= 1);
+        match self.slo {
+            Slo::Interactive { ttft_s, tbt_s } => {
+                self.arrival_s + ttft_s + (n as f64 - 1.0) * tbt_s
+            }
+            Slo::NonInteractive { ttlt_s } => self.arrival_s + ttlt_s,
+        }
+    }
+
+    /// Eq. (3): D_total = t_arrival + SLO_TTLT. Interactive requests'
+    /// completion deadline is the deadline of their final token, which
+    /// depends on output length; this returns the deadline assuming
+    /// `total_tokens` outputs.
+    pub fn total(&self, total_tokens: u32) -> f64 {
+        match self.slo {
+            Slo::Interactive { .. } => self.token(total_tokens.max(1)),
+            Slo::NonInteractive { ttlt_s } => self.arrival_s + ttlt_s,
+        }
+    }
+
+    /// Implicit per-token pacing deadline for a non-interactive request in
+    /// decode phase (DESIGN.md §4): spread the remaining time budget evenly
+    /// over the expected remaining tokens, so slack is consumable by
+    /// dynamic chunking without jeopardizing the TTLT target.
+    ///
+    /// `now` is the current time, `remaining_tokens` the expected number of
+    /// tokens still to emit (>= 1).
+    pub fn paced_token_deadline(&self, now: f64, remaining_tokens: u32) -> f64 {
+        match self.slo {
+            Slo::Interactive { .. } => unreachable!("pacing is for non-interactive"),
+            Slo::NonInteractive { ttlt_s } => {
+                let total_deadline = self.arrival_s + ttlt_s;
+                let budget = total_deadline - now;
+                now + budget / remaining_tokens.max(1) as f64
+            }
+        }
+    }
+}
+
+/// Application-provided importance hint for relegation (paper §3.4:
+/// "free vs paid tier").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Importance {
+    /// Relegate first under overload.
+    Low = 0,
+    /// Preserve for as long as possible.
+    High = 1,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        let tiers = table2_tiers();
+        assert_eq!(tiers.len(), 3);
+        assert_eq!(tiers[0].slo, Slo::Interactive { ttft_s: 6.0, tbt_s: 0.050 });
+        assert_eq!(tiers[1].slo, Slo::NonInteractive { ttlt_s: 600.0 });
+        assert_eq!(tiers[2].slo, Slo::NonInteractive { ttlt_s: 1800.0 });
+    }
+
+    #[test]
+    fn eq1_first_token_deadline() {
+        let d = Deadlines::new(10.0, Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 });
+        assert_eq!(d.first_token(), 16.0);
+    }
+
+    #[test]
+    fn eq2_token_deadlines_step_by_tbt() {
+        let d = Deadlines::new(0.0, Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 });
+        assert_eq!(d.token(1), 6.0);
+        assert!((d.token(2) - 6.05).abs() < 1e-12);
+        assert!((d.token(11) - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_total_deadline() {
+        let d = Deadlines::new(5.0, Slo::NonInteractive { ttlt_s: 600.0 });
+        assert_eq!(d.total(1000), 605.0);
+        assert_eq!(d.first_token(), 605.0);
+        assert_eq!(d.token(7), 605.0);
+    }
+
+    #[test]
+    fn interactive_total_depends_on_length() {
+        let d = Deadlines::new(0.0, Slo::Interactive { ttft_s: 1.0, tbt_s: 0.1 });
+        assert!((d.total(11) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pacing_splits_budget_evenly() {
+        let d = Deadlines::new(0.0, Slo::NonInteractive { ttlt_s: 100.0 });
+        // At t=0 with 10 tokens left: next token due at 10 s.
+        assert!((d.paced_token_deadline(0.0, 10) - 10.0).abs() < 1e-12);
+        // At t=90 with 1 token left: due at the TTLT deadline.
+        assert!((d.paced_token_deadline(90.0, 1) - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pacing_past_deadline_is_in_the_past() {
+        let d = Deadlines::new(0.0, Slo::NonInteractive { ttlt_s: 10.0 });
+        // Already past TTLT: the paced deadline must not extend it.
+        assert!(d.paced_token_deadline(20.0, 5) < 20.0);
+    }
+
+    #[test]
+    fn importance_orders() {
+        assert!(Importance::Low < Importance::High);
+    }
+}

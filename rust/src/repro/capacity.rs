@@ -1,0 +1,206 @@
+//! Capacity experiments: Fig. 1 (headline normalized GPUs + burst),
+//! Fig. 7a (GPUs to serve 50 QPS per dataset), Fig. 7b (max goodput on a
+//! shared cluster).
+
+use super::{drain_budget, f, policy_configs, run_uniform, CsvOut, Scale};
+use crate::config::{Config, Policy, SchedulerConfig};
+use crate::engine::Engine;
+use crate::qos::Slo;
+use crate::simulator::cluster::{gpus_needed, max_qps};
+use crate::util::Rng;
+use crate::workload::datasets::Dataset;
+use crate::workload::{ArrivalProcess, WorkloadSpec};
+use anyhow::Result;
+
+const TARGET_QPS: f64 = 50.0;
+const MAX_VIOLATION_PCT: f64 = 1.0;
+
+/// Capacity of one replica under a config serving one tier only (silo) —
+/// the tier's traffic is 1/3 of total in Table 2's equal split.
+fn silo_tier_capacity(cfg: &Config, ds: &Dataset, tier: usize, scale: Scale) -> f64 {
+    let probe = |qps: f64| {
+        let mut spec = WorkloadSpec::uniform(ds.clone(), qps, scale.duration_s);
+        // All traffic in this tier.
+        spec.tier_shares = (0..cfg.tiers.len()).map(|t| if t == tier { 1.0 } else { 0.0 }).collect();
+        let trace = spec.generate(&mut Rng::new(scale.seed));
+        let mut eng = Engine::sim(cfg);
+        eng.submit_trace(trace);
+        eng.run(scale.duration_s + drain_budget(cfg));
+        eng.summary(ds.long_prompt_threshold()).violation_pct
+    };
+    max_qps(probe, 0.25, 24.0, MAX_VIOLATION_PCT, scale.search_iters)
+}
+
+/// Capacity of one replica under a config serving the full 3-tier mix.
+fn shared_capacity(cfg: &Config, ds: &Dataset, scale: Scale) -> f64 {
+    let probe = |qps: f64| {
+        let s = run_uniform(cfg, ds, qps, scale.duration_s, scale.seed);
+        s.violation_pct
+    };
+    max_qps(probe, 0.25, 24.0, MAX_VIOLATION_PCT, scale.search_iters)
+}
+
+/// GPUs each deployment model needs for 50 QPS on a dataset.
+pub struct CapacityRow {
+    pub dataset: &'static str,
+    pub silo: u32,
+    pub fcfs: u32,
+    pub edf: u32,
+    pub niyama: u32,
+}
+
+pub fn capacity_row(ds: &Dataset, scale: Scale) -> CapacityRow {
+    let tp = Config::default().hardware.tp_degree;
+
+    // Siloed: per-tier Sarathi clusters with tier-appropriate chunks.
+    let base = Config::default();
+    let mut silo_gpus = 0u32;
+    for tier in 0..base.tiers.len() {
+        let chunk = match base.tiers[tier].slo {
+            Slo::Interactive { .. } => 256,
+            Slo::NonInteractive { .. } => 2048,
+        };
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, chunk);
+        let cap = silo_tier_capacity(&cfg, ds, tier, scale);
+        silo_gpus += gpus_needed(TARGET_QPS / base.tiers.len() as f64, cap, tp);
+    }
+
+    let mut by_name = std::collections::HashMap::new();
+    for (name, cfg) in policy_configs() {
+        let cap = shared_capacity(&cfg, ds, scale);
+        by_name.insert(name, gpus_needed(TARGET_QPS, cap, tp));
+    }
+
+    CapacityRow {
+        dataset: "",
+        silo: silo_gpus,
+        fcfs: by_name["sarathi-fcfs"],
+        edf: by_name["sarathi-edf"],
+        niyama: by_name["niyama"],
+    }
+}
+
+/// Fig. 7a: number of A100s to serve 50 QPS across three QoS classes, per
+/// dataset and deployment model.
+pub fn fig7a(scale: Scale) -> Result<()> {
+    let mut csv = CsvOut::create("fig7a", "dataset,silo,fcfs,edf,niyama,reduction_vs_silo_pct")?;
+    println!("Fig 7a — GPUs to serve {TARGET_QPS} QPS (<= {MAX_VIOLATION_PCT}% violations)");
+    println!(
+        "{:<12} {:>6} {:>6} {:>6} {:>8} {:>12}",
+        "dataset", "silo", "fcfs", "edf", "niyama", "vs silo"
+    );
+    for ds in [Dataset::sharegpt(), Dataset::azure_conv(), Dataset::azure_code()] {
+        let mut row = capacity_row(&ds, scale);
+        row.dataset = ds.name;
+        let red = 100.0 * (1.0 - row.niyama as f64 / row.silo.max(1) as f64);
+        println!(
+            "{:<12} {:>6} {:>6} {:>6} {:>8} {:>11}%",
+            row.dataset, row.silo, row.fcfs, row.edf, row.niyama, f(red)
+        );
+        csv.row(&[
+            row.dataset.to_string(),
+            row.silo.to_string(),
+            row.fcfs.to_string(),
+            row.edf.to_string(),
+            row.niyama.to_string(),
+            f(red),
+        ])?;
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Fig. 7b: maximum goodput (requests/s served within SLO, <=1% viol) on
+/// a shared single-replica cluster, Azure-Code.
+pub fn fig7b(scale: Scale) -> Result<()> {
+    let ds = Dataset::azure_code();
+    let mut csv = CsvOut::create("fig7b", "policy,max_goodput_qps")?;
+    println!("Fig 7b — max goodput on a shared cluster ({})", ds.name);
+    let mut niyama_cap = 0.0;
+    let mut results = Vec::new();
+    for (name, cfg) in policy_configs() {
+        let cap = shared_capacity(&cfg, &ds, scale);
+        if name == "niyama" {
+            niyama_cap = cap;
+        }
+        results.push((name, cap));
+    }
+    for (name, cap) in &results {
+        let ratio = if *name == "niyama" { 1.0 } else { niyama_cap / cap.max(0.01) };
+        println!("{:<14} {:>8} QPS   (niyama x{:.2})", name, f(*cap), ratio);
+        csv.row(&[name.to_string(), f(*cap)])?;
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Fig. 1: the headline — (a) normalized GPUs needed vs siloed SOTA on
+/// two datasets; (b) p99 latency of the strict tier through a burst,
+/// Niyama vs Sarathi-FCFS.
+pub fn fig1(scale: Scale) -> Result<()> {
+    println!("Fig 1 (top) — normalized GPU count (silo = 1.0)");
+    let mut csv = CsvOut::create("fig1", "dataset,scheme,normalized_gpus")?;
+    for ds in [Dataset::sharegpt(), Dataset::azure_code()] {
+        let mut row = capacity_row(&ds, scale);
+        row.dataset = ds.name;
+        let base = row.silo.max(1) as f64;
+        for (scheme, gpus) in
+            [("silo", row.silo), ("fcfs", row.fcfs), ("edf", row.edf), ("niyama", row.niyama)]
+        {
+            println!("  {:<12} {:<8} {:.2}", ds.name, scheme, gpus as f64 / base);
+            csv.row(&[ds.name.to_string(), scheme.to_string(), f(gpus as f64 / base)])?;
+        }
+    }
+
+    println!("\nFig 1 (bottom) — burst overload: strict-tier p99 TTFT (60 s windows)");
+    let ds = Dataset::azure_code();
+    let mut burst_csv = CsvOut::create("fig1_burst", "scheme,window_end_s,p99_ttft_s")?;
+    for (name, cfg) in [
+        ("niyama", Config::default()),
+        ("sarathi-fcfs", {
+            let mut c = Config::default();
+            c.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, 256);
+            c
+        }),
+    ] {
+        let mut spec = WorkloadSpec::uniform(ds.clone(), 2.0, scale.duration_s * 2.0);
+        spec.arrivals = ArrivalProcess::Burst {
+            base_qps: 2.0,
+            burst_qps: 8.0,
+            burst_start_s: scale.duration_s * 0.5,
+            burst_end_s: scale.duration_s,
+        };
+        let trace = spec.generate(&mut Rng::new(scale.seed));
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_trace(trace);
+        eng.run(scale.duration_s * 2.0 + drain_budget(&cfg));
+        let series = eng.rolling.series(0, 0.99);
+        for (t, v) in series.iter().take(40) {
+            burst_csv.row(&[name.to_string(), f(*t), f(*v)])?;
+        }
+        let peak = series.iter().map(|&(_, v)| v).fold(0.0, f64::max);
+        println!("  {:<14} p99 TTFT peak through burst: {} s", name, f(peak));
+    }
+    println!("wrote {} and {}", csv.path, burst_csv.path);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_capacity_positive_and_ordered() {
+        // Niyama should sustain at least as much as FCFS on a small probe.
+        let scale = Scale { duration_s: 60.0, diurnal_s: 0.0, search_iters: 4, seed: 3 };
+        let ds = Dataset::azure_code();
+        let niyama = shared_capacity(&Config::default(), &ds, scale);
+        let mut fcfs_cfg = Config::default();
+        fcfs_cfg.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, 256);
+        let fcfs = shared_capacity(&fcfs_cfg, &ds, scale);
+        assert!(niyama > 0.2, "niyama capacity {niyama}");
+        assert!(fcfs > 0.1, "fcfs capacity {fcfs}");
+        assert!(niyama >= fcfs * 0.9, "niyama {niyama} vs fcfs {fcfs}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Load-sweep experiments: Fig. 2 (traditional policy comparison),
+//! Fig. 8 (latency per QoS bucket vs load), Fig. 9 (deadline violations
+//! overall / by length / by bucket).
+
+use super::{f, policy_configs, run_uniform, CsvOut, Scale};
+use crate::config::{Config, Policy, SchedulerConfig};
+use crate::workload::datasets::Dataset;
+use anyhow::Result;
+
+/// QPS grid for the sweeps (the paper sweeps ~1–7 QPS on Azure-Code).
+pub fn qps_grid() -> Vec<f64> {
+    vec![1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0]
+}
+
+/// Policies for Fig. 2 — adds SJF to the shared set (the figure compares
+/// FCFS / SJF / SRPF / EDF vs Niyama).
+fn fig2_configs() -> Vec<(&'static str, Config)> {
+    let mut cfgs = policy_configs();
+    let mut sjf = Config::default();
+    sjf.scheduler = SchedulerConfig::sarathi(Policy::SarathiSjf, 256);
+    cfgs.push(("sarathi-sjf", sjf));
+    cfgs
+}
+
+/// Fig. 2: median + p99 latency, % SLO violations, long-request
+/// violations — in the strictest QoS class — for traditional policies.
+pub fn fig2(scale: Scale) -> Result<()> {
+    let ds = Dataset::sharegpt();
+    let mut csv = CsvOut::create(
+        "fig2",
+        "policy,qps,ttft_p50,ttft_p99,violation_pct,long_violation_pct",
+    )?;
+    println!("Fig 2 — multi-SLA scheduling policies ({}, {}s traces)", ds.name, scale.duration_s);
+    println!("{:<14} {:>5} {:>10} {:>10} {:>8} {:>8}", "policy", "qps", "ttft_p50", "ttft_p99", "%viol", "%long");
+    for (name, cfg) in fig2_configs() {
+        for &qps in &qps_grid() {
+            let s = run_uniform(&cfg, &ds, qps, scale.duration_s, scale.seed);
+            println!(
+                "{:<14} {:>5} {:>10} {:>10} {:>8} {:>8}",
+                name,
+                f(qps),
+                f(s.ttft_p50),
+                f(s.ttft_p99),
+                f(s.violation_pct),
+                f(s.long_violation_pct)
+            );
+            csv.row(&[
+                name.to_string(),
+                f(qps),
+                f(s.ttft_p50),
+                f(s.ttft_p99),
+                f(s.violation_pct),
+                f(s.long_violation_pct),
+            ])?;
+        }
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Fig. 8: median and p95 latency per QoS bucket (TTFT for Q1, TTLT for
+/// Q2/Q3) as load varies, per policy. Azure-Code, like the paper.
+pub fn fig8(scale: Scale) -> Result<()> {
+    let ds = Dataset::azure_code();
+    let mut csv = CsvOut::create(
+        "fig8",
+        "policy,qps,q1_ttft_p50,q1_ttft_p95,ttlt_p50,ttlt_p95,tbt_violation_free",
+    )?;
+    println!("Fig 8 — latency per QoS bucket vs load ({})", ds.name);
+    println!(
+        "{:<14} {:>5} {:>12} {:>12} {:>10} {:>10}",
+        "policy", "qps", "q1 ttft p50", "q1 ttft p95", "ttlt p50", "ttlt p95"
+    );
+    for (name, cfg) in policy_configs() {
+        for &qps in &qps_grid() {
+            let s = run_uniform(&cfg, &ds, qps, scale.duration_s, scale.seed);
+            println!(
+                "{:<14} {:>5} {:>12} {:>12} {:>10} {:>10}",
+                name,
+                f(qps),
+                f(s.ttft_p50),
+                f(s.ttft_p95),
+                f(s.ttlt_p50),
+                f(s.ttlt_p95)
+            );
+            csv.row(&[
+                name.to_string(),
+                f(qps),
+                f(s.ttft_p50),
+                f(s.ttft_p95),
+                f(s.ttlt_p50),
+                f(s.ttlt_p95),
+                f(100.0 - s.violation_pct),
+            ])?;
+        }
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Fig. 9: deadline violations — overall, split by request length, and
+/// split by QoS bucket — vs load, per policy.
+pub fn fig9(scale: Scale) -> Result<()> {
+    let ds = Dataset::azure_code();
+    let mut csv = CsvOut::create(
+        "fig9",
+        "policy,qps,overall_pct,short_pct,long_pct,q1_pct,q2_pct,q3_pct",
+    )?;
+    println!("Fig 9 — deadline violations vs load ({})", ds.name);
+    println!(
+        "{:<14} {:>5} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "policy", "qps", "overall", "short", "long", "Q1", "Q2", "Q3"
+    );
+    for (name, cfg) in policy_configs() {
+        for &qps in &qps_grid() {
+            let s = run_uniform(&cfg, &ds, qps, scale.duration_s, scale.seed);
+            println!(
+                "{:<14} {:>5} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+                name,
+                f(qps),
+                f(s.violation_pct),
+                f(s.short_violation_pct),
+                f(s.long_violation_pct),
+                f(s.tier_violation_pct(0)),
+                f(s.tier_violation_pct(1)),
+                f(s.tier_violation_pct(2))
+            );
+            csv.row(&[
+                name.to_string(),
+                f(qps),
+                f(s.violation_pct),
+                f(s.short_violation_pct),
+                f(s.long_violation_pct),
+                f(s.tier_violation_pct(0)),
+                f(s.tier_violation_pct(1)),
+                f(s.tier_violation_pct(2)),
+            ])?;
+        }
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qps_grid_ascends() {
+        let g = qps_grid();
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn fig2_includes_sjf() {
+        assert!(fig2_configs().iter().any(|(n, _)| *n == "sarathi-sjf"));
+    }
+}

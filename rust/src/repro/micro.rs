@@ -1,0 +1,230 @@
+//! Micro / ablation experiments: Fig. 4 (chunk-size tradeoff), Fig. 12
+//! (alpha sweep), Table 1 (dataset statistics), Table 3 (feature
+//! ablation).
+
+use super::{drain_budget, f, run_uniform, CsvOut, Scale};
+use crate::config::{Config, HardwareModel, Policy, SchedulerConfig};
+use crate::simulator::cluster::max_qps;
+use crate::simulator::CostModel;
+use crate::util::Rng;
+use crate::workload::datasets::Dataset;
+use anyhow::Result;
+
+/// Fig. 4: throughput–latency tradeoff vs chunk size on the A100 cost
+/// model (prefill throughput rises with chunk while mixed-batch TBT
+/// grows).
+pub fn fig4() -> Result<()> {
+    let model = CostModel::new(HardwareModel::llama3_8b_a100());
+    let mut csv = CsvOut::create("fig4", "chunk,prefill_tput_tok_s,tbt_ms_with_32_decodes")?;
+    println!("Fig 4 — chunk size tradeoff (A100 / Llama3-8B cost model)");
+    println!("{:>6} {:>16} {:>18}", "chunk", "prefill tok/s", "TBT ms (32 dec)");
+    let mut tput_256 = 0.0;
+    let mut tput_2048 = 0.0;
+    for chunk in [32u32, 64, 128, 256, 512, 1024, 2048] {
+        let tput = model.prefill_throughput(chunk);
+        let tbt_ms = 1e3 * model.chunk_latency(chunk, 1024, 32, 1024);
+        if chunk == 256 {
+            tput_256 = tput;
+        }
+        if chunk == 2048 {
+            tput_2048 = tput;
+        }
+        println!("{:>6} {:>16} {:>18}", chunk, f(tput), f(tbt_ms));
+        csv.row(&[chunk.to_string(), f(tput), f(tbt_ms)])?;
+    }
+    println!(
+        "small-chunk (256) throughput penalty vs 2048: {}%  (paper: ~28%)",
+        f(100.0 * (1.0 - tput_256 / tput_2048))
+    );
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Fig. 12: the hybrid-prioritization parameter alpha — median latency
+/// and deadline violations vs load for three fixed alpha values.
+pub fn fig12(scale: Scale) -> Result<()> {
+    let ds = Dataset::azure_code();
+    let mut csv = CsvOut::create(
+        "fig12",
+        "alpha,qps,ttft_p50,violation_pct,long_violation_pct",
+    )?;
+    println!("Fig 12 — alpha sweep ({})", ds.name);
+    println!(
+        "{:>6} {:>5} {:>10} {:>8} {:>8}",
+        "alpha", "qps", "ttft p50", "%viol", "%long"
+    );
+    for alpha in [0.1, 0.5, 2.0] {
+        let mut cfg = Config::default();
+        cfg.scheduler.alpha = alpha;
+        cfg.scheduler.adaptive_alpha = false; // fixed alpha, like the figure
+        for qps in [2.0, 3.0, 4.0, 5.0, 6.0] {
+            let s = run_uniform(&cfg, &ds, qps, scale.duration_s, scale.seed);
+            println!(
+                "{:>6} {:>5} {:>10} {:>8} {:>8}",
+                f(alpha),
+                f(qps),
+                f(s.ttft_p50),
+                f(s.violation_pct),
+                f(s.long_violation_pct)
+            );
+            csv.row(&[
+                f(alpha),
+                f(qps),
+                f(s.ttft_p50),
+                f(s.violation_pct),
+                f(s.long_violation_pct),
+            ])?;
+        }
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Table 1: verify the synthetic datasets reproduce the paper's p50/p90
+/// token statistics.
+pub fn tab1() -> Result<()> {
+    let mut csv = CsvOut::create(
+        "tab1",
+        "dataset,prompt_p50,prompt_p90,decode_p50,decode_p90,paper_prompt_p50,paper_prompt_p90,paper_decode_p50,paper_decode_p90",
+    )?;
+    println!("Table 1 — dataset statistics (synthetic fit vs paper)");
+    println!(
+        "{:<12} {:>11} {:>11} {:>11} {:>11}",
+        "dataset", "prompt p50", "prompt p90", "decode p50", "decode p90"
+    );
+    for ds in Dataset::all() {
+        let mut rng = Rng::new(123);
+        let n = 50_000;
+        let mut prompts = crate::util::Quantiles::new();
+        let mut decodes = crate::util::Quantiles::new();
+        for _ in 0..n {
+            let (p, d) = ds.sample(&mut rng);
+            prompts.push(p as f64);
+            decodes.push(d as f64);
+        }
+        let pp50 = prompts.quantile(0.5).unwrap();
+        let pp90 = prompts.quantile(0.9).unwrap();
+        let dp50 = decodes.quantile(0.5).unwrap();
+        let dp90 = decodes.quantile(0.9).unwrap();
+        println!(
+            "{:<12} {:>5}/{:<5} {:>5}/{:<5} {:>5}/{:<5} {:>5}/{:<5}   (measured/paper)",
+            ds.name,
+            f(pp50),
+            ds.prompt.p50,
+            f(pp90),
+            ds.prompt.p90,
+            f(dp50),
+            ds.decode.p50,
+            f(dp90),
+            ds.decode.p90
+        );
+        csv.row(&[
+            ds.name.to_string(),
+            f(pp50),
+            f(pp90),
+            f(dp50),
+            f(dp90),
+            f(ds.prompt.p50),
+            f(ds.prompt.p90),
+            f(ds.decode.p50),
+            f(ds.decode.p90),
+        ])?;
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Table 3 configurations: EDF baseline, then Niyama features stacked —
+/// DC (dynamic chunking), DC+ER (eager relegation), DC+ER+HP (hybrid
+/// prioritization). All requests tagged important, like the paper.
+pub fn tab3_configs() -> Vec<(&'static str, Config)> {
+    let mut edf = Config::default();
+    edf.scheduler = SchedulerConfig::sarathi(Policy::SarathiEdf, 256);
+
+    // Niyama with only dynamic chunking: EDF ordering, no relegation.
+    let mut dc = Config::default();
+    dc.scheduler.hybrid_priority = false;
+    dc.scheduler.eager_relegation = false;
+    dc.scheduler.selective_preemption = false;
+
+    let mut dc_er = Config::default();
+    dc_er.scheduler.hybrid_priority = false;
+    dc_er.scheduler.selective_preemption = false;
+
+    let full = Config::default();
+
+    vec![
+        ("sarathi-edf", edf),
+        ("niyama (DC)", dc),
+        ("niyama (DC+ER)", dc_er),
+        ("niyama (DC+ER+HP)", full),
+    ]
+}
+
+/// Table 3: ablation — optimal-load capacity and high-load violations for
+/// each feature combination.
+pub fn tab3(scale: Scale) -> Result<()> {
+    let ds = Dataset::azure_code();
+    let high_qps = 6.0;
+    let mut csv = CsvOut::create("tab3", "config,optimal_qps,gain_pct,high_load_violation_pct")?;
+    println!("Table 3 — feature ablation ({}, high load = {high_qps} QPS)", ds.name);
+    println!("{:<20} {:>12} {:>8} {:>14}", "config", "optimal QPS", "% gain", "%viol @ high");
+    let mut prev_qps: Option<f64> = None;
+    for (name, cfg) in tab3_configs() {
+        let cap = max_qps(
+            |qps| run_uniform(&cfg, &ds, qps, scale.duration_s, scale.seed).violation_pct,
+            0.25,
+            16.0,
+            1.0,
+            scale.search_iters,
+        );
+        let sum_high = run_uniform(&cfg, &ds, high_qps, scale.duration_s, scale.seed);
+        let gain = prev_qps.map(|p| 100.0 * (cap / p - 1.0));
+        println!(
+            "{:<20} {:>12} {:>8} {:>14}",
+            name,
+            f(cap),
+            gain.map(f).unwrap_or_else(|| "-".into()),
+            f(sum_high.violation_pct)
+        );
+        csv.row(&[
+            name.to_string(),
+            f(cap),
+            gain.map(f).unwrap_or_else(|| "-".into()),
+            f(sum_high.violation_pct),
+        ])?;
+        prev_qps = Some(cap);
+    }
+    println!("wrote {}", csv.path);
+    let _ = drain_budget(&Config::default());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab3_ablation_configs_stack() {
+        let cfgs = tab3_configs();
+        assert_eq!(cfgs.len(), 4);
+        assert!(!cfgs[1].1.scheduler.eager_relegation);
+        assert!(cfgs[2].1.scheduler.eager_relegation);
+        assert!(!cfgs[2].1.scheduler.hybrid_priority);
+        assert!(cfgs[3].1.scheduler.hybrid_priority);
+        // all Niyama variants keep dynamic chunking
+        for (_, c) in &cfgs[1..] {
+            assert!(c.scheduler.dynamic_chunking);
+        }
+    }
+
+    #[test]
+    fn fig4_runs() {
+        fig4().unwrap();
+    }
+
+    #[test]
+    fn tab1_runs() {
+        tab1().unwrap();
+    }
+}

@@ -1,0 +1,167 @@
+//! Overload experiments: Fig. 5 (relegation fraction vs service quality),
+//! Fig. 10 (diurnal workload violations table), Fig. 11 (rolling p99
+//! latency through the diurnal pattern).
+
+use super::{drain_budget, f, policy_configs, CsvOut, Scale};
+use crate::config::Config;
+use crate::engine::Engine;
+use crate::metrics::Summary;
+use crate::util::Rng;
+use crate::workload::datasets::Dataset;
+use crate::workload::{ArrivalProcess, WorkloadSpec};
+use anyhow::Result;
+
+/// Fig. 5: relegating a small fraction of requests keeps median service
+/// healthy under overload; sweep the relegation cap at ~1.5x capacity.
+pub fn fig5(scale: Scale) -> Result<()> {
+    let ds = Dataset::azure_code();
+    let overload_qps = 10.0; // well past single-replica capacity (~8 QPS)
+    let mut csv = CsvOut::create(
+        "fig5",
+        "relegation_cap_pct,relegated_pct,ttft_p50,ttft_p99,violation_pct",
+    )?;
+    println!("Fig 5 — impact of eager relegation at {overload_qps} QPS ({})", ds.name);
+    println!(
+        "{:>8} {:>10} {:>10} {:>10} {:>8}",
+        "cap %", "relegated", "ttft p50", "ttft p99", "%viol"
+    );
+    for cap in [0.0, 0.01, 0.05, 0.10, 0.25, 1.0] {
+        let mut cfg = Config::default();
+        cfg.scheduler.relegation_cap = cap;
+        if cap == 0.0 {
+            cfg.scheduler.eager_relegation = false;
+        }
+        let spec = WorkloadSpec::uniform(ds.clone(), overload_qps, scale.duration_s);
+        let trace = spec.generate(&mut Rng::new(scale.seed));
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_trace(trace);
+        eng.run(scale.duration_s + drain_budget(&cfg));
+        let s = eng.summary(ds.long_prompt_threshold());
+        println!(
+            "{:>8} {:>9}% {:>10} {:>10} {:>8}",
+            f(cap * 100.0),
+            f(s.relegated_pct),
+            f(s.ttft_p50),
+            f(s.ttft_p99),
+            f(s.violation_pct)
+        );
+        csv.row(&[
+            f(cap * 100.0),
+            f(s.relegated_pct),
+            f(s.ttft_p50),
+            f(s.ttft_p99),
+            f(s.violation_pct),
+        ])?;
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Shared diurnal run used by Figs. 10 and 11: QPS alternates 2 ↔ 6 every
+/// 15 minutes, 20% of requests flagged low-importance (paper §4.3).
+fn diurnal_run(cfg: &Config, scale: Scale) -> (Engine<crate::engine::SimBackend>, Summary) {
+    let ds = Dataset::azure_code();
+    let mut spec = WorkloadSpec::uniform(ds.clone(), 2.0, scale.diurnal_s);
+    spec.arrivals = ArrivalProcess::Diurnal { low_qps: 2.0, high_qps: 6.0, period_s: 900.0 };
+    spec.low_importance_frac = 0.2;
+    let trace = spec.generate(&mut Rng::new(scale.seed));
+    let mut eng = Engine::sim(cfg);
+    eng.submit_trace(trace);
+    eng.run(scale.diurnal_s + drain_budget(cfg));
+    let s = eng.summary(ds.long_prompt_threshold());
+    (eng, s)
+}
+
+/// Fig. 10: overall + important + per-QoS violation percentages under
+/// the diurnal pattern, per scheme.
+pub fn fig10(scale: Scale) -> Result<()> {
+    let mut csv = CsvOut::create(
+        "fig10",
+        "scheme,overall_pct,important_pct,q1_pct,q2_pct,q3_pct,relegated_pct",
+    )?;
+    println!(
+        "Fig 10 — diurnal 2<->6 QPS / 15 min over {} s, 20% low-priority hints",
+        scale.diurnal_s
+    );
+    println!(
+        "{:<14} {:>8} {:>10} {:>8} {:>8} {:>8} {:>10}",
+        "scheme", "overall", "important", "QoS0", "QoS1", "QoS2", "relegated"
+    );
+    for (name, cfg) in policy_configs() {
+        if name == "sarathi-srpf" {
+            continue; // the paper's Fig. 10 table compares FCFS/EDF/Niyama
+        }
+        let (_, s) = diurnal_run(&cfg, scale);
+        println!(
+            "{:<14} {:>8} {:>10} {:>8} {:>8} {:>8} {:>10}",
+            name,
+            f(s.violation_pct),
+            f(s.important_violation_pct),
+            f(s.tier_violation_pct(0)),
+            f(s.tier_violation_pct(1)),
+            f(s.tier_violation_pct(2)),
+            f(s.relegated_pct)
+        );
+        csv.row(&[
+            name.to_string(),
+            f(s.violation_pct),
+            f(s.important_violation_pct),
+            f(s.tier_violation_pct(0)),
+            f(s.tier_violation_pct(1)),
+            f(s.tier_violation_pct(2)),
+            f(s.relegated_pct),
+        ])?;
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+/// Fig. 11: rolling p99 latency (60 s windows) per QoS bucket through the
+/// diurnal pattern.
+pub fn fig11(scale: Scale) -> Result<()> {
+    let mut csv = CsvOut::create("fig11", "scheme,tier,window_end_s,p99_latency_s")?;
+    println!("Fig 11 — rolling p99 latency (60 s windows), diurnal pattern");
+    for (name, cfg) in policy_configs() {
+        if name == "sarathi-srpf" {
+            continue;
+        }
+        let (eng, _) = diurnal_run(&cfg, scale);
+        for tier in 0..3 {
+            let series = eng.rolling.series(tier, 0.99);
+            let peak = series.iter().map(|&(_, v)| v).fold(0.0, f64::max);
+            let med = {
+                let mut q = crate::util::Quantiles::new();
+                for &(_, v) in &series {
+                    q.push(v);
+                }
+                q.median().unwrap_or(f64::NAN)
+            };
+            println!(
+                "  {:<14} tier {}: windows={} median_p99={} peak_p99={}",
+                name,
+                tier,
+                series.len(),
+                f(med),
+                f(peak)
+            );
+            for (t, v) in series {
+                csv.row(&[name.to_string(), tier.to_string(), f(t), f(v)])?;
+            }
+        }
+    }
+    println!("wrote {}", csv.path);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_run_produces_rolling_series() {
+        let scale = Scale { duration_s: 0.0, diurnal_s: 600.0, search_iters: 0, seed: 11 };
+        let (eng, s) = diurnal_run(&Config::default(), scale);
+        assert!(s.total > 100);
+        assert!(!eng.rolling.series(0, 0.99).is_empty());
+    }
+}

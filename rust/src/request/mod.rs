@@ -1,0 +1,367 @@
+//! Request model: lifecycle state machine and the arena that owns it.
+//!
+//! A request moves prefill-queue → decode-queue → finished, with a
+//! side-door into the relegated queue (paper Fig. 3). The scheduler holds
+//! only `RequestId`s; all state lives in the `RequestStore` arena so the
+//! hot path is index-based with no refcounting.
+
+use crate::qos::{Deadlines, Importance, Slo};
+
+/// Index into the `RequestStore` arena.
+pub type RequestId = u32;
+
+/// Lifecycle phase (paper Fig. 3's three queues + terminal states).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In the prefill queue (possibly partially prefilled).
+    Prefill,
+    /// Prefill complete; generating tokens.
+    Decode,
+    /// Deprioritized: serviced opportunistically (paper §3.4).
+    Relegated,
+    /// All tokens emitted.
+    Finished,
+}
+
+/// Immutable trace-side description of a request.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    pub arrival_s: f64,
+    /// Prompt length in tokens.
+    pub prompt_tokens: u32,
+    /// Ground-truth decode length from the trace (the engine "generates"
+    /// exactly this many tokens; unknown to the scheduler, which must
+    /// estimate it like the paper does).
+    pub decode_tokens: u32,
+    /// Index into the configured QoS tier list.
+    pub tier: usize,
+    /// Application id (per-app decode-length history, paper §3.4).
+    pub app_id: u32,
+    /// Free-vs-paid style relegation hint (paper §3.4).
+    pub importance: Importance,
+}
+
+/// Live request state.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub spec: RequestSpec,
+    pub slo: Slo,
+    pub phase: Phase,
+    /// Whether this request was ever relegated (for metrics; a relegated
+    /// request that re-enters service keeps this flag).
+    pub was_relegated: bool,
+    /// Prompt tokens prefilled so far.
+    pub prefilled: u32,
+    /// Output tokens emitted so far.
+    pub decoded: u32,
+    /// Time the first output token was emitted.
+    pub first_token_at: Option<f64>,
+    /// Time the final token was emitted.
+    pub finished_at: Option<f64>,
+    /// Time the most recent output token was emitted (TBT tracking).
+    pub last_token_at: Option<f64>,
+    /// Worst observed token gap, seconds (diagnostic; SLO compliance is
+    /// deadline-based, see `max_lateness`).
+    pub max_tbt: f64,
+    /// Worst overrun of any eq. (2) token deadline, seconds. <= 0 means
+    /// every token met its deadline. This is the paper's violation
+    /// criterion: slack accumulated by early tokens is consumable
+    /// (Fig. 6), so gaps larger than SLO_TBT are fine while the absolute
+    /// schedule holds.
+    pub max_lateness: f64,
+}
+
+impl Request {
+    pub fn new(id: RequestId, spec: RequestSpec, slo: Slo) -> Self {
+        Request {
+            id,
+            spec,
+            slo,
+            phase: Phase::Prefill,
+            was_relegated: false,
+            prefilled: 0,
+            decoded: 0,
+            first_token_at: None,
+            finished_at: None,
+            last_token_at: None,
+            max_tbt: 0.0,
+            max_lateness: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn deadlines(&self) -> Deadlines {
+        Deadlines::new(self.spec.arrival_s, self.slo)
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn prefill_remaining(&self) -> u32 {
+        self.spec.prompt_tokens - self.prefilled
+    }
+
+    /// Ground-truth output tokens still to emit (engine-side knowledge).
+    pub fn decode_remaining(&self) -> u32 {
+        self.spec.decode_tokens - self.decoded
+    }
+
+    /// KV-cache tokens this request currently occupies.
+    pub fn kv_tokens(&self) -> u32 {
+        self.prefilled + self.decoded
+    }
+
+    pub fn is_active(&self) -> bool {
+        !matches!(self.phase, Phase::Finished)
+    }
+
+    /// Record one emitted output token at time `t`.
+    /// Returns true if the request just finished.
+    pub fn emit_token(&mut self, t: f64) -> bool {
+        debug_assert!(self.decoded < self.spec.decode_tokens);
+        debug_assert_eq!(self.prefilled, self.spec.prompt_tokens);
+        self.decoded += 1;
+        if self.decoded == 1 {
+            self.first_token_at = Some(t);
+        } else if let Some(prev) = self.last_token_at {
+            self.max_tbt = self.max_tbt.max(t - prev);
+        }
+        if let Slo::Interactive { .. } = self.slo {
+            let due = self.deadlines().token(self.decoded);
+            self.max_lateness = self.max_lateness.max(t - due);
+        }
+        self.last_token_at = Some(t);
+        if self.decoded == self.spec.decode_tokens {
+            self.finished_at = Some(t);
+            self.phase = Phase::Finished;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Observed time-to-first-token, if the first token has been emitted.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.spec.arrival_s)
+    }
+
+    /// Observed time-to-last-token, if finished.
+    pub fn ttlt(&self) -> Option<f64> {
+        self.finished_at.map(|t| t - self.spec.arrival_s)
+    }
+
+    /// Did this request meet its SLO? (Only meaningful once finished.)
+    pub fn met_slo(&self) -> bool {
+        const EPS: f64 = 1e-9;
+        match self.slo {
+            Slo::Interactive { .. } => {
+                // Every token (including the first) met its eq. (2)
+                // deadline.
+                self.first_token_at.is_some() && self.max_lateness <= EPS
+            }
+            Slo::NonInteractive { ttlt_s } => {
+                self.ttlt().is_some_and(|t| t <= ttlt_s + EPS)
+            }
+        }
+    }
+
+    /// Deadline of the *next* output token (used for slack computation).
+    /// `expected_remaining` is the scheduler's estimate of tokens still to
+    /// come (non-interactive pacing needs it).
+    pub fn next_token_deadline(&self, now: f64, expected_remaining: u32) -> f64 {
+        let d = self.deadlines();
+        match self.slo {
+            Slo::Interactive { .. } => d.token(self.decoded + 1),
+            Slo::NonInteractive { .. } => d.paced_token_deadline(now, expected_remaining),
+        }
+    }
+}
+
+/// Arena of all requests seen by one replica/engine.
+#[derive(Debug, Default)]
+pub struct RequestStore {
+    requests: Vec<Request>,
+}
+
+impl RequestStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, spec: RequestSpec, slo: Slo) -> RequestId {
+        let id = self.requests.len() as RequestId;
+        self.requests.push(Request::new(id, spec, slo));
+        id
+    }
+
+    pub fn get(&self, id: RequestId) -> &Request {
+        &self.requests[id as usize]
+    }
+
+    pub fn get_mut(&mut self, id: RequestId) -> &mut Request {
+        &mut self.requests[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.requests.iter()
+    }
+
+    /// Total KV tokens held by active requests (memory pressure signal).
+    pub fn total_kv_tokens(&self) -> u64 {
+        self.requests
+            .iter()
+            .filter(|r| r.is_active())
+            .map(|r| r.kv_tokens() as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(arrival: f64, prompt: u32, decode: u32) -> RequestSpec {
+        RequestSpec {
+            arrival_s: arrival,
+            prompt_tokens: prompt,
+            decode_tokens: decode,
+            tier: 0,
+            app_id: 0,
+            importance: Importance::High,
+        }
+    }
+
+    const INTERACTIVE: Slo = Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
+    const BATCH: Slo = Slo::NonInteractive { ttlt_s: 600.0 };
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut r = Request::new(0, spec(0.0, 10, 3), INTERACTIVE);
+        assert_eq!(r.phase, Phase::Prefill);
+        assert_eq!(r.prefill_remaining(), 10);
+        r.prefilled = 10;
+        r.phase = Phase::Decode;
+        assert!(!r.emit_token(1.0));
+        assert_eq!(r.ttft(), Some(1.0));
+        assert!(!r.emit_token(1.04));
+        assert!(r.emit_token(1.08));
+        assert_eq!(r.phase, Phase::Finished);
+        assert_eq!(r.ttlt(), Some(1.08));
+        assert!((r.max_tbt - 0.04).abs() < 1e-12);
+        assert!(r.met_slo());
+    }
+
+    #[test]
+    fn slo_violated_by_late_first_token() {
+        let mut r = Request::new(0, spec(0.0, 5, 1), INTERACTIVE);
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        r.emit_token(7.0); // > 6 s TTFT
+        assert!(!r.met_slo());
+    }
+
+    #[test]
+    fn early_tokens_bank_slack_for_later_gaps() {
+        // Eq. (2) semantics: a 200 ms gap is fine while the absolute
+        // schedule holds (first token came 5 s early).
+        let mut r = Request::new(0, spec(0.0, 5, 3), INTERACTIVE);
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        r.emit_token(1.0);
+        r.emit_token(1.2); // gap > TBT but deadline is 6.05
+        r.emit_token(1.25);
+        assert!((r.max_tbt - 0.2).abs() < 1e-12);
+        assert!(r.met_slo(), "absolute schedule held");
+    }
+
+    #[test]
+    fn slo_violated_by_token_deadline_overrun() {
+        let mut r = Request::new(0, spec(0.0, 5, 3), INTERACTIVE);
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        r.emit_token(6.0); // token 1 exactly on deadline
+        r.emit_token(6.2); // token 2 deadline 6.05: violated
+        r.emit_token(6.25);
+        assert!(!r.met_slo());
+        assert!((r.max_lateness - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_interactive_only_cares_about_ttlt() {
+        let mut r = Request::new(0, spec(0.0, 5, 2), BATCH);
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        r.emit_token(500.0); // terrible TTFT: fine for batch
+        r.emit_token(599.0);
+        assert!(r.met_slo());
+    }
+
+    #[test]
+    fn non_interactive_ttlt_violation() {
+        let mut r = Request::new(0, spec(0.0, 5, 2), BATCH);
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        r.emit_token(1.0);
+        r.emit_token(601.0);
+        assert!(!r.met_slo());
+    }
+
+    #[test]
+    fn kv_accounting() {
+        let mut store = RequestStore::new();
+        let a = store.insert(spec(0.0, 100, 10), INTERACTIVE);
+        let b = store.insert(spec(0.0, 50, 5), BATCH);
+        store.get_mut(a).prefilled = 60;
+        store.get_mut(b).prefilled = 50;
+        store.get_mut(b).phase = Phase::Decode;
+        store.get_mut(b).emit_token(1.0);
+        assert_eq!(store.total_kv_tokens(), 60 + 51);
+        assert_eq!(store.get(a).kv_tokens(), 60);
+    }
+
+    #[test]
+    fn finished_requests_leave_kv_accounting() {
+        let mut store = RequestStore::new();
+        let a = store.insert(spec(0.0, 4, 1), BATCH);
+        let r = store.get_mut(a);
+        r.prefilled = 4;
+        r.phase = Phase::Decode;
+        r.emit_token(1.0);
+        assert_eq!(store.total_kv_tokens(), 0);
+    }
+
+    #[test]
+    fn next_token_deadline_interactive_steps() {
+        let mut r = Request::new(0, spec(0.0, 5, 10), INTERACTIVE);
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        assert_eq!(r.next_token_deadline(0.0, 10), 6.0);
+        r.emit_token(1.0);
+        assert!((r.next_token_deadline(1.0, 9) - 6.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn next_token_deadline_batch_paces() {
+        let mut r = Request::new(0, spec(0.0, 5, 10), BATCH);
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        // 600 s budget, 10 tokens left -> 60 s per token.
+        assert!((r.next_token_deadline(0.0, 10) - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_ids_are_stable() {
+        let mut store = RequestStore::new();
+        let a = store.insert(spec(0.0, 1, 1), BATCH);
+        let b = store.insert(spec(1.0, 2, 2), BATCH);
+        assert_eq!(store.get(a).spec.prompt_tokens, 1);
+        assert_eq!(store.get(b).spec.prompt_tokens, 2);
+        assert_eq!(store.len(), 2);
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT execution backend: the real-model counterpart of `SimBackend`.
+//!
+//! Executes the engine's batches on the AOT-compiled model, measures
+//! wall-clock iteration latency, and collects the actually generated
+//! tokens per request (greedy sampling). The scheduler neither knows nor
+//! cares which backend is underneath — that symmetry is the point.
+
+use super::client::{argmax, ModelRuntime};
+use crate::engine::{ExecutionBackend, IterationResult};
+use crate::kv::KvStore;
+use crate::request::{RequestId, RequestStore};
+use crate::scheduler::Batch;
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct PjrtBackend {
+    runtime: ModelRuntime,
+    kv: KvStore,
+    /// Prompt token ids per request (provided at submission).
+    prompts: HashMap<RequestId, Vec<i32>>,
+    /// Generated token ids per request.
+    generated: HashMap<RequestId, Vec<i32>>,
+    /// Next input token for decode (last sampled token).
+    next_token: HashMap<RequestId, i32>,
+    /// Measured (batch shape, latency) samples for predictor fitting.
+    pub samples: Vec<(crate::simulator::BatchShape, f64)>,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: ModelRuntime) -> Self {
+        let kv_elems = runtime.kv_elements();
+        PjrtBackend {
+            runtime,
+            kv: KvStore::new(kv_elems),
+            prompts: HashMap::new(),
+            generated: HashMap::new(),
+            next_token: HashMap::new(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.runtime
+    }
+
+    /// Register the actual prompt tokens for a request (the trace only
+    /// carries lengths; the server path carries real ids).
+    pub fn set_prompt(&mut self, id: RequestId, tokens: Vec<i32>) {
+        self.prompts.insert(id, tokens);
+    }
+
+    /// Synthesize a deterministic prompt of the given length (examples /
+    /// load-generation without a tokenizer).
+    pub fn synth_prompt(&mut self, id: RequestId, len: u32, seed: u64) {
+        let vocab = self.runtime.vocab_size() as u64;
+        let mut rng = crate::util::Rng::new(seed ^ (id as u64).wrapping_mul(0x9E37));
+        let tokens: Vec<i32> = (0..len).map(|_| (rng.below(vocab)) as i32).collect();
+        self.prompts.insert(id, tokens);
+    }
+
+    pub fn generated(&self, id: RequestId) -> Option<&[i32]> {
+        self.generated.get(&id).map(|v| v.as_slice())
+    }
+
+    /// Remove and return a finished request's generated tokens.
+    pub fn take_generated(&mut self, id: RequestId) -> Option<Vec<i32>> {
+        self.generated.remove(&id)
+    }
+
+    fn run_prefill_segment(&mut self, id: RequestId, tokens: u32, store: &RequestStore) {
+        let req = store.get(id);
+        let start = req.prefilled as usize;
+        let prompt = self
+            .prompts
+            .get(&id)
+            .unwrap_or_else(|| panic!("no prompt registered for request {id}"))
+            .clone();
+        let end = (start + tokens as usize).min(prompt.len());
+        // Split into compiled bucket sizes.
+        let max_chunk = self.runtime.max_chunk();
+        let mut cursor = start;
+        while cursor < end {
+            let take = (end - cursor).min(max_chunk);
+            let chunk = &prompt[cursor..cursor + take];
+            let kv = self.kv.entry(id);
+            let logits = self
+                .runtime
+                .prefill(kv, chunk, cursor)
+                .expect("prefill execution failed");
+            cursor += take;
+            if cursor == prompt.len() {
+                // Final chunk: sample the first output token.
+                let tok = argmax(&logits);
+                self.generated.entry(id).or_default().push(tok);
+                self.next_token.insert(id, tok);
+            }
+        }
+    }
+
+    fn run_decodes(&mut self, ids: &[RequestId], store: &RequestStore) {
+        let max_b = self.runtime.max_decode_batch();
+        for group in ids.chunks(max_b) {
+            let tokens: Vec<i32> =
+                group.iter().map(|id| *self.next_token.get(id).expect("no next token")).collect();
+            // Position of the token being fed in: the cache holds the
+            // prompt plus all *previous* outputs; the most recent output
+            // token is written by this very step. kv_tokens() counts
+            // prefilled + decoded, so the input token's position is one
+            // less.
+            let positions: Vec<usize> =
+                group.iter().map(|&id| store.get(id).kv_tokens() as usize - 1).collect();
+            let mut kvs = self.kv.get_many_mut(group);
+            let logits = self
+                .runtime
+                .decode(&mut kvs, &tokens, &positions)
+                .expect("decode execution failed");
+            drop(kvs);
+            for (i, &id) in group.iter().enumerate() {
+                let tok = argmax(&logits[i]);
+                self.generated.entry(id).or_default().push(tok);
+                self.next_token.insert(id, tok);
+            }
+        }
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn execute(&mut self, batch: &Batch, store: &RequestStore) -> IterationResult {
+        let t0 = Instant::now();
+        for w in &batch.prefill {
+            self.run_prefill_segment(w.id, w.tokens, store);
+        }
+        if !batch.decodes.is_empty() {
+            self.run_decodes(&batch.decodes, store);
+        }
+        let latency_s = t0.elapsed().as_secs_f64();
+        self.samples.push((batch.shape(store), latency_s));
+        IterationResult { latency_s }
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.kv.release(id);
+        self.prompts.remove(&id);
+        self.next_token.remove(&id);
+        // `generated` is kept: callers read transcripts after completion.
+    }
+}

@@ -1,0 +1,270 @@
+//! PJRT model runtime: loads the AOT artifacts and executes them.
+//!
+//! One `ModelRuntime` owns a PJRT CPU client, the weight buffers (uploaded
+//! once, device-resident for the process lifetime) and one compiled
+//! executable per chunk-size / batch-size bucket. Python is never
+//! involved: the HLO text produced by `python/compile/aot.py` is the
+//! entire model.
+
+use super::manifest::{ExecutableKind, Manifest};
+use super::params::load_params;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// Weight buffers in contract order, uploaded once.
+    param_bufs: Vec<xla::PjRtBuffer>,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl ModelRuntime {
+    /// Load manifest + params + every executable from an artifacts dir.
+    pub fn load(dir: &Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+
+        // Upload weights once.
+        let tensors = load_params(&manifest.params_file)?;
+        if tensors.len() != manifest.param_order.len() {
+            bail!(
+                "params.bin has {} tensors, manifest expects {}",
+                tensors.len(),
+                manifest.param_order.len()
+            );
+        }
+        let mut param_bufs = Vec::with_capacity(tensors.len());
+        for (tensor, want) in tensors.iter().zip(&manifest.param_order) {
+            if &tensor.name != want {
+                bail!("param order mismatch: {} vs {}", tensor.name, want);
+            }
+            let data = tensor.as_f32()?;
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&data, &tensor.dims, None)
+                .map_err(|e| anyhow!("uploading {}: {e:?}", tensor.name))?;
+            param_bufs.push(buf);
+        }
+
+        // Compile all executables.
+        let mut prefill_exes = BTreeMap::new();
+        let mut decode_exes = BTreeMap::new();
+        for entry in &manifest.executables {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            match entry.kind {
+                ExecutableKind::Prefill { chunk } => {
+                    prefill_exes.insert(chunk, exe);
+                }
+                ExecutableKind::Decode { batch } => {
+                    decode_exes.insert(batch, exe);
+                }
+            }
+        }
+
+        Ok(ModelRuntime { client, manifest, param_bufs, prefill_exes, decode_exes })
+    }
+
+    /// Elements in one sequence's KV cache.
+    pub fn kv_elements(&self) -> usize {
+        self.manifest.kv_elements()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.manifest.model.vocab_size
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.manifest.model.max_seq
+    }
+
+    /// Largest compiled chunk bucket.
+    pub fn max_chunk(&self) -> usize {
+        *self.prefill_exes.keys().last().expect("at least one prefill bucket")
+    }
+
+    /// Largest compiled decode batch bucket.
+    pub fn max_decode_batch(&self) -> usize {
+        *self.decode_exes.keys().last().expect("at least one decode bucket")
+    }
+
+    /// Smallest chunk bucket >= `len` (or the largest bucket if `len`
+    /// exceeds all buckets — caller must split beforehand).
+    fn chunk_bucket(&self, len: usize) -> usize {
+        for (&b, _) in &self.prefill_exes {
+            if b >= len {
+                return b;
+            }
+        }
+        self.max_chunk()
+    }
+
+    fn decode_bucket(&self, n: usize) -> usize {
+        for (&b, _) in &self.decode_exes {
+            if b >= n {
+                return b;
+            }
+        }
+        self.max_decode_batch()
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow!("upload f32: {e:?}"))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+
+    /// Run one prefill chunk for one sequence.
+    ///
+    /// * `kv` — the sequence's cache, (L,2,Hkv,S,D) flattened; updated in
+    ///   place.
+    /// * `tokens` — the chunk's token ids (1 <= len <= max chunk bucket).
+    /// * `cache_len` — tokens already in the cache.
+    ///
+    /// Returns the logits of the last token of the chunk (length V) —
+    /// meaningful on the final chunk of a prompt.
+    pub fn prefill(&self, kv: &mut [f32], tokens: &[i32], cache_len: usize) -> Result<Vec<f32>> {
+        let valid = tokens.len();
+        if valid == 0 {
+            bail!("empty prefill chunk");
+        }
+        if cache_len + valid > self.max_seq() {
+            bail!("prefill overruns max_seq: {} + {}", cache_len, valid);
+        }
+        let bucket = self.chunk_bucket(valid);
+        if valid > bucket {
+            bail!("chunk of {valid} exceeds largest bucket {bucket}");
+        }
+        let exe = &self.prefill_exes[&bucket];
+
+        let mut padded = vec![0i32; bucket];
+        padded[..valid].copy_from_slice(tokens);
+
+        let kv_buf = self.upload_f32(kv, &self.manifest.kv_cache_shape)?;
+        let tok_buf = self.upload_i32(&padded, &[bucket])?;
+        let cl_buf = self.upload_i32(&[cache_len as i32], &[1])?;
+        let vl_buf = self.upload_i32(&[valid as i32], &[1])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&kv_buf);
+        args.push(&tok_buf);
+        args.push(&cl_buf);
+        args.push(&vl_buf);
+
+        let result = exe.execute_b(&args).map_err(|e| anyhow!("prefill exec: {e:?}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("sync: {e:?}"))?;
+        let (logits_lit, kv_lit) =
+            tuple.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let logits = logits_lit.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        let new_kv = kv_lit.to_vec::<f32>().map_err(|e| anyhow!("kv out: {e:?}"))?;
+        kv.copy_from_slice(&new_kv);
+        Ok(logits)
+    }
+
+    /// Run one batched decode step.
+    ///
+    /// * `kvs` — per-sequence caches, each (L,2,Hkv,S,D) flattened;
+    ///   updated in place.
+    /// * `tokens[i]` — the current input token of sequence i.
+    /// * `positions[i]` — that token's position (cache length before it).
+    ///
+    /// Returns next-token logits per sequence.
+    pub fn decode(
+        &self,
+        kvs: &mut [&mut [f32]],
+        tokens: &[i32],
+        positions: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = kvs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if tokens.len() != n || positions.len() != n {
+            bail!("decode arity mismatch");
+        }
+        for &p in positions {
+            if p + 1 > self.max_seq() {
+                bail!("decode position {p} overruns max_seq");
+            }
+        }
+        let bucket = self.decode_bucket(n);
+        if n > bucket {
+            bail!("decode batch {n} exceeds largest bucket {bucket}");
+        }
+        let exe = &self.decode_exes[&bucket];
+        let per_seq = self.kv_elements();
+
+        // Assemble the padded batch: inactive slots are zero KV at
+        // position 0 (the model tolerates them; outputs are discarded).
+        let mut kv_batch = vec![0f32; bucket * per_seq];
+        for (i, kv) in kvs.iter().enumerate() {
+            kv_batch[i * per_seq..(i + 1) * per_seq].copy_from_slice(kv);
+        }
+        let mut tok = vec![0i32; bucket];
+        tok[..n].copy_from_slice(tokens);
+        let mut pos = vec![0i32; bucket];
+        for (i, &p) in positions.iter().enumerate() {
+            pos[i] = p as i32;
+        }
+
+        let mut dims = vec![bucket];
+        dims.extend_from_slice(&self.manifest.kv_cache_shape);
+        let kv_buf = self.upload_f32(&kv_batch, &dims)?;
+        let tok_buf = self.upload_i32(&tok, &[bucket])?;
+        let pos_buf = self.upload_i32(&pos, &[bucket])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&kv_buf);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+
+        let result = exe.execute_b(&args).map_err(|e| anyhow!("decode exec: {e:?}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("sync: {e:?}"))?;
+        let (logits_lit, kv_lit) =
+            tuple.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let logits_flat = logits_lit.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        let kv_out = kv_lit.to_vec::<f32>().map_err(|e| anyhow!("kv out: {e:?}"))?;
+
+        let v = self.vocab_size();
+        for (i, kv) in kvs.iter_mut().enumerate() {
+            kv.copy_from_slice(&kv_out[i * per_seq..(i + 1) * per_seq]);
+        }
+        Ok((0..n).map(|i| logits_flat[i * v..(i + 1) * v].to_vec()).collect())
+    }
+}
+
+/// Greedy sampling: argmax over logits.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! AOT artifact manifest (`artifacts/manifest.json`), written by
+//! `python/compile/aot.py`. Describes the model, the parameter contract
+//! and the executable variants available to the runtime.
+
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecutableKind {
+    /// Prefill chunk of the given bucket size.
+    Prefill { chunk: usize },
+    /// Batched decode step of the given batch bucket.
+    Decode { batch: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableEntry {
+    pub name: String,
+    pub kind: ExecutableKind,
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub params_file: PathBuf,
+    pub param_order: Vec<String>,
+    /// Per-sequence KV cache shape: (L, 2, Hkv, S, D).
+    pub kv_cache_shape: Vec<usize>,
+    pub executables: Vec<ExecutableEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let version = j
+            .get("format_version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing format_version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+
+        let m = j.get("model").ok_or_else(|| anyhow!("manifest missing model"))?;
+        let field = |key: &str| -> Result<usize> {
+            m.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("model missing '{key}'"))
+        };
+        let model = ModelInfo {
+            vocab_size: field("vocab_size")?,
+            d_model: field("d_model")?,
+            n_layers: field("n_layers")?,
+            n_heads: field("n_heads")?,
+            n_kv_heads: field("n_kv_heads")?,
+            head_dim: field("head_dim")?,
+            d_ff: field("d_ff")?,
+            max_seq: field("max_seq")?,
+            param_count: field("param_count")?,
+        };
+
+        let params_file = dir.join(
+            j.get("params_file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("manifest missing params_file"))?,
+        );
+
+        let param_order = j
+            .get("param_order")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing param_order"))?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad param name")))
+            .collect::<Result<Vec<_>>>()?;
+
+        let kv_cache_shape = j
+            .get("kv_cache_shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing kv_cache_shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad kv dim")))
+            .collect::<Result<Vec<_>>>()?;
+        if kv_cache_shape.len() != 5 {
+            bail!("kv_cache_shape must have 5 dims (L,2,Hkv,S,D)");
+        }
+
+        let mut executables = Vec::new();
+        for e in j
+            .get("executables")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing executables"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("executable missing name"))?
+                .to_string();
+            let file = dir.join(
+                e.get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("executable missing file"))?,
+            );
+            let kind = match e.get("kind").and_then(|v| v.as_str()) {
+                Some("prefill") => ExecutableKind::Prefill {
+                    chunk: e
+                        .get("chunk")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| anyhow!("prefill missing chunk"))?,
+                },
+                Some("decode") => ExecutableKind::Decode {
+                    batch: e
+                        .get("batch")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| anyhow!("decode missing batch"))?,
+                },
+                other => bail!("unknown executable kind {other:?}"),
+            };
+            executables.push(ExecutableEntry { name, kind, file });
+        }
+        if executables.is_empty() {
+            bail!("manifest lists no executables");
+        }
+
+        Ok(Manifest { model, params_file, param_order, kv_cache_shape, executables })
+    }
+
+    /// Elements in one sequence's KV cache.
+    pub fn kv_elements(&self) -> usize {
+        self.kv_cache_shape.iter().product()
+    }
+
+    /// Sorted available prefill chunk buckets.
+    pub fn chunk_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .iter()
+            .filter_map(|e| match e.kind {
+                ExecutableKind::Prefill { chunk } => Some(chunk),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Sorted available decode batch buckets.
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .iter()
+            .filter_map(|e| match e.kind {
+                ExecutableKind::Decode { batch } => Some(batch),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format_version": 1,
+        "model": {"vocab_size": 8192, "d_model": 256, "n_layers": 4,
+                   "n_heads": 8, "n_kv_heads": 4, "head_dim": 32,
+                   "d_ff": 768, "max_seq": 640, "param_count": 7342336},
+        "params_file": "params.bin",
+        "param_order": ["embed", "final_norm", "lm_head"],
+        "kv_cache_shape": [4, 2, 4, 640, 32],
+        "executables": [
+            {"name": "prefill_c16", "kind": "prefill", "chunk": 16, "file": "prefill_c16.hlo.txt"},
+            {"name": "prefill_c256", "kind": "prefill", "chunk": 256, "file": "prefill_c256.hlo.txt"},
+            {"name": "decode_b1", "kind": "decode", "batch": 1, "file": "decode_b1.hlo.txt"},
+            {"name": "decode_b8", "kind": "decode", "batch": 8, "file": "decode_b8.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.model.vocab_size, 8192);
+        assert_eq!(m.kv_elements(), 4 * 2 * 4 * 640 * 32);
+        assert_eq!(m.chunk_buckets(), vec![16, 256]);
+        assert_eq!(m.decode_buckets(), vec![1, 8]);
+        assert!(m.params_file.ends_with("params.bin"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"format_version\": 1", "\"format_version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_kv_rank() {
+        let bad = SAMPLE.replace("[4, 2, 4, 640, 32]", "[4, 2, 4]");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.model.param_count > 1_000_000);
+            assert!(!m.chunk_buckets().is_empty());
+            assert!(!m.decode_buckets().is_empty());
+        }
+    }
+}

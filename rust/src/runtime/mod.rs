@@ -1,0 +1,13 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (the AOT-compiled L2 model)
+//! and executes it on the request path via the `xla` crate's PJRT CPU
+//! client. HLO text is the interchange format (see `python/compile/aot.py`
+//! for why text, not serialized protos).
+
+pub mod backend;
+pub mod client;
+pub mod manifest;
+pub mod params;
+
+pub use backend::PjrtBackend;
+pub use client::{argmax, ModelRuntime};
+pub use manifest::Manifest;

@@ -1,0 +1,170 @@
+//! Reader for `artifacts/params.bin` — the binary weight format written
+//! by `python/compile/params_io.py`. Keep the two in sync.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"NYMP";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian data (row-major).
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor {} is not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+/// Load all tensors, in file (= contract) order.
+pub fn load_params(path: &Path) -> Result<Vec<Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_params(&bytes)
+}
+
+pub fn parse_params(bytes: &[u8]) -> Result<Vec<Tensor>> {
+    let mut r = bytes;
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("params: truncated magic")?;
+    if &magic != MAGIC {
+        bail!("params: bad magic {magic:?}");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("params: unsupported version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name_buf = vec![0u8; name_len];
+        r.read_exact(&mut name_buf).context("params: truncated name")?;
+        let name = String::from_utf8(name_buf).context("params: non-utf8 name")?;
+        let dtype = match read_u32(&mut r)? {
+            0 => DType::F32,
+            1 => DType::I32,
+            other => bail!("params: unknown dtype {other}"),
+        };
+        let ndim = read_u32(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u64(&mut r)? as usize);
+        }
+        let nbytes = read_u64(&mut r)? as usize;
+        let expect: usize = dims.iter().product::<usize>() * 4;
+        if nbytes != expect {
+            bail!("params: {name} size mismatch: {nbytes} vs {expect}");
+        }
+        let mut data = vec![0u8; nbytes];
+        r.read_exact(&mut data).with_context(|| format!("params: truncated data for {name}"))?;
+        out.push(Tensor { name, dtype, dims, data });
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("params: truncated u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut &[u8]) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("params: truncated u64")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a file in the python writer's format.
+    fn sample_file() -> Vec<u8> {
+        let mut f = Vec::new();
+        f.extend_from_slice(MAGIC);
+        f.extend_from_slice(&VERSION.to_le_bytes());
+        f.extend_from_slice(&2u32.to_le_bytes()); // two tensors
+        // tensor 1: "w" f32 [2,2]
+        f.extend_from_slice(&1u32.to_le_bytes());
+        f.extend_from_slice(b"w");
+        f.extend_from_slice(&0u32.to_le_bytes()); // f32
+        f.extend_from_slice(&2u32.to_le_bytes()); // ndim
+        f.extend_from_slice(&2u64.to_le_bytes());
+        f.extend_from_slice(&2u64.to_le_bytes());
+        f.extend_from_slice(&16u64.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.extend_from_slice(&v.to_le_bytes());
+        }
+        // tensor 2: "idx" i32 [3]
+        f.extend_from_slice(&3u32.to_le_bytes());
+        f.extend_from_slice(b"idx");
+        f.extend_from_slice(&1u32.to_le_bytes()); // i32
+        f.extend_from_slice(&1u32.to_le_bytes());
+        f.extend_from_slice(&3u64.to_le_bytes());
+        f.extend_from_slice(&12u64.to_le_bytes());
+        for v in [7i32, 8, 9] {
+            f.extend_from_slice(&v.to_le_bytes());
+        }
+        f
+    }
+
+    #[test]
+    fn parses_sample() {
+        let tensors = parse_params(&sample_file()).unwrap();
+        assert_eq!(tensors.len(), 2);
+        assert_eq!(tensors[0].name, "w");
+        assert_eq!(tensors[0].dims, vec![2, 2]);
+        assert_eq!(tensors[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(tensors[1].name, "idx");
+        assert_eq!(tensors[1].dtype, DType::I32);
+        assert!(tensors[1].as_f32().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut f = sample_file();
+        f[0] = b'X';
+        assert!(parse_params(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let f = sample_file();
+        assert!(parse_params(&f[..f.len() - 4]).is_err());
+    }
+
+    #[test]
+    fn reads_real_params_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/params.bin");
+        if path.exists() {
+            let tensors = load_params(&path).unwrap();
+            assert_eq!(tensors[0].name, "embed");
+            let total: usize = tensors.iter().map(|t| t.element_count()).sum();
+            assert!(total > 1_000_000);
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Scheduling: the paper's contribution (Niyama) and the Sarathi-style
+//! baselines it is evaluated against.
+//!
+//! The engine calls [`Scheduler::plan`] once per iteration; the scheduler
+//! returns a [`Batch`] — one or more prefill chunk segments plus the
+//! decode set — and the engine executes it on whichever backend is
+//! configured (simulator or PJRT). All queue state lives in the
+//! scheduler; all request state lives in the [`RequestStore`].
+
+pub mod niyama;
+pub mod sarathi;
+
+use crate::request::{RequestId, RequestStore};
+use crate::simulator::cost_model::BatchShape;
+use crate::util::OnlineStats;
+use std::collections::HashMap;
+
+pub use niyama::NiyamaScheduler;
+pub use sarathi::{SarathiPolicy, SarathiScheduler};
+
+/// Prefill work for one request in the current iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillWork {
+    pub id: RequestId,
+    /// Number of prompt tokens to process this iteration.
+    pub tokens: u32,
+}
+
+/// The scheduler's output: one iteration's worth of work.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub prefill: Vec<PrefillWork>,
+    pub decodes: Vec<RequestId>,
+}
+
+impl Batch {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decodes.is_empty()
+    }
+
+    pub fn prefill_tokens(&self) -> u32 {
+        self.prefill.iter().map(|w| w.tokens).sum()
+    }
+
+    /// The batch's shape for latency prediction / cost accounting.
+    pub fn shape(&self, store: &RequestStore) -> BatchShape {
+        let mut shape = BatchShape::default();
+        for w in &self.prefill {
+            let r = store.get(w.id);
+            shape.prefill.push(crate::simulator::cost_model::PrefillSegment {
+                cache_len: r.kv_tokens(),
+                chunk: w.tokens,
+            });
+        }
+        for &id in &self.decodes {
+            let r = store.get(id);
+            // +1: the token being generated extends the cache.
+            shape.decode_kv_lens.push(r.kv_tokens() + 1);
+        }
+        shape
+    }
+}
+
+/// Engine-provided context for a planning decision.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanContext {
+    pub now: f64,
+    /// KV-cache capacity in tokens and current occupancy.
+    pub kv_capacity: u64,
+    pub kv_used: u64,
+}
+
+impl PlanContext {
+    pub fn kv_free(&self) -> u64 {
+        self.kv_capacity.saturating_sub(self.kv_used)
+    }
+}
+
+/// Iteration latency oracle used for slack computation and work
+/// estimates. Implemented by the analytic [`CostModel`] (simulation) and
+/// the fitted [`LatencyPredictor`] (real runtime).
+pub trait LatencyModel: Send + Sync {
+    fn latency(&self, batch: &BatchShape) -> f64;
+}
+
+impl LatencyModel for crate::simulator::CostModel {
+    fn latency(&self, batch: &BatchShape) -> f64 {
+        self.iteration_latency(batch)
+    }
+}
+
+impl LatencyModel for crate::predictor::LatencyPredictor {
+    fn latency(&self, batch: &BatchShape) -> f64 {
+        self.predict(batch)
+    }
+}
+
+/// Work-time estimates derived from a latency model (hybrid priority's
+/// `Prefill_rem` / `Decode_rem` terms, in seconds).
+pub struct WorkEstimator<'a> {
+    pub model: &'a dyn LatencyModel,
+    /// Chunk size the estimate assumes prefill runs at.
+    pub ref_chunk: u32,
+}
+
+impl<'a> WorkEstimator<'a> {
+    /// Seconds to prefill `tokens` starting from cache offset `cache_len`.
+    /// Closed form: iteration count × latency of a representative chunk at
+    /// the mid-point cache offset (one latency call; this runs O(queue)
+    /// times per scheduling decision).
+    pub fn prefill_time(&self, tokens: u32, cache_len: u32) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let iters = (tokens as f64 / self.ref_chunk as f64).ceil();
+        let mut b = BatchShape::default();
+        b.prefill.push(crate::simulator::cost_model::PrefillSegment {
+            cache_len: cache_len + tokens / 2,
+            chunk: self.ref_chunk.min(tokens),
+        });
+        iters * self.model.latency(&b)
+    }
+
+    /// Seconds to emit `tokens` decode tokens at KV length ~`kv_len` in a
+    /// batch of `batch_hint` decodes (amortized per-sequence share).
+    pub fn decode_time(&self, tokens: u32, kv_len: u32, batch_hint: usize) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let mut b = BatchShape::default();
+        b.decode_kv_lens = vec![kv_len.max(1); batch_hint.max(1)];
+        // The whole batch advances together: one iteration yields one
+        // token for every sequence, so per-token time is the iteration
+        // latency itself.
+        tokens as f64 * self.model.latency(&b)
+    }
+}
+
+/// Per-application decode-length history (paper §3.4): running mean + 2σ
+/// over-approximation of output length, keyed by application id.
+#[derive(Debug, Default)]
+pub struct AppHistory {
+    stats: HashMap<u32, OnlineStats>,
+    /// Cold-start prior used before any completions are observed.
+    pub prior_tokens: f64,
+}
+
+impl AppHistory {
+    pub fn new(prior_tokens: f64) -> Self {
+        AppHistory { stats: HashMap::new(), prior_tokens }
+    }
+
+    pub fn record(&mut self, app_id: u32, decode_tokens: u32) {
+        self.stats.entry(app_id).or_default().push(decode_tokens as f64);
+    }
+
+    /// Over-approximate expected decode length: mean + 2σ (paper §3.4),
+    /// falling back to the prior until enough samples exist.
+    pub fn estimate(&self, app_id: u32) -> f64 {
+        match self.stats.get(&app_id) {
+            Some(s) if s.count() >= 5 => s.upper_estimate().max(1.0),
+            _ => self.prior_tokens,
+        }
+    }
+
+    /// Expected remaining tokens for a request that has already emitted
+    /// `decoded` tokens (>= 1 so pacing never divides by zero).
+    pub fn remaining_estimate(&self, app_id: u32, decoded: u32) -> u32 {
+        (self.estimate(app_id) - decoded as f64).max(1.0).ceil() as u32
+    }
+}
+
+/// The scheduler interface the engine drives.
+pub trait Scheduler {
+    /// A new request entered the system (goes to the prefill queue).
+    fn on_arrival(&mut self, id: RequestId, store: &RequestStore);
+
+    /// Build the next iteration's batch. May mutate request phases
+    /// (relegation) but not token counts.
+    fn plan(&mut self, ctx: PlanContext, store: &mut RequestStore) -> Batch;
+
+    /// A request's prefill completed and it entered the decode phase
+    /// (engine callback; keeps queue maintenance O(1) instead of a full
+    /// store scan per iteration).
+    fn on_prefill_complete(&mut self, id: RequestId, store: &RequestStore);
+
+    /// A request finished (engine observed its last token) — bookkeeping
+    /// hook for decode-length histories.
+    fn on_finished(&mut self, id: RequestId, store: &RequestStore);
+
+    /// Diagnostic: requests waiting for prefill service.
+    fn backlog(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareModel;
+    use crate::simulator::CostModel;
+
+    #[test]
+    fn app_history_cold_start_uses_prior() {
+        let h = AppHistory::new(128.0);
+        assert_eq!(h.estimate(0), 128.0);
+        assert_eq!(h.remaining_estimate(0, 100), 28);
+        assert_eq!(h.remaining_estimate(0, 500), 1); // clamped
+    }
+
+    #[test]
+    fn app_history_learns_mean_plus_2sigma() {
+        let mut h = AppHistory::new(128.0);
+        for _ in 0..10 {
+            h.record(7, 100);
+        }
+        // Zero variance: estimate == mean.
+        assert!((h.estimate(7) - 100.0).abs() < 1e-9);
+        for x in [50u32, 150, 50, 150] {
+            h.record(7, x);
+        }
+        assert!(h.estimate(7) > 100.0, "variance raises the estimate");
+        // Other apps unaffected.
+        assert_eq!(h.estimate(8), 128.0);
+    }
+
+    #[test]
+    fn work_estimator_prefill_scales() {
+        let cm = CostModel::new(HardwareModel::llama3_8b_a100());
+        let est = WorkEstimator { model: &cm, ref_chunk: 256 };
+        let t1 = est.prefill_time(256, 0);
+        let t4 = est.prefill_time(1024, 0);
+        assert!(t4 > 3.5 * t1 && t4 < 5.0 * t1);
+        assert_eq!(est.prefill_time(0, 0), 0.0);
+    }
+
+    #[test]
+    fn work_estimator_decode_scales_linearly() {
+        let cm = CostModel::new(HardwareModel::llama3_8b_a100());
+        let est = WorkEstimator { model: &cm, ref_chunk: 256 };
+        let t10 = est.decode_time(10, 512, 32);
+        let t100 = est.decode_time(100, 512, 32);
+        assert!((t100 / t10 - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_shape_reflects_store_state() {
+        use crate::qos::{Importance, Slo};
+        use crate::request::RequestSpec;
+        let mut store = RequestStore::new();
+        let id = store.insert(
+            RequestSpec {
+                arrival_s: 0.0,
+                prompt_tokens: 300,
+                decode_tokens: 10,
+                tier: 0,
+                app_id: 0,
+                importance: Importance::High,
+            },
+            Slo::NonInteractive { ttlt_s: 600.0 },
+        );
+        store.get_mut(id).prefilled = 100;
+        let batch = Batch { prefill: vec![PrefillWork { id, tokens: 128 }], decodes: vec![] };
+        let shape = batch.shape(&store);
+        assert_eq!(shape.prefill[0].cache_len, 100);
+        assert_eq!(shape.prefill[0].chunk, 128);
+    }
+}

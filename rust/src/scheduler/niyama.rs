@@ -1,0 +1,848 @@
+//! The Niyama scheduler (paper §3): dynamic chunking, hybrid
+//! prioritization, eager relegation, selective preemption.
+//!
+//! Per iteration (paper Fig. 3):
+//!  1. sync queues with request state,
+//!  2. batch all decodes (stall-free), derive their minimum slack,
+//!  3. solve the largest chunk budget whose predicted latency fits that
+//!     slack (dynamic chunking, §3.3),
+//!  4. order the prefill queue by hybrid priority (eqs. 4–5),
+//!  5. run the violation checker: requests that cannot make their
+//!     deadline given the work queued ahead are eagerly relegated, with
+//!     low-importance requests sacrificed first (§3.4),
+//!  6. fill the chunk budget with prefill segments in priority order,
+//!     guarding in-flight prefills against harmful preemption,
+//!  7. spend leftover budget / decode slots on relegated requests.
+
+use std::sync::Arc;
+
+use super::{
+    AppHistory, Batch, LatencyModel, PlanContext, PrefillWork, Scheduler, WorkEstimator,
+};
+use crate::config::SchedulerConfig;
+use crate::request::{Phase, RequestId, RequestStore};
+use crate::simulator::cost_model::{BatchShape, PrefillSegment};
+use crate::qos::{Importance, Slo};
+
+/// Smallest chunk the dynamic solver will consider (progress guarantee).
+const MIN_CHUNK: u32 = 16;
+/// Backlog (seconds of queued prefill work) at which adaptive alpha
+/// reaches its configured base value.
+const ALPHA_BACKLOG_SCALE_S: f64 = 10.0;
+/// Adaptive alpha multiplier ceiling.
+const ALPHA_MAX_FACTOR: f64 = 4.0;
+
+pub struct NiyamaScheduler {
+    cfg: SchedulerConfig,
+    model: Arc<dyn LatencyModel>,
+    history: AppHistory,
+    prefill_q: Vec<RequestId>,
+    decode_q: Vec<RequestId>,
+    relegated_q: Vec<RequestId>,
+    /// Request whose prefill received tokens last iteration (preemption
+    /// guard target).
+    inflight: Option<RequestId>,
+    relegated_count: usize,
+    total_seen: usize,
+    /// Scratch buffers reused across iterations (hot path: no allocation
+    /// in steady state).
+    scratch_order: Vec<(f64, RequestId)>,
+}
+
+impl NiyamaScheduler {
+    pub fn new(cfg: SchedulerConfig, model: Arc<dyn LatencyModel>) -> Self {
+        NiyamaScheduler {
+            cfg,
+            model,
+            history: AppHistory::new(256.0),
+            prefill_q: Vec::new(),
+            decode_q: Vec::new(),
+            relegated_q: Vec::new(),
+            inflight: None,
+            relegated_count: 0,
+            total_seen: 0,
+            scratch_order: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    fn estimator(&self) -> WorkEstimator<'_> {
+        WorkEstimator { model: self.model.as_ref(), ref_chunk: self.cfg.chunk_size }
+    }
+
+    /// Drop finished/relegated entries; decode-queue admission happens via
+    /// the `on_prefill_complete` engine callback (no store scans here —
+    /// this runs every iteration).
+    fn sync(&mut self, store: &RequestStore) {
+        self.prefill_q.retain(|&id| {
+            let r = store.get(id);
+            r.phase == Phase::Prefill && r.prefill_remaining() > 0
+        });
+        self.decode_q.retain(|&id| store.get(id).phase == Phase::Decode);
+        self.relegated_q.retain(|&id| store.get(id).is_active());
+    }
+
+    /// Relegate a request: flip phase, move queues, count it.
+    fn relegate(&mut self, id: RequestId, store: &mut RequestStore) {
+        let r = store.get_mut(id);
+        if r.phase == Phase::Relegated {
+            return;
+        }
+        r.phase = Phase::Relegated;
+        r.was_relegated = true;
+        self.relegated_q.push(id);
+        self.relegated_count += 1;
+    }
+
+    fn relegation_allowed(&self) -> bool {
+        self.cfg.eager_relegation
+            && (self.relegated_count as f64)
+                < self.cfg.relegation_cap * self.total_seen.max(1) as f64
+    }
+
+    /// Effective alpha: optionally scaled by prefill backlog so the
+    /// scheduler behaves like EDF at low load and shifts toward SRPF under
+    /// overload (paper §4.2).
+    fn effective_alpha(&self, backlog_s: f64) -> f64 {
+        if !self.cfg.hybrid_priority {
+            return 0.0; // pure EDF ordering
+        }
+        if self.cfg.adaptive_alpha {
+            self.cfg.alpha * (backlog_s / ALPHA_BACKLOG_SCALE_S).min(ALPHA_MAX_FACTOR)
+        } else {
+            self.cfg.alpha
+        }
+    }
+
+    /// Hybrid priority (eqs. 4–5); smaller = more urgent.
+    /// `decode_tok_s` is the per-token decode latency of the *current*
+    /// batch, computed once per plan (perf: this runs O(queue) times per
+    /// iteration; see EXPERIMENTS.md §Perf).
+    fn priority(
+        &self,
+        id: RequestId,
+        store: &RequestStore,
+        alpha: f64,
+        decode_tok_s: f64,
+    ) -> f64 {
+        let r = store.get(id);
+        let est = self.estimator();
+        let prefill_rem_s = est.prefill_time(r.prefill_remaining(), r.prefilled);
+        match r.slo {
+            Slo::Interactive { ttft_s, .. } => {
+                // Eq. (4): P = t_arr + SLO_TTFT + alpha * Prefill_rem.
+                r.spec.arrival_s + ttft_s + alpha * prefill_rem_s
+            }
+            Slo::NonInteractive { ttlt_s } => {
+                // Eq. (5): P = t_arr + SLO_TTLT + alpha * (Prefill_rem +
+                // Decode_rem), Decode_rem from per-app history (mean+2σ).
+                let est_decode = self.history.remaining_estimate(r.spec.app_id, r.decoded);
+                let decode_rem_s = est_decode as f64 * decode_tok_s;
+                r.spec.arrival_s + ttlt_s + alpha * (prefill_rem_s + decode_rem_s)
+            }
+        }
+    }
+
+    /// Minimum slack (seconds until the next token deadline) across the
+    /// decode batch. `None` when there are no decodes (no TBT constraint).
+    fn min_decode_slack(&self, now: f64, store: &RequestStore, decodes: &[RequestId]) -> Option<f64> {
+        decodes
+            .iter()
+            .map(|&id| {
+                let r = store.get(id);
+                let remaining = match r.slo {
+                    Slo::Interactive { .. } => 1,
+                    Slo::NonInteractive { .. } => {
+                        self.history.remaining_estimate(r.spec.app_id, r.decoded)
+                    }
+                };
+                r.next_token_deadline(now, remaining) - now
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Dynamic chunking (§3.3): largest chunk whose predicted iteration
+    /// latency fits within the decode slack AND within the first-token
+    /// deadline of a prefill that would *complete* inside this iteration
+    /// (the violation checker's "will violate in the current iteration"
+    /// case — a 2048-token chunk is a ~100 ms quantum, long enough to
+    /// blow a TTFT deadline that a fixed-256 scheduler never threatens).
+    ///
+    /// `head` is the highest-priority prefill candidate: (remaining
+    /// prefill tokens, seconds until its first-token deadline).
+    fn solve_chunk_budget(
+        &self,
+        store: &RequestStore,
+        decodes: &[RequestId],
+        slack: Option<f64>,
+        head_cache_len: u32,
+        head: Option<(u32, f64)>,
+    ) -> u32 {
+        if !self.cfg.dynamic_chunking {
+            return self.cfg.chunk_size;
+        }
+        let max_chunk = self.cfg.max_chunk_size;
+        let decode_budget_s = match slack {
+            Some(s) => s - self.cfg.slack_margin_s,
+            None => f64::INFINITY,
+        };
+        if slack.is_none() && head.is_none() {
+            // Nothing constrains the iteration latency: run the biggest
+            // chunk we compiled for.
+            return max_chunk;
+        }
+
+        let mut decode_kv: Vec<u32> = Vec::with_capacity(decodes.len());
+        for &id in decodes {
+            decode_kv.push(store.get(id).kv_tokens() + 1);
+        }
+        let predict = |chunk: u32| {
+            let mut b = BatchShape { prefill: Vec::new(), decode_kv_lens: decode_kv.clone() };
+            if chunk > 0 {
+                b.prefill.push(PrefillSegment { cache_len: head_cache_len, chunk });
+            }
+            self.model.latency(&b)
+        };
+        let fits = |chunk: u32| {
+            let lat = predict(chunk);
+            if lat > decode_budget_s {
+                return false;
+            }
+            // If this chunk would complete the head request's prefill,
+            // its first token lands at iteration end — which must not
+            // overshoot its TTFT deadline.
+            if let Some((head_rem, head_ttft_slack)) = head {
+                if chunk >= head_rem && lat > head_ttft_slack.max(0.0) {
+                    return false;
+                }
+            }
+            true
+        };
+
+        if !fits(MIN_CHUNK) {
+            // Even the smallest chunk would blow a deadline: run
+            // decode-only this iteration (prefill waits) — unless there
+            // are no decodes, where progress beats perfection.
+            return if decodes.is_empty() { MIN_CHUNK } else { 0 };
+        }
+        if fits(max_chunk) {
+            return max_chunk;
+        }
+        // Latency is monotone in chunk, so feasibility is monotone too:
+        // binary search the largest feasible size.
+        let (mut lo, mut hi) = (MIN_CHUNK, max_chunk);
+        while hi - lo > 8 {
+            let mid = lo + (hi - lo) / 2;
+            if fits(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Feasibility of a prefill-phase request given `wait_s` seconds of
+    /// higher-priority work queued ahead of it (violation checker, §3.1).
+    fn feasible(&self, id: RequestId, now: f64, wait_s: f64, store: &RequestStore, inflation: f64, decode_tok_s: f64) -> bool {
+        let r = store.get(id);
+        let est = self.estimator();
+        let prefill_s = est.prefill_time(r.prefill_remaining(), r.prefilled) * inflation;
+        match r.slo {
+            Slo::Interactive { ttft_s, .. } => {
+                now + wait_s + prefill_s <= r.spec.arrival_s + ttft_s
+            }
+            Slo::NonInteractive { ttlt_s } => {
+                let est_decode = self.history.remaining_estimate(r.spec.app_id, r.decoded);
+                let decode_s = est_decode as f64 * decode_tok_s;
+                now + wait_s + prefill_s + decode_s <= r.spec.arrival_s + ttlt_s
+            }
+        }
+    }
+
+    /// Estimated seconds of prefill work a request still needs (used for
+    /// backlog/adaptive alpha and the W-accounting pass).
+    fn work_s(&self, id: RequestId, store: &RequestStore) -> f64 {
+        let r = store.get(id);
+        self.estimator().prefill_time(r.prefill_remaining(), r.prefilled)
+    }
+}
+
+impl Scheduler for NiyamaScheduler {
+    fn on_arrival(&mut self, id: RequestId, _store: &RequestStore) {
+        self.prefill_q.push(id);
+        self.total_seen += 1;
+    }
+
+    fn plan(&mut self, ctx: PlanContext, store: &mut RequestStore) -> Batch {
+        let now = ctx.now;
+        self.sync(store);
+
+        // ---- decode set (stall-free: all decodes run) -------------------
+        let mut decodes: Vec<RequestId> = Vec::with_capacity(self.decode_q.len());
+        decodes.extend(self.decode_q.iter().take(self.cfg.max_batch_decodes));
+
+        // Decode-phase TTLT check: a non-interactive request already past
+        // its completion deadline is a lost cause — relegate it to free
+        // service for requests that can still make it (§3.4).
+        if self.cfg.eager_relegation {
+            let expired: Vec<RequestId> = decodes
+                .iter()
+                .copied()
+                .filter(|&id| {
+                    let r = store.get(id);
+                    matches!(r.slo, Slo::NonInteractive { ttlt_s } if now > r.spec.arrival_s + ttlt_s)
+                })
+                .collect();
+            if !expired.is_empty() && self.relegation_allowed() {
+                for id in expired {
+                    self.relegate(id, store);
+                }
+                self.sync(store);
+                decodes.clear();
+                decodes.extend(self.decode_q.iter().take(self.cfg.max_batch_decodes));
+            }
+        }
+
+        // ---- dynamic chunk budget ---------------------------------------
+        let slack = self.min_decode_slack(now, store, &decodes);
+        let head_cache = self
+            .prefill_q
+            .first()
+            .map(|&id| store.get(id).kv_tokens())
+            .unwrap_or(0);
+        // Earliest-TTFT interactive prefill that could *complete* inside
+        // this iteration: its first token lands at iteration end, so the
+        // iteration must not outlive its deadline.
+        let head = self
+            .prefill_q
+            .iter()
+            .filter_map(|&id| {
+                let r = store.get(id);
+                match r.slo {
+                    Slo::Interactive { ttft_s, .. }
+                        if r.prefill_remaining() <= self.cfg.max_chunk_size =>
+                    {
+                        Some((r.prefill_remaining(), r.spec.arrival_s + ttft_s - now))
+                    }
+                    _ => None,
+                }
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut budget = self.solve_chunk_budget(store, &decodes, slack, head_cache, head);
+
+        // Memory guard: every prefill token + every decode token extends
+        // the KV cache.
+        let kv_headroom = ctx.kv_free().saturating_sub(decodes.len() as u64);
+        budget = budget.min(kv_headroom.min(u32::MAX as u64) as u32);
+
+        // ---- hybrid priority ordering + violation checker ----------------
+        // Per-token decode latency of the current batch, computed ONCE:
+        // priority/feasibility run O(queue) times per plan and previously
+        // rebuilt a decode batch shape (one Vec allocation + O(batch)
+        // latency eval) each call.
+        let decode_tok_s = {
+            let mut b = BatchShape::default();
+            if decodes.is_empty() {
+                b.decode_kv_lens.push(512);
+            } else {
+                for &id in &decodes {
+                    b.decode_kv_lens.push(store.get(id).kv_tokens() + 1);
+                }
+            }
+            self.model.latency(&b)
+        };
+        let backlog_s: f64 =
+            self.prefill_q.iter().map(|&id| self.work_s(id, store)).sum();
+        let alpha = self.effective_alpha(backlog_s);
+
+        // Mixed-iteration inflation: prefill estimates assume prefill-only
+        // iterations; scale by how much the current decode load slows a
+        // reference chunk down.
+        let inflation = {
+            let mut with = BatchShape::default();
+            with.prefill.push(PrefillSegment { cache_len: head_cache, chunk: self.cfg.chunk_size });
+            let mut decode_kv = Vec::with_capacity(decodes.len());
+            for &id in &decodes {
+                decode_kv.push(store.get(id).kv_tokens() + 1);
+            }
+            with.decode_kv_lens = decode_kv;
+            let mut without = BatchShape::default();
+            without
+                .prefill
+                .push(PrefillSegment { cache_len: head_cache, chunk: self.cfg.chunk_size });
+            self.model.latency(&with) / self.model.latency(&without)
+        };
+
+        self.scratch_order.clear();
+        for &id in &self.prefill_q {
+            let p = self.priority(id, store, alpha, decode_tok_s);
+            self.scratch_order.push((p, id));
+        }
+        self.scratch_order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut order: Vec<RequestId> = self.scratch_order.iter().map(|&(_, id)| id).collect();
+
+        // W-accounting feasibility pass: wait time accumulates over the
+        // requests placed ahead.
+        let run_pass = |order: &[RequestId], sched: &NiyamaScheduler, store: &RequestStore| {
+            let mut wait = 0.0;
+            let mut infeasible = Vec::new();
+            for &id in order {
+                if sched.feasible(id, now, wait, store, inflation, decode_tok_s) {
+                    wait += sched.work_s(id, store) * inflation;
+                } else {
+                    infeasible.push(id);
+                }
+            }
+            infeasible
+        };
+        let mut infeasible = run_pass(&order, self, store);
+
+        // Importance-aware second pass (§3.4): if a high-importance
+        // request can't make it while low-importance ones are being
+        // served, push all high-importance requests ahead and retry —
+        // the low ones then absorb the infeasibility.
+        if self.cfg.eager_relegation
+            && infeasible
+                .iter()
+                .any(|&id| store.get(id).spec.importance == Importance::High)
+            && order
+                .iter()
+                .any(|&id| store.get(id).spec.importance == Importance::Low)
+        {
+            let key: std::collections::HashMap<RequestId, f64> =
+                self.scratch_order.iter().map(|&(p, id)| (id, p)).collect();
+            order.sort_by(|&a, &b| {
+                let ia = store.get(a).spec.importance;
+                let ib = store.get(b).spec.importance;
+                ib.cmp(&ia).then(key[&a].partial_cmp(&key[&b]).unwrap())
+            });
+            infeasible = run_pass(&order, self, store);
+        }
+
+        // Eagerly relegate what cannot make it (subject to the cap).
+        if self.cfg.eager_relegation {
+            for id in infeasible {
+                if self.relegation_allowed() {
+                    self.relegate(id, store);
+                }
+            }
+            order.retain(|&id| store.get(id).phase == Phase::Prefill);
+        }
+
+        // ---- selective preemption guard (§3.4) ---------------------------
+        // Switching away from the in-flight prefill is a preemption; allow
+        // it only if the in-flight request still makes its deadline after
+        // the newly prioritized work runs.
+        if self.cfg.selective_preemption {
+            if let Some(inflight) = self.inflight {
+                if let Some(pos) = order.iter().position(|&id| id == inflight) {
+                    if pos > 0 {
+                        let wait: f64 = order[..pos]
+                            .iter()
+                            .map(|&id| self.work_s(id, store) * inflation)
+                            .sum();
+                        if !self.feasible(inflight, now, wait, store, inflation, decode_tok_s) {
+                            // Preemption would kill it: keep serving it.
+                            order.remove(pos);
+                            order.insert(0, inflight);
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- fill the chunk budget ---------------------------------------
+        // Segments are admitted under an *incremental time budget* with
+        // exact shape pricing: the head-offset estimate that sized
+        // `budget` under-prices segments sitting deep in long prompts
+        // (their attention reads the whole prefix), which showed up as
+        // few-ms token-deadline overruns on decode-heavy workloads.
+        let decode_budget_s = match slack {
+            Some(s) if self.cfg.dynamic_chunking => s - self.cfg.slack_margin_s,
+            _ => f64::INFINITY,
+        };
+        let mut batch = Batch { prefill: Vec::new(), decodes };
+        let mut shape = batch.shape(store);
+        let mut left = budget;
+        for &id in &order {
+            if left == 0 {
+                break;
+            }
+            let r = store.get(id);
+            let rem = r.prefill_remaining();
+            let max_take = rem.min(left);
+            if max_take == 0 {
+                continue;
+            }
+            let cache_len = r.kv_tokens();
+            // Completing an interactive prefill emits its first token at
+            // iteration end: the iteration must fit its TTFT slack too.
+            let completion_slack = match r.slo {
+                Slo::Interactive { ttft_s, .. } => r.spec.arrival_s + ttft_s - now,
+                Slo::NonInteractive { .. } => f64::INFINITY,
+            };
+            let fits = |shape: &mut BatchShape, take: u32| -> bool {
+                shape.prefill.push(PrefillSegment { cache_len, chunk: take });
+                let lat = self.model.latency(shape);
+                shape.prefill.pop();
+                lat <= decode_budget_s && (take < rem || lat <= completion_slack.max(0.0))
+            };
+            let take = if !self.cfg.dynamic_chunking || fits(&mut shape, max_take) {
+                max_take
+            } else if !fits(&mut shape, 1) {
+                break; // not even one more token fits the time budget
+            } else {
+                // Largest admissible size (latency monotone in tokens).
+                let (mut lo, mut hi) = (1u32, max_take);
+                while hi - lo > 8 {
+                    let mid = lo + (hi - lo) / 2;
+                    if fits(&mut shape, mid) {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                lo
+            };
+            shape.prefill.push(PrefillSegment { cache_len, chunk: take });
+            batch.prefill.push(PrefillWork { id, tokens: take });
+            left -= take;
+        }
+
+        // ---- opportunistic relegated service (§3.1 step 3) ----------------
+        // Leftover chunk budget and decode slots go to relegated requests,
+        // high-importance first.
+        if left > 0 || batch.decodes.len() < self.cfg.max_batch_decodes {
+            let mut relegated: Vec<RequestId> = self.relegated_q.clone();
+            relegated.sort_by(|&a, &b| {
+                let ra = store.get(a);
+                let rb = store.get(b);
+                rb.spec
+                    .importance
+                    .cmp(&ra.spec.importance)
+                    .then(ra.spec.arrival_s.partial_cmp(&rb.spec.arrival_s).unwrap())
+            });
+            for &id in &relegated {
+                let r = store.get(id);
+                if r.prefill_remaining() > 0 {
+                    if left > 0 {
+                        let take = r.prefill_remaining().min(left);
+                        batch.prefill.push(PrefillWork { id, tokens: take });
+                        left -= take;
+                    }
+                } else if batch.decodes.len() < self.cfg.max_batch_decodes {
+                    batch.decodes.push(id);
+                }
+            }
+        }
+
+        // ---- progress fallback -------------------------------------------
+        // If nothing got scheduled but active work exists (e.g. zero chunk
+        // budget and empty decode queue), push the most urgent prefill at
+        // the floor chunk so the system never wedges.
+        if batch.is_empty() {
+            if let Some(&id) = order.first().or(self.relegated_q.first()) {
+                let rem = store.get(id).prefill_remaining();
+                if rem > 0 {
+                    batch.prefill.push(PrefillWork { id, tokens: rem.min(MIN_CHUNK) });
+                }
+            }
+        }
+
+        self.inflight = batch
+            .prefill
+            .iter()
+            .map(|w| w.id)
+            .find(|&id| store.get(id).phase == Phase::Prefill && store.get(id).prefill_remaining() > 0);
+
+        batch
+    }
+
+    fn on_prefill_complete(&mut self, id: RequestId, store: &RequestStore) {
+        if store.get(id).phase == Phase::Decode {
+            self.decode_q.push(id);
+        }
+    }
+
+    fn on_finished(&mut self, id: RequestId, store: &RequestStore) {
+        let r = store.get(id);
+        self.history.record(r.spec.app_id, r.spec.decode_tokens);
+    }
+
+    fn backlog(&self) -> usize {
+        self.prefill_q.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareModel;
+    use crate::qos::Importance;
+    use crate::request::RequestSpec;
+    use crate::simulator::CostModel;
+
+    fn sched(cfg: SchedulerConfig) -> NiyamaScheduler {
+        let model = Arc::new(CostModel::new(HardwareModel::llama3_8b_a100()));
+        NiyamaScheduler::new(cfg, model)
+    }
+
+    fn ctx(now: f64) -> PlanContext {
+        PlanContext { now, kv_capacity: 400_000, kv_used: 0 }
+    }
+
+    fn add(
+        s: &mut NiyamaScheduler,
+        store: &mut RequestStore,
+        arrival: f64,
+        prompt: u32,
+        decode: u32,
+        tier: usize,
+        slo: Slo,
+        importance: Importance,
+    ) -> RequestId {
+        let id = store.insert(
+            RequestSpec {
+                arrival_s: arrival,
+                prompt_tokens: prompt,
+                decode_tokens: decode,
+                tier,
+                app_id: tier as u32,
+                importance,
+            },
+            slo,
+        );
+        s.on_arrival(id, store);
+        id
+    }
+
+    const INT: Slo = Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
+    const Q2: Slo = Slo::NonInteractive { ttlt_s: 600.0 };
+
+    #[test]
+    fn no_decodes_uses_max_chunk() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        add(&mut s, &mut store, 0.0, 4096, 10, 1, Q2, Importance::High);
+        let b = s.plan(ctx(0.0), &mut store);
+        assert_eq!(b.prefill_tokens(), s.cfg.max_chunk_size);
+        assert!(b.decodes.is_empty());
+    }
+
+    #[test]
+    fn decode_slack_caps_chunk() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        // An interactive request mid-decode with a 50 ms TBT whose first
+        // token landed exactly on its TTFT deadline — no accumulated
+        // slack (eq. 2 deadlines are absolute, so an early first token
+        // WOULD create exploitable slack; that's Fig. 6's point).
+        let d = add(&mut s, &mut store, 0.0, 256, 50, 0, INT, Importance::High);
+        {
+            let r = store.get_mut(d);
+            r.prefilled = 256;
+            r.phase = Phase::Decode;
+            r.emit_token(6.0);
+        }
+        s.on_prefill_complete(d, &store);
+        // A long batch prompt wanting big chunks.
+        add(&mut s, &mut store, 0.5, 8000, 10, 1, Q2, Importance::High);
+        // Plan right at the decode token time: slack to token 2 = 50 ms.
+        let b = s.plan(ctx(6.0), &mut store);
+        assert!(b.decodes.contains(&d));
+        let chunk = b.prefill_tokens();
+        assert!(chunk > 0, "some prefill should fit");
+        assert!(
+            chunk < s.cfg.max_chunk_size,
+            "50 ms TBT slack must cap the chunk, got {chunk}"
+        );
+    }
+
+    #[test]
+    fn fixed_chunk_when_dynamic_disabled() {
+        let mut cfg = SchedulerConfig::default();
+        cfg.dynamic_chunking = false;
+        let mut s = sched(cfg);
+        let mut store = RequestStore::new();
+        add(&mut s, &mut store, 0.0, 4096, 10, 1, Q2, Importance::High);
+        let b = s.plan(ctx(0.0), &mut store);
+        assert_eq!(b.prefill_tokens(), 256);
+    }
+
+    #[test]
+    fn hybrid_priority_prefers_earlier_deadline() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        let late = add(&mut s, &mut store, 0.0, 1000, 10, 2, Slo::NonInteractive { ttlt_s: 1800.0 }, Importance::High);
+        let urgent = add(&mut s, &mut store, 0.0, 1000, 10, 0, INT, Importance::High);
+        let b = s.plan(ctx(0.0), &mut store);
+        assert_eq!(b.prefill[0].id, urgent, "interactive deadline first");
+        let _ = late;
+    }
+
+    #[test]
+    fn chunk_budget_spans_multiple_requests() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        let a = add(&mut s, &mut store, 0.0, 100, 10, 1, Q2, Importance::High);
+        let b_req = add(&mut s, &mut store, 0.1, 4000, 10, 1, Q2, Importance::High);
+        let b = s.plan(ctx(0.2), &mut store);
+        // First fills A's 100 tokens, rest goes to B (Fig. 6 behavior).
+        assert_eq!(b.prefill[0], PrefillWork { id: a, tokens: 100 });
+        assert_eq!(b.prefill[1].id, b_req);
+        assert!(b.prefill[1].tokens > 0);
+    }
+
+    #[test]
+    fn infeasible_request_relegated() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        // TTFT 6 s but ~30k tokens of prompt: cannot make it.
+        let id = add(&mut s, &mut store, 0.0, 30_000, 10, 0, INT, Importance::High);
+        // Run at t=5.9: essentially no time left.
+        let _ = s.plan(ctx(5.9), &mut store);
+        assert_eq!(store.get(id).phase, Phase::Relegated);
+        assert!(store.get(id).was_relegated);
+    }
+
+    #[test]
+    fn relegated_still_served_opportunistically() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        let id = add(&mut s, &mut store, 0.0, 30_000, 10, 0, INT, Importance::High);
+        let b = s.plan(ctx(5.9), &mut store);
+        // Nothing else in the system: the relegated request gets budget.
+        assert!(b.prefill.iter().any(|w| w.id == id));
+    }
+
+    #[test]
+    fn relegation_disabled_keeps_request() {
+        let mut cfg = SchedulerConfig::default();
+        cfg.eager_relegation = false;
+        let mut s = sched(cfg);
+        let mut store = RequestStore::new();
+        let id = add(&mut s, &mut store, 0.0, 30_000, 10, 0, INT, Importance::High);
+        let _ = s.plan(ctx(5.9), &mut store);
+        assert_eq!(store.get(id).phase, Phase::Prefill);
+    }
+
+    #[test]
+    fn relegation_cap_respected() {
+        let mut cfg = SchedulerConfig::default();
+        cfg.relegation_cap = 0.0; // nothing may be relegated
+        let mut s = sched(cfg);
+        let mut store = RequestStore::new();
+        let id = add(&mut s, &mut store, 0.0, 30_000, 10, 0, INT, Importance::High);
+        let _ = s.plan(ctx(5.9), &mut store);
+        assert_eq!(store.get(id).phase, Phase::Prefill);
+    }
+
+    #[test]
+    fn low_importance_relegated_to_save_high() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        // Two requests, combined work infeasible for both deadlines; the
+        // low-importance one must be sacrificed even if it sorts first.
+        let low = add(&mut s, &mut store, 0.0, 12_000, 10, 0, INT, Importance::Low);
+        let high = add(&mut s, &mut store, 0.01, 12_000, 10, 0, INT, Importance::High);
+        let _ = s.plan(ctx(4.5), &mut store);
+        assert_eq!(store.get(low).phase, Phase::Relegated, "low sacrificed");
+        assert_eq!(store.get(high).phase, Phase::Prefill, "high preserved");
+    }
+
+    #[test]
+    fn expired_ttlt_decode_is_relegated() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        let id = add(&mut s, &mut store, 0.0, 100, 50, 1, Q2, Importance::High);
+        {
+            let r = store.get_mut(id);
+            r.prefilled = 100;
+            r.phase = Phase::Decode;
+            r.emit_token(500.0);
+        }
+        s.on_prefill_complete(id, &store);
+        let b = s.plan(ctx(700.0), &mut store); // past 600 s TTLT
+        assert_eq!(store.get(id).phase, Phase::Relegated);
+        // ...but still decoded opportunistically (empty system).
+        assert!(b.decodes.contains(&id));
+    }
+
+    #[test]
+    fn memory_guard_limits_budget() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        add(&mut s, &mut store, 0.0, 4096, 10, 1, Q2, Importance::High);
+        let c = PlanContext { now: 0.0, kv_capacity: 1000, kv_used: 900 };
+        let b = s.plan(c, &mut store);
+        assert!(b.prefill_tokens() <= 100, "chunk exceeds KV headroom");
+    }
+
+    #[test]
+    fn preemption_guard_keeps_inflight_when_needed() {
+        let mut cfg = SchedulerConfig::default();
+        cfg.adaptive_alpha = false;
+        let mut s = sched(cfg);
+        let mut store = RequestStore::new();
+        // In-flight: tight deadline, mostly prefilled.
+        let inflight = add(&mut s, &mut store, 0.0, 4000, 10, 0, INT, Importance::High);
+        let _ = s.plan(ctx(0.0), &mut store);
+        assert_eq!(s.inflight, Some(inflight));
+        store.get_mut(inflight).prefilled = 2048;
+        // New arrival with an even earlier absolute deadline (arrived
+        // earlier in SLO terms — force it ahead by giving a past arrival).
+        let newcomer = store.insert(
+            RequestSpec {
+                arrival_s: -3.0,
+                prompt_tokens: 20_000,
+                decode_tokens: 10,
+                tier: 0,
+                app_id: 0,
+                importance: Importance::High,
+            },
+            INT,
+        );
+        s.on_arrival(newcomer, &store);
+        // At t=5.2, inflight has 0.8 s of slack: serving the newcomer's
+        // 20k-token prefill first would kill it -> guard pins inflight first.
+        let b = s.plan(ctx(5.2), &mut store);
+        assert_eq!(b.prefill[0].id, inflight, "in-flight prefill protected");
+    }
+
+    #[test]
+    fn fallback_schedules_something() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        // A request so hopeless it relegates, with zero chunk budget space:
+        // plan must still emit progress work.
+        add(&mut s, &mut store, 0.0, 50_000, 10, 0, INT, Importance::High);
+        let b = s.plan(ctx(100.0), &mut store);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn adaptive_alpha_rises_with_backlog() {
+        let s = sched(SchedulerConfig::default());
+        assert!(s.effective_alpha(0.0) < s.effective_alpha(20.0));
+        assert_eq!(
+            s.effective_alpha(1e9),
+            s.cfg.alpha * ALPHA_MAX_FACTOR,
+            "clamped at max"
+        );
+    }
+
+    #[test]
+    fn finished_requests_feed_history() {
+        let mut s = sched(SchedulerConfig::default());
+        let mut store = RequestStore::new();
+        let id = add(&mut s, &mut store, 0.0, 10, 40, 1, Q2, Importance::High);
+        for _ in 0..10 {
+            s.on_finished(id, &store);
+        }
+        assert!((s.history.estimate(1) - 40.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,338 @@
+//! Serving front-end: a real-time loop around `Engine<PjrtBackend>` with
+//! an in-process client API and a newline-delimited-JSON TCP endpoint.
+//!
+//! The environment ships no async runtime, so this is a classic
+//! thread-per-connection design: one engine thread owns the model and
+//! steps the scheduler; connection threads translate JSON lines into
+//! submissions and stream token events back. Rust owns the event loop —
+//! Python was last seen at `make artifacts`.
+
+use crate::engine::Engine;
+use crate::qos::Importance;
+use crate::request::{Phase, RequestId, RequestSpec};
+use crate::runtime::PjrtBackend;
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// A client-visible request.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Explicit prompt token ids, or a synthetic length.
+    pub prompt: PromptSpec,
+    /// QoS tier index into the configured tiers.
+    pub tier: usize,
+    /// Output budget.
+    pub max_new_tokens: u32,
+    pub importance: Importance,
+}
+
+#[derive(Debug, Clone)]
+pub enum PromptSpec {
+    Tokens(Vec<i32>),
+    Synthetic { len: u32, seed: u64 },
+}
+
+impl PromptSpec {
+    fn len(&self) -> u32 {
+        match self {
+            PromptSpec::Tokens(t) => t.len() as u32,
+            PromptSpec::Synthetic { len, .. } => *len,
+        }
+    }
+}
+
+/// Streamed serving events.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// First token emitted (reports TTFT seconds).
+    FirstToken { ttft_s: f64 },
+    /// Generation finished; full token ids + TTLT.
+    Done { tokens: Vec<i32>, ttlt_s: f64 },
+}
+
+struct Submission {
+    req: ServeRequest,
+    events: Sender<Event>,
+}
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Submission>,
+}
+
+impl Client {
+    /// Submit a request; events arrive on the returned channel.
+    pub fn submit(&self, req: ServeRequest) -> Result<Receiver<Event>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Submission { req, events: tx })
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Submit and block until completion.
+    pub fn complete(&self, req: ServeRequest) -> Result<(Vec<i32>, f64, f64)> {
+        let rx = self.submit(req)?;
+        let mut ttft = f64::NAN;
+        loop {
+            match rx.recv().map_err(|_| anyhow!("stream closed"))? {
+                Event::FirstToken { ttft_s } => ttft = ttft_s,
+                Event::Done { tokens, ttlt_s } => return Ok((tokens, ttft, ttlt_s)),
+            }
+        }
+    }
+}
+
+/// The serving loop. Owns the engine; runs until `stop` flips.
+pub struct Server {
+    pub client: Client,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the engine thread. The engine is constructed *inside* the
+    /// thread (PJRT handles are not `Send`), so callers pass a builder.
+    pub fn start<F>(make_engine: F) -> Server
+    where
+        F: FnOnce() -> Engine<PjrtBackend> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Submission>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+
+        let thread = std::thread::spawn(move || {
+            let mut engine = make_engine();
+            let epoch = Instant::now();
+            let mut waiters: HashMap<RequestId, Sender<Event>> = HashMap::new();
+            let mut first_sent: HashMap<RequestId, bool> = HashMap::new();
+            let mut seed = 0u64;
+
+            loop {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                // Admit pending submissions.
+                loop {
+                    match rx.try_recv() {
+                        Ok(sub) => {
+                            engine.advance_to(epoch.elapsed().as_secs_f64());
+                            seed += 1;
+                            let spec = RequestSpec {
+                                arrival_s: 0.0, // set by submit_now
+                                prompt_tokens: sub.req.prompt.len().max(1),
+                                decode_tokens: sub.req.max_new_tokens.max(1),
+                                tier: sub.req.tier,
+                                app_id: sub.req.tier as u32,
+                                importance: sub.req.importance,
+                            };
+                            let id = engine.submit_now(spec);
+                            match sub.req.prompt {
+                                PromptSpec::Tokens(t) => {
+                                    engine.backend_mut().set_prompt(id, t)
+                                }
+                                PromptSpec::Synthetic { len, seed: s } => {
+                                    engine.backend_mut().synth_prompt(id, len.max(1), s ^ seed)
+                                }
+                            }
+                            waiters.insert(id, sub.events);
+                            first_sent.insert(id, false);
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            stop2.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                }
+
+                engine.advance_to(epoch.elapsed().as_secs_f64());
+                let progressed = engine.step();
+
+                // Emit events for progressed requests.
+                let ids: Vec<RequestId> = waiters.keys().copied().collect();
+                for id in ids {
+                    let r = engine.store.get(id);
+                    if let (Some(ttft), false) =
+                        (r.ttft(), *first_sent.get(&id).unwrap_or(&true))
+                    {
+                        let _ = waiters[&id].send(Event::FirstToken { ttft_s: ttft });
+                        first_sent.insert(id, true);
+                    }
+                    if r.phase == Phase::Finished {
+                        let tokens =
+                            engine.backend_mut().take_generated(id).unwrap_or_default();
+                        let ttlt = engine.store.get(id).ttlt().unwrap_or(f64::NAN);
+                        let _ = waiters[&id].send(Event::Done { tokens, ttlt_s: ttlt });
+                        waiters.remove(&id);
+                        first_sent.remove(&id);
+                    }
+                }
+
+                if !progressed {
+                    // Idle: block briefly for new work.
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        });
+
+        Server { client: Client { tx }, stop, thread: Some(thread) }
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON-lines TCP front-end
+// ---------------------------------------------------------------------------
+
+/// Parse one request line:
+/// `{"prompt_len": 64, "tier": 0, "max_new_tokens": 16, "importance": "high"}`
+/// or `{"tokens": [1,2,3], ...}`.
+pub fn parse_request_line(line: &str) -> Result<ServeRequest> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
+    let prompt = if let Some(toks) = j.get("tokens").and_then(|v| v.as_arr()) {
+        PromptSpec::Tokens(
+            toks.iter()
+                .map(|t| t.as_f64().map(|f| f as i32).ok_or_else(|| anyhow!("bad token")))
+                .collect::<Result<_>>()?,
+        )
+    } else {
+        let len = j
+            .get("prompt_len")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("need 'tokens' or 'prompt_len'"))? as u32;
+        let seed = j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        PromptSpec::Synthetic { len, seed }
+    };
+    let tier = j.get("tier").and_then(|v| v.as_usize()).unwrap_or(0);
+    let max_new_tokens =
+        j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(16) as u32;
+    let importance = match j.get("importance").and_then(|v| v.as_str()) {
+        Some("low") => Importance::Low,
+        _ => Importance::High,
+    };
+    Ok(ServeRequest { prompt, tier, max_new_tokens, importance })
+}
+
+fn event_json(ev: &Event) -> String {
+    match ev {
+        Event::FirstToken { ttft_s } => Json::obj(vec![
+            ("event", Json::str("first_token")),
+            ("ttft_s", Json::num(*ttft_s)),
+        ])
+        .dump(),
+        Event::Done { tokens, ttlt_s } => Json::obj(vec![
+            ("event", Json::str("done")),
+            ("ttlt_s", Json::num(*ttlt_s)),
+            ("tokens", Json::arr(tokens.iter().map(|&t| Json::num(t as f64)))),
+        ])
+        .dump(),
+    }
+}
+
+fn handle_conn(stream: TcpStream, client: Client) {
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match parse_request_line(&line).and_then(|req| client.submit(req)) {
+            Ok(rx) => {
+                let mut out = String::new();
+                for ev in rx {
+                    out.push_str(&event_json(&ev));
+                    out.push('\n');
+                    if matches!(ev, Event::Done { .. }) {
+                        break;
+                    }
+                }
+                out
+            }
+            Err(e) => format!("{}\n", Json::obj(vec![("error", Json::str(&e.to_string()))]).dump()),
+        };
+        if writer.write_all(resp.as_bytes()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Serve the JSON-lines protocol on `addr` until the process exits.
+/// Each connection may send multiple request lines; responses stream back
+/// in order per connection.
+pub fn listen(addr: &str, client: Client) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("niyama: listening on {addr}");
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let c = client.clone();
+        std::thread::spawn(move || handle_conn(stream, c));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_synthetic_request() {
+        let r = parse_request_line(
+            r#"{"prompt_len": 64, "tier": 1, "max_new_tokens": 8, "importance": "low"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.prompt.len(), 64);
+        assert_eq!(r.tier, 1);
+        assert_eq!(r.max_new_tokens, 8);
+        assert_eq!(r.importance, Importance::Low);
+    }
+
+    #[test]
+    fn parses_token_request() {
+        let r = parse_request_line(r#"{"tokens": [5, 6, 7]}"#).unwrap();
+        match r.prompt {
+            PromptSpec::Tokens(t) => assert_eq!(t, vec![5, 6, 7]),
+            _ => panic!("expected tokens"),
+        }
+        assert_eq!(r.tier, 0);
+        assert_eq!(r.importance, Importance::High);
+    }
+
+    #[test]
+    fn rejects_missing_prompt() {
+        assert!(parse_request_line(r#"{"tier": 0}"#).is_err());
+        assert!(parse_request_line("not json").is_err());
+    }
+
+    #[test]
+    fn event_json_round_trips() {
+        let done = Event::Done { tokens: vec![1, 2], ttlt_s: 0.5 };
+        let j = Json::parse(&event_json(&done)).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,213 @@
+//! Multi-replica cluster simulation: shared co-scheduled deployments vs
+//! the paper's siloed baseline, plus the capacity-search machinery behind
+//! Figs. 1 and 7a.
+//!
+//! Replicas are independent engines; the router assigns each request at
+//! arrival (round-robin per class, the standard stateless front-end).
+//! Because replicas don't interact, each engine simulates its own
+//! timeline after assignment.
+
+use crate::config::{Config, Policy, SchedulerConfig};
+use crate::engine::Engine;
+use crate::metrics::{summarize_many, Summary};
+use crate::request::RequestSpec;
+use crate::workload::datasets::Dataset;
+
+/// Run a shared cluster of `replicas` identical engines over a trace.
+/// Returns the merged summary evaluated at the slowest replica's finish.
+pub fn run_shared(cfg: &Config, replicas: usize, trace: &[RequestSpec], horizon_s: f64, long_threshold: u32) -> Summary {
+    assert!(replicas > 0);
+    let mut engines: Vec<Engine<_>> = (0..replicas).map(|_| Engine::sim(cfg)).collect();
+    let mut shards: Vec<Vec<RequestSpec>> = vec![Vec::new(); replicas];
+    for (i, spec) in trace.iter().enumerate() {
+        shards[i % replicas].push(spec.clone());
+    }
+    let mut t_end: f64 = 0.0;
+    for (eng, shard) in engines.iter_mut().zip(shards) {
+        eng.submit_trace(shard);
+        eng.run(horizon_s);
+        t_end = t_end.max(eng.now());
+    }
+    let stores: Vec<_> = engines.iter().map(|e| &e.store).collect();
+    summarize_many(&stores, t_end.max(horizon_s.min(t_end + 1.0)), long_threshold, cfg.tiers.len())
+}
+
+/// Siloed deployment (paper "Sarathi-Silo"): each QoS tier gets its own
+/// replica group with a tier-appropriate Sarathi config — chunk 256 for
+/// the strict interactive tier, 2048 for the throughput tiers (§4
+/// Baselines).
+pub struct SiloGroup {
+    pub tier: usize,
+    pub replicas: usize,
+    pub chunk_size: u32,
+}
+
+/// Default silo chunk size per tier SLO (paper §4: 256 strict, 2K batch).
+pub fn silo_chunk_for_tier(cfg: &Config, tier: usize) -> u32 {
+    match cfg.tiers[tier].slo {
+        crate::qos::Slo::Interactive { .. } => 256,
+        crate::qos::Slo::NonInteractive { .. } => 2048,
+    }
+}
+
+/// Run a siloed deployment: the trace is partitioned by tier, each group
+/// served by its own Sarathi-FCFS cluster.
+pub fn run_silo(cfg: &Config, groups: &[SiloGroup], trace: &[RequestSpec], horizon_s: f64, long_threshold: u32) -> Summary {
+    let mut engines: Vec<Engine<_>> = Vec::new();
+    let mut t_end: f64 = 0.0;
+    for g in groups {
+        let mut tier_cfg = cfg.clone();
+        tier_cfg.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, g.chunk_size);
+        tier_cfg.scheduler.policy = Policy::SarathiFcfs;
+        let tier_trace: Vec<RequestSpec> =
+            trace.iter().filter(|r| r.tier == g.tier).cloned().collect();
+        let mut shards: Vec<Vec<RequestSpec>> = vec![Vec::new(); g.replicas];
+        for (i, spec) in tier_trace.into_iter().enumerate() {
+            shards[i % g.replicas].push(spec);
+        }
+        for shard in shards {
+            let mut eng = Engine::sim(&tier_cfg);
+            eng.submit_trace(shard);
+            eng.run(horizon_s);
+            t_end = t_end.max(eng.now());
+            engines.push(eng);
+        }
+    }
+    let stores: Vec<_> = engines.iter().map(|e| &e.store).collect();
+    summarize_many(&stores, t_end, long_threshold, cfg.tiers.len())
+}
+
+/// Maximum sustainable QPS on a single replica: the largest rate at which
+/// SLO violations stay <= `max_violation_pct` (the paper's capacity
+/// definition, §4.1.1). Bisection over a trace generator.
+pub fn max_qps<F>(mut run_at: F, lo: f64, hi: f64, max_violation_pct: f64, iters: usize) -> f64
+where
+    F: FnMut(f64) -> f64, // qps -> violation percentage
+{
+    let mut lo = lo;
+    let mut hi = hi;
+    // Make sure hi actually violates; if not, return hi.
+    if run_at(hi) <= max_violation_pct {
+        return hi;
+    }
+    if run_at(lo) > max_violation_pct {
+        return lo;
+    }
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        if run_at(mid) <= max_violation_pct {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// GPUs needed to serve `total_qps` given a per-replica capacity, counting
+/// tensor-parallel width.
+pub fn gpus_needed(total_qps: f64, per_replica_qps: f64, tp_degree: u32) -> u32 {
+    if per_replica_qps <= 0.0 {
+        return u32::MAX;
+    }
+    ((total_qps / per_replica_qps).ceil() as u32).max(1) * tp_degree
+}
+
+/// Convenience: violation % for a policy at a given QPS on one replica.
+pub fn violation_pct_at(cfg: &Config, dataset: &Dataset, qps: f64, duration_s: f64, seed: u64) -> f64 {
+    use crate::util::Rng;
+    use crate::workload::WorkloadSpec;
+    let spec = WorkloadSpec::uniform(dataset.clone(), qps, duration_s);
+    let trace = spec.generate(&mut Rng::new(seed));
+    let mut eng = Engine::sim(cfg);
+    eng.submit_trace(trace);
+    // Drain budget: longest TTLT tier after the last arrival.
+    eng.run(duration_s + 2400.0);
+    eng.summary(dataset.long_prompt_threshold()).violation_pct
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::Importance;
+    use crate::util::Rng;
+    use crate::workload::WorkloadSpec;
+
+    fn trace(qps: f64, duration: f64, seed: u64) -> Vec<RequestSpec> {
+        let spec = WorkloadSpec::uniform(Dataset::azure_code(), qps, duration);
+        spec.generate(&mut Rng::new(seed))
+    }
+
+    #[test]
+    fn shared_cluster_splits_load() {
+        let cfg = Config::default();
+        let t = trace(4.0, 120.0, 1);
+        let s1 = run_shared(&cfg, 1, &t, 4000.0, 6251);
+        let s2 = run_shared(&cfg, 2, &t, 4000.0, 6251);
+        assert_eq!(s1.total, s2.total);
+        // Two replicas can only help.
+        assert!(s2.violation_pct <= s1.violation_pct + 1e-9);
+    }
+
+    #[test]
+    fn silo_partitions_by_tier() {
+        let cfg = Config::default();
+        let t = trace(2.0, 100.0, 2);
+        let groups = vec![
+            SiloGroup { tier: 0, replicas: 1, chunk_size: 256 },
+            SiloGroup { tier: 1, replicas: 1, chunk_size: 2048 },
+            SiloGroup { tier: 2, replicas: 1, chunk_size: 2048 },
+        ];
+        let s = run_silo(&cfg, &groups, &t, 4000.0, 6251);
+        assert_eq!(s.total, t.len());
+    }
+
+    #[test]
+    fn silo_chunk_selection() {
+        let cfg = Config::default();
+        assert_eq!(silo_chunk_for_tier(&cfg, 0), 256);
+        assert_eq!(silo_chunk_for_tier(&cfg, 1), 2048);
+    }
+
+    #[test]
+    fn bisection_finds_threshold() {
+        // Synthetic response: violations = 0 below qps 5, 100 above.
+        let f = |qps: f64| if qps <= 5.0 { 0.0 } else { 100.0 };
+        let q = max_qps(f, 0.5, 20.0, 1.0, 20);
+        assert!((q - 5.0).abs() < 0.01, "q {q}");
+    }
+
+    #[test]
+    fn bisection_saturates_at_hi() {
+        let q = max_qps(|_| 0.0, 0.5, 8.0, 1.0, 10);
+        assert_eq!(q, 8.0);
+    }
+
+    #[test]
+    fn gpus_needed_rounds_up() {
+        assert_eq!(gpus_needed(50.0, 7.0, 1), 8);
+        assert_eq!(gpus_needed(50.0, 7.0, 2), 16);
+        assert_eq!(gpus_needed(1.0, 10.0, 1), 1);
+        assert_eq!(gpus_needed(10.0, 0.0, 1), u32::MAX);
+    }
+
+    #[test]
+    fn low_load_has_low_violations() {
+        let cfg = Config::default();
+        let ds = Dataset::azure_code();
+        let v = violation_pct_at(&cfg, &ds, 0.5, 120.0, 3);
+        assert!(v < 5.0, "violations at trivial load: {v}%");
+    }
+
+    #[test]
+    fn importance_survives_sharding() {
+        let cfg = Config::default();
+        let mut spec = WorkloadSpec::uniform(Dataset::azure_code(), 3.0, 60.0);
+        spec.low_importance_frac = 0.5;
+        let t = spec.generate(&mut Rng::new(4));
+        let low = t.iter().filter(|r| r.importance == Importance::Low).count();
+        assert!(low > 0);
+        let s = run_shared(&cfg, 2, &t, 4000.0, 6251);
+        assert_eq!(s.total, t.len());
+    }
+}

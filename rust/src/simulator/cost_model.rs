@@ -1,0 +1,274 @@
+//! Analytic iteration-latency cost model (the Vidur-like substrate).
+//!
+//! The paper's evaluation runs on A100 GPUs; we don't have those, so the
+//! execution substrate is a roofline-style analytic model calibrated to
+//! published chunked-prefill numbers for Llama3-8B-class models on A100
+//! (Sarathi-Serve, vLLM):
+//!
+//!   t_iter = max(t_compute, t_memory) + overhead (+ TP collective)
+//!
+//!   t_compute = (2 P T + attention FLOPs) / (peak * mfu(T))
+//!       with mfu(T) = T / (T + mfu_half) — matmul efficiency grows with
+//!       batched tokens T and saturates; mfu_half is calibrated so a 256
+//!       chunk runs ~28% below a 2048 chunk (paper Fig. 4).
+//!   t_memory  = (weights + KV bytes read) / HBM bandwidth — the decode
+//!       floor: every iteration streams all weights.
+//!
+//! What matters for reproducing the paper is the *shape* of this surface:
+//! throughput rising with chunk size while TBT grows (Fig. 4), the
+//! quadratic prompt-length term (long prompts are super-linearly
+//! expensive), and a decode cost dominated by weight+KV streaming. All
+//! scheduling results are driven by those shapes, not by absolute
+//! constants.
+
+use crate::config::HardwareModel;
+
+/// One prefill segment inside a batch: `cache_len` tokens already in the
+/// KV cache, `chunk` new tokens processed this iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillSegment {
+    pub cache_len: u32,
+    pub chunk: u32,
+}
+
+/// Work content of one engine iteration.
+#[derive(Debug, Clone, Default)]
+pub struct BatchShape {
+    pub prefill: Vec<PrefillSegment>,
+    /// KV length of each decode request in the batch (including the token
+    /// being generated).
+    pub decode_kv_lens: Vec<u32>,
+}
+
+impl BatchShape {
+    pub fn total_prefill_tokens(&self) -> u32 {
+        self.prefill.iter().map(|s| s.chunk).sum()
+    }
+
+    pub fn total_tokens(&self) -> u32 {
+        self.total_prefill_tokens() + self.decode_kv_lens.len() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode_kv_lens.is_empty()
+    }
+}
+
+/// Analytic cost model over a hardware description.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    hw: HardwareModel,
+}
+
+impl CostModel {
+    pub fn new(hw: HardwareModel) -> Self {
+        CostModel { hw }
+    }
+
+    pub fn hardware(&self) -> &HardwareModel {
+        &self.hw
+    }
+
+    /// Matmul efficiency as a function of tokens in the batch.
+    fn mfu(&self, tokens: f64) -> f64 {
+        tokens / (tokens + self.hw.mfu_half)
+    }
+
+    /// Iteration latency in seconds for a batch shape.
+    pub fn iteration_latency(&self, batch: &BatchShape) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let hw = &self.hw;
+        let t_tokens = batch.total_tokens() as f64;
+
+        // --- compute term -------------------------------------------------
+        // Dense matmuls: 2 FLOPs per param per token.
+        let mut flops = 2.0 * hw.n_params * t_tokens;
+        // Attention score/value FLOPs: 4 * d_model * kv_len per token per
+        // layer (the quadratic prompt term lives here).
+        let attn_coeff = 4.0 * hw.d_model * hw.n_layers;
+        for seg in &batch.prefill {
+            let c = seg.chunk as f64;
+            let s0 = seg.cache_len as f64;
+            // sum over chunk queries of kv_len: c*s0 + c(c+1)/2
+            let kv_reads = c * s0 + 0.5 * c * (c + 1.0);
+            flops += attn_coeff * kv_reads;
+        }
+        for &kv in &batch.decode_kv_lens {
+            flops += attn_coeff * kv as f64;
+        }
+        let t_compute = flops / (hw.peak_flops * self.mfu(t_tokens));
+
+        // --- memory term --------------------------------------------------
+        // Every iteration streams the weights once; attention streams the
+        // KV cache of every participating sequence.
+        let mut bytes = hw.weight_bytes;
+        for seg in &batch.prefill {
+            // Flash-style: each KV tile is re-read once per 128-row query
+            // tile of the chunk.
+            let q_tiles = ((seg.chunk as f64) / 128.0).ceil().max(1.0);
+            bytes += (seg.cache_len + seg.chunk) as f64 * hw.kv_bytes_per_token * q_tiles;
+        }
+        for &kv in &batch.decode_kv_lens {
+            bytes += kv as f64 * hw.kv_bytes_per_token;
+        }
+        let t_memory = bytes / hw.hbm_bw;
+
+        let mut t = t_compute.max(t_memory) + hw.iteration_overhead_s;
+        if hw.tp_degree > 1 {
+            t += hw.tp_overhead_s;
+        }
+        t
+    }
+
+    /// Latency of a "pure" batch: one prefill chunk at a given cache
+    /// offset plus `n_decodes` decodes of average KV length `avg_kv`.
+    /// Convenience for the chunk solver and calibration sweeps.
+    pub fn chunk_latency(&self, chunk: u32, cache_len: u32, n_decodes: usize, avg_kv: u32) -> f64 {
+        let mut b = BatchShape::default();
+        if chunk > 0 {
+            b.prefill.push(PrefillSegment { cache_len, chunk });
+        }
+        b.decode_kv_lens = vec![avg_kv; n_decodes];
+        self.iteration_latency(&b)
+    }
+
+    /// Prefill throughput (tokens/s) at a steady chunk size — the Fig. 4
+    /// tradeoff curve's x→throughput mapping.
+    pub fn prefill_throughput(&self, chunk: u32) -> f64 {
+        let t = self.chunk_latency(chunk, 0, 0, 0);
+        chunk as f64 / t
+    }
+
+    /// Time to decode one token for a batch of `n` sequences of average
+    /// KV length `avg_kv` (per-iteration latency: this *is* the TBT).
+    pub fn decode_latency(&self, n: usize, avg_kv: u32) -> f64 {
+        self.chunk_latency(0, 0, n, avg_kv)
+    }
+
+    /// Estimated seconds to prefill `tokens` of prompt processed at the
+    /// reference chunk size (used by hybrid priority's Prefill_rem term).
+    pub fn prefill_time_estimate(&self, tokens: u32, ref_chunk: u32) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let iters = (tokens as f64 / ref_chunk as f64).ceil();
+        iters * self.chunk_latency(ref_chunk.min(tokens), 0, 0, 0)
+    }
+
+    /// Estimated seconds to emit `tokens` decode tokens (Decode_rem term).
+    pub fn decode_time_estimate(&self, tokens: u32, batch_hint: usize, avg_kv: u32) -> f64 {
+        tokens as f64 * self.decode_latency(batch_hint.max(1), avg_kv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel::new(HardwareModel::llama3_8b_a100())
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        assert_eq!(model().iteration_latency(&BatchShape::default()), 0.0);
+    }
+
+    #[test]
+    fn decode_floor_is_weight_streaming() {
+        // A single decode is memory-bound: >= weights / bandwidth.
+        let m = model();
+        let t = m.decode_latency(1, 128);
+        assert!(t >= 16.0e9 / 2.0e12, "t={t}");
+        assert!(t < 0.015, "t={t}"); // but not absurdly slow
+    }
+
+    #[test]
+    fn chunk_256_meets_50ms_tbt_with_decodes() {
+        // The paper's strict tier uses chunk 256 to hold a 50 ms TBT: a
+        // mixed batch with a realistic decode load must come in under it.
+        let m = model();
+        let t = m.chunk_latency(256, 1024, 32, 1024);
+        assert!(t < 0.050, "mixed 256-chunk iteration took {t}s");
+    }
+
+    #[test]
+    fn chunk_2048_violates_50ms_tbt() {
+        let m = model();
+        let t = m.chunk_latency(2048, 0, 32, 1024);
+        assert!(t > 0.050, "2048-chunk iteration took only {t}s");
+    }
+
+    #[test]
+    fn fig4_throughput_rises_with_chunk() {
+        let m = model();
+        let t256 = m.prefill_throughput(256);
+        let t512 = m.prefill_throughput(512);
+        let t2048 = m.prefill_throughput(2048);
+        assert!(t256 < t512 && t512 < t2048);
+        // Paper Fig. 4: small-chunk serving costs ~28% throughput vs the
+        // large-chunk configuration. Accept 20-40%.
+        let gap = 1.0 - t256 / t2048;
+        assert!((0.20..=0.40).contains(&gap), "gap {gap}");
+    }
+
+    #[test]
+    fn latency_monotone_in_chunk() {
+        let m = model();
+        let mut prev = 0.0;
+        for chunk in [64, 128, 256, 512, 1024, 2048] {
+            let t = m.chunk_latency(chunk, 0, 8, 512);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn quadratic_prompt_term() {
+        // Processing a chunk late in a long prompt costs more than early:
+        // attention reads the whole prefix.
+        let m = model();
+        let early = m.chunk_latency(512, 0, 0, 0);
+        let late = m.chunk_latency(512, 7680, 0, 0);
+        assert!(late > early * 1.2, "early {early}, late {late}");
+    }
+
+    #[test]
+    fn decode_latency_grows_with_batch_and_kv() {
+        let m = model();
+        assert!(m.decode_latency(64, 1024) > m.decode_latency(8, 1024));
+        assert!(m.decode_latency(8, 4096) > m.decode_latency(8, 256));
+    }
+
+    #[test]
+    fn prefill_estimate_scales_with_tokens() {
+        let m = model();
+        let t1 = m.prefill_time_estimate(512, 256);
+        let t2 = m.prefill_time_estimate(2048, 256);
+        assert!(t2 > 3.0 * t1, "t1 {t1}, t2 {t2}");
+        assert_eq!(m.prefill_time_estimate(0, 256), 0.0);
+    }
+
+    #[test]
+    fn tp2_adds_collective_overhead() {
+        let tp2 = CostModel::new(HardwareModel::qwen_7b_a100_tp2());
+        // Same nominal batch should run at comparable or better latency
+        // thanks to 2x flops/bw, but carry the collective overhead term.
+        let t = tp2.chunk_latency(256, 0, 8, 512);
+        assert!(t > 0.0);
+        let floor = 14.0e9 / 4.0e12 + 1.5e-3 + 0.7e-3;
+        assert!(t >= floor, "t {t} < floor {floor}");
+    }
+
+    #[test]
+    fn batch_shape_token_accounting() {
+        let mut b = BatchShape::default();
+        b.prefill.push(PrefillSegment { cache_len: 0, chunk: 200 });
+        b.prefill.push(PrefillSegment { cache_len: 100, chunk: 56 });
+        b.decode_kv_lens = vec![512; 10];
+        assert_eq!(b.total_prefill_tokens(), 256);
+        assert_eq!(b.total_tokens(), 266);
+    }
+}

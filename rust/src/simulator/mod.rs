@@ -1,0 +1,11 @@
+//! Discrete-event execution substrate (the Vidur-like simulator).
+//!
+//! [`cost_model`] prices one engine iteration on modelled hardware;
+//! [`SimBackend`] exposes that as an [`crate::engine::ExecutionBackend`]
+//! so the identical scheduler/engine code drives both simulation and the
+//! real PJRT runtime.
+
+pub mod cluster;
+pub mod cost_model;
+
+pub use cost_model::{BatchShape, CostModel, PrefillSegment};

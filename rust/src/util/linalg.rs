@@ -1,0 +1,148 @@
+//! Tiny dense linear algebra: just enough for ridge regression.
+//!
+//! The latency predictor (paper §3.6: "lightweight random forest") is
+//! implemented here as ridge regression over hand-chosen features — the
+//! cost surface of an LLM iteration is smooth and near-linear in
+//! (chunk tokens, decode count, KV tokens read), so a linear model fits
+//! it well while keeping prediction allocation-free on the hot path.
+
+/// Solve `A x = b` for square `A` (row-major) via Gaussian elimination
+/// with partial pivoting. Returns None if singular.
+pub fn solve(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    assert!(a.len() == n && a.iter().all(|r| r.len() == n));
+    // Augmented matrix.
+    let mut m: Vec<Vec<f64>> = a
+        .iter()
+        .zip(b)
+        .map(|(row, &bi)| {
+            let mut r = row.clone();
+            r.push(bi);
+            r
+        })
+        .collect();
+
+    for col in 0..n {
+        // Partial pivot.
+        let pivot = (col..n).max_by(|&i, &j| {
+            m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap()
+        })?;
+        if m[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        m.swap(col, pivot);
+        for row in col + 1..n {
+            let f = m[row][col] / m[col][col];
+            for k in col..=n {
+                m[row][k] -= f * m[col][k];
+            }
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = m[row][n];
+        for k in row + 1..n {
+            acc -= m[row][k] * x[k];
+        }
+        x[row] = acc / m[row][row];
+    }
+    Some(x)
+}
+
+/// Ridge regression: minimize ||X w - y||^2 + lambda ||w||^2.
+/// `xs` is a list of feature rows. Returns the weight vector.
+pub fn ridge_fit(xs: &[Vec<f64>], y: &[f64], lambda: f64) -> Option<Vec<f64>> {
+    let n = xs.len();
+    if n == 0 || n != y.len() {
+        return None;
+    }
+    let d = xs[0].len();
+    // Normal equations: (X^T X + lambda I) w = X^T y.
+    let mut xtx = vec![vec![0.0; d]; d];
+    let mut xty = vec![0.0; d];
+    for (row, &yi) in xs.iter().zip(y) {
+        debug_assert_eq!(row.len(), d);
+        for i in 0..d {
+            xty[i] += row[i] * yi;
+            for j in 0..d {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for (i, row) in xtx.iter_mut().enumerate() {
+        row[i] += lambda;
+    }
+    solve(&xtx, &xty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve(&a, &[3.0, 4.0]).unwrap();
+        assert_eq!(x, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // Zero on the diagonal forces a row swap.
+        let a = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let x = solve(&a, &[5.0, 7.0]).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-12 && (x[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        assert!(solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn solve_3x3() {
+        let a = vec![
+            vec![2.0, 1.0, -1.0],
+            vec![-3.0, -1.0, 2.0],
+            vec![-2.0, 1.0, 2.0],
+        ];
+        let x = solve(&a, &[8.0, -11.0, -3.0]).unwrap();
+        for (got, want) in x.iter().zip([2.0, 3.0, -1.0]) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn ridge_recovers_linear_model() {
+        // y = 3 + 2 a - 0.5 b, noiseless.
+        let mut xs = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..10 {
+            for b in 0..10 {
+                xs.push(vec![1.0, a as f64, b as f64]);
+                y.push(3.0 + 2.0 * a as f64 - 0.5 * b as f64);
+            }
+        }
+        let w = ridge_fit(&xs, &y, 1e-9).unwrap();
+        assert!((w[0] - 3.0).abs() < 1e-5);
+        assert!((w[1] - 2.0).abs() < 1e-6);
+        assert!((w[2] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ridge_shrinks_with_lambda() {
+        let xs = vec![vec![1.0], vec![1.0], vec![1.0]];
+        let y = vec![2.0, 2.0, 2.0];
+        let w0 = ridge_fit(&xs, &y, 0.0).unwrap()[0];
+        let w1 = ridge_fit(&xs, &y, 10.0).unwrap()[0];
+        assert!((w0 - 2.0).abs() < 1e-9);
+        assert!(w1 < w0);
+    }
+
+    #[test]
+    fn ridge_empty_returns_none() {
+        assert!(ridge_fit(&[], &[], 1.0).is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained substrates: PRNG, JSON, statistics, linear algebra.
+//!
+//! The build environment is fully offline, so everything that would
+//! normally come from `rand`, `serde_json`, or a stats crate is
+//! implemented here with tests.
+
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::{OnlineStats, Quantiles, RollingQuantile};

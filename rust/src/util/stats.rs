@@ -1,0 +1,241 @@
+//! Statistics helpers: quantiles, online summaries, rolling windows.
+
+/// Quantile over a sample set. Stores values; workloads here are
+/// bounded (≤ a few hundred thousand requests), so exact quantiles are
+/// affordable and avoid digest approximation error in SLO accounting.
+#[derive(Debug, Clone, Default)]
+pub struct Quantiles {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Quantiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Quantile q in [0, 1] with linear interpolation. None when empty.
+    pub fn quantile(&mut self, q: f64) -> Option<f64> {
+        if self.values.is_empty() {
+            return None;
+        }
+        self.ensure_sorted();
+        let q = q.clamp(0.0, 1.0);
+        let pos = q * (self.values.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        Some(self.values[lo] * (1.0 - frac) + self.values[hi] * frac)
+    }
+
+    pub fn median(&mut self) -> Option<f64> {
+        self.quantile(0.5)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.values.is_empty() {
+            None
+        } else {
+            Some(self.values.iter().sum::<f64>() / self.values.len() as f64)
+        }
+    }
+
+    pub fn max(&mut self) -> Option<f64> {
+        self.ensure_sorted();
+        self.values.last().copied()
+    }
+}
+
+/// Welford online mean/variance — used by the per-application decode
+/// length history (paper §3.4: estimate decode length as mean + 2σ).
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// The paper's over-approximation of decode length: mean + 2σ.
+    pub fn upper_estimate(&self) -> f64 {
+        self.mean() + 2.0 * self.std()
+    }
+}
+
+/// Rolling-window quantile tracker: (time, value) samples bucketed into
+/// fixed windows — used for Fig. 11's rolling p99 latency series.
+#[derive(Debug, Clone)]
+pub struct RollingQuantile {
+    window_s: f64,
+    samples: Vec<(f64, f64)>,
+}
+
+impl RollingQuantile {
+    pub fn new(window_s: f64) -> Self {
+        RollingQuantile { window_s, samples: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.samples.push((t, v));
+    }
+
+    /// Emit one (window_end_time, quantile) point per window.
+    pub fn series(&self, q: f64) -> Vec<(f64, f64)> {
+        if self.samples.is_empty() {
+            return Vec::new();
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let t_end = sorted.last().unwrap().0;
+        let mut out = Vec::new();
+        let mut w = 0usize;
+        let mut start = 0usize;
+        loop {
+            let win_end = (w as f64 + 1.0) * self.window_s;
+            let mut vals = Quantiles::new();
+            let mut i = start;
+            while i < sorted.len() && sorted[i].0 < win_end {
+                vals.push(sorted[i].1);
+                i += 1;
+            }
+            if let Some(v) = vals.quantile(q) {
+                out.push((win_end, v));
+            }
+            start = i;
+            w += 1;
+            if win_end > t_end {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_basic() {
+        let mut q = Quantiles::new();
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            q.push(v);
+        }
+        assert_eq!(q.quantile(0.0), Some(1.0));
+        assert_eq!(q.quantile(1.0), Some(5.0));
+        assert_eq!(q.median(), Some(3.0));
+        assert_eq!(q.quantile(0.25), Some(2.0));
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let mut q = Quantiles::new();
+        q.push(0.0);
+        q.push(10.0);
+        assert_eq!(q.median(), Some(5.0));
+        assert_eq!(q.quantile(0.9), Some(9.0));
+    }
+
+    #[test]
+    fn quantiles_empty() {
+        let mut q = Quantiles::new();
+        assert_eq!(q.median(), None);
+        assert_eq!(q.mean(), None);
+    }
+
+    #[test]
+    fn quantile_after_push_resorts() {
+        let mut q = Quantiles::new();
+        q.push(1.0);
+        assert_eq!(q.median(), Some(1.0));
+        q.push(100.0);
+        q.push(2.0);
+        assert_eq!(q.median(), Some(2.0));
+    }
+
+    #[test]
+    fn online_stats_match_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = OnlineStats::new();
+        for x in xs {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // Sample variance of this classic set is 4.571428...
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn upper_estimate_dominates_mean() {
+        let mut s = OnlineStats::new();
+        for x in [10.0, 20.0, 30.0] {
+            s.push(x);
+        }
+        assert!(s.upper_estimate() >= s.mean());
+    }
+
+    #[test]
+    fn rolling_series_windows() {
+        let mut r = RollingQuantile::new(10.0);
+        for i in 0..30 {
+            r.push(i as f64, i as f64);
+        }
+        let series = r.series(1.0); // max per window
+        assert_eq!(series.len(), 3);
+        assert_eq!(series[0], (10.0, 9.0));
+        assert_eq!(series[1], (20.0, 19.0));
+        assert_eq!(series[2], (30.0, 29.0));
+    }
+}

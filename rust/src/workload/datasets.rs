@@ -1,0 +1,202 @@
+//! Dataset token-length models fit to the paper's Table 1.
+//!
+//! | Dataset    | prompt p50 | prompt p90 | decode p50 | decode p90 |
+//! |------------|-----------:|-----------:|-----------:|-----------:|
+//! | ShareGPT   |       1730 |       5696 |        415 |        834 |
+//! | Azure Conv |        928 |       3830 |         41 |        342 |
+//! | Azure Code |       1930 |       6251 |          8 |         43 |
+//!
+//! Prompt and decode lengths are modelled as independent lognormals with
+//! parameters derived from (p50, p90) — `util::rng::lognormal_from_quantiles`.
+//! Lognormals are the standard fit for LLM trace length distributions and
+//! match the heavy right tail the paper's fairness analysis (long vs short
+//! requests, §4.2) depends on.
+
+use crate::util::rng::{lognormal_from_quantiles, Rng};
+
+/// Table 1 row: quantile statistics of a dataset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenStats {
+    pub p50: f64,
+    pub p90: f64,
+}
+
+/// A synthetic dataset calibrated to published statistics.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: &'static str,
+    pub prompt: TokenStats,
+    pub decode: TokenStats,
+    prompt_mu: f64,
+    prompt_sigma: f64,
+    decode_mu: f64,
+    decode_sigma: f64,
+}
+
+impl Dataset {
+    pub fn new(name: &'static str, prompt: TokenStats, decode: TokenStats) -> Self {
+        let (pm, ps) = lognormal_from_quantiles(prompt.p50, prompt.p90);
+        let (dm, ds) = lognormal_from_quantiles(decode.p50, decode.p90);
+        Dataset {
+            name,
+            prompt,
+            decode,
+            prompt_mu: pm,
+            prompt_sigma: ps,
+            decode_mu: dm,
+            decode_sigma: ds,
+        }
+    }
+
+    /// ShareGPT [Table 1].
+    pub fn sharegpt() -> Self {
+        Self::new(
+            "sharegpt",
+            TokenStats { p50: 1730.0, p90: 5696.0 },
+            TokenStats { p50: 415.0, p90: 834.0 },
+        )
+    }
+
+    /// Azure conversation trace [Table 1].
+    pub fn azure_conv() -> Self {
+        Self::new(
+            "azure-conv",
+            TokenStats { p50: 928.0, p90: 3830.0 },
+            TokenStats { p50: 41.0, p90: 342.0 },
+        )
+    }
+
+    /// Azure code-completion trace [Table 1].
+    pub fn azure_code() -> Self {
+        Self::new(
+            "azure-code",
+            TokenStats { p50: 1930.0, p90: 6251.0 },
+            TokenStats { p50: 8.0, p90: 43.0 },
+        )
+    }
+
+    pub fn by_name(name: &str) -> Option<Dataset> {
+        match name {
+            "sharegpt" => Some(Self::sharegpt()),
+            "azure-conv" => Some(Self::azure_conv()),
+            "azure-code" => Some(Self::azure_code()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<Dataset> {
+        vec![Self::sharegpt(), Self::azure_conv(), Self::azure_code()]
+    }
+
+    /// Sample one (prompt_tokens, decode_tokens) pair. Lengths are
+    /// clamped to >= 1 (every request has a prompt and emits at least one
+    /// token).
+    pub fn sample(&self, rng: &mut Rng) -> (u32, u32) {
+        let p = rng.lognormal(self.prompt_mu, self.prompt_sigma).round().max(1.0);
+        let d = rng.lognormal(self.decode_mu, self.decode_sigma).round().max(1.0);
+        (p as u32, d as u32)
+    }
+
+    /// The 90th-percentile prompt threshold used by the paper's
+    /// long-vs-short fairness split (§4.2).
+    pub fn long_prompt_threshold(&self) -> u32 {
+        self.prompt.p90 as u32
+    }
+
+    /// Mean prompt length of the lognormal fit (capacity planning).
+    pub fn mean_prompt(&self) -> f64 {
+        (self.prompt_mu + 0.5 * self.prompt_sigma * self.prompt_sigma).exp()
+    }
+
+    pub fn mean_decode(&self) -> f64 {
+        (self.decode_mu + 0.5 * self.decode_sigma * self.decode_sigma).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_quantiles(ds: &Dataset) {
+        let mut rng = Rng::new(99);
+        let n = 100_000;
+        let mut prompts: Vec<f64> = Vec::with_capacity(n);
+        let mut decodes: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (p, d) = ds.sample(&mut rng);
+            prompts.push(p as f64);
+            decodes.push(d as f64);
+        }
+        prompts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        decodes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |v: &[f64], q: f64| v[(q * (n - 1) as f64) as usize];
+        // Empirical quantiles within 6% of Table 1 targets.
+        assert!(
+            (q(&prompts, 0.5) / ds.prompt.p50 - 1.0).abs() < 0.06,
+            "{} prompt p50: {}",
+            ds.name,
+            q(&prompts, 0.5)
+        );
+        assert!(
+            (q(&prompts, 0.9) / ds.prompt.p90 - 1.0).abs() < 0.06,
+            "{} prompt p90: {}",
+            ds.name,
+            q(&prompts, 0.9)
+        );
+        assert!(
+            (q(&decodes, 0.5) / ds.decode.p50 - 1.0).abs() < 0.12,
+            "{} decode p50: {}",
+            ds.name,
+            q(&decodes, 0.5)
+        );
+        assert!(
+            (q(&decodes, 0.9) / ds.decode.p90 - 1.0).abs() < 0.12,
+            "{} decode p90: {}",
+            ds.name,
+            q(&decodes, 0.9)
+        );
+    }
+
+    #[test]
+    fn sharegpt_matches_table1() {
+        check_quantiles(&Dataset::sharegpt());
+    }
+
+    #[test]
+    fn azure_conv_matches_table1() {
+        check_quantiles(&Dataset::azure_conv());
+    }
+
+    #[test]
+    fn azure_code_matches_table1() {
+        check_quantiles(&Dataset::azure_code());
+    }
+
+    #[test]
+    fn lengths_at_least_one() {
+        let ds = Dataset::azure_code(); // tiny decode lengths stress this
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let (p, d) = ds.sample(&mut rng);
+            assert!(p >= 1 && d >= 1);
+        }
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for ds in Dataset::all() {
+            assert_eq!(Dataset::by_name(ds.name).unwrap().name, ds.name);
+        }
+        assert!(Dataset::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn means_exceed_medians() {
+        // Lognormal: mean > median (right skew) — the property the
+        // long-request fairness analysis leans on.
+        for ds in Dataset::all() {
+            assert!(ds.mean_prompt() > ds.prompt.p50);
+            assert!(ds.mean_decode() > ds.decode.p50);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! End-to-end PJRT integration: load the AOT artifacts, run real
+//! prefill/decode through the runtime, and drive the full engine +
+//! scheduler over the real model.
+//!
+//! These tests require `make artifacts` to have produced `artifacts/`;
+//! they are skipped (cleanly) when the artifacts are absent so `cargo
+//! test` works in a fresh checkout.
+
+use niyama::config::{Config, HardwareModel};
+use niyama::engine::Engine;
+use niyama::qos::Importance;
+use niyama::request::{Phase, RequestSpec};
+use niyama::runtime::{ModelRuntime, PjrtBackend};
+use niyama::simulator::CostModel;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_and_prefills() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+    assert!(rt.max_chunk() >= 16);
+
+    let mut kv = vec![0f32; rt.kv_elements()];
+    let tokens: Vec<i32> = (1..=10).collect();
+    let logits = rt.prefill(&mut kv, &tokens, 0).expect("prefill");
+    assert_eq!(logits.len(), rt.vocab_size());
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // The cache must have been written (RoPE'd K/V are nonzero).
+    assert!(kv.iter().any(|&v| v != 0.0), "kv cache untouched");
+}
+
+#[test]
+fn chunked_prefill_equals_single_shot() {
+    // THE dynamic-chunking invariant on the real model: chunk schedule
+    // must not change logits.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+
+    let tokens: Vec<i32> = (0..40).map(|i| (i * 37 + 11) % 512).collect();
+
+    let mut kv_a = vec![0f32; rt.kv_elements()];
+    let logits_a = rt.prefill(&mut kv_a, &tokens, 0).expect("single-shot prefill");
+
+    let mut kv_b = vec![0f32; rt.kv_elements()];
+    let _ = rt.prefill(&mut kv_b, &tokens[..16], 0).expect("chunk 1");
+    let _ = rt.prefill(&mut kv_b, &tokens[16..32], 16).expect("chunk 2");
+    let logits_b = rt.prefill(&mut kv_b, &tokens[32..], 32).expect("chunk 3");
+
+    let max_diff = logits_a
+        .iter()
+        .zip(&logits_b)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "chunking changed logits by {max_diff}");
+}
+
+#[test]
+fn decode_continues_prefill_deterministically() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+
+    let tokens: Vec<i32> = (0..12).map(|i| (i * 53 + 7) % 999).collect();
+    let mut kv = vec![0f32; rt.kv_elements()];
+    let logits = rt.prefill(&mut kv, &tokens, 0).expect("prefill");
+    let first = niyama::runtime::argmax(&logits);
+
+    // Two identical decode calls from cloned caches agree.
+    let mut kv2 = kv.clone();
+    let mut kvs = [kv.as_mut_slice()];
+    let out1 = rt.decode(&mut kvs, &[first], &[12]).expect("decode 1");
+    let mut kvs2 = [kv2.as_mut_slice()];
+    let out2 = rt.decode(&mut kvs2, &[first], &[12]).expect("decode 2");
+    assert_eq!(
+        niyama::runtime::argmax(&out1[0]),
+        niyama::runtime::argmax(&out2[0]),
+        "decode is deterministic"
+    );
+}
+
+#[test]
+fn batched_decode_matches_individual() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+
+    // Two different sequences.
+    let prompts: [Vec<i32>; 2] =
+        [(0..8).map(|i| i * 3 + 1).collect(), (0..15).map(|i| i * 7 + 2).collect()];
+    let mut kvs: Vec<Vec<f32>> = Vec::new();
+    let mut firsts = Vec::new();
+    for p in &prompts {
+        let mut kv = vec![0f32; rt.kv_elements()];
+        let logits = rt.prefill(&mut kv, p, 0).expect("prefill");
+        firsts.push(niyama::runtime::argmax(&logits));
+        kvs.push(kv);
+    }
+
+    // Batched step.
+    let mut kv_batch = kvs.clone();
+    let (a, b) = kv_batch.split_at_mut(1);
+    let mut refs = [a[0].as_mut_slice(), b[0].as_mut_slice()];
+    let batched = rt
+        .decode(&mut refs, &[firsts[0], firsts[1]], &[8, 15])
+        .expect("batched decode");
+
+    // Individual steps.
+    for i in 0..2 {
+        let mut kv = kvs[i].clone();
+        let mut one = [kv.as_mut_slice()];
+        let solo = rt.decode(&mut one, &[firsts[i]], &[prompts[i].len()]).expect("solo");
+        let max_diff = batched[i]
+            .iter()
+            .zip(&solo[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "seq {i}: batched vs solo differ by {max_diff}");
+    }
+}
+
+#[test]
+fn full_engine_serves_real_model() {
+    // The end-to-end composition: Niyama scheduler + PJRT backend +
+    // engine over a handful of mixed-QoS requests with real token
+    // generation.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+
+    let mut cfg = Config::default();
+    cfg.hardware = HardwareModel::tiny_cpu();
+    cfg.scheduler.max_chunk_size = rt.max_chunk() as u32;
+    cfg.scheduler.chunk_size = 64;
+
+    let scheduler = niyama::engine::build_scheduler(
+        &cfg,
+        Arc::new(CostModel::new(cfg.hardware.clone())),
+    );
+    let mut engine = Engine::new(&cfg, scheduler, PjrtBackend::new(rt));
+
+    // 4 requests across tiers; decode lengths kept small for CI time.
+    let reqs = [(40u32, 4u32, 0usize), (120, 6, 1), (64, 3, 2), (200, 5, 1)];
+    let mut ids = Vec::new();
+    for (i, &(prompt, decode, tier)) in reqs.iter().enumerate() {
+        let id = engine.submit_now(RequestSpec {
+            arrival_s: 0.0,
+            prompt_tokens: prompt,
+            decode_tokens: decode,
+            tier,
+            app_id: tier as u32,
+            importance: Importance::High,
+        });
+        engine.backend_mut().synth_prompt(id, prompt, 1000 + i as u64);
+        ids.push(id);
+    }
+
+    for _ in 0..4000 {
+        if !engine.step() {
+            break;
+        }
+    }
+
+    for (&id, &(_, decode, _)) in ids.iter().zip(&reqs) {
+        let r = engine.store.get(id);
+        assert_eq!(r.phase, Phase::Finished, "request {id} unfinished");
+        assert_eq!(r.decoded, decode);
+        let gen = engine.backend().generated(id).expect("generated tokens kept");
+        assert_eq!(gen.len(), decode as usize);
+        assert!(gen.iter().all(|&t| t >= 0));
+    }
+    // The backend collected (shape, latency) samples for predictor fits.
+    assert!(!engine.backend().samples.is_empty());
+}

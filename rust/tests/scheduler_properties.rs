@@ -1,0 +1,303 @@
+//! Property-based tests: scheduler/engine invariants under randomized
+//! workloads, policies and knob settings.
+//!
+//! No proptest crate ships in the offline environment, so this uses the
+//! crate's own deterministic PRNG to generate ~dozens of random cases per
+//! property; failures print the case seed for replay.
+
+use niyama::config::{Config, HardwareModel, Policy, SchedulerConfig};
+use niyama::engine::{Engine, ExecutionBackend, IterationResult, SimBackend};
+use niyama::request::{Phase, RequestSpec, RequestStore};
+use niyama::scheduler::Batch;
+use niyama::simulator::CostModel;
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::WorkloadSpec;
+
+fn random_config(rng: &mut Rng) -> Config {
+    let mut cfg = Config::default();
+    cfg.scheduler.policy = match rng.below(5) {
+        0 => Policy::Niyama,
+        1 => Policy::SarathiFcfs,
+        2 => Policy::SarathiEdf,
+        3 => Policy::SarathiSrpf,
+        _ => Policy::SarathiSjf,
+    };
+    if cfg.scheduler.policy != Policy::Niyama {
+        cfg.scheduler = SchedulerConfig::sarathi(
+            cfg.scheduler.policy,
+            [128u32, 256, 512][rng.below(3) as usize],
+        );
+    } else {
+        cfg.scheduler.dynamic_chunking = rng.chance(0.8);
+        cfg.scheduler.eager_relegation = rng.chance(0.8);
+        cfg.scheduler.hybrid_priority = rng.chance(0.8);
+        cfg.scheduler.selective_preemption = rng.chance(0.8);
+        cfg.scheduler.alpha = rng.range_f64(0.0, 2.0);
+        cfg.scheduler.relegation_cap = rng.range_f64(0.0, 1.0);
+    }
+    cfg
+}
+
+fn random_trace(rng: &mut Rng, n: usize) -> Vec<RequestSpec> {
+    let ds = [Dataset::sharegpt(), Dataset::azure_conv(), Dataset::azure_code()]
+        [rng.below(3) as usize]
+        .clone();
+    let mut spec = WorkloadSpec::uniform(ds, rng.range_f64(0.5, 6.0), 60.0);
+    spec.low_importance_frac = rng.range_f64(0.0, 0.4);
+    let mut trace = spec.generate(rng);
+    trace.truncate(n);
+    trace
+}
+
+/// Wraps SimBackend and checks per-batch structural invariants.
+struct CheckingBackend {
+    inner: SimBackend,
+    chunk_cap: Option<u32>,
+    max_decodes: usize,
+    kv_capacity: u64,
+    pub batches: u64,
+}
+
+impl ExecutionBackend for CheckingBackend {
+    fn execute(&mut self, batch: &Batch, store: &RequestStore) -> IterationResult {
+        self.batches += 1;
+        // No duplicate ids within a batch's decode set.
+        for (i, a) in batch.decodes.iter().enumerate() {
+            assert!(!batch.decodes[i + 1..].contains(a), "duplicate decode id");
+        }
+        // Prefill work is within each request's remaining prompt.
+        let mut per_req: std::collections::HashMap<u32, u32> = Default::default();
+        for w in &batch.prefill {
+            *per_req.entry(w.id).or_default() += w.tokens;
+            assert!(w.tokens > 0, "zero-token prefill segment");
+        }
+        for (&id, &tokens) in &per_req {
+            let r = store.get(id);
+            assert!(
+                tokens <= r.prefill_remaining(),
+                "scheduled {tokens} > remaining {} for {id}",
+                r.prefill_remaining()
+            );
+        }
+        // Fixed-chunk policies never exceed their chunk budget.
+        if let Some(cap) = self.chunk_cap {
+            assert!(batch.prefill_tokens() <= cap, "chunk budget exceeded");
+        }
+        assert!(batch.decodes.len() <= self.max_decodes + 64, "decode batch overflow");
+        // Decode entries are decode-phase or relegated-decoding requests.
+        for &id in &batch.decodes {
+            let r = store.get(id);
+            assert!(r.is_active(), "finished request in decode batch");
+            assert_eq!(r.prefill_remaining(), 0, "undecodable request in decode batch");
+        }
+        // Memory: KV in use never exceeds capacity (tokens scheduled this
+        // iteration included).
+        let in_use = store.total_kv_tokens() + batch.total_tokens_new() as u64;
+        assert!(
+            in_use <= self.kv_capacity + 1024,
+            "kv over capacity: {in_use} > {}",
+            self.kv_capacity
+        );
+        self.inner.execute(batch, store)
+    }
+
+    fn release(&mut self, id: u32) {
+        self.inner.release(id);
+    }
+}
+
+trait BatchExt {
+    fn total_tokens_new(&self) -> u32;
+}
+
+impl BatchExt for Batch {
+    fn total_tokens_new(&self) -> u32 {
+        self.prefill_tokens() + self.decodes.len() as u32
+    }
+}
+
+fn run_checked(cfg: &Config, trace: Vec<RequestSpec>) -> (Engine<CheckingBackend>, u64) {
+    let model = CostModel::new(cfg.hardware.clone());
+    let backend = CheckingBackend {
+        inner: SimBackend::new(model.clone()),
+        chunk_cap: if cfg.scheduler.dynamic_chunking {
+            None
+        } else {
+            Some(cfg.scheduler.chunk_size)
+        },
+        max_decodes: cfg.scheduler.max_batch_decodes,
+        kv_capacity: cfg.hardware.kv_capacity_tokens(),
+        batches: 0,
+    };
+    let scheduler = niyama::engine::build_scheduler(cfg, std::sync::Arc::new(model));
+    let mut eng = Engine::new(cfg, scheduler, backend);
+    eng.submit_trace(trace);
+    eng.run(4000.0);
+    let batches = eng.backend().batches;
+    (eng, batches)
+}
+
+#[test]
+fn prop_structural_invariants_hold_for_random_cases() {
+    for case in 0..25u64 {
+        let mut rng = Rng::new(1000 + case);
+        let cfg = random_config(&mut rng);
+        let trace = random_trace(&mut rng, 60);
+        let n = trace.len();
+        let (eng, batches) = run_checked(&cfg, trace);
+        assert!(batches > 0 || n == 0, "case {case}: nothing executed");
+        // Token conservation: every request's counters are in range.
+        for r in eng.store.iter() {
+            assert!(r.prefilled <= r.spec.prompt_tokens, "case {case}");
+            assert!(r.decoded <= r.spec.decode_tokens, "case {case}");
+            if r.phase == Phase::Finished {
+                assert_eq!(r.prefilled, r.spec.prompt_tokens, "case {case}");
+                assert_eq!(r.decoded, r.spec.decode_tokens, "case {case}");
+                assert!(r.finished_at.is_some(), "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_all_requests_complete_at_modest_load() {
+    // At loads under capacity every policy must eventually finish every
+    // request (no starvation/livelock), within the generous horizon.
+    for case in 0..10u64 {
+        let mut rng = Rng::new(2000 + case);
+        let cfg = random_config(&mut rng);
+        let ds = Dataset::azure_conv();
+        let spec = WorkloadSpec::uniform(ds, 1.0, 40.0);
+        let trace = spec.generate(&mut Rng::new(3000 + case));
+        let n = trace.len();
+        let (eng, _) = run_checked(&cfg, trace);
+        let finished = eng.store.iter().filter(|r| r.phase == Phase::Finished).count();
+        assert_eq!(
+            finished, n,
+            "case {case} ({:?}): {finished}/{n} finished",
+            cfg.scheduler.policy
+        );
+    }
+}
+
+#[test]
+fn prop_relegation_cap_respected() {
+    for case in 0..8u64 {
+        let mut rng = Rng::new(4000 + case);
+        let cap = [0.0, 0.02, 0.1][rng.below(3) as usize];
+        let mut cfg = Config::default();
+        cfg.scheduler.relegation_cap = cap;
+        // Overload so relegation pressure exists.
+        let spec = WorkloadSpec::uniform(Dataset::azure_code(), 12.0, 120.0);
+        let trace = spec.generate(&mut Rng::new(5000 + case));
+        let n = trace.len();
+        let (eng, _) = run_checked(&cfg, trace);
+        let relegated = eng.store.iter().filter(|r| r.was_relegated).count();
+        let frac = relegated as f64 / n.max(1) as f64;
+        assert!(
+            frac <= cap + 2.0 / n as f64 + 1e-9,
+            "case {case}: relegated {frac:.3} > cap {cap}"
+        );
+    }
+}
+
+#[test]
+fn prop_decode_phase_never_preempted() {
+    // Selective preemption (§3.4): once a request is decoding it receives
+    // a token every iteration it appears, and is never pushed back to
+    // prefill. We verify monotone decoded counts + phase transitions.
+    let mut cfg = Config::default();
+    cfg.scheduler.selective_preemption = true;
+    let spec = WorkloadSpec::uniform(Dataset::azure_conv(), 3.0, 90.0);
+    let trace = spec.generate(&mut Rng::new(6000));
+    let model = CostModel::new(cfg.hardware.clone());
+    let scheduler = niyama::engine::build_scheduler(&cfg, std::sync::Arc::new(model.clone()));
+    let mut eng = Engine::new(&cfg, scheduler, SimBackend::new(model));
+    eng.submit_trace(trace);
+    let mut last_phase: std::collections::HashMap<u32, Phase> = Default::default();
+    for _ in 0..20_000 {
+        if !eng.step() {
+            break;
+        }
+        for r in eng.store.iter() {
+            if let Some(&prev) = last_phase.get(&r.id) {
+                if prev == Phase::Decode {
+                    assert!(
+                        matches!(r.phase, Phase::Decode | Phase::Finished | Phase::Relegated),
+                        "decode-phase request {} moved back to {:?}",
+                        r.id,
+                        r.phase
+                    );
+                }
+            }
+            last_phase.insert(r.id, r.phase);
+        }
+    }
+}
+
+#[test]
+fn prop_determinism_across_identical_runs() {
+    for case in 0..5u64 {
+        let mut rng_a = Rng::new(7000 + case);
+        let cfg_a = random_config(&mut rng_a);
+        let trace_a = random_trace(&mut rng_a, 40);
+        let mut rng_b = Rng::new(7000 + case);
+        let cfg_b = random_config(&mut rng_b);
+        let trace_b = random_trace(&mut rng_b, 40);
+
+        let (eng_a, batches_a) = run_checked(&cfg_a, trace_a);
+        let (eng_b, batches_b) = run_checked(&cfg_b, trace_b);
+        assert_eq!(batches_a, batches_b, "case {case}");
+        assert_eq!(eng_a.now(), eng_b.now(), "case {case}");
+        for (ra, rb) in eng_a.store.iter().zip(eng_b.store.iter()) {
+            assert_eq!(ra.finished_at, rb.finished_at, "case {case} req {}", ra.id);
+            assert_eq!(ra.was_relegated, rb.was_relegated, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_qwen_tp2_hardware_serves() {
+    // The paper's second testbed: Qwen-7B on 2xA100 TP2. Same scheduler
+    // must work over the TP2 cost model.
+    let mut cfg = Config::default();
+    cfg.hardware = HardwareModel::qwen_7b_a100_tp2();
+    let spec = WorkloadSpec::uniform(Dataset::azure_conv(), 2.0, 120.0);
+    let trace = spec.generate(&mut Rng::new(8000));
+    let n = trace.len();
+    let (eng, _) = run_checked(&cfg, trace);
+    let finished = eng.store.iter().filter(|r| r.phase == Phase::Finished).count();
+    assert_eq!(finished, n);
+    let s = eng.summary(3830);
+    assert!(s.violation_pct < 5.0, "tp2 violations {:.2}%", s.violation_pct);
+}
+
+#[test]
+fn prop_fitted_predictor_schedules_comparably_to_exact_model() {
+    // Predictor-fidelity ablation (DESIGN.md): scheduling with the
+    // ridge-fit predictor instead of the exact cost model must not
+    // change outcomes materially at moderate load.
+    let cfg = Config::default();
+    let spec = WorkloadSpec::uniform(Dataset::azure_code(), 3.0, 240.0);
+    let trace = spec.generate(&mut Rng::new(9000));
+
+    let mut exact = Engine::sim(&cfg);
+    exact.submit_trace(trace.clone());
+    exact.run(4000.0);
+    let s_exact = exact.summary(6251);
+
+    let model = CostModel::new(cfg.hardware.clone());
+    let predictor = niyama::predictor::LatencyPredictor::calibrate(&model, 1);
+    let mut fitted = Engine::sim_with_predictor(&cfg, predictor);
+    fitted.submit_trace(trace);
+    fitted.run(4000.0);
+    let s_fitted = fitted.summary(6251);
+
+    assert!(
+        (s_fitted.violation_pct - s_exact.violation_pct).abs() < 3.0,
+        "predictor-scheduled violations {:.2}% vs exact {:.2}%",
+        s_fitted.violation_pct,
+        s_exact.violation_pct
+    );
+}

@@ -1,0 +1,201 @@
+//! Simulation integration tests: the full scheduler/engine/cost-model
+//! stack reproducing the paper's qualitative claims end-to-end. These
+//! are the "shape" assertions DESIGN.md promises: who wins, where the
+//! crossovers are — not absolute numbers.
+
+use niyama::config::{Config, Policy, SchedulerConfig};
+use niyama::engine::Engine;
+use niyama::metrics::Summary;
+use niyama::repro::drain_budget;
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::{ArrivalProcess, WorkloadSpec};
+
+fn run(cfg: &Config, ds: &Dataset, qps: f64, duration: f64, seed: u64) -> Summary {
+    let spec = WorkloadSpec::uniform(ds.clone(), qps, duration);
+    let trace = spec.generate(&mut Rng::new(seed));
+    let mut eng = Engine::sim(cfg);
+    eng.submit_trace(trace);
+    eng.run(duration + drain_budget(cfg));
+    eng.summary(ds.long_prompt_threshold())
+}
+
+fn sarathi(policy: Policy, chunk: u32) -> Config {
+    let mut c = Config::default();
+    c.scheduler = SchedulerConfig::sarathi(policy, chunk);
+    c
+}
+
+#[test]
+fn all_policies_clean_at_low_load() {
+    // Fig. 2/9: at trivially low load every scheduler (even FCFS) meets
+    // SLOs — except SRPF's long-job starvation, checked separately.
+    let ds = Dataset::azure_code();
+    for (name, cfg) in [
+        ("niyama", Config::default()),
+        ("fcfs", sarathi(Policy::SarathiFcfs, 256)),
+        ("edf", sarathi(Policy::SarathiEdf, 256)),
+    ] {
+        let s = run(&cfg, &ds, 1.0, 240.0, 21);
+        assert!(
+            s.violation_pct < 2.0,
+            "{name} violates {:.1}% at 1 QPS",
+            s.violation_pct
+        );
+    }
+}
+
+#[test]
+fn niyama_beats_fcfs_under_load() {
+    // The headline ordering at moderate overload.
+    let ds = Dataset::azure_code();
+    let niyama = run(&Config::default(), &ds, 4.0, 300.0, 22);
+    let fcfs = run(&sarathi(Policy::SarathiFcfs, 256), &ds, 4.0, 300.0, 22);
+    assert!(
+        niyama.violation_pct < fcfs.violation_pct,
+        "niyama {:.1}% vs fcfs {:.1}%",
+        niyama.violation_pct,
+        fcfs.violation_pct
+    );
+}
+
+#[test]
+fn niyama_matches_or_beats_edf_at_overload() {
+    // Fig. 9a: EDF collapses past its knee; Niyama degrades gracefully.
+    let ds = Dataset::azure_code();
+    let niyama = run(&Config::default(), &ds, 6.0, 300.0, 23);
+    let edf = run(&sarathi(Policy::SarathiEdf, 256), &ds, 6.0, 300.0, 23);
+    assert!(
+        niyama.violation_pct <= edf.violation_pct + 1.0,
+        "niyama {:.1}% vs edf {:.1}%",
+        niyama.violation_pct,
+        edf.violation_pct
+    );
+    // Graceful degradation: the majority is still served on time.
+    assert!(niyama.violation_pct < 50.0, "niyama {:.1}% at 1.5x capacity", niyama.violation_pct);
+}
+
+#[test]
+fn srpf_starves_long_requests() {
+    // Fig. 2d / Fig. 9: SRPF's long-vs-short unfairness appears at loads
+    // where deadline-aware schedulers still serve everyone.
+    let ds = Dataset::sharegpt();
+    let srpf = run(&sarathi(Policy::SarathiSrpf, 256), &ds, 3.0, 300.0, 24);
+    let niyama = run(&Config::default(), &ds, 3.0, 300.0, 24);
+    assert!(
+        srpf.long_violation_pct > srpf.short_violation_pct,
+        "srpf long {:.1}% vs short {:.1}%",
+        srpf.long_violation_pct,
+        srpf.short_violation_pct
+    );
+    assert!(
+        niyama.long_violation_pct <= srpf.long_violation_pct,
+        "niyama long {:.1}% vs srpf long {:.1}%",
+        niyama.long_violation_pct,
+        srpf.long_violation_pct
+    );
+}
+
+#[test]
+fn relegation_protects_important_requests() {
+    // §4.3: with 20% low-importance hints, overload violations should
+    // concentrate on low-importance requests.
+    let ds = Dataset::azure_code();
+    // Sustained overload long enough that the backlog outgrows the loose
+    // tiers' TTLT slack — relegation must engage.
+    let duration = 1500.0;
+    let mut spec = WorkloadSpec::uniform(ds.clone(), 10.0, duration);
+    spec.low_importance_frac = 0.2;
+    let trace = spec.generate(&mut Rng::new(25));
+    let cfg = Config::default();
+    let mut eng = Engine::sim(&cfg);
+    eng.submit_trace(trace);
+    eng.run(duration + drain_budget(&cfg));
+    let s = eng.summary(ds.long_prompt_threshold());
+    assert!(
+        s.violation_pct > 1.0,
+        "overload should force some violations, got {:.2}%",
+        s.violation_pct
+    );
+    assert!(
+        s.important_violation_pct < s.violation_pct,
+        "violations must concentrate on low-importance: important {:.2}% vs overall {:.2}%",
+        s.important_violation_pct,
+        s.violation_pct
+    );
+}
+
+#[test]
+fn diurnal_niyama_recovers_between_peaks() {
+    // Fig. 11: rolling p99 must come back down after each high-QPS phase.
+    let ds = Dataset::azure_code();
+    let duration = 1800.0;
+    let mut spec = WorkloadSpec::uniform(ds.clone(), 2.0, duration);
+    spec.arrivals = ArrivalProcess::Diurnal { low_qps: 1.5, high_qps: 5.0, period_s: 450.0 };
+    spec.low_importance_frac = 0.2;
+    let trace = spec.generate(&mut Rng::new(26));
+    let cfg = Config::default();
+    let mut eng = Engine::sim(&cfg);
+    eng.submit_trace(trace);
+    eng.run(duration + drain_budget(&cfg));
+    let series = eng.rolling.series(0, 0.99);
+    assert!(series.len() > 10, "need a rolling series, got {}", series.len());
+    // Recovery check: the minimum p99 in the second half is comparable to
+    // the first half's minimum (no monotone queue blow-up).
+    let half = series.len() / 2;
+    let min_a = series[..half].iter().map(|&(_, v)| v).fold(f64::MAX, f64::min);
+    let min_b = series[half..].iter().map(|&(_, v)| v).fold(f64::MAX, f64::min);
+    assert!(
+        min_b < min_a * 10.0 + 1.0,
+        "p99 never recovers: first-half min {min_a}, second-half min {min_b}"
+    );
+}
+
+#[test]
+fn dynamic_chunking_improves_capacity_over_fixed_edf() {
+    // Table 3's first ablation row: Niyama(DC, EDF-order) sustains more
+    // load than fixed-chunk Sarathi-EDF at equal violation budgets.
+    let ds = Dataset::azure_code();
+    // Past fixed-chunk EDF's knee: dynamic chunking's extra throughput is
+    // the difference between coping and collapsing (Table 3's DC row).
+    // Sustained long enough that fixed-chunk EDF's backlog exceeds the
+    // TTLT slack.
+    // (Past both knees everything collapses and relative order is
+    // arbitrary — the paper's relegation motivation; 8 QPS sits between
+    // the two knees: DC-only ~7.6% vs fixed-chunk EDF ~68%.)
+    let qps = 8.0;
+    let mut dc_only = Config::default();
+    dc_only.scheduler.hybrid_priority = false;
+    dc_only.scheduler.eager_relegation = false;
+    dc_only.scheduler.selective_preemption = false;
+    let dc = run(&dc_only, &ds, qps, 1500.0, 27);
+    let edf = run(&sarathi(Policy::SarathiEdf, 256), &ds, qps, 1500.0, 27);
+    assert!(
+        dc.violation_pct < edf.violation_pct,
+        "DC {:.2}% vs EDF {:.2}% at {qps} QPS",
+        dc.violation_pct,
+        edf.violation_pct
+    );
+}
+
+#[test]
+fn tbt_deadlines_hold_across_load_for_niyama() {
+    // §4.2: "across all schemes, average TBT violations < 0.1%" by
+    // chunk-size choice; Niyama must hold token deadlines while varying
+    // chunks dynamically.
+    let ds = Dataset::azure_conv();
+    let s = run(&Config::default(), &ds, 2.0, 240.0, 28);
+    // Interactive tier: violations (which include any token-deadline
+    // overrun) stay minimal at moderate load.
+    assert!(s.tier_violation_pct(0) < 5.0, "Q1 violations {:.2}%", s.tier_violation_pct(0));
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let ds = Dataset::sharegpt();
+    let a = run(&Config::default(), &ds, 2.0, 120.0, 29);
+    let b = run(&Config::default(), &ds, 2.0, 120.0, 29);
+    assert_eq!(a.total, b.total);
+    assert_eq!(a.violations, b.violations);
+    assert!((a.ttft_p99 - b.ttft_p99).abs() < 1e-12);
+}
