@@ -124,6 +124,59 @@ fn main() {
         std::hint::black_box(pred.predict(&shape));
     });
 
+    println!("\n== cluster dispatch decision cost per arrival ==");
+    {
+        use niyama::config::{DispatchConfig, DispatchPolicy};
+        use niyama::engine::LoadSnapshot;
+        use niyama::simulator::dispatch::build_dispatcher;
+        let spec = RequestSpec {
+            arrival_s: 100.0,
+            prompt_tokens: 2048,
+            decode_tokens: 64,
+            tier: 0,
+            app_id: 0,
+            importance: Importance::High,
+        };
+        let slo = Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
+        for replicas in [8usize, 32] {
+            // Synthetic but varied snapshots: the dispatcher's cost is a
+            // pure function of the snapshot slice, so this isolates the
+            // per-arrival decision from simulation noise.
+            let snaps: Vec<LoadSnapshot> = (0..replicas)
+                .map(|i| LoadSnapshot {
+                    now: 100.0,
+                    active: 8 + (i * 5) % 23,
+                    backlog: (i * 13) % 11,
+                    queued_prefill_tokens: ((i as u64 * 977) % 9000),
+                    relegated_prefill_tokens: ((i as u64 * 131) % 2000),
+                    queued_prefill_s: (i as f64 * 0.37) % 3.0,
+                    decodes: 16,
+                    kv_used: (i as u64 * 31_000) % 400_000,
+                    kv_committed: (i as u64 * 700) % 5000,
+                    kv_capacity: 430_000,
+                    tier_slack_s: vec![4.0 - (i % 7) as f64, 300.0, 900.0],
+                })
+                .collect();
+            for policy in [
+                DispatchPolicy::RoundRobin,
+                DispatchPolicy::JoinShortestQueue,
+                DispatchPolicy::LeastLoaded,
+            ] {
+                let mut d = build_dispatcher(&DispatchConfig {
+                    policy,
+                    relegation_handoff: false,
+                });
+                bench(
+                    &format!("dispatch.{:<19} replicas={replicas}", policy.name()),
+                    10_000,
+                    || {
+                        std::hint::black_box(d.dispatch(&spec, slo, 0.4, 0.0, &snaps));
+                    },
+                );
+            }
+        }
+    }
+
     println!("\n== end-to-end simulation throughput ==");
     use niyama::engine::Engine;
     use niyama::workload::datasets::Dataset;

@@ -218,16 +218,69 @@ impl SchedulerConfig {
     }
 }
 
+/// Global dispatch policy: how the cluster front-end routes each arrival
+/// to a replica (see `simulator::dispatch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Stateless rotation — the seed's behavior and the standard
+    /// load-oblivious front-end baseline.
+    RoundRobin,
+    /// Route to the replica with the fewest requests awaiting prefill.
+    JoinShortestQueue,
+    /// QoS/slack-aware: route on live load snapshots (queued prefill
+    /// seconds, KV pressure, per-tier slack headroom), preferring
+    /// replicas that can still meet the arrival's deadline.
+    LeastLoaded,
+}
+
+impl DispatchPolicy {
+    pub fn parse(s: &str) -> Result<DispatchPolicy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => DispatchPolicy::RoundRobin,
+            "join-shortest-queue" | "jsq" => DispatchPolicy::JoinShortestQueue,
+            "least-loaded" | "ll" => DispatchPolicy::LeastLoaded,
+            other => bail!("unknown dispatch policy '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::JoinShortestQueue => "join-shortest-queue",
+            DispatchPolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Cluster dispatch knobs.
+#[derive(Debug, Clone)]
+pub struct DispatchConfig {
+    pub policy: DispatchPolicy,
+    /// Llumnix-style cross-replica relegation handoff: requests a replica
+    /// relegates may be re-dispatched to a replica with spare headroom.
+    pub relegation_handoff: bool,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        // Round-robin without handoff reproduces the seed's static shard
+        // split exactly, so existing experiments are unchanged by default.
+        DispatchConfig { policy: DispatchPolicy::RoundRobin, relegation_handoff: false }
+    }
+}
+
 /// Cluster topology for multi-replica serving / silo experiments.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     /// Number of identical replicas sharing the workload.
     pub replicas: usize,
+    /// How arrivals are routed across those replicas.
+    pub dispatch: DispatchConfig,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        ClusterConfig { replicas: 1 }
+        ClusterConfig { replicas: 1, dispatch: DispatchConfig::default() }
     }
 }
 
@@ -307,6 +360,10 @@ impl Config {
             if let Some(v) = c.get("replicas").and_then(|v| v.as_usize()) {
                 cfg.cluster.replicas = v;
             }
+            if let Some(p) = c.get("dispatch").and_then(|v| v.as_str()) {
+                cfg.cluster.dispatch.policy = DispatchPolicy::parse(p)?;
+            }
+            override_bool(c, "relegation_handoff", &mut cfg.cluster.dispatch.relegation_handoff);
         }
 
         if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
@@ -449,6 +506,41 @@ mod tests {
     #[test]
     fn rejects_zero_replicas() {
         assert!(Config::from_json_str(r#"{"cluster": {"replicas": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn dispatch_defaults_to_seed_behavior() {
+        let c = Config::default();
+        assert_eq!(c.cluster.dispatch.policy, DispatchPolicy::RoundRobin);
+        assert!(!c.cluster.dispatch.relegation_handoff);
+    }
+
+    #[test]
+    fn json_dispatch_overrides() {
+        let c = Config::from_json_str(
+            r#"{"cluster": {"replicas": 8, "dispatch": "least-loaded",
+                            "relegation_handoff": true}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.cluster.replicas, 8);
+        assert_eq!(c.cluster.dispatch.policy, DispatchPolicy::LeastLoaded);
+        assert!(c.cluster.dispatch.relegation_handoff);
+    }
+
+    #[test]
+    fn rejects_unknown_dispatch_policy() {
+        assert!(Config::from_json_str(r#"{"cluster": {"dispatch": "random"}}"#).is_err());
+    }
+
+    #[test]
+    fn dispatch_policy_names_round_trip() {
+        for p in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::LeastLoaded,
+        ] {
+            assert_eq!(DispatchPolicy::parse(p.name()).unwrap(), p);
+        }
     }
 
     #[test]

@@ -10,6 +10,18 @@
 //!
 //! The scheduler code is identical in both — that equivalence is what
 //! makes the simulator results meaningful.
+//!
+//! Besides the monolithic [`Engine::run`], the engine exposes a
+//! *stepwise* API for the event-driven multi-replica cluster
+//! ([`crate::simulator::cluster`]): [`Engine::next_event_time`] reports
+//! when this replica next has something to do, the cluster event loop
+//! interleaves replicas one [`Engine::step`] at a time on a shared
+//! virtual clock, [`Engine::enqueue`] injects a dispatched arrival, and
+//! [`Engine::load_snapshot`] publishes the live load signals (backlog,
+//! queued prefill seconds, KV occupancy, per-tier slack headroom) that
+//! QoS-aware dispatch policies route on. [`Engine::step_to`] bundles
+//! next-event + step for driving one replica standalone up to a clock
+//! bound.
 
 use crate::config::Config;
 use crate::metrics::{summarize, RollingLatency, Summary};
@@ -68,6 +80,88 @@ pub struct RunStats {
     pub sim_time_s: f64,
 }
 
+/// Live load signals of one replica, published to the cluster dispatcher.
+///
+/// Counts cover both admitted requests and arrivals already dispatched to
+/// this replica but not yet admitted (its `pending` queue): a burst of
+/// near-simultaneous arrivals must see each other's placements even
+/// though no replica has stepped in between.
+#[derive(Debug, Clone)]
+pub struct LoadSnapshot {
+    /// Replica-local clock at snapshot time.
+    pub now: f64,
+    /// Admitted, unfinished requests (any phase).
+    pub active: usize,
+    /// Serviceable requests still owing prefill work (admitted +
+    /// dispatched-pending). Relegated requests are excluded: they only
+    /// receive leftover budget, so they do not delay a new arrival.
+    pub backlog: usize,
+    /// Prompt tokens still to prefill across the serviceable backlog.
+    pub queued_prefill_tokens: u64,
+    /// Prompt tokens still owed to relegated (sacrificed) requests —
+    /// tracked separately so opportunistic work is visible without
+    /// inflating the wait estimate dispatch decisions route on.
+    pub relegated_prefill_tokens: u64,
+    /// `queued_prefill_tokens` converted to seconds at this replica's
+    /// reference prefill rate — the dispatcher's wait-time estimate.
+    pub queued_prefill_s: f64,
+    /// Requests currently in decode phase.
+    pub decodes: usize,
+    /// KV-cache occupancy, tokens.
+    pub kv_used: u64,
+    /// KV tokens already spoken for by dispatched-but-not-admitted
+    /// arrivals (their full prompt + decode demand). Keeping commitments
+    /// separate from occupancy lets the feasibility gate see a burst's
+    /// earlier placements without distorting the occupancy score.
+    pub kv_committed: u64,
+    pub kv_capacity: u64,
+    /// Per-tier slack headroom: min over this replica's *serviceable*
+    /// requests of (next unmet deadline − now), `+inf` where the tier is
+    /// idle. Negative means the replica is already violating that tier.
+    /// Relegated requests are excluded — they are sacrificed by
+    /// definition, and their ever-growing lateness would otherwise poison
+    /// the signal long after the replica recovered.
+    pub tier_slack_s: Vec<f64>,
+}
+
+impl LoadSnapshot {
+    /// KV occupancy as a fraction of capacity.
+    pub fn kv_utilization(&self) -> f64 {
+        self.kv_used as f64 / self.kv_capacity.max(1) as f64
+    }
+
+    /// KV tokens still free on this replica, net of commitments to
+    /// dispatched-but-not-admitted arrivals.
+    pub fn kv_free(&self) -> u64 {
+        self.kv_capacity.saturating_sub(self.kv_used).saturating_sub(self.kv_committed)
+    }
+
+    /// Worst slack headroom across tiers (`+inf` when fully idle).
+    pub fn min_slack_s(&self) -> f64 {
+        self.tier_slack_s.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// The one feasibility rule dispatch and relegation handoff share:
+    /// can this replica still meet `deadline` for a request of the given
+    /// footprint, starting no earlier than `start`? The request must fit
+    /// the uncommitted KV cache (a saturated cache blocks the prefill no
+    /// matter how much time remains), and its queue wait plus priced
+    /// prefill (and, for TTLT SLOs, decode tail) must beat the deadline.
+    pub fn feasible_for(
+        &self,
+        prompt_tokens: u32,
+        decode_tokens: u32,
+        start: f64,
+        est_prefill_s: f64,
+        est_decode_s: f64,
+        deadline: f64,
+    ) -> bool {
+        let kv_demand = prompt_tokens as u64 + decode_tokens as u64;
+        kv_demand <= self.kv_free()
+            && start + self.queued_prefill_s + est_prefill_s + est_decode_s <= deadline
+    }
+}
+
 /// One serving replica: request store + scheduler + backend + clock.
 pub struct Engine<B: ExecutionBackend> {
     pub store: RequestStore,
@@ -75,12 +169,26 @@ pub struct Engine<B: ExecutionBackend> {
     backend: B,
     kv_capacity: u64,
     now: f64,
+    /// Future arrivals, sorted by arrival time from `next_pending` on.
     pending: Vec<(f64, RequestSpec)>,
     next_pending: usize,
     pub stats: RunStats,
     pub rolling: RollingLatency,
     n_tiers: usize,
     tiers: Vec<crate::qos::QosTier>,
+    /// Ids of admitted, unfinished requests — maintained incrementally on
+    /// admit/finish/migrate so `next_event_time` is O(1) and snapshot
+    /// scans are O(live) instead of O(all requests ever). Iteration order
+    /// is irrelevant: every snapshot aggregate is an order-independent
+    /// sum, count, or min.
+    live: std::collections::HashSet<RequestId>,
+    /// Reference prefill throughput (seconds per prompt token) derived
+    /// from the configured hardware; prices queued prefill work for
+    /// `load_snapshot` without consulting the scheduler.
+    sec_per_prefill_token: f64,
+    /// Reference wall-clock cost of one decode token (one batched
+    /// iteration) — prices a request's decode tail for TTLT feasibility.
+    sec_per_decode_token: f64,
 }
 
 /// Build the configured scheduler over a latency model.
@@ -126,6 +234,20 @@ impl Engine<SimBackend> {
 
 impl<B: ExecutionBackend> Engine<B> {
     pub fn new(cfg: &Config, scheduler: Box<dyn Scheduler>, backend: B) -> Self {
+        // Reference rate: one mid-prompt chunk of the configured size,
+        // prefill-only. Load snapshots only need a consistent comparative
+        // price for queued work, not an exact latency.
+        let model = CostModel::new(cfg.hardware.clone());
+        let chunk = cfg.scheduler.chunk_size.max(1);
+        let mut shape = BatchShape::default();
+        shape.prefill.push(crate::simulator::PrefillSegment { cache_len: 512, chunk });
+        let sec_per_prefill_token = model.iteration_latency(&shape) / chunk as f64;
+        // One decode token costs one batched iteration of wall clock
+        // (every sequence in the batch advances together).
+        let mut dshape = BatchShape::default();
+        dshape.decode_kv_lens = vec![1024; 32];
+        let sec_per_decode_token = model.iteration_latency(&dshape);
+
         Engine {
             store: RequestStore::new(),
             scheduler,
@@ -138,6 +260,9 @@ impl<B: ExecutionBackend> Engine<B> {
             rolling: RollingLatency::new(cfg.tiers.len(), 60.0),
             n_tiers: cfg.tiers.len(),
             tiers: cfg.tiers.clone(),
+            live: std::collections::HashSet::new(),
+            sec_per_prefill_token,
+            sec_per_decode_token,
         }
     }
 
@@ -158,6 +283,19 @@ impl<B: ExecutionBackend> Engine<B> {
         &self.backend
     }
 
+    /// Reference prefill price (seconds per prompt token) used by load
+    /// snapshots; the cluster uses the same rate to price arrivals.
+    pub fn sec_per_prefill_token(&self) -> f64 {
+        self.sec_per_prefill_token
+    }
+
+    /// Reference price of one decode token (one batched iteration of
+    /// wall clock); the cluster uses it to price a request's decode tail
+    /// when judging TTLT feasibility.
+    pub fn sec_per_decode_token(&self) -> f64 {
+        self.sec_per_decode_token
+    }
+
     pub fn backend_mut(&mut self) -> &mut B {
         &mut self.backend
     }
@@ -171,12 +309,49 @@ impl<B: ExecutionBackend> Engine<B> {
         self.pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     }
 
+    /// Single admission path: resolve the tier SLO, insert into the
+    /// store, track liveness, notify the scheduler. Every way a request
+    /// enters service funnels through here so the store, live set and
+    /// scheduler view can never drift apart.
+    fn admit(&mut self, spec: RequestSpec) -> RequestId {
+        let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
+        let id = self.store.insert(spec, slo);
+        self.live.insert(id);
+        self.scheduler.on_arrival(id, &self.store);
+        id
+    }
+
     /// Inject a request immediately (server path).
     pub fn submit_now(&mut self, mut spec: RequestSpec) -> RequestId {
         spec.arrival_s = self.now;
-        let slo = self.tiers[spec.tier.min(self.tiers.len() - 1)].slo;
-        let id = self.store.insert(spec, slo);
-        self.scheduler.on_arrival(id, &self.store);
+        self.admit(spec)
+    }
+
+    /// Inject one future arrival (cluster dispatch path). Keeps the
+    /// not-yet-admitted tail of the pending queue sorted; the request is
+    /// admitted once the replica clock reaches its arrival time, exactly
+    /// like a trace entry.
+    pub fn enqueue(&mut self, spec: RequestSpec) {
+        let mut i = self.pending.len();
+        while i > self.next_pending && self.pending[i - 1].0 > spec.arrival_s {
+            i -= 1;
+        }
+        self.pending.insert(i, (spec.arrival_s, spec));
+    }
+
+    /// Admit a handed-off request immediately, keeping its relegation
+    /// history. Its original arrival time is already in this replica's
+    /// past (the cluster advances our clock to the handoff instant
+    /// first), and bypassing the pending queue guarantees the request
+    /// can never be stranded unadmitted — and thus uncounted — when a
+    /// binding horizon stops the run before this replica steps again.
+    pub fn admit_migrated(&mut self, spec: RequestSpec) -> RequestId {
+        debug_assert!(
+            spec.arrival_s <= self.now + 1e-9,
+            "handoff must not admit requests from the future"
+        );
+        let id = self.admit(spec);
+        self.store.get_mut(id).was_relegated = true;
         id
     }
 
@@ -184,15 +359,13 @@ impl<B: ExecutionBackend> Engine<B> {
         while self.next_pending < self.pending.len() && self.pending[self.next_pending].0 <= self.now
         {
             let spec = self.pending[self.next_pending].1.clone();
-            let slo = self.tiers[spec.tier.min(self.tiers.len() - 1)].slo;
-            let id = self.store.insert(spec, slo);
-            self.scheduler.on_arrival(id, &self.store);
+            self.admit(spec);
             self.next_pending += 1;
         }
     }
 
     fn has_active(&self) -> bool {
-        self.store.iter().any(|r| r.is_active())
+        !self.live.is_empty()
     }
 
     /// Run one scheduling iteration. Returns false when there is nothing
@@ -277,6 +450,7 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     fn finish(&mut self, id: RequestId) {
+        self.live.remove(&id);
         self.scheduler.on_finished(id, &self.store);
         self.rolling.record(self.store.get(id));
         self.backend.release(id);
@@ -296,6 +470,131 @@ impl<B: ExecutionBackend> Engine<B> {
         let _ = self.has_active();
     }
 
+    /// Time of this replica's next event on the shared virtual clock:
+    /// `now` while it has admitted work (an iteration can start
+    /// immediately), the next dispatched arrival while idle, `None` when
+    /// fully drained. O(1) — the cluster event loop polls this per event.
+    pub fn next_event_time(&self) -> Option<f64> {
+        if !self.live.is_empty() {
+            return Some(self.now);
+        }
+        self.pending.get(self.next_pending).map(|&(t, _)| t.max(self.now))
+    }
+
+    /// Advance this replica up to virtual time `t`: run every iteration
+    /// whose *start* is at or before `t`. The final iteration may end
+    /// past `t` (iterations are atomic), mirroring real engines where an
+    /// in-flight batch cannot incorporate newer arrivals.
+    pub fn step_to(&mut self, t: f64) {
+        while let Some(ev) = self.next_event_time() {
+            if ev > t {
+                break;
+            }
+            if !self.step() {
+                break;
+            }
+        }
+    }
+
+    /// Publish this replica's live load signals for dispatch decisions.
+    /// Single pass over the live request set plus the dispatched-pending
+    /// tail — O(live), independent of how many requests ever finished.
+    pub fn load_snapshot(&self) -> LoadSnapshot {
+        let mut snap = LoadSnapshot {
+            now: self.now,
+            active: self.live.len(),
+            backlog: 0,
+            queued_prefill_tokens: 0,
+            relegated_prefill_tokens: 0,
+            queued_prefill_s: 0.0,
+            decodes: 0,
+            kv_used: 0,
+            kv_committed: 0,
+            kv_capacity: self.kv_capacity,
+            tier_slack_s: vec![f64::INFINITY; self.n_tiers],
+        };
+        for &id in &self.live {
+            let r = self.store.get(id);
+            debug_assert!(r.is_active(), "live set out of sync for {id}");
+            let rem = r.prefill_remaining();
+            if r.phase == Phase::Decode {
+                snap.decodes += 1;
+            }
+            snap.kv_used += r.kv_tokens() as u64;
+            if r.phase == Phase::Relegated {
+                // Sacrificed: served with leftover budget only, so its
+                // remaining work neither delays new arrivals nor counts
+                // as a distress signal.
+                snap.relegated_prefill_tokens += rem as u64;
+                continue;
+            }
+            if rem > 0 {
+                snap.backlog += 1;
+                snap.queued_prefill_tokens += rem as u64;
+            }
+            let next_deadline = if r.decoded == 0 {
+                r.deadlines().first_token()
+            } else {
+                r.next_token_deadline(self.now, r.decode_remaining().max(1))
+            };
+            let tier = r.spec.tier.min(self.n_tiers - 1);
+            let slack = next_deadline - self.now;
+            if slack < snap.tier_slack_s[tier] {
+                snap.tier_slack_s[tier] = slack;
+            }
+        }
+        // Dispatched-but-not-admitted arrivals are committed load too.
+        for (arrival_s, spec) in &self.pending[self.next_pending..] {
+            snap.backlog += 1;
+            snap.queued_prefill_tokens += spec.prompt_tokens as u64;
+            snap.kv_committed += spec.prompt_tokens as u64 + spec.decode_tokens as u64;
+            let tier = spec.tier.min(self.n_tiers - 1);
+            let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
+            let deadline = crate::qos::Deadlines::new(*arrival_s, slo).first_token();
+            let slack = deadline - self.now;
+            if slack < snap.tier_slack_s[tier] {
+                snap.tier_slack_s[tier] = slack;
+            }
+        }
+        snap.queued_prefill_s =
+            snap.queued_prefill_tokens as f64 * self.sec_per_prefill_token;
+        snap
+    }
+
+    /// Relegated requests that have not started decoding — the candidates
+    /// the cluster may hand off to a replica with spare headroom. We model
+    /// the handoff as a re-dispatch (the target re-prefills from scratch;
+    /// no KV transfer), so anything already emitting tokens stays put.
+    pub fn handoff_candidates(&self) -> Vec<RequestId> {
+        self.scheduler
+            .relegated_ids()
+            .iter()
+            .copied()
+            .filter(|&id| {
+                let r = self.store.get(id);
+                r.phase == Phase::Relegated && r.decoded == 0
+            })
+            .collect()
+    }
+
+    /// Remove a relegated, not-yet-decoding request from this replica for
+    /// re-dispatch elsewhere. The local entry becomes a `Migrated`
+    /// tombstone (excluded from metrics, KV freed); the returned spec
+    /// keeps the original arrival time so deadlines do not reset at the
+    /// target, which re-prefills the prompt from scratch.
+    pub fn migrate_out(&mut self, id: RequestId) -> RequestSpec {
+        let spec = {
+            let r = self.store.get_mut(id);
+            debug_assert_eq!(r.phase, Phase::Relegated, "only relegated requests migrate");
+            debug_assert_eq!(r.decoded, 0, "decoding requests hold live KV state");
+            r.phase = Phase::Migrated;
+            r.spec.clone()
+        };
+        self.live.remove(&id);
+        self.backend.release(id);
+        spec
+    }
+
     /// Evaluation summary at the current time.
     pub fn summary(&self, long_threshold: u32) -> Summary {
         summarize(&self.store, self.now, long_threshold, self.n_tiers)
@@ -303,6 +602,12 @@ impl<B: ExecutionBackend> Engine<B> {
 
     pub fn scheduler_backlog(&self) -> usize {
         self.scheduler.backlog()
+    }
+
+    /// Monotone relegation count from the scheduler (cluster handoff
+    /// uses it as a change signal to avoid per-iteration scans).
+    pub fn relegated_total(&self) -> usize {
+        self.scheduler.relegated_total()
     }
 }
 
@@ -438,5 +743,120 @@ mod tests {
         let mut eng = Engine::sim(&cfg);
         let id = eng.submit_now(spec(123.0, 10, 2, 0));
         assert_eq!(eng.store.get(id).spec.arrival_s, 0.0);
+    }
+
+    #[test]
+    fn next_event_time_tracks_lifecycle() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        assert_eq!(eng.next_event_time(), None, "empty engine has no events");
+        eng.enqueue(spec(5.0, 100, 2, 0));
+        assert_eq!(eng.next_event_time(), Some(5.0), "idle: next arrival");
+        eng.run(1e6);
+        assert_eq!(eng.next_event_time(), None, "drained again");
+    }
+
+    #[test]
+    fn next_event_is_now_while_active() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_now(spec(0.0, 5000, 50, 0));
+        assert_eq!(eng.next_event_time(), Some(eng.now()));
+        assert!(eng.step());
+        assert_eq!(eng.next_event_time(), Some(eng.now()));
+    }
+
+    #[test]
+    fn step_to_respects_the_bound() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.enqueue(spec(0.0, 2000, 10, 0));
+        eng.enqueue(spec(100.0, 2000, 10, 0));
+        eng.step_to(50.0);
+        // First request fully served (its iterations all start before 50),
+        // second untouched: the engine parks on its arrival event.
+        assert_eq!(eng.store.get(0).phase, Phase::Finished);
+        assert_eq!(eng.store.len(), 1, "second arrival not yet admitted");
+        assert_eq!(eng.next_event_time(), Some(100.0));
+        eng.step_to(1e6);
+        assert_eq!(eng.store.get(1).phase, Phase::Finished);
+    }
+
+    #[test]
+    fn enqueue_keeps_pending_sorted() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.enqueue(spec(10.0, 50, 2, 0));
+        eng.enqueue(spec(2.0, 50, 2, 0));
+        eng.enqueue(spec(6.0, 50, 2, 0));
+        assert_eq!(eng.next_event_time(), Some(2.0));
+        eng.run(1e6);
+        // All three admitted in arrival order and finished.
+        assert_eq!(eng.store.iter().filter(|r| r.phase == Phase::Finished).count(), 3);
+        assert_eq!(eng.store.get(0).spec.arrival_s, 2.0);
+        assert_eq!(eng.store.get(1).spec.arrival_s, 6.0);
+        assert_eq!(eng.store.get(2).spec.arrival_s, 10.0);
+    }
+
+    #[test]
+    fn load_snapshot_reports_queue_and_kv() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        let idle = eng.load_snapshot();
+        assert_eq!(idle.backlog, 0);
+        assert_eq!(idle.queued_prefill_tokens, 0);
+        assert!(idle.min_slack_s().is_infinite());
+
+        eng.submit_now(spec(0.0, 1000, 10, 0));
+        eng.enqueue(spec(50.0, 500, 10, 1)); // dispatched, not yet admitted
+        let s = eng.load_snapshot();
+        assert_eq!(s.backlog, 2, "admitted + dispatched-pending both count");
+        assert_eq!(s.queued_prefill_tokens, 1500);
+        assert_eq!(s.kv_committed, 510, "pending prompt+decode is committed KV");
+        assert!(s.queued_prefill_s > 0.0);
+        assert!(s.tier_slack_s[0].is_finite());
+        assert!(s.tier_slack_s[1].is_finite());
+        assert!(s.tier_slack_s[2].is_infinite(), "tier 2 idle");
+
+        eng.run(1e6);
+        let done = eng.load_snapshot();
+        assert_eq!(done.backlog, 0);
+        assert_eq!(done.kv_used, 0);
+        assert_eq!(done.active, 0);
+    }
+
+    #[test]
+    fn admit_migrated_is_immediate_and_keeps_history() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.advance_to(10.0);
+        let id = eng.admit_migrated(spec(4.0, 100, 2, 0));
+        // Already in the store (counted even if the engine never steps
+        // again), with deadlines from the original arrival.
+        assert_eq!(eng.store.get(id).spec.arrival_s, 4.0);
+        assert!(eng.store.get(id).was_relegated, "relegation history kept");
+        assert_eq!(eng.summary(5000).total, 1);
+        eng.run(1e6);
+        assert_eq!(eng.store.get(id).phase, Phase::Finished);
+    }
+
+    #[test]
+    fn migrate_out_leaves_tombstone_and_frees_engine() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        // Hopeless interactive request: relegated on the first plan.
+        eng.enqueue(spec(0.0, 30_000, 10, 0));
+        eng.advance_to(5.9);
+        assert!(eng.step());
+        let relegated = eng.handoff_candidates();
+        assert_eq!(relegated.len(), 1, "expected one relegated handoff candidate");
+        let spec_out = eng.migrate_out(relegated[0]);
+        assert_eq!(spec_out.prompt_tokens, 30_000);
+        assert_eq!(spec_out.arrival_s, 0.0, "deadlines must not reset");
+        assert_eq!(eng.store.get(relegated[0]).phase, Phase::Migrated);
+        // The engine no longer owes this request any work.
+        assert_eq!(eng.next_event_time(), None);
+        let s = eng.summary(5000);
+        assert_eq!(s.total, 0, "tombstone excluded from metrics");
     }
 }

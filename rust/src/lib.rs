@@ -16,6 +16,11 @@
 //!
 //! Python never runs on the request path: `make artifacts` compiles the
 //! model once; the Rust binary is self-contained afterwards.
+//!
+//! The real-execution layers ([`runtime`], [`server`]) are gated behind
+//! the `pjrt` cargo feature: the default build is the fully offline
+//! simulation stack (no PJRT plugin required), which is what CI and the
+//! paper experiments run.
 
 pub mod config;
 pub mod engine;
@@ -25,8 +30,10 @@ pub mod predictor;
 pub mod qos;
 pub mod request;
 pub mod repro;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod simulator;
 pub mod util;

@@ -14,14 +14,11 @@ use niyama::config::{Config, Policy};
 use niyama::engine::Engine;
 use niyama::predictor::LatencyPredictor;
 use niyama::repro::{self, Scale};
-use niyama::runtime::{ModelRuntime, PjrtBackend};
-use niyama::server::{listen, Server};
 use niyama::simulator::CostModel;
 use niyama::util::Rng;
 use niyama::workload::datasets::Dataset;
 use niyama::workload::WorkloadSpec;
 use std::collections::HashMap;
-use std::path::Path;
 
 struct Args {
     flags: HashMap<String, String>,
@@ -148,7 +145,20 @@ fn cmd_repro(args: &Args) -> Result<()> {
     repro::run(id, scale)
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    bail!(
+        "this binary was built without the `pjrt` feature; rebuild with \
+         `cargo build --release --features pjrt` to serve real models"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<()> {
+    use niyama::runtime::{ModelRuntime, PjrtBackend};
+    use niyama::server::{listen, Server};
+    use std::path::Path;
+
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let addr = args.get("addr").unwrap_or("127.0.0.1:7440");
     let mut cfg = load_config(args)?;
@@ -201,7 +211,7 @@ fn usage() -> &'static str {
      \n\
      serve     --artifacts DIR --addr HOST:PORT [--policy P]\n\
      simulate  --policy P --dataset D --qps N --duration S [--config FILE]\n\
-     repro     --id <fig1|fig2|fig4|fig5|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|tab1|tab3|all>\n\
+     repro     --id <fig1|fig2|fig4|fig5|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|tab1|tab3|dispatch|all>\n\
                [--quick|--full]   (or: repro --list)\n\
      calibrate\n\
      \n\

@@ -6,7 +6,7 @@
 //! (Fig. 9), goodput (Fig. 7b) and capacity search support (Fig. 7a).
 
 use crate::qos::Slo;
-use crate::request::{Request, RequestStore};
+use crate::request::{Phase, Request, RequestStore};
 use crate::util::{Quantiles, RollingQuantile};
 
 /// Violation verdict for one request at evaluation time `horizon_s`
@@ -72,6 +72,14 @@ pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: 
     let mut relegated = 0usize;
 
     for req in stores.iter().flat_map(|s| s.iter()) {
+        // A migrated request is owned (and counted) by the replica it was
+        // handed off to; the origin's tombstone would double count — the
+        // handoff copy carries `was_relegated` forward (see
+        // `Engine::admit_migrated`), so skipping the tombstone loses
+        // nothing, including the relegation tally.
+        if req.phase == Phase::Migrated {
+            continue;
+        }
         total += 1;
         let v = violated(req, horizon_s);
         if v {
@@ -312,6 +320,36 @@ mod tests {
         let s = summarize(&store, 100.0, 1000, 1);
         assert_eq!(s.violation_pct, 50.0);
         assert_eq!(s.important_violation_pct, 0.0);
+    }
+
+    #[test]
+    fn migrated_requests_not_counted() {
+        let mut store = RequestStore::new();
+        let gone = add_request(&mut store, 0.0, 100, 1, 0, INT);
+        store.get_mut(gone).phase = Phase::Migrated;
+        let kept = add_request(&mut store, 0.0, 100, 1, 0, INT);
+        finish(&mut store, kept, &[1.0]);
+        let s = summarize(&store, 100.0, 1000, 1);
+        assert_eq!(s.total, 1, "migrated tombstone must not count");
+        assert_eq!(s.violations, 0);
+    }
+
+    #[test]
+    fn handoff_copy_carries_relegation_exactly_once() {
+        let mut store = RequestStore::new();
+        // Relegated then handed off: the tombstone is skipped entirely...
+        let gone = add_request(&mut store, 0.0, 100, 1, 0, INT);
+        store.get_mut(gone).was_relegated = true;
+        store.get_mut(gone).phase = Phase::Migrated;
+        // ...and the handoff copy carries the flag (admit_migrated sets
+        // it at admission), so the request tallies once — even if the
+        // target relegates it again.
+        let kept = add_request(&mut store, 0.0, 100, 1, 0, INT);
+        store.get_mut(kept).was_relegated = true;
+        finish(&mut store, kept, &[1.0]);
+        let s = summarize(&store, 100.0, 1000, 1);
+        assert_eq!(s.total, 1);
+        assert_eq!(s.relegated_pct, 100.0, "exactly once, never > 100%");
     }
 
     #[test]

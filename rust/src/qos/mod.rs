@@ -27,6 +27,19 @@ impl Slo {
     pub fn is_interactive(&self) -> bool {
         matches!(self, Slo::Interactive { .. })
     }
+
+    /// Seconds from arrival to this SLO's binding first deadline, plus
+    /// whether decode work counts against it: `(TTFT, false)` for
+    /// interactive requests (first service meets it) and `(TTLT, true)`
+    /// for non-interactive ones, whose single deadline covers the whole
+    /// decode tail. The cluster dispatcher and the relegation-handoff
+    /// feasibility check both price requests with this one rule.
+    pub fn deadline_budget(&self) -> (f64, bool) {
+        match *self {
+            Slo::Interactive { ttft_s, .. } => (ttft_s, false),
+            Slo::NonInteractive { ttlt_s } => (ttlt_s, true),
+        }
+    }
 }
 
 /// A QoS tier: a named SLO an application signs up for.
@@ -44,6 +57,15 @@ impl QosTier {
     pub fn non_interactive(name: &str, ttlt_s: f64) -> Self {
         QosTier { name: name.to_string(), slo: Slo::NonInteractive { ttlt_s } }
     }
+}
+
+/// Resolve a request's tier index against a tier table, clamping
+/// out-of-range indices to the loosest tier. Admission, dispatch and
+/// load snapshots all resolve SLOs through this one function so a
+/// request can never be priced against a different SLO than it is
+/// admitted under.
+pub fn slo_for_tier(tiers: &[QosTier], tier: usize) -> Slo {
+    tiers[tier.min(tiers.len() - 1)].slo
 }
 
 /// The paper's Table 2 tiers: Q1 interactive (TTFT 6 s, TBT 50 ms),
@@ -191,5 +213,20 @@ mod tests {
     #[test]
     fn importance_orders() {
         assert!(Importance::Low < Importance::High);
+    }
+
+    #[test]
+    fn slo_for_tier_clamps_out_of_range() {
+        let tiers = table2_tiers();
+        assert_eq!(slo_for_tier(&tiers, 0), tiers[0].slo);
+        assert_eq!(slo_for_tier(&tiers, 99), tiers[2].slo);
+    }
+
+    #[test]
+    fn deadline_budget_rule() {
+        let int = Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
+        assert_eq!(int.deadline_budget(), (6.0, false));
+        let batch = Slo::NonInteractive { ttlt_s: 600.0 };
+        assert_eq!(batch.deadline_budget(), (600.0, true));
     }
 }

@@ -9,6 +9,7 @@
 //! EXPERIMENTS.md records paper-vs-measured for every entry.
 
 pub mod capacity;
+pub mod dispatch;
 pub mod load;
 pub mod micro;
 pub mod overload;
@@ -144,6 +145,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "fig12" => micro::fig12(scale),
         "tab1" => micro::tab1(),
         "tab3" => micro::tab3(scale),
+        "dispatch" => dispatch::dispatch(scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n=== {id} ===");
@@ -157,7 +159,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
 
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "tab1", "tab3",
+    "fig12", "tab1", "tab3", "dispatch",
 ];
 
 #[cfg(test)]

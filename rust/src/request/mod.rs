@@ -21,6 +21,11 @@ pub enum Phase {
     Relegated,
     /// All tokens emitted.
     Finished,
+    /// Handed off to another replica by the cluster dispatcher
+    /// (Llumnix-style relegation handoff). Terminal *for this store*: the
+    /// receiving replica owns a fresh copy carrying the original arrival
+    /// time, so metrics skip `Migrated` entries to avoid double counting.
+    Migrated,
 }
 
 /// Immutable trace-side description of a request.
@@ -110,7 +115,7 @@ impl Request {
     }
 
     pub fn is_active(&self) -> bool {
-        !matches!(self.phase, Phase::Finished)
+        !matches!(self.phase, Phase::Finished | Phase::Migrated)
     }
 
     /// Record one emitted output token at time `t`.
@@ -353,6 +358,18 @@ mod tests {
         r.phase = Phase::Decode;
         // 600 s budget, 10 tokens left -> 60 s per token.
         assert!((r.next_token_deadline(0.0, 10) - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn migrated_requests_are_inactive_and_leave_kv() {
+        let mut store = RequestStore::new();
+        let a = store.insert(spec(0.0, 100, 10), INTERACTIVE);
+        // Partial prefill progress so the KV-release assertion actually
+        // exercises the Migrated arm of is_active().
+        store.get_mut(a).prefilled = 60;
+        store.get_mut(a).phase = Phase::Migrated;
+        assert!(!store.get(a).is_active());
+        assert_eq!(store.total_kv_tokens(), 0);
     }
 
     #[test]

@@ -190,6 +190,21 @@ pub trait Scheduler {
 
     /// Diagnostic: requests waiting for prefill service.
     fn backlog(&self) -> usize;
+
+    /// Requests currently parked in this scheduler's relegated queue.
+    /// The cluster's cross-replica handoff scans these to find candidates
+    /// it can re-dispatch to a replica with spare headroom. Schedulers
+    /// without a relegation concept (the Sarathi baselines) report none.
+    fn relegated_ids(&self) -> &[RequestId] {
+        &[]
+    }
+
+    /// Monotone count of relegations ever performed — a cheap generation
+    /// counter the cluster uses to skip handoff scans on iterations where
+    /// nothing new was relegated.
+    fn relegated_total(&self) -> usize {
+        0
+    }
 }
 
 #[cfg(test)]

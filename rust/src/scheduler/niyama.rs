@@ -576,6 +576,14 @@ impl Scheduler for NiyamaScheduler {
     fn backlog(&self) -> usize {
         self.prefill_q.len()
     }
+
+    fn relegated_ids(&self) -> &[RequestId] {
+        &self.relegated_q
+    }
+
+    fn relegated_total(&self) -> usize {
+        self.relegated_count
+    }
 }
 
 #[cfg(test)]

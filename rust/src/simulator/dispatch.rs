@@ -1,0 +1,336 @@
+//! Global dispatch policies: how the cluster front-end routes each
+//! arrival to a replica.
+//!
+//! The dispatcher sees live [`LoadSnapshot`]s — true cluster state on the
+//! shared virtual clock, not a stale shard assignment — which is what
+//! makes load-aware and QoS-aware routing expressible at all (Llumnix's
+//! core observation: cross-instance request placement is where serving
+//! systems win at scale). Three policies ship:
+//!
+//! - [`RoundRobin`]: stateless rotation, the seed's behavior and the
+//!   standard load-oblivious baseline;
+//! - [`JoinShortestQueue`]: fewest requests awaiting prefill wins;
+//! - [`LeastLoaded`]: QoS/slack-aware — scores replicas by queued prefill
+//!   seconds, KV pressure, and per-tier slack distress, and prefers
+//!   replicas that can still meet the arrival's own deadline.
+//!
+//! All policies are deterministic: ties break toward the lowest replica
+//! index, so a fixed seed reproduces a run bit-for-bit.
+
+use crate::config::{DispatchConfig, DispatchPolicy};
+use crate::engine::LoadSnapshot;
+use crate::qos::Slo;
+use crate::request::RequestSpec;
+
+/// A cluster-level routing policy. `dispatch` returns the index of the
+/// replica that should serve `spec`; `snaps[i]` is replica `i`'s live
+/// load. `est_prefill_s` is the request's own prefill work priced at the
+/// replicas' reference rate, and `est_decode_s` its decode tail when the
+/// SLO deadline covers decoding (zero for interactive/TTFT requests) —
+/// both provided by the cluster so stateless policies need no latency
+/// model.
+pub trait Dispatcher: Send {
+    fn name(&self) -> &'static str;
+
+    /// Whether this policy reads the load snapshots at all. The cluster
+    /// skips the per-arrival snapshot refresh for policies that don't
+    /// (round-robin), keeping the default configuration as cheap as the
+    /// seed's static shard split.
+    fn needs_snapshots(&self) -> bool {
+        true
+    }
+
+    fn dispatch(
+        &mut self,
+        spec: &RequestSpec,
+        slo: Slo,
+        est_prefill_s: f64,
+        est_decode_s: f64,
+        snaps: &[LoadSnapshot],
+    ) -> usize;
+}
+
+/// Build the configured dispatcher.
+pub fn build_dispatcher(cfg: &DispatchConfig) -> Box<dyn Dispatcher> {
+    match cfg.policy {
+        DispatchPolicy::RoundRobin => Box::new(RoundRobin::new()),
+        DispatchPolicy::JoinShortestQueue => Box::new(JoinShortestQueue),
+        DispatchPolicy::LeastLoaded => Box::new(LeastLoaded),
+    }
+}
+
+/// Stateless rotation over replicas in arrival order — identical to the
+/// seed's `i % replicas` shard split.
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dispatcher for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn needs_snapshots(&self) -> bool {
+        false
+    }
+
+    fn dispatch(
+        &mut self,
+        _spec: &RequestSpec,
+        _slo: Slo,
+        _est_prefill_s: f64,
+        _est_decode_s: f64,
+        snaps: &[LoadSnapshot],
+    ) -> usize {
+        let r = self.next % snaps.len();
+        self.next = self.next.wrapping_add(1);
+        r
+    }
+}
+
+/// Route to the replica with the fewest requests awaiting prefill,
+/// breaking ties by queued prefill tokens then lowest index.
+pub struct JoinShortestQueue;
+
+impl Dispatcher for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "join-shortest-queue"
+    }
+
+    fn dispatch(
+        &mut self,
+        _spec: &RequestSpec,
+        _slo: Slo,
+        _est_prefill_s: f64,
+        _est_decode_s: f64,
+        snaps: &[LoadSnapshot],
+    ) -> usize {
+        let mut best = 0usize;
+        for (i, s) in snaps.iter().enumerate().skip(1) {
+            let b = &snaps[best];
+            if (s.backlog, s.queued_prefill_tokens) < (b.backlog, b.queued_prefill_tokens) {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// QoS/slack-aware least-loaded routing.
+///
+/// Each replica gets a pressure score: queued prefill seconds (the wait
+/// this arrival would inherit), a superlinear KV-occupancy penalty (a
+/// nearly-full cache throttles chunk budgets long before it rejects
+/// work), and a distress penalty when the replica is already past a tier
+/// deadline. Replicas predicted to still meet this request's own SLO
+/// deadline (`lag + wait + est_prefill_s + est_decode_s <= slack
+/// budget`, the decode term nonzero only for TTLT requests and `lag`
+/// the replica's clock overshoot past the arrival — matching the
+/// handoff feasibility rule in `Cluster::try_handoff`) are strictly
+/// preferred over ones that would miss it; within a class the lowest
+/// score wins, ties toward the lowest index.
+pub struct LeastLoaded;
+
+/// Cap on the already-violating distress penalty, seconds. Lateness keeps
+/// growing on a replica that has fallen behind; the penalty must not, or
+/// one bad stretch would repel traffic long after the replica recovered.
+const MAX_DISTRESS_PENALTY_S: f64 = 30.0;
+
+impl LeastLoaded {
+    /// Pressure score; lower is better.
+    pub fn score(snap: &LoadSnapshot) -> f64 {
+        let kv = snap.kv_utilization();
+        let mut score = snap.queued_prefill_s + 4.0 * kv * kv;
+        let distress = snap.min_slack_s();
+        if distress.is_finite() && distress < 0.0 {
+            score += (-distress).min(MAX_DISTRESS_PENALTY_S);
+        }
+        score
+    }
+}
+
+impl Dispatcher for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn dispatch(
+        &mut self,
+        spec: &RequestSpec,
+        slo: Slo,
+        est_prefill_s: f64,
+        est_decode_s: f64,
+        snaps: &[LoadSnapshot],
+    ) -> usize {
+        // Slack budget from the arrival's own SLO — the shared
+        // `Slo::deadline_budget` rule (the cluster prices `est_decode_s`
+        // with the same rule, so the two stay in sync by construction).
+        let (slack_budget, _) = slo.deadline_budget();
+        let deadline = spec.arrival_s + slack_budget;
+        let mut best = 0usize;
+        let mut best_feasible = false;
+        let mut best_score = f64::INFINITY;
+        for (i, s) in snaps.iter().enumerate() {
+            // A replica whose last atomic iteration overshot the arrival
+            // instant cannot start serving before its own clock.
+            let start = spec.arrival_s.max(s.now);
+            let feasible = s.feasible_for(
+                spec.prompt_tokens,
+                spec.decode_tokens,
+                start,
+                est_prefill_s,
+                est_decode_s,
+                deadline,
+            );
+            let score = Self::score(s);
+            let better = if feasible != best_feasible {
+                feasible
+            } else {
+                score < best_score
+            };
+            if better {
+                best = i;
+                best_feasible = feasible;
+                best_score = score;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::Importance;
+
+    fn snap(backlog: usize, queued_tokens: u64, queued_s: f64) -> LoadSnapshot {
+        LoadSnapshot {
+            now: 0.0,
+            active: backlog,
+            backlog,
+            queued_prefill_tokens: queued_tokens,
+            relegated_prefill_tokens: 0,
+            queued_prefill_s: queued_s,
+            decodes: 0,
+            kv_used: 0,
+            kv_committed: 0,
+            kv_capacity: 400_000,
+            tier_slack_s: vec![f64::INFINITY; 3],
+        }
+    }
+
+    fn spec() -> RequestSpec {
+        RequestSpec {
+            arrival_s: 0.0,
+            prompt_tokens: 1000,
+            decode_tokens: 10,
+            tier: 0,
+            app_id: 0,
+            importance: Importance::High,
+        }
+    }
+
+    const INT: Slo = Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut d = RoundRobin::new();
+        let snaps = vec![snap(0, 0, 0.0), snap(0, 0, 0.0), snap(0, 0, 0.0)];
+        let picks: Vec<usize> =
+            (0..6).map(|_| d.dispatch(&spec(), INT, 0.1, 0.0, &snaps)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_shortest_backlog() {
+        let mut d = JoinShortestQueue;
+        let snaps = vec![snap(4, 100, 1.0), snap(1, 900, 2.0), snap(2, 10, 0.1)];
+        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+    }
+
+    #[test]
+    fn jsq_breaks_backlog_ties_by_queued_tokens() {
+        let mut d = JoinShortestQueue;
+        let snaps = vec![snap(2, 500, 1.0), snap(2, 100, 0.3), snap(3, 0, 0.0)];
+        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+    }
+
+    #[test]
+    fn least_loaded_prefers_lowest_pressure() {
+        let mut d = LeastLoaded;
+        let snaps = vec![snap(3, 3000, 2.0), snap(1, 500, 0.4), snap(5, 8000, 5.0)];
+        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+    }
+
+    #[test]
+    fn least_loaded_prefers_feasible_over_lowest_score() {
+        let mut d = LeastLoaded;
+        // Replica 0 has the lowest pressure score but cannot meet the 6 s
+        // TTFT budget (wait 6.5 + 0.5 > 6); replica 1 scores worse (a
+        // nearly-full KV cache adds ~+3.6) yet still fits the request
+        // and meets the budget, so it must win anyway.
+        let s0 = snap(2, 9000, 6.5); // score 6.5, infeasible
+        let mut s1 = snap(4, 4000, 5.0); // 5.0 + 0.5 <= 6: feasible
+        s1.kv_used = s1.kv_capacity - 20_000; // score 5.0 + ~3.6 = ~8.6
+        let snaps = vec![s0, s1];
+        assert_eq!(d.dispatch(&spec(), INT, 0.5, 0.0, &snaps), 1);
+    }
+
+    #[test]
+    fn least_loaded_rejects_kv_saturated_replica() {
+        let mut d = LeastLoaded;
+        // Replica 0: empty queue but a cache that cannot hold the
+        // request — no time budget helps, it is infeasible outright.
+        let mut s0 = snap(0, 0, 0.0);
+        s0.kv_used = s0.kv_capacity;
+        // Replica 1: a real queue, but the request fits and meets its
+        // budget — feasibility beats replica 0's lower wait.
+        let s1 = snap(3, 3000, 2.0);
+        let snaps = vec![s0, s1];
+        assert_eq!(d.dispatch(&spec(), INT, 0.5, 0.0, &snaps), 1);
+    }
+
+    #[test]
+    fn least_loaded_penalizes_distressed_replicas() {
+        let mut d = LeastLoaded;
+        let mut distressed = snap(1, 400, 0.3);
+        distressed.tier_slack_s[0] = -5.0; // already violating Q1
+        let healthy = snap(1, 500, 0.4);
+        let snaps = vec![distressed, healthy];
+        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        let mut jsq = JoinShortestQueue;
+        let mut ll = LeastLoaded;
+        let snaps = vec![snap(2, 100, 1.0), snap(2, 100, 1.0)];
+        assert_eq!(jsq.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 0);
+        assert_eq!(ll.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 0);
+    }
+
+    #[test]
+    fn build_matches_config() {
+        use crate::config::DispatchConfig;
+        for p in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::LeastLoaded,
+        ] {
+            let d = build_dispatcher(&DispatchConfig { policy: p, relegation_handoff: false });
+            assert_eq!(d.name(), p.name());
+        }
+    }
+}

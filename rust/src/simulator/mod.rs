@@ -3,9 +3,13 @@
 //! [`cost_model`] prices one engine iteration on modelled hardware;
 //! [`SimBackend`] exposes that as an [`crate::engine::ExecutionBackend`]
 //! so the identical scheduler/engine code drives both simulation and the
-//! real PJRT runtime.
+//! real PJRT runtime. [`cluster`] interleaves many such engines on one
+//! shared virtual clock behind a global [`dispatch`] policy.
 
 pub mod cluster;
 pub mod cost_model;
+pub mod dispatch;
 
+pub use cluster::Cluster;
 pub use cost_model::{BatchShape, CostModel, PrefillSegment};
+pub use dispatch::Dispatcher;

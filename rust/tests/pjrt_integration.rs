@@ -4,7 +4,11 @@
 //!
 //! These tests require `make artifacts` to have produced `artifacts/`;
 //! they are skipped (cleanly) when the artifacts are absent so `cargo
-//! test` works in a fresh checkout.
+//! test` works in a fresh checkout. The whole file is additionally gated
+//! on the `pjrt` feature: the default offline build has no PJRT-backed
+//! `xla` crate (see rust/vendor/xla), so there is nothing to integrate
+//! against.
+#![cfg(feature = "pjrt")]
 
 use niyama::config::{Config, HardwareModel};
 use niyama::engine::Engine;

@@ -1,6 +1,9 @@
 //! Server integration: the threaded serving loop over the real PJRT
 //! engine — submissions stream back FirstToken/Done events with real
-//! generated tokens. Skipped when artifacts are absent.
+//! generated tokens. Skipped when artifacts are absent, and gated on the
+//! `pjrt` feature like the runtime itself (the default offline build has
+//! no real `xla` backend).
+#![cfg(feature = "pjrt")]
 
 use niyama::config::{Config, HardwareModel};
 use niyama::engine::Engine;

@@ -1,0 +1,122 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so this vendored shim
+//! provides the subset of `anyhow` the codebase actually uses: the
+//! [`Error`] type (a message chain), the [`Result`] alias, the `anyhow!`
+//! and `bail!` macros, and the [`Context`] extension trait. Dropping the
+//! real `anyhow` into Cargo.toml is a strict superset — nothing here
+//! relies on shim-only behavior.
+
+use std::fmt;
+
+/// A string-backed error. Context added via [`Context`] is prepended,
+/// matching `anyhow`'s `{outermost}: {cause}` display convention.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display, E: fmt::Display>(context: C, cause: E) -> Error {
+        Error { msg: format!("{context}: {cause}") }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` conversion from any std error. `Error` itself deliberately does not
+// implement `std::error::Error`, so this blanket impl cannot overlap the
+// identity `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to an error, `anyhow`-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::wrap(context, e))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::wrap(f(), e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("nope {}", "really");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope really");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+        let r2: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e2 = r2.with_context(|| format!("file {}", "x.json")).unwrap_err();
+        assert!(e2.to_string().starts_with("file x.json: "));
+    }
+}
