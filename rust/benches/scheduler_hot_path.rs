@@ -5,6 +5,11 @@
 //! per-iteration time. The L3 perf target (DESIGN.md §Perf): one
 //! scheduling decision must stay well under 1 ms so the coordinator
 //! never bottlenecks a ~25 ms GPU iteration.
+//!
+//! Besides the human-readable table, the run emits
+//! `BENCH_scheduler_hot_path.json` (override the path with
+//! `NIYAMA_BENCH_JSON`) so the perf trajectory is tracked across PRs;
+//! `NIYAMA_BENCH_ITERS` caps per-case iterations for CI smoke runs.
 
 use niyama::config::{Config, HardwareModel, Policy, SchedulerConfig};
 use niyama::predictor::LatencyPredictor;
@@ -16,7 +21,24 @@ use niyama::util::Rng;
 use std::sync::Arc;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+/// One benchmark case's summary, in microseconds per iteration.
+struct BenchStat {
+    name: String,
+    median_us: f64,
+    p99_us: f64,
+    iters_per_s: f64,
+}
+
+/// Cap on per-case iterations (`NIYAMA_BENCH_ITERS`), for smoke runs.
+fn iter_cap() -> usize {
+    std::env::var("NIYAMA_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX)
+}
+
+fn bench<F: FnMut()>(out: &mut Vec<BenchStat>, name: &str, iters: usize, mut f: F) {
+    let iters = iters.min(iter_cap()).max(3);
     // Warmup.
     for _ in 0..iters / 10 + 1 {
         f();
@@ -28,15 +50,25 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         samples.push(t0.elapsed().as_secs_f64());
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let med = samples[samples.len() / 2];
-    let p99 = samples[(samples.len() as f64 * 0.99) as usize % samples.len()];
+    let len = samples.len();
+    let med = samples[len / 2];
+    // Clamp: at small N the raw index `(len * 0.99) as usize` reaches
+    // `len` and used to wrap to sample[0] via `% len`.
+    let p99 = samples[((len as f64 * 0.99) as usize).min(len - 1)];
     let total: f64 = samples.iter().sum();
+    let iters_per_s = iters as f64 / total;
     println!(
         "{name:<44} {:>10.3} us/iter (p99 {:>10.3} us, {:>8.0} it/s)",
         med * 1e6,
         p99 * 1e6,
-        iters as f64 / total
+        iters_per_s
     );
+    out.push(BenchStat {
+        name: name.trim().to_string(),
+        median_us: med * 1e6,
+        p99_us: p99 * 1e6,
+        iters_per_s,
+    });
 }
 
 /// Build a scheduler state with `n_prefill` queued prompts and
@@ -80,17 +112,74 @@ fn populate(
     }
 }
 
+/// Escape nothing fancy: bench names are plain ASCII identifiers.
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(stats: &[BenchStat], sims: &[(String, usize, u64, f64)]) {
+    let path = std::env::var("NIYAMA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_scheduler_hot_path.json".to_string());
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"niyama-scheduler-hot-path-v1\",\n  \"cases\": [\n");
+    for (i, b) in stats.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"median_us\": {:.3}, \"p99_us\": {:.3}, \
+             \"iters_per_s\": {:.1}}}{}\n",
+            json_escape(&b.name),
+            b.median_us,
+            b.p99_us,
+            b.iters_per_s,
+            if i + 1 < stats.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"end_to_end\": [\n");
+    for (i, (name, reqs, iters, wall)) in sims.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"requests\": {}, \"iterations\": {}, \
+             \"wall_s\": {:.3}, \"iters_per_s\": {:.1}}}{}\n",
+            json_escape(name),
+            reqs,
+            iters,
+            wall,
+            *iters as f64 / wall,
+            if i + 1 < sims.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     println!("== scheduler hot path (lower is better) ==");
     let cfg = Config::default();
     let model = Arc::new(CostModel::new(HardwareModel::llama3_8b_a100()));
+    let mut stats: Vec<BenchStat> = Vec::new();
 
     for (np, nd) in [(8usize, 16usize), (64, 64), (256, 128), (1024, 256)] {
         let mut sched = NiyamaScheduler::new(cfg.scheduler.clone(), model.clone());
         let mut store = RequestStore::new();
         populate(&mut sched, &mut store, np, nd, 42);
         let ctx = PlanContext { now: 5.0, kv_capacity: 4_000_000, kv_used: 0 };
-        bench(&format!("niyama.plan  q={np:<5} decodes={nd}"), 300, || {
+        bench(&mut stats, &format!("niyama.plan  q={np:<5} decodes={nd}"), 300, || {
+            let b = sched.plan(ctx, &mut store);
+            std::hint::black_box(b);
+        });
+    }
+
+    // Reference (pre-incremental) costing on the heaviest case: the
+    // speedup ratio of the two `q=1024` rows is the PR's headline number.
+    {
+        let mut ref_cfg = cfg.scheduler.clone();
+        ref_cfg.reference_costing = true;
+        let mut sched = NiyamaScheduler::new(ref_cfg, model.clone());
+        let mut store = RequestStore::new();
+        populate(&mut sched, &mut store, 1024, 256, 42);
+        let ctx = PlanContext { now: 5.0, kv_capacity: 4_000_000, kv_used: 0 };
+        bench(&mut stats, "niyama.plan  q=1024  decodes=256 (reference)", 100, || {
             let b = sched.plan(ctx, &mut store);
             std::hint::black_box(b);
         });
@@ -105,7 +194,7 @@ fn main() {
         let mut store = RequestStore::new();
         populate(&mut sched, &mut store, 256, 128, 43);
         let ctx = PlanContext { now: 5.0, kv_capacity: 4_000_000, kv_used: 0 };
-        bench(&format!("sarathi.plan {policy:?} q=256 decodes=128"), 300, || {
+        bench(&mut stats, &format!("sarathi.plan {policy:?} q=256 decodes=128"), 300, || {
             let b = sched.plan(ctx, &mut store);
             std::hint::black_box(b);
         });
@@ -116,11 +205,18 @@ fn main() {
     let mut shape = BatchShape::default();
     shape.prefill.push(PrefillSegment { cache_len: 2048, chunk: 256 });
     shape.decode_kv_lens = (0..128).map(|i| 256 + i * 16).collect();
-    bench("cost_model.iteration_latency (128 decodes)", 10_000, || {
+    bench(&mut stats, "cost_model.iteration_latency (128 decodes)", 10_000, || {
         std::hint::black_box(cm.iteration_latency(&shape));
     });
+    {
+        use niyama::simulator::BatchStats;
+        let st = BatchStats::from_shape(&shape);
+        bench(&mut stats, "cost_model.latency_from_stats (128 decodes)", 10_000, || {
+            std::hint::black_box(cm.latency_from_stats(&st));
+        });
+    }
     let pred = LatencyPredictor::calibrate(&cm, 0);
-    bench("predictor.predict            (128 decodes)", 10_000, || {
+    bench(&mut stats, "predictor.predict            (128 decodes)", 10_000, || {
         std::hint::black_box(pred.predict(&shape));
     });
 
@@ -161,13 +257,16 @@ fn main() {
                 DispatchPolicy::RoundRobin,
                 DispatchPolicy::JoinShortestQueue,
                 DispatchPolicy::LeastLoaded,
+                DispatchPolicy::PowerOfTwoChoices,
             ] {
                 let mut d = build_dispatcher(&DispatchConfig {
                     policy,
                     relegation_handoff: false,
+                    seed: 0,
                 });
                 bench(
-                    &format!("dispatch.{:<19} replicas={replicas}", policy.name()),
+                    &mut stats,
+                    &format!("dispatch.{:<21} replicas={replicas}", policy.name()),
                     10_000,
                     || {
                         std::hint::black_box(d.dispatch(&spec, slo, 0.4, 0.0, &snaps));
@@ -181,12 +280,14 @@ fn main() {
     use niyama::engine::Engine;
     use niyama::workload::datasets::Dataset;
     use niyama::workload::WorkloadSpec;
+    let mut sims: Vec<(String, usize, u64, f64)> = Vec::new();
+    let sim_duration = if iter_cap() < 300 { 30.0 } else { 300.0 };
     for (name, policy) in [("niyama", None), ("sarathi-fcfs", Some(Policy::SarathiFcfs))] {
         let mut c = Config::default();
         if let Some(p) = policy {
             c.scheduler = SchedulerConfig::sarathi(p, 256);
         }
-        let spec = WorkloadSpec::uniform(Dataset::azure_code(), 3.0, 300.0);
+        let spec = WorkloadSpec::uniform(Dataset::azure_code(), 3.0, sim_duration);
         let trace = spec.generate(&mut Rng::new(9));
         let n = trace.len();
         let t0 = Instant::now();
@@ -200,5 +301,8 @@ fn main() {
             eng.stats.iterations as f64 / wall,
             eng.now() / wall
         );
+        sims.push((format!("sim.{name}"), n, eng.stats.iterations, wall));
     }
+
+    write_json(&stats, &sims);
 }

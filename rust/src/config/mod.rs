@@ -178,6 +178,11 @@ pub struct SchedulerConfig {
     pub relegation_cap: f64,
     /// Safety margin subtracted from predicted latency headroom, seconds.
     pub slack_margin_s: f64,
+    /// Price scheduling probes by re-evaluating the full batch shape
+    /// instead of the O(1) incremental accumulator. Slow — exists only
+    /// as the oracle the equivalence tests hold the fast path against;
+    /// never enable it in experiments.
+    pub reference_costing: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -195,6 +200,7 @@ impl Default for SchedulerConfig {
             selective_preemption: true,
             relegation_cap: 1.0,
             slack_margin_s: 2.0e-3,
+            reference_costing: false,
         }
     }
 }
@@ -231,6 +237,11 @@ pub enum DispatchPolicy {
     /// seconds, KV pressure, per-tier slack headroom), preferring
     /// replicas that can still meet the arrival's deadline.
     LeastLoaded,
+    /// Sample two random replicas, route to the lower-pressure one
+    /// (the `LeastLoaded` score on just the pair). O(1) per arrival
+    /// regardless of replica count — the classic balanced-allocations
+    /// result keeps the max load within O(log log R) of optimal.
+    PowerOfTwoChoices,
 }
 
 impl DispatchPolicy {
@@ -239,6 +250,7 @@ impl DispatchPolicy {
             "round-robin" | "rr" => DispatchPolicy::RoundRobin,
             "join-shortest-queue" | "jsq" => DispatchPolicy::JoinShortestQueue,
             "least-loaded" | "ll" => DispatchPolicy::LeastLoaded,
+            "power-of-two-choices" | "p2c" => DispatchPolicy::PowerOfTwoChoices,
             other => bail!("unknown dispatch policy '{other}'"),
         })
     }
@@ -248,6 +260,7 @@ impl DispatchPolicy {
             DispatchPolicy::RoundRobin => "round-robin",
             DispatchPolicy::JoinShortestQueue => "join-shortest-queue",
             DispatchPolicy::LeastLoaded => "least-loaded",
+            DispatchPolicy::PowerOfTwoChoices => "power-of-two-choices",
         }
     }
 }
@@ -259,13 +272,16 @@ pub struct DispatchConfig {
     /// Llumnix-style cross-replica relegation handoff: requests a replica
     /// relegates may be re-dispatched to a replica with spare headroom.
     pub relegation_handoff: bool,
+    /// Seed for randomized policies (power-of-two-choices sampling);
+    /// runs are bit-reproducible for a fixed seed.
+    pub seed: u64,
 }
 
 impl Default for DispatchConfig {
     fn default() -> Self {
         // Round-robin without handoff reproduces the seed's static shard
         // split exactly, so existing experiments are unchanged by default.
-        DispatchConfig { policy: DispatchPolicy::RoundRobin, relegation_handoff: false }
+        DispatchConfig { policy: DispatchPolicy::RoundRobin, relegation_handoff: false, seed: 0 }
     }
 }
 
@@ -364,6 +380,9 @@ impl Config {
                 cfg.cluster.dispatch.policy = DispatchPolicy::parse(p)?;
             }
             override_bool(c, "relegation_handoff", &mut cfg.cluster.dispatch.relegation_handoff);
+            if let Some(v) = c.get("dispatch_seed").and_then(|v| v.as_f64()) {
+                cfg.cluster.dispatch.seed = v as u64;
+            }
         }
 
         if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
@@ -538,9 +557,20 @@ mod tests {
             DispatchPolicy::RoundRobin,
             DispatchPolicy::JoinShortestQueue,
             DispatchPolicy::LeastLoaded,
+            DispatchPolicy::PowerOfTwoChoices,
         ] {
             assert_eq!(DispatchPolicy::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn json_dispatch_seed_override() {
+        let c = Config::from_json_str(
+            r#"{"cluster": {"replicas": 4, "dispatch": "p2c", "dispatch_seed": 99}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.cluster.dispatch.policy, DispatchPolicy::PowerOfTwoChoices);
+        assert_eq!(c.cluster.dispatch.seed, 99);
     }
 
     #[test]

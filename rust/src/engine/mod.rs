@@ -30,7 +30,7 @@ use crate::request::{Phase, RequestId, RequestSpec, RequestStore};
 use crate::scheduler::{
     Batch, NiyamaScheduler, PlanContext, SarathiPolicy, SarathiScheduler, Scheduler,
 };
-use crate::simulator::{BatchShape, CostModel};
+use crate::simulator::{BatchStats, CostModel, PrefillSegment};
 use std::sync::Arc;
 
 /// Result of executing one batch.
@@ -64,8 +64,10 @@ impl SimBackend {
 
 impl ExecutionBackend for SimBackend {
     fn execute(&mut self, batch: &Batch, store: &RequestStore) -> IterationResult {
-        let shape: BatchShape = batch.shape(store);
-        IterationResult { latency_s: self.model.iteration_latency(&shape) }
+        // Sufficient statistics instead of a materialized shape: same
+        // latency bit-for-bit, no per-iteration segment vectors.
+        let stats: BatchStats = batch.stats(store);
+        IterationResult { latency_s: self.model.latency_from_stats(&stats) }
     }
 
     fn release(&mut self, _id: RequestId) {}
@@ -239,14 +241,13 @@ impl<B: ExecutionBackend> Engine<B> {
         // price for queued work, not an exact latency.
         let model = CostModel::new(cfg.hardware.clone());
         let chunk = cfg.scheduler.chunk_size.max(1);
-        let mut shape = BatchShape::default();
-        shape.prefill.push(crate::simulator::PrefillSegment { cache_len: 512, chunk });
-        let sec_per_prefill_token = model.iteration_latency(&shape) / chunk as f64;
+        let pstats = BatchStats::default().with_prefill(PrefillSegment { cache_len: 512, chunk });
+        let sec_per_prefill_token = model.latency_from_stats(&pstats) / chunk as f64;
         // One decode token costs one batched iteration of wall clock
         // (every sequence in the batch advances together).
-        let mut dshape = BatchShape::default();
-        dshape.decode_kv_lens = vec![1024; 32];
-        let sec_per_decode_token = model.iteration_latency(&dshape);
+        let mut dstats = BatchStats::default();
+        dstats.push_decodes(1024, 32);
+        let sec_per_decode_token = model.latency_from_stats(&dstats);
 
         Engine {
             store: RequestStore::new(),

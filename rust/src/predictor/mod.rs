@@ -8,7 +8,7 @@
 //! backend-agnostic — calibrate against the simulator for experiments or
 //! against the real PJRT runtime for serving.
 
-use crate::simulator::cost_model::{BatchShape, CostModel};
+use crate::simulator::cost_model::{BatchShape, BatchStats, CostModel};
 use crate::util::linalg::ridge_fit;
 use crate::util::Rng;
 
@@ -20,21 +20,20 @@ pub const N_FEATURES: usize = 6;
 /// [1, prefill_tokens, n_decodes, decode_kv_sum/1e3,
 ///  prefill_attn_reads/1e6, total_tokens^2/1e6]
 pub fn features(batch: &BatchShape) -> [f64; N_FEATURES] {
-    let prefill_tokens = batch.total_prefill_tokens() as f64;
-    let n_decodes = batch.decode_kv_lens.len() as f64;
-    let decode_kv_sum: f64 = batch.decode_kv_lens.iter().map(|&k| k as f64).sum();
-    let mut attn_reads = 0.0;
-    for seg in &batch.prefill {
-        let c = seg.chunk as f64;
-        attn_reads += c * seg.cache_len as f64 + 0.5 * c * (c + 1.0);
-    }
-    let total = prefill_tokens + n_decodes;
+    features_from_stats(&BatchStats::from_shape(batch))
+}
+
+/// Features from a batch's sufficient statistics — every feature is a
+/// function of the running sums [`BatchStats`] maintains, which is what
+/// makes the fitted predictor usable on the scheduler's O(1) probe path.
+pub fn features_from_stats(stats: &BatchStats) -> [f64; N_FEATURES] {
+    let total = stats.total_tokens();
     [
         1.0,
-        prefill_tokens,
-        n_decodes,
-        decode_kv_sum / 1e3,
-        attn_reads / 1e6,
+        stats.prefill_tokens,
+        stats.n_decodes as f64,
+        stats.decode_kv_sum / 1e3,
+        stats.prefill_attn_reads / 1e6,
         total * total / 1e6,
     ]
 }
@@ -50,7 +49,13 @@ pub struct LatencyPredictor {
 impl LatencyPredictor {
     /// Predict iteration latency in seconds.
     pub fn predict(&self, batch: &BatchShape) -> f64 {
-        let f = features(batch);
+        self.predict_stats(&BatchStats::from_shape(batch))
+    }
+
+    /// Predict from sufficient statistics (O(1), allocation-free — the
+    /// scheduler's incremental probe path).
+    pub fn predict_stats(&self, stats: &BatchStats) -> f64 {
+        let f = features_from_stats(stats);
         let mut y = 0.0;
         for i in 0..N_FEATURES {
             y += self.weights[i] * f[i];
@@ -181,6 +186,19 @@ mod tests {
         let p = LatencyPredictor::calibrate(&m, 0);
         let tiny = shape(1, 0, 0, 0);
         assert!(p.predict(&tiny) > 0.0);
+    }
+
+    #[test]
+    fn predict_stats_matches_predict() {
+        let m = model();
+        let p = LatencyPredictor::calibrate(&m, 0);
+        for (c, s0, nd, kv) in
+            [(0u32, 0u32, 12usize, 640u32), (256, 2048, 32, 1024), (1024, 0, 0, 0)]
+        {
+            let b = shape(c, s0, nd, kv);
+            let stats = BatchStats::from_shape(&b);
+            assert_eq!(p.predict_stats(&stats), p.predict(&b));
+        }
     }
 
     #[test]

@@ -5,10 +5,11 @@
 //! heavy stream* — every 8th arrival is a long-prompt job, which under
 //! 4-way round-robin rotation lands on the same replica every time (the
 //! classic adversarial case for load-oblivious front-ends). Load-aware
-//! dispatch (join-shortest-queue, and the QoS/slack-aware least-loaded
-//! policy) routes around the hot replica using live load snapshots;
-//! enabling Llumnix-style relegation handoff additionally lets an
-//! overloaded replica re-dispatch requests it has already given up on.
+//! dispatch (join-shortest-queue, O(1) power-of-two-choices sampling,
+//! and the QoS/slack-aware least-loaded policy) routes around the hot
+//! replica using live load snapshots; enabling Llumnix-style relegation
+//! handoff additionally lets an overloaded replica re-dispatch requests
+//! it has already given up on.
 //!
 //! Expected shape: violations drop monotonically from round-robin to
 //! least-loaded(+handoff); the gap concentrates in the burst window.
@@ -76,6 +77,7 @@ pub fn dispatch(scale: Scale) -> Result<()> {
     for (policy, handoff) in [
         (DispatchPolicy::RoundRobin, false),
         (DispatchPolicy::JoinShortestQueue, false),
+        (DispatchPolicy::PowerOfTwoChoices, false),
         (DispatchPolicy::LeastLoaded, false),
         (DispatchPolicy::LeastLoaded, true),
     ] {

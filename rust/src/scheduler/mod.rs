@@ -11,7 +11,7 @@ pub mod niyama;
 pub mod sarathi;
 
 use crate::request::{RequestId, RequestStore};
-use crate::simulator::cost_model::BatchShape;
+use crate::simulator::cost_model::{BatchShape, BatchStats, PrefillSegment};
 use crate::util::OnlineStats;
 use std::collections::HashMap;
 
@@ -27,7 +27,7 @@ pub struct PrefillWork {
 }
 
 /// The scheduler's output: one iteration's worth of work.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Batch {
     pub prefill: Vec<PrefillWork>,
     pub decodes: Vec<RequestId>,
@@ -47,10 +47,7 @@ impl Batch {
         let mut shape = BatchShape::default();
         for w in &self.prefill {
             let r = store.get(w.id);
-            shape.prefill.push(crate::simulator::cost_model::PrefillSegment {
-                cache_len: r.kv_tokens(),
-                chunk: w.tokens,
-            });
+            shape.prefill.push(PrefillSegment { cache_len: r.kv_tokens(), chunk: w.tokens });
         }
         for &id in &self.decodes {
             let r = store.get(id);
@@ -58,6 +55,22 @@ impl Batch {
             shape.decode_kv_lens.push(r.kv_tokens() + 1);
         }
         shape
+    }
+
+    /// The batch's sufficient statistics — same accounting as
+    /// [`Batch::shape`] without materializing the segment vectors
+    /// (allocation-free; used by the simulation backend every iteration).
+    pub fn stats(&self, store: &RequestStore) -> BatchStats {
+        let mut stats = BatchStats::default();
+        for w in &self.prefill {
+            let r = store.get(w.id);
+            stats.push_prefill(PrefillSegment { cache_len: r.kv_tokens(), chunk: w.tokens });
+        }
+        for &id in &self.decodes {
+            let r = store.get(id);
+            stats.push_decode(r.kv_tokens() + 1);
+        }
+        stats
     }
 }
 
@@ -79,19 +92,34 @@ impl PlanContext {
 /// Iteration latency oracle used for slack computation and work
 /// estimates. Implemented by the analytic [`CostModel`] (simulation) and
 /// the fitted [`LatencyPredictor`] (real runtime).
+///
+/// Both entry points must agree: `latency(shape)` ==
+/// `latency_from_stats(BatchStats::from_shape(shape))`. The stats form
+/// is what makes the scheduler's chunk probes O(1) instead of O(batch).
 pub trait LatencyModel: Send + Sync {
     fn latency(&self, batch: &BatchShape) -> f64;
+
+    /// Latency from a batch's sufficient statistics (O(1) query).
+    fn latency_from_stats(&self, stats: &BatchStats) -> f64;
 }
 
 impl LatencyModel for crate::simulator::CostModel {
     fn latency(&self, batch: &BatchShape) -> f64 {
         self.iteration_latency(batch)
     }
+
+    fn latency_from_stats(&self, stats: &BatchStats) -> f64 {
+        crate::simulator::CostModel::latency_from_stats(self, stats)
+    }
 }
 
 impl LatencyModel for crate::predictor::LatencyPredictor {
     fn latency(&self, batch: &BatchShape) -> f64 {
         self.predict(batch)
+    }
+
+    fn latency_from_stats(&self, stats: &BatchStats) -> f64 {
+        self.predict_stats(stats)
     }
 }
 
@@ -105,20 +133,19 @@ pub struct WorkEstimator<'a> {
 
 impl<'a> WorkEstimator<'a> {
     /// Seconds to prefill `tokens` starting from cache offset `cache_len`.
-    /// Closed form: iteration count × latency of a representative chunk at
-    /// the mid-point cache offset (one latency call; this runs O(queue)
-    /// times per scheduling decision).
+    /// Closed form: iteration count × latency of a representative chunk
+    /// at the mid-point cache offset. One O(1) stats query, no
+    /// allocation — this runs O(queue) times per scheduling decision.
     pub fn prefill_time(&self, tokens: u32, cache_len: u32) -> f64 {
         if tokens == 0 {
             return 0.0;
         }
         let iters = (tokens as f64 / self.ref_chunk as f64).ceil();
-        let mut b = BatchShape::default();
-        b.prefill.push(crate::simulator::cost_model::PrefillSegment {
+        let stats = BatchStats::default().with_prefill(PrefillSegment {
             cache_len: cache_len + tokens / 2,
             chunk: self.ref_chunk.min(tokens),
         });
-        iters * self.model.latency(&b)
+        iters * self.model.latency_from_stats(&stats)
     }
 
     /// Seconds to emit `tokens` decode tokens at KV length ~`kv_len` in a
@@ -127,12 +154,12 @@ impl<'a> WorkEstimator<'a> {
         if tokens == 0 {
             return 0.0;
         }
-        let mut b = BatchShape::default();
-        b.decode_kv_lens = vec![kv_len.max(1); batch_hint.max(1)];
+        let mut stats = BatchStats::default();
+        stats.push_decodes(kv_len.max(1), batch_hint.max(1));
         // The whole batch advances together: one iteration yields one
         // token for every sequence, so per-token time is the iteration
         // latency itself.
-        tokens as f64 * self.model.latency(&b)
+        tokens as f64 * self.model.latency_from_stats(&stats)
     }
 }
 

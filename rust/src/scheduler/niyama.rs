@@ -14,15 +14,16 @@
 //!     guarding in-flight prefills against harmful preemption,
 //!  7. spend leftover budget / decode slots on relegated requests.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::{
     AppHistory, Batch, LatencyModel, PlanContext, PrefillWork, Scheduler, WorkEstimator,
 };
 use crate::config::SchedulerConfig;
-use crate::request::{Phase, RequestId, RequestStore};
-use crate::simulator::cost_model::{BatchShape, PrefillSegment};
 use crate::qos::{Importance, Slo};
+use crate::request::{Phase, RequestId, RequestStore};
+use crate::simulator::cost_model::{BatchShape, BatchStats, PrefillSegment};
 
 /// Smallest chunk the dynamic solver will consider (progress guarantee).
 const MIN_CHUNK: u32 = 16;
@@ -44,9 +45,77 @@ pub struct NiyamaScheduler {
     inflight: Option<RequestId>,
     relegated_count: usize,
     total_seen: usize,
+    /// Per-request prefill-work estimate `(prefilled_watermark, work_s)`,
+    /// invalidated when the watermark moves — a cache hit costs a hash
+    /// lookup instead of a latency-model evaluation, and the priority /
+    /// feasibility passes hit it O(queue) times per plan.
+    work_cache: HashMap<RequestId, (u32, f64)>,
+    /// Running sum of cached work over `prefill_q` (the adaptive-alpha
+    /// backlog signal), maintained on arrival/departure/progress instead
+    /// of re-estimated from scratch every plan.
+    backlog_s: f64,
     /// Scratch buffers reused across iterations (hot path: no allocation
     /// in steady state).
     scratch_order: Vec<(f64, RequestId)>,
+    scratch_ids: Vec<RequestId>,
+}
+
+/// Prices candidate batches on the plan hot path. The default mode keeps
+/// [`BatchStats`] running sums so "what would the iteration cost with
+/// this segment added?" is an O(1) query; `reference` mode re-evaluates
+/// a materialized [`BatchShape`] per probe (O(batch)) and exists only as
+/// the oracle the equivalence tests hold the fast path against — the two
+/// agree bit-for-bit because `iteration_latency` is itself defined over
+/// the same sufficient statistics.
+struct BatchCoster<'a> {
+    model: &'a dyn LatencyModel,
+    stats: BatchStats,
+    shape: Option<BatchShape>,
+}
+
+impl<'a> BatchCoster<'a> {
+    fn new(model: &'a dyn LatencyModel, reference: bool) -> Self {
+        BatchCoster {
+            model,
+            stats: BatchStats::default(),
+            shape: if reference { Some(BatchShape::default()) } else { None },
+        }
+    }
+
+    fn push_decode(&mut self, kv: u32) {
+        self.stats.push_decode(kv);
+        if let Some(shape) = &mut self.shape {
+            shape.decode_kv_lens.push(kv);
+        }
+    }
+
+    fn push_prefill(&mut self, seg: PrefillSegment) {
+        self.stats.push_prefill(seg);
+        if let Some(shape) = &mut self.shape {
+            shape.prefill.push(seg);
+        }
+    }
+
+    /// Latency of the current contents.
+    fn latency(&self) -> f64 {
+        match &self.shape {
+            Some(shape) => self.model.latency(shape),
+            None => self.model.latency_from_stats(&self.stats),
+        }
+    }
+
+    /// Latency as if `seg` were added, without committing it.
+    fn latency_with(&mut self, seg: PrefillSegment) -> f64 {
+        match &mut self.shape {
+            Some(shape) => {
+                shape.prefill.push(seg);
+                let lat = self.model.latency(shape);
+                shape.prefill.pop();
+                lat
+            }
+            None => self.model.latency_from_stats(&self.stats.with_prefill(seg)),
+        }
+    }
 }
 
 impl NiyamaScheduler {
@@ -61,7 +130,10 @@ impl NiyamaScheduler {
             inflight: None,
             relegated_count: 0,
             total_seen: 0,
+            work_cache: HashMap::new(),
+            backlog_s: 0.0,
             scratch_order: Vec::new(),
+            scratch_ids: Vec::new(),
         }
     }
 
@@ -75,12 +147,41 @@ impl NiyamaScheduler {
 
     /// Drop finished/relegated entries; decode-queue admission happens via
     /// the `on_prefill_complete` engine callback (no store scans here —
-    /// this runs every iteration).
+    /// this runs every iteration). Reconciles the per-request work cache
+    /// and the running `backlog_s` sum in the same pass: a queued entry
+    /// re-prices only when its `prefilled` watermark moved, so the
+    /// steady-state cost is O(queue) compares with no model evaluations.
     fn sync(&mut self, store: &RequestStore) {
-        self.prefill_q.retain(|&id| {
+        let mut kept = 0;
+        for i in 0..self.prefill_q.len() {
+            let id = self.prefill_q[i];
             let r = store.get(id);
-            r.phase == Phase::Prefill && r.prefill_remaining() > 0
-        });
+            if r.phase == Phase::Prefill && r.prefill_remaining() > 0 {
+                let fresh = match self.work_cache.get(&id) {
+                    Some(&(prefilled, _)) => prefilled == r.prefilled,
+                    None => false,
+                };
+                if !fresh {
+                    if let Some((_, old_w)) = self.work_cache.remove(&id) {
+                        self.backlog_s -= old_w;
+                    }
+                    let w = self.estimator().prefill_time(r.prefill_remaining(), r.prefilled);
+                    self.work_cache.insert(id, (r.prefilled, w));
+                    self.backlog_s += w;
+                }
+                self.prefill_q[kept] = id;
+                kept += 1;
+            } else if let Some((_, w)) = self.work_cache.remove(&id) {
+                self.backlog_s -= w;
+            }
+        }
+        self.prefill_q.truncate(kept);
+        if self.prefill_q.is_empty() {
+            // Resync: the running sum accumulates f64 rounding from
+            // add/remove pairs; pin it back to the exact value whenever
+            // the queue drains so drift is bounded to one busy period.
+            self.backlog_s = 0.0;
+        }
         self.decode_q.retain(|&id| store.get(id).phase == Phase::Decode);
         self.relegated_q.retain(|&id| store.get(id).is_active());
     }
@@ -119,18 +220,18 @@ impl NiyamaScheduler {
 
     /// Hybrid priority (eqs. 4–5); smaller = more urgent.
     /// `decode_tok_s` is the per-token decode latency of the *current*
-    /// batch, computed once per plan (perf: this runs O(queue) times per
-    /// iteration; see EXPERIMENTS.md §Perf).
+    /// batch and `prefill_rem_s` the request's cached remaining-work
+    /// estimate — both supplied by the caller, so this is arithmetic
+    /// only (it runs O(queue) times per iteration).
     fn priority(
         &self,
         id: RequestId,
         store: &RequestStore,
         alpha: f64,
         decode_tok_s: f64,
+        prefill_rem_s: f64,
     ) -> f64 {
         let r = store.get(id);
-        let est = self.estimator();
-        let prefill_rem_s = est.prefill_time(r.prefill_remaining(), r.prefilled);
         match r.slo {
             Slo::Interactive { ttft_s, .. } => {
                 // Eq. (4): P = t_arr + SLO_TTFT + alpha * Prefill_rem.
@@ -171,15 +272,20 @@ impl NiyamaScheduler {
     /// case — a 2048-token chunk is a ~100 ms quantum, long enough to
     /// blow a TTFT deadline that a fixed-256 scheduler never threatens).
     ///
-    /// `head` is the highest-priority prefill candidate: (remaining
-    /// prefill tokens, seconds until its first-token deadline).
+    /// `coster` holds the decode batch; every probe is one O(1) query
+    /// against it. `head` is the earliest-TTFT prefill candidate:
+    /// (remaining prefill tokens, seconds until its first-token deadline,
+    /// its own KV cache offset). The completion constraint prices the
+    /// chunk at the *candidate's* offset — the candidate need not be the
+    /// queue head, and pricing it at the queue head's offset under-read
+    /// the cost of candidates sitting deep in long prompts.
     fn solve_chunk_budget(
         &self,
-        store: &RequestStore,
-        decodes: &[RequestId],
+        coster: &mut BatchCoster,
+        n_decodes: usize,
         slack: Option<f64>,
         head_cache_len: u32,
-        head: Option<(u32, f64)>,
+        head: Option<(u32, f64, u32)>,
     ) -> u32 {
         if !self.cfg.dynamic_chunking {
             return self.cfg.chunk_size;
@@ -195,28 +301,24 @@ impl NiyamaScheduler {
             return max_chunk;
         }
 
-        let mut decode_kv: Vec<u32> = Vec::with_capacity(decodes.len());
-        for &id in decodes {
-            decode_kv.push(store.get(id).kv_tokens() + 1);
-        }
-        let predict = |chunk: u32| {
-            let mut b = BatchShape { prefill: Vec::new(), decode_kv_lens: decode_kv.clone() };
-            if chunk > 0 {
-                b.prefill.push(PrefillSegment { cache_len: head_cache_len, chunk });
-            }
-            self.model.latency(&b)
-        };
-        let fits = |chunk: u32| {
-            let lat = predict(chunk);
+        let mut fits = |chunk: u32| {
+            let lat = coster.latency_with(PrefillSegment { cache_len: head_cache_len, chunk });
             if lat > decode_budget_s {
                 return false;
             }
-            // If this chunk would complete the head request's prefill,
+            // If this chunk would complete the head candidate's prefill,
             // its first token lands at iteration end — which must not
             // overshoot its TTFT deadline.
-            if let Some((head_rem, head_ttft_slack)) = head {
-                if chunk >= head_rem && lat > head_ttft_slack.max(0.0) {
-                    return false;
+            if let Some((head_rem, head_ttft_slack, head_cache)) = head {
+                if chunk >= head_rem {
+                    let lat_head = if head_cache == head_cache_len {
+                        lat
+                    } else {
+                        coster.latency_with(PrefillSegment { cache_len: head_cache, chunk })
+                    };
+                    if lat_head > head_ttft_slack.max(0.0) {
+                        return false;
+                    }
                 }
             }
             true
@@ -226,7 +328,7 @@ impl NiyamaScheduler {
             // Even the smallest chunk would blow a deadline: run
             // decode-only this iteration (prefill waits) — unless there
             // are no decodes, where progress beats perfection.
-            return if decodes.is_empty() { MIN_CHUNK } else { 0 };
+            return if n_decodes == 0 { MIN_CHUNK } else { 0 };
         }
         if fits(max_chunk) {
             return max_chunk;
@@ -247,10 +349,17 @@ impl NiyamaScheduler {
 
     /// Feasibility of a prefill-phase request given `wait_s` seconds of
     /// higher-priority work queued ahead of it (violation checker, §3.1).
-    fn feasible(&self, id: RequestId, now: f64, wait_s: f64, store: &RequestStore, inflation: f64, decode_tok_s: f64) -> bool {
+    fn feasible(
+        &self,
+        id: RequestId,
+        now: f64,
+        wait_s: f64,
+        store: &RequestStore,
+        inflation: f64,
+        decode_tok_s: f64,
+    ) -> bool {
         let r = store.get(id);
-        let est = self.estimator();
-        let prefill_s = est.prefill_time(r.prefill_remaining(), r.prefilled) * inflation;
+        let prefill_s = self.work_s(id, store) * inflation;
         match r.slo {
             Slo::Interactive { ttft_s, .. } => {
                 now + wait_s + prefill_s <= r.spec.arrival_s + ttft_s
@@ -264,15 +373,30 @@ impl NiyamaScheduler {
     }
 
     /// Estimated seconds of prefill work a request still needs (used for
-    /// backlog/adaptive alpha and the W-accounting pass).
+    /// backlog/adaptive alpha and the W-accounting pass). Served from the
+    /// per-request cache `sync` keeps fresh; the fallback recompute only
+    /// fires for ids outside the prefill queue. Reference mode always
+    /// recomputes, so the equivalence tests also catch stale-cache bugs
+    /// (a correct cache is bit-identical to the fresh estimate).
     fn work_s(&self, id: RequestId, store: &RequestStore) -> f64 {
         let r = store.get(id);
+        if !self.cfg.reference_costing {
+            if let Some(&(prefilled, w)) = self.work_cache.get(&id) {
+                if prefilled == r.prefilled {
+                    return w;
+                }
+            }
+        }
         self.estimator().prefill_time(r.prefill_remaining(), r.prefilled)
     }
 }
 
 impl Scheduler for NiyamaScheduler {
-    fn on_arrival(&mut self, id: RequestId, _store: &RequestStore) {
+    fn on_arrival(&mut self, id: RequestId, store: &RequestStore) {
+        let r = store.get(id);
+        let w = self.estimator().prefill_time(r.prefill_remaining(), r.prefilled);
+        self.work_cache.insert(id, (r.prefilled, w));
+        self.backlog_s += w;
         self.prefill_q.push(id);
         self.total_seen += 1;
     }
@@ -316,7 +440,9 @@ impl Scheduler for NiyamaScheduler {
             .unwrap_or(0);
         // Earliest-TTFT interactive prefill that could *complete* inside
         // this iteration: its first token lands at iteration end, so the
-        // iteration must not outlive its deadline.
+        // iteration must not outlive its deadline. Carries its own cache
+        // offset — the chunk solver prices the completion at *this*
+        // request's prefix, not the queue head's.
         let head = self
             .prefill_q
             .iter()
@@ -326,13 +452,27 @@ impl Scheduler for NiyamaScheduler {
                     Slo::Interactive { ttft_s, .. }
                         if r.prefill_remaining() <= self.cfg.max_chunk_size =>
                     {
-                        Some((r.prefill_remaining(), r.spec.arrival_s + ttft_s - now))
+                        let slack_s = r.spec.arrival_s + ttft_s - now;
+                        Some((r.prefill_remaining(), slack_s, r.kv_tokens()))
                     }
                     _ => None,
                 }
             })
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        let mut budget = self.solve_chunk_budget(store, &decodes, slack, head_cache, head);
+
+        // Decode-batch coster, built ONCE (O(batch)): every chunk probe
+        // below — budget solver, inflation estimate, fill loop — is an
+        // O(1) incremental query against it instead of a decode-vector
+        // clone plus a full O(batch) latency re-evaluation.
+        let model = Arc::clone(&self.model);
+        let reference = self.cfg.reference_costing;
+        let mut coster = BatchCoster::new(model.as_ref(), reference);
+        for &id in &decodes {
+            coster.push_decode(store.get(id).kv_tokens() + 1);
+        }
+
+        let mut budget =
+            self.solve_chunk_budget(&mut coster, decodes.len(), slack, head_cache, head);
 
         // Memory guard: every prefill token + every decode token extends
         // the KV cache.
@@ -341,49 +481,36 @@ impl Scheduler for NiyamaScheduler {
 
         // ---- hybrid priority ordering + violation checker ----------------
         // Per-token decode latency of the current batch, computed ONCE:
-        // priority/feasibility run O(queue) times per plan and previously
-        // rebuilt a decode batch shape (one Vec allocation + O(batch)
-        // latency eval) each call.
-        let decode_tok_s = {
-            let mut b = BatchShape::default();
-            if decodes.is_empty() {
-                b.decode_kv_lens.push(512);
-            } else {
-                for &id in &decodes {
-                    b.decode_kv_lens.push(store.get(id).kv_tokens() + 1);
-                }
-            }
-            self.model.latency(&b)
+        // priority/feasibility run O(queue) times per plan.
+        let decode_tok_s = if decodes.is_empty() {
+            let mut lone = BatchCoster::new(model.as_ref(), reference);
+            lone.push_decode(512);
+            lone.latency()
+        } else {
+            coster.latency()
         };
-        let backlog_s: f64 =
-            self.prefill_q.iter().map(|&id| self.work_s(id, store)).sum();
-        let alpha = self.effective_alpha(backlog_s);
+        let alpha = self.effective_alpha(self.backlog_s);
 
         // Mixed-iteration inflation: prefill estimates assume prefill-only
         // iterations; scale by how much the current decode load slows a
         // reference chunk down.
         let inflation = {
-            let mut with = BatchShape::default();
-            with.prefill.push(PrefillSegment { cache_len: head_cache, chunk: self.cfg.chunk_size });
-            let mut decode_kv = Vec::with_capacity(decodes.len());
-            for &id in &decodes {
-                decode_kv.push(store.get(id).kv_tokens() + 1);
-            }
-            with.decode_kv_lens = decode_kv;
-            let mut without = BatchShape::default();
-            without
-                .prefill
-                .push(PrefillSegment { cache_len: head_cache, chunk: self.cfg.chunk_size });
-            self.model.latency(&with) / self.model.latency(&without)
+            let ref_seg = PrefillSegment { cache_len: head_cache, chunk: self.cfg.chunk_size };
+            let with = coster.latency_with(ref_seg);
+            let mut alone = BatchCoster::new(model.as_ref(), reference);
+            let without = alone.latency_with(ref_seg);
+            with / without
         };
 
         self.scratch_order.clear();
         for &id in &self.prefill_q {
-            let p = self.priority(id, store, alpha, decode_tok_s);
+            let w = self.work_s(id, store);
+            let p = self.priority(id, store, alpha, decode_tok_s, w);
             self.scratch_order.push((p, id));
         }
         self.scratch_order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut order: Vec<RequestId> = self.scratch_order.iter().map(|&(_, id)| id).collect();
+        self.scratch_ids.clear();
+        self.scratch_ids.extend(self.scratch_order.iter().map(|&(_, id)| id));
 
         // W-accounting feasibility pass: wait time accumulates over the
         // requests placed ahead.
@@ -399,28 +526,31 @@ impl Scheduler for NiyamaScheduler {
             }
             infeasible
         };
-        let mut infeasible = run_pass(&order, self, store);
+        let mut infeasible = run_pass(&self.scratch_ids, self, store);
 
         // Importance-aware second pass (§3.4): if a high-importance
         // request can't make it while low-importance ones are being
         // served, push all high-importance requests ahead and retry —
-        // the low ones then absorb the infeasibility.
+        // the low ones then absorb the infeasibility. The priorities ride
+        // along in `scratch_order`, so this is a tuple sort with no side
+        // map.
         if self.cfg.eager_relegation
             && infeasible
                 .iter()
                 .any(|&id| store.get(id).spec.importance == Importance::High)
-            && order
+            && self
+                .scratch_ids
                 .iter()
                 .any(|&id| store.get(id).spec.importance == Importance::Low)
         {
-            let key: std::collections::HashMap<RequestId, f64> =
-                self.scratch_order.iter().map(|&(p, id)| (id, p)).collect();
-            order.sort_by(|&a, &b| {
+            self.scratch_order.sort_by(|&(pa, a), &(pb, b)| {
                 let ia = store.get(a).spec.importance;
                 let ib = store.get(b).spec.importance;
-                ib.cmp(&ia).then(key[&a].partial_cmp(&key[&b]).unwrap())
+                ib.cmp(&ia).then(pa.partial_cmp(&pb).unwrap())
             });
-            infeasible = run_pass(&order, self, store);
+            self.scratch_ids.clear();
+            self.scratch_ids.extend(self.scratch_order.iter().map(|&(_, id)| id));
+            infeasible = run_pass(&self.scratch_ids, self, store);
         }
 
         // Eagerly relegate what cannot make it (subject to the cap).
@@ -430,7 +560,7 @@ impl Scheduler for NiyamaScheduler {
                     self.relegate(id, store);
                 }
             }
-            order.retain(|&id| store.get(id).phase == Phase::Prefill);
+            self.scratch_ids.retain(|&id| store.get(id).phase == Phase::Prefill);
         }
 
         // ---- selective preemption guard (§3.4) ---------------------------
@@ -439,16 +569,16 @@ impl Scheduler for NiyamaScheduler {
         // the newly prioritized work runs.
         if self.cfg.selective_preemption {
             if let Some(inflight) = self.inflight {
-                if let Some(pos) = order.iter().position(|&id| id == inflight) {
+                if let Some(pos) = self.scratch_ids.iter().position(|&id| id == inflight) {
                     if pos > 0 {
-                        let wait: f64 = order[..pos]
+                        let wait: f64 = self.scratch_ids[..pos]
                             .iter()
                             .map(|&id| self.work_s(id, store) * inflation)
                             .sum();
                         if !self.feasible(inflight, now, wait, store, inflation, decode_tok_s) {
                             // Preemption would kill it: keep serving it.
-                            order.remove(pos);
-                            order.insert(0, inflight);
+                            self.scratch_ids.remove(pos);
+                            self.scratch_ids.insert(0, inflight);
                         }
                     }
                 }
@@ -457,21 +587,22 @@ impl Scheduler for NiyamaScheduler {
 
         // ---- fill the chunk budget ---------------------------------------
         // Segments are admitted under an *incremental time budget* with
-        // exact shape pricing: the head-offset estimate that sized
-        // `budget` under-prices segments sitting deep in long prompts
-        // (their attention reads the whole prefix), which showed up as
-        // few-ms token-deadline overruns on decode-heavy workloads.
+        // exact pricing: the head-offset estimate that sized `budget`
+        // under-prices segments sitting deep in long prompts (their
+        // attention reads the whole prefix). Each admission probe is an
+        // O(1) query against the shared coster; committed segments are
+        // pushed into it.
         let decode_budget_s = match slack {
             Some(s) if self.cfg.dynamic_chunking => s - self.cfg.slack_margin_s,
             _ => f64::INFINITY,
         };
         let mut batch = Batch { prefill: Vec::new(), decodes };
-        let mut shape = batch.shape(store);
         let mut left = budget;
-        for &id in &order {
+        for i in 0..self.scratch_ids.len() {
             if left == 0 {
                 break;
             }
+            let id = self.scratch_ids[i];
             let r = store.get(id);
             let rem = r.prefill_remaining();
             let max_take = rem.min(left);
@@ -485,22 +616,20 @@ impl Scheduler for NiyamaScheduler {
                 Slo::Interactive { ttft_s, .. } => r.spec.arrival_s + ttft_s - now,
                 Slo::NonInteractive { .. } => f64::INFINITY,
             };
-            let fits = |shape: &mut BatchShape, take: u32| -> bool {
-                shape.prefill.push(PrefillSegment { cache_len, chunk: take });
-                let lat = self.model.latency(shape);
-                shape.prefill.pop();
+            let fits = |coster: &mut BatchCoster, take: u32| -> bool {
+                let lat = coster.latency_with(PrefillSegment { cache_len, chunk: take });
                 lat <= decode_budget_s && (take < rem || lat <= completion_slack.max(0.0))
             };
-            let take = if !self.cfg.dynamic_chunking || fits(&mut shape, max_take) {
+            let take = if !self.cfg.dynamic_chunking || fits(&mut coster, max_take) {
                 max_take
-            } else if !fits(&mut shape, 1) {
+            } else if !fits(&mut coster, 1) {
                 break; // not even one more token fits the time budget
             } else {
                 // Largest admissible size (latency monotone in tokens).
                 let (mut lo, mut hi) = (1u32, max_take);
                 while hi - lo > 8 {
                     let mid = lo + (hi - lo) / 2;
-                    if fits(&mut shape, mid) {
+                    if fits(&mut coster, mid) {
                         lo = mid;
                     } else {
                         hi = mid;
@@ -508,7 +637,7 @@ impl Scheduler for NiyamaScheduler {
                 }
                 lo
             };
-            shape.prefill.push(PrefillSegment { cache_len, chunk: take });
+            coster.push_prefill(PrefillSegment { cache_len, chunk: take });
             batch.prefill.push(PrefillWork { id, tokens: take });
             left -= take;
         }
@@ -545,7 +674,7 @@ impl Scheduler for NiyamaScheduler {
         // budget and empty decode queue), push the most urgent prefill at
         // the floor chunk so the system never wedges.
         if batch.is_empty() {
-            if let Some(&id) = order.first().or(self.relegated_q.first()) {
+            if let Some(&id) = self.scratch_ids.first().or(self.relegated_q.first()) {
                 let rem = store.get(id).prefill_remaining();
                 if rem > 0 {
                     batch.prefill.push(PrefillWork { id, tokens: rem.min(MIN_CHUNK) });

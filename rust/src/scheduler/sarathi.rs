@@ -32,6 +32,10 @@ pub struct SarathiScheduler {
     history: AppHistory,
     prefill_q: Vec<RequestId>,
     decode_q: Vec<RequestId>,
+    /// Ordering scratch reused across iterations (no allocation in
+    /// steady state; the work estimates behind SJF are O(1) stats
+    /// queries, so a full re-sort is cheap).
+    scratch_order: Vec<(f64, RequestId)>,
 }
 
 impl SarathiScheduler {
@@ -43,6 +47,7 @@ impl SarathiScheduler {
             history: AppHistory::new(256.0),
             prefill_q: Vec::new(),
             decode_q: Vec::new(),
+            scratch_order: Vec::new(),
         }
     }
 
@@ -92,18 +97,18 @@ impl Scheduler for SarathiScheduler {
         // FCFS keeps stable arrival order; the others re-evaluate every
         // iteration (which implicitly preempts in-flight prefills — the
         // behavior the paper's Fig. 2 analysis attributes to SRPF/SJF).
-        let mut order: Vec<(f64, RequestId)> = self
-            .prefill_q
-            .iter()
-            .map(|&id| (self.sort_key(id, store), id))
-            .collect();
-        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        self.scratch_order.clear();
+        for &id in &self.prefill_q {
+            let key = self.sort_key(id, store);
+            self.scratch_order.push((key, id));
+        }
+        self.scratch_order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
         let kv_headroom = ctx.kv_free().saturating_sub(decodes.len() as u64);
         let mut left = self.cfg.chunk_size.min(kv_headroom.min(u32::MAX as u64) as u32);
 
         let mut batch = Batch { prefill: Vec::new(), decodes };
-        for &(_, id) in &order {
+        for &(_, id) in &self.scratch_order {
             if left == 0 {
                 break;
             }

@@ -11,7 +11,8 @@
 //! 2. the cluster event loop repeatedly processes the earliest event —
 //!    either the next trace arrival (routed by a [`Dispatcher`] using
 //!    live load snapshots of *all* replicas at that instant) or the next
-//!    replica iteration;
+//!    replica iteration, found in O(log R) via a lazy-deletion binary
+//!    heap over per-replica next-event times rather than an O(R) scan;
 //! 3. optionally (Llumnix-style relegation handoff,
 //!    `DispatchConfig::relegation_handoff`), requests a replica has
 //!    relegated are re-dispatched to a replica with spare headroom, the
@@ -28,6 +29,9 @@
 //! burst of simultaneous arrivals sees each other's placements without
 //! rescanning every store per arrival.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::config::{Config, Policy, SchedulerConfig};
 use crate::engine::{Engine, LoadSnapshot, SimBackend};
 use crate::metrics::{summarize_many, Summary};
@@ -35,6 +39,27 @@ use crate::qos::Slo;
 use crate::request::{RequestSpec, RequestStore};
 use crate::simulator::dispatch::{build_dispatcher, Dispatcher};
 use crate::workload::datasets::Dataset;
+
+/// Totally ordered event time for the replica-event heap (virtual times
+/// are always finite, so `total_cmp` agrees with `<` everywhere we use
+/// it; ties between replicas break toward the lowest index via the tuple
+/// ordering, matching the old linear scan).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct EventKey(f64);
+
+impl Eq for EventKey {}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
 
 /// Per-run cluster counters.
 #[derive(Debug, Clone, Default)]
@@ -67,6 +92,11 @@ pub struct Cluster {
     /// handoff scans run only when new relegations appeared (plus a
     /// periodic retry), not on every iteration.
     handoff_seen: Vec<usize>,
+    /// Lazy-deletion min-heap of `(next event time, replica)`. Replicas
+    /// re-push their key after every state change (`reheap`); stale
+    /// entries are discarded when they surface. Replaces the O(R) scan
+    /// per event with O(log R) heap traffic.
+    events: BinaryHeap<Reverse<(EventKey, usize)>>,
     clock: f64,
     tiers: Vec<crate::qos::QosTier>,
     sec_per_prefill_token: f64,
@@ -109,6 +139,7 @@ impl Cluster {
             snap_dirty: vec![false; replicas],
             wedged: vec![false; replicas],
             handoff_seen: vec![0; replicas],
+            events: BinaryHeap::with_capacity(2 * replicas),
             clock: 0.0,
             tiers: cfg.tiers.clone(),
             sec_per_prefill_token,
@@ -170,20 +201,40 @@ impl Cluster {
         }
     }
 
-    /// Earliest replica event among non-wedged engines: (time, replica).
-    fn next_engine_event(&self) -> Option<(f64, usize)> {
-        let mut best: Option<(f64, usize)> = None;
-        for (i, e) in self.engines.iter().enumerate() {
-            if self.wedged[i] {
-                continue;
-            }
-            if let Some(t) = e.next_event_time() {
-                if best.map_or(true, |(bt, _)| t < bt) {
-                    best = Some((t, i));
-                }
-            }
+    /// Re-push replica `i`'s current event key. Called after every
+    /// mutation that can change a replica's `next_event_time` (step,
+    /// enqueue, migration, unwedging); superseded entries stay in the
+    /// heap and are lazily discarded by [`Cluster::next_engine_event`].
+    fn reheap(&mut self, i: usize) {
+        if self.wedged[i] {
+            return;
         }
-        best
+        if let Some(t) = self.engines[i].next_event_time() {
+            self.events.push(Reverse((EventKey(t), i)));
+        }
+    }
+
+    /// Earliest replica event among non-wedged engines: (time, replica).
+    /// Lazy-deletion pop: an entry is live iff it still equals the
+    /// replica's current `next_event_time` (bit-exact — the engine
+    /// recomputes the same value while its state is unchanged); anything
+    /// else is a superseded key and is dropped. No correction re-push
+    /// here: every mutation site already `reheap`s, and re-pushing on
+    /// stale pops would grow the heap by one entry per event forever.
+    /// Each pushed entry is thus popped at most once, so heap traffic is
+    /// O(log R) amortized and memory stays O(outstanding entries).
+    fn next_engine_event(&mut self) -> Option<(f64, usize)> {
+        loop {
+            let (t, i) = match self.events.peek() {
+                Some(&Reverse((EventKey(t), i))) => (t, i),
+                None => return None,
+            };
+            let current = if self.wedged[i] { None } else { self.engines[i].next_event_time() };
+            if current == Some(t) {
+                return Some((t, i));
+            }
+            self.events.pop();
+        }
     }
 
     /// Route one arrival using live snapshots of true cluster state.
@@ -210,6 +261,7 @@ impl Cluster {
         self.stats.dispatched[r] += 1;
         self.snap_dirty[r] = true;
         self.wedged[r] = false;
+        self.reheap(r);
     }
 
     /// Llumnix-style relegation handoff: after replica `origin` steps, try
@@ -289,6 +341,8 @@ impl Cluster {
             self.snap_dirty[origin] = true;
             self.snap_dirty[t] = true;
             self.wedged[t] = false;
+            self.reheap(origin);
+            self.reheap(t);
         }
     }
 
@@ -323,6 +377,7 @@ impl Cluster {
                         self.wedged[i] = true;
                     }
                     self.snap_dirty[i] = true;
+                    self.reheap(i);
                     if self.relegation_handoff {
                         // Scan for handoffs only when this replica
                         // relegated something new, with a periodic retry

@@ -54,6 +54,115 @@ impl BatchShape {
     }
 }
 
+/// O(1)-updatable sufficient statistics of a batch.
+///
+/// Every term of [`CostModel::iteration_latency`] (and of the predictor's
+/// feature vector) is a sum over batch members, so a batch's cost is a
+/// function of a handful of running sums. Maintaining those sums
+/// incrementally turns the scheduler's "would this segment still fit?"
+/// probes from O(batch) re-evaluations into O(1) queries.
+///
+/// All fields are integer-valued in `f64` for realistic shapes (chunk
+/// counts, tile counts, and `c*s0 + c(c+1)/2` are integers well below
+/// 2^53), so push/pop is exact and the accumulated sums are independent
+/// of insertion order: an incrementally built accumulator matches
+/// [`BatchStats::from_shape`] of the equivalent shape bit-for-bit.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchStats {
+    /// Prefill segments in the batch.
+    pub n_prefill: usize,
+    /// Decode entries in the batch.
+    pub n_decodes: usize,
+    /// New prefill tokens (sum of segment chunks).
+    pub prefill_tokens: f64,
+    /// Attention score/value reads of the prefill segments: sum of
+    /// `c*s0 + c(c+1)/2` per segment (the quadratic prompt term).
+    pub prefill_attn_reads: f64,
+    /// Sum of decode KV lengths.
+    pub decode_kv_sum: f64,
+    /// KV tokens streamed from HBM: `(s0+c) * ceil(c/128)` per prefill
+    /// segment (flash-style tile re-reads) plus `kv` per decode.
+    pub kv_stream_tokens: f64,
+}
+
+impl BatchStats {
+    /// Accumulate a full shape (prefill segments in order, then decodes).
+    pub fn from_shape(batch: &BatchShape) -> Self {
+        let mut s = BatchStats::default();
+        for seg in &batch.prefill {
+            s.push_prefill(*seg);
+        }
+        for &kv in &batch.decode_kv_lens {
+            s.push_decode(kv);
+        }
+        s
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_prefill == 0 && self.n_decodes == 0
+    }
+
+    pub fn total_tokens(&self) -> f64 {
+        self.prefill_tokens + self.n_decodes as f64
+    }
+
+    /// The segment's contribution to (attention reads, streamed KV
+    /// tokens). Pure function of the segment, so pop subtracts exactly
+    /// what push added.
+    fn prefill_terms(seg: PrefillSegment) -> (f64, f64) {
+        let c = seg.chunk as f64;
+        let s0 = seg.cache_len as f64;
+        let attn_reads = c * s0 + 0.5 * c * (c + 1.0);
+        let q_tiles = (c / 128.0).ceil().max(1.0);
+        let stream = (seg.cache_len + seg.chunk) as f64 * q_tiles;
+        (attn_reads, stream)
+    }
+
+    pub fn push_prefill(&mut self, seg: PrefillSegment) {
+        let (attn_reads, stream) = Self::prefill_terms(seg);
+        self.n_prefill += 1;
+        self.prefill_tokens += seg.chunk as f64;
+        self.prefill_attn_reads += attn_reads;
+        self.kv_stream_tokens += stream;
+    }
+
+    pub fn pop_prefill(&mut self, seg: PrefillSegment) {
+        let (attn_reads, stream) = Self::prefill_terms(seg);
+        self.n_prefill -= 1;
+        self.prefill_tokens -= seg.chunk as f64;
+        self.prefill_attn_reads -= attn_reads;
+        self.kv_stream_tokens -= stream;
+    }
+
+    pub fn push_decode(&mut self, kv: u32) {
+        self.n_decodes += 1;
+        self.decode_kv_sum += kv as f64;
+        self.kv_stream_tokens += kv as f64;
+    }
+
+    pub fn pop_decode(&mut self, kv: u32) {
+        self.n_decodes -= 1;
+        self.decode_kv_sum -= kv as f64;
+        self.kv_stream_tokens -= kv as f64;
+    }
+
+    /// Accumulate `n` decodes of identical KV length (exact: integer
+    /// sums, so the product equals `n` repeated pushes bit-for-bit).
+    pub fn push_decodes(&mut self, kv: u32, n: usize) {
+        self.n_decodes += n;
+        let total = kv as f64 * n as f64;
+        self.decode_kv_sum += total;
+        self.kv_stream_tokens += total;
+    }
+
+    /// Copy with one extra prefill segment — the scheduler's O(1)
+    /// "price the batch as if this segment were added" probe.
+    pub fn with_prefill(mut self, seg: PrefillSegment) -> Self {
+        self.push_prefill(seg);
+        self
+    }
+}
+
 /// Analytic cost model over a hardware description.
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -74,45 +183,37 @@ impl CostModel {
         tokens / (tokens + self.hw.mfu_half)
     }
 
-    /// Iteration latency in seconds for a batch shape.
+    /// Iteration latency in seconds for a batch shape. Defined as
+    /// [`CostModel::latency_from_stats`] over the shape's sufficient
+    /// statistics, so the full-shape and incremental paths can never
+    /// drift apart.
     pub fn iteration_latency(&self, batch: &BatchShape) -> f64 {
-        if batch.is_empty() {
+        self.latency_from_stats(&BatchStats::from_shape(batch))
+    }
+
+    /// Iteration latency from a batch's sufficient statistics — the O(1)
+    /// query behind the scheduler's incremental probes.
+    pub fn latency_from_stats(&self, stats: &BatchStats) -> f64 {
+        if stats.is_empty() {
             return 0.0;
         }
         let hw = &self.hw;
-        let t_tokens = batch.total_tokens() as f64;
+        let t_tokens = stats.total_tokens();
 
         // --- compute term -------------------------------------------------
-        // Dense matmuls: 2 FLOPs per param per token.
-        let mut flops = 2.0 * hw.n_params * t_tokens;
-        // Attention score/value FLOPs: 4 * d_model * kv_len per token per
-        // layer (the quadratic prompt term lives here).
+        // Dense matmuls (2 FLOPs per param per token) plus attention
+        // score/value FLOPs: 4 * d_model * kv_len per token per layer
+        // (the quadratic prompt term lives in `prefill_attn_reads`).
         let attn_coeff = 4.0 * hw.d_model * hw.n_layers;
-        for seg in &batch.prefill {
-            let c = seg.chunk as f64;
-            let s0 = seg.cache_len as f64;
-            // sum over chunk queries of kv_len: c*s0 + c(c+1)/2
-            let kv_reads = c * s0 + 0.5 * c * (c + 1.0);
-            flops += attn_coeff * kv_reads;
-        }
-        for &kv in &batch.decode_kv_lens {
-            flops += attn_coeff * kv as f64;
-        }
+        let flops = 2.0 * hw.n_params * t_tokens
+            + attn_coeff * (stats.prefill_attn_reads + stats.decode_kv_sum);
         let t_compute = flops / (hw.peak_flops * self.mfu(t_tokens));
 
         // --- memory term --------------------------------------------------
         // Every iteration streams the weights once; attention streams the
-        // KV cache of every participating sequence.
-        let mut bytes = hw.weight_bytes;
-        for seg in &batch.prefill {
-            // Flash-style: each KV tile is re-read once per 128-row query
-            // tile of the chunk.
-            let q_tiles = ((seg.chunk as f64) / 128.0).ceil().max(1.0);
-            bytes += (seg.cache_len + seg.chunk) as f64 * hw.kv_bytes_per_token * q_tiles;
-        }
-        for &kv in &batch.decode_kv_lens {
-            bytes += kv as f64 * hw.kv_bytes_per_token;
-        }
+        // KV cache of every participating sequence (flash-style: each KV
+        // tile re-read once per 128-row query tile of a prefill chunk).
+        let bytes = hw.weight_bytes + stats.kv_stream_tokens * hw.kv_bytes_per_token;
         let t_memory = bytes / hw.hbm_bw;
 
         let mut t = t_compute.max(t_memory) + hw.iteration_overhead_s;
@@ -270,5 +371,108 @@ mod tests {
         b.decode_kv_lens = vec![512; 10];
         assert_eq!(b.total_prefill_tokens(), 256);
         assert_eq!(b.total_tokens(), 266);
+    }
+
+    #[test]
+    fn stats_match_shape_for_mixed_batch() {
+        let m = model();
+        let mut b = BatchShape::default();
+        b.prefill.push(PrefillSegment { cache_len: 2048, chunk: 256 });
+        b.prefill.push(PrefillSegment { cache_len: 0, chunk: 1000 });
+        b.decode_kv_lens = (0..64).map(|i| 128 + i * 13).collect();
+        let stats = BatchStats::from_shape(&b);
+        assert_eq!(m.latency_from_stats(&stats), m.iteration_latency(&b));
+        assert_eq!(stats.total_tokens(), b.total_tokens() as f64);
+    }
+
+    #[test]
+    fn stats_empty_batch_is_free() {
+        assert_eq!(model().latency_from_stats(&BatchStats::default()), 0.0);
+    }
+
+    #[test]
+    fn stats_with_prefill_equals_push() {
+        let seg = PrefillSegment { cache_len: 777, chunk: 300 };
+        let mut base = BatchStats::default();
+        base.push_decodes(512, 16);
+        let peek = base.with_prefill(seg);
+        let mut pushed = base;
+        pushed.push_prefill(seg);
+        assert_eq!(peek, pushed);
+        // The base is untouched by the probe.
+        assert_eq!(base.n_prefill, 0);
+    }
+
+    #[test]
+    fn push_decodes_equals_repeated_push() {
+        let mut bulk = BatchStats::default();
+        bulk.push_decodes(1023, 37);
+        let mut one_by_one = BatchStats::default();
+        for _ in 0..37 {
+            one_by_one.push_decode(1023);
+        }
+        assert_eq!(bulk, one_by_one);
+    }
+
+    /// The tentpole invariant: across randomized push/pop sequences the
+    /// accumulator's latency equals `iteration_latency` of the mirrored
+    /// shape to 1e-12 relative (exactly, in fact: all sums are
+    /// integer-valued, but the property asserts the contract).
+    #[test]
+    fn prop_incremental_latency_matches_full_eval() {
+        use crate::util::Rng;
+        for case in 0..20u64 {
+            let mut rng = Rng::new(0xACC0 + case);
+            let m = if case % 4 == 0 {
+                CostModel::new(HardwareModel::qwen_7b_a100_tp2())
+            } else {
+                model()
+            };
+            let mut stats = BatchStats::default();
+            let mut prefill: Vec<PrefillSegment> = Vec::new();
+            let mut decodes: Vec<u32> = Vec::new();
+            for _ in 0..400 {
+                match rng.below(5) {
+                    0 | 1 => {
+                        let seg = PrefillSegment {
+                            cache_len: rng.below(16_384) as u32,
+                            chunk: 1 + rng.below(2048) as u32,
+                        };
+                        prefill.push(seg);
+                        stats.push_prefill(seg);
+                    }
+                    2 => {
+                        let kv = 1 + rng.below(8192) as u32;
+                        decodes.push(kv);
+                        stats.push_decode(kv);
+                    }
+                    3 => {
+                        if !prefill.is_empty() {
+                            let i = rng.below(prefill.len() as u64) as usize;
+                            let seg = prefill.swap_remove(i);
+                            stats.pop_prefill(seg);
+                        }
+                    }
+                    _ => {
+                        if !decodes.is_empty() {
+                            let i = rng.below(decodes.len() as u64) as usize;
+                            let kv = decodes.swap_remove(i);
+                            stats.pop_decode(kv);
+                        }
+                    }
+                }
+                let shape = BatchShape {
+                    prefill: prefill.clone(),
+                    decode_kv_lens: decodes.clone(),
+                };
+                let want = m.iteration_latency(&shape);
+                let got = m.latency_from_stats(&stats);
+                let tol = 1e-12 * want.abs().max(1.0);
+                assert!(
+                    (got - want).abs() <= tol,
+                    "case {case}: incremental {got} vs full {want}"
+                );
+            }
+        }
     }
 }

@@ -12,15 +12,21 @@
 //! - [`JoinShortestQueue`]: fewest requests awaiting prefill wins;
 //! - [`LeastLoaded`]: QoS/slack-aware — scores replicas by queued prefill
 //!   seconds, KV pressure, and per-tier slack distress, and prefers
-//!   replicas that can still meet the arrival's own deadline.
+//!   replicas that can still meet the arrival's own deadline;
+//! - [`PowerOfTwoChoices`]: samples two replicas with a seeded PRNG and
+//!   applies the `LeastLoaded` pressure score to just that pair — an
+//!   O(1) decision independent of replica count, which is what keeps
+//!   the front-end off the critical path at large cluster sizes.
 //!
-//! All policies are deterministic: ties break toward the lowest replica
-//! index, so a fixed seed reproduces a run bit-for-bit.
+//! All policies are deterministic: randomized ones draw from a seeded
+//! [`Rng`] and ties break toward the lowest replica index, so a fixed
+//! seed reproduces a run bit-for-bit.
 
 use crate::config::{DispatchConfig, DispatchPolicy};
 use crate::engine::LoadSnapshot;
 use crate::qos::Slo;
 use crate::request::RequestSpec;
+use crate::util::Rng;
 
 /// A cluster-level routing policy. `dispatch` returns the index of the
 /// replica that should serve `spec`; `snaps[i]` is replica `i`'s live
@@ -56,6 +62,7 @@ pub fn build_dispatcher(cfg: &DispatchConfig) -> Box<dyn Dispatcher> {
         DispatchPolicy::RoundRobin => Box::new(RoundRobin::new()),
         DispatchPolicy::JoinShortestQueue => Box::new(JoinShortestQueue),
         DispatchPolicy::LeastLoaded => Box::new(LeastLoaded),
+        DispatchPolicy::PowerOfTwoChoices => Box::new(PowerOfTwoChoices::new(cfg.seed)),
     }
 }
 
@@ -210,6 +217,55 @@ impl Dispatcher for LeastLoaded {
     }
 }
 
+/// Power-of-two-choices: sample two distinct replicas uniformly with a
+/// seeded PRNG, route to the one with the lower [`LeastLoaded::score`]
+/// (ties toward the lower index). The decision touches exactly two
+/// snapshots, so its cost is independent of the replica count — the
+/// O(1) dispatch the ROADMAP calls for at large cluster sizes — while
+/// the two-choice sampling keeps load within O(log log R) of optimal.
+pub struct PowerOfTwoChoices {
+    rng: Rng,
+}
+
+impl PowerOfTwoChoices {
+    pub fn new(seed: u64) -> Self {
+        // Salted so dispatch draws are decorrelated from the workload
+        // generator streams, which are seeded from the same config value.
+        PowerOfTwoChoices { rng: Rng::new(seed ^ 0xD15BA7C4) }
+    }
+}
+
+impl Dispatcher for PowerOfTwoChoices {
+    fn name(&self) -> &'static str {
+        "power-of-two-choices"
+    }
+
+    fn dispatch(
+        &mut self,
+        _spec: &RequestSpec,
+        _slo: Slo,
+        _est_prefill_s: f64,
+        _est_decode_s: f64,
+        snaps: &[LoadSnapshot],
+    ) -> usize {
+        let n = snaps.len();
+        if n < 2 {
+            return 0;
+        }
+        let a = self.rng.below(n as u64) as usize;
+        let mut b = self.rng.below(n as u64 - 1) as usize;
+        if b >= a {
+            b += 1; // distinct second sample, uniform over the rest
+        }
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        if LeastLoaded::score(&snaps[hi]) < LeastLoaded::score(&snaps[lo]) {
+            hi
+        } else {
+            lo
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,9 +384,59 @@ mod tests {
             DispatchPolicy::RoundRobin,
             DispatchPolicy::JoinShortestQueue,
             DispatchPolicy::LeastLoaded,
+            DispatchPolicy::PowerOfTwoChoices,
         ] {
-            let d = build_dispatcher(&DispatchConfig { policy: p, relegation_handoff: false });
+            let d = build_dispatcher(&DispatchConfig {
+                policy: p,
+                relegation_handoff: false,
+                seed: 0,
+            });
             assert_eq!(d.name(), p.name());
         }
+    }
+
+    #[test]
+    fn p2c_picks_lower_score_of_sampled_pair() {
+        // With two replicas the sampled pair is always {0, 1}, so p2c
+        // must behave exactly like least-loaded restricted to the pair.
+        let mut d = PowerOfTwoChoices::new(7);
+        let snaps = vec![snap(9, 9000, 9.0), snap(1, 100, 0.1)];
+        for _ in 0..32 {
+            assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+        }
+        let snaps = vec![snap(1, 100, 0.1), snap(9, 9000, 9.0)];
+        for _ in 0..32 {
+            assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 0);
+        }
+    }
+
+    #[test]
+    fn p2c_is_deterministic_for_a_seed() {
+        let snaps: Vec<LoadSnapshot> =
+            (0..16).map(|i| snap(i, i as u64 * 100, i as f64 * 0.3)).collect();
+        let mut a = PowerOfTwoChoices::new(42);
+        let mut b = PowerOfTwoChoices::new(42);
+        for _ in 0..200 {
+            assert_eq!(
+                a.dispatch(&spec(), INT, 0.1, 0.0, &snaps),
+                b.dispatch(&spec(), INT, 0.1, 0.0, &snaps)
+            );
+        }
+    }
+
+    #[test]
+    fn p2c_single_replica_and_coverage() {
+        let mut d = PowerOfTwoChoices::new(3);
+        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &[snap(0, 0, 0.0)]), 0);
+        // Over many draws on uniform snapshots the sampling spreads: with
+        // equal scores the pick is the pair minimum, so every replica but
+        // the highest index must appear.
+        let snaps: Vec<LoadSnapshot> = (0..8).map(|_| snap(2, 100, 1.0)).collect();
+        let mut seen = [false; 8];
+        for _ in 0..500 {
+            seen[d.dispatch(&spec(), INT, 0.1, 0.0, &snaps)] = true;
+        }
+        let hit = seen.iter().filter(|&&s| s).count();
+        assert!(hit >= 7, "p2c sampling too narrow: {hit}/8 replicas picked");
     }
 }

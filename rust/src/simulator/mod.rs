@@ -11,5 +11,5 @@ pub mod cost_model;
 pub mod dispatch;
 
 pub use cluster::Cluster;
-pub use cost_model::{BatchShape, CostModel, PrefillSegment};
+pub use cost_model::{BatchShape, BatchStats, CostModel, PrefillSegment};
 pub use dispatch::Dispatcher;

@@ -13,10 +13,11 @@ use niyama::workload::WorkloadSpec;
 
 const REPLICAS: usize = 4;
 
-const POLICIES: [DispatchPolicy; 3] = [
+const POLICIES: [DispatchPolicy; 4] = [
     DispatchPolicy::RoundRobin,
     DispatchPolicy::JoinShortestQueue,
     DispatchPolicy::LeastLoaded,
+    DispatchPolicy::PowerOfTwoChoices,
 ];
 
 fn cfg_with(policy: DispatchPolicy, handoff: bool) -> Config {
@@ -110,6 +111,48 @@ fn least_loaded_never_worse_than_round_robin_on_skew() {
         ll.violations,
         rr.violations
     );
+}
+
+#[test]
+fn p2c_never_worse_than_round_robin_on_skew() {
+    // The ROADMAP's O(1) dispatch: sampling two replicas and scoring just
+    // the pair must still beat the phase-locked rotation that funnels
+    // every heavy job onto replica 0.
+    let t = skewed_trace(200);
+    let rr = run_shared(&cfg_with(DispatchPolicy::RoundRobin, false), REPLICAS, &t, 1e5, 6251);
+    let p2c = run_shared(
+        &cfg_with(DispatchPolicy::PowerOfTwoChoices, false),
+        REPLICAS,
+        &t,
+        1e5,
+        6251,
+    );
+    assert!(
+        rr.violations > 0,
+        "skewed trace too easy: round-robin has no violations"
+    );
+    assert!(
+        p2c.violations <= rr.violations,
+        "power-of-two-choices {} violations vs round-robin {}",
+        p2c.violations,
+        rr.violations
+    );
+}
+
+#[test]
+fn p2c_runs_are_reproducible_for_a_fixed_dispatch_seed() {
+    let t = skewed_trace(120);
+    let mut cfg = cfg_with(DispatchPolicy::PowerOfTwoChoices, false);
+    cfg.cluster.dispatch.seed = 5;
+    let a = run_shared(&cfg, REPLICAS, &t, 1e5, 6251);
+    let b = run_shared(&cfg, REPLICAS, &t, 1e5, 6251);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.violations, b.violations);
+    // A different seed samples different pairs; the run still conserves
+    // every request even if placements differ.
+    cfg.cluster.dispatch.seed = 6;
+    let c = run_shared(&cfg, REPLICAS, &t, 1e5, 6251);
+    assert_eq!(c.total, t.len());
 }
 
 #[test]

@@ -1,0 +1,133 @@
+//! Golden-value equivalence: the incremental (O(1)-probe) scheduler hot
+//! path must make byte-identical decisions to the reference path that
+//! re-evaluates full batch shapes, on fixed-seed traces.
+//!
+//! `SchedulerConfig::reference_costing` swaps every probe in
+//! `NiyamaScheduler::plan` from the `BatchStats` accumulator to a
+//! materialized `BatchShape` evaluation. Because `iteration_latency` is
+//! itself defined over the same sufficient statistics (and every
+//! accumulator field is integer-valued in f64, so sums are exact and
+//! order-independent), the two paths agree bit-for-bit — these tests pin
+//! that equivalence so a future fast-path change that drifts from the
+//! full-shape semantics fails loudly.
+
+use niyama::config::{Config, HardwareModel};
+use niyama::engine::Engine;
+use niyama::request::{RequestSpec, RequestStore};
+use niyama::scheduler::{NiyamaScheduler, PlanContext, Scheduler};
+use niyama::simulator::CostModel;
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::WorkloadSpec;
+use std::sync::Arc;
+
+/// Mirror of the bench's populate: mixed SLOs, tiers, importances.
+fn populate(
+    sched: &mut NiyamaScheduler,
+    store: &mut RequestStore,
+    n_prefill: usize,
+    n_decode: usize,
+    seed: u64,
+) {
+    use niyama::qos::{Importance, Slo};
+    let mut rng = Rng::new(seed);
+    for i in 0..n_prefill + n_decode {
+        let slo = match i % 3 {
+            0 => Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 },
+            1 => Slo::NonInteractive { ttlt_s: 600.0 },
+            _ => Slo::NonInteractive { ttlt_s: 1800.0 },
+        };
+        let id = store.insert(
+            RequestSpec {
+                arrival_s: i as f64 * 0.01,
+                prompt_tokens: 64 + rng.below(4000) as u32,
+                decode_tokens: 1 + rng.below(400) as u32,
+                tier: i % 3,
+                app_id: (i % 3) as u32,
+                importance: if i % 5 == 0 { Importance::Low } else { Importance::High },
+            },
+            slo,
+        );
+        sched.on_arrival(id, store);
+        if i >= n_prefill {
+            {
+                let r = store.get_mut(id);
+                r.prefilled = r.spec.prompt_tokens;
+                r.phase = niyama::request::Phase::Decode;
+                r.emit_token(r.spec.arrival_s + 0.5);
+            }
+            sched.on_prefill_complete(id, store);
+        }
+    }
+}
+
+#[test]
+fn plan_decisions_identical_to_reference_costing() {
+    for (np, nd, seed) in [(24usize, 12usize, 42u64), (80, 40, 7), (160, 64, 99)] {
+        let model = Arc::new(CostModel::new(HardwareModel::llama3_8b_a100()));
+        let cfg = Config::default();
+        let mut fast_cfg = cfg.scheduler.clone();
+        fast_cfg.reference_costing = false;
+        let mut ref_cfg = cfg.scheduler.clone();
+        ref_cfg.reference_costing = true;
+
+        let mut fast = NiyamaScheduler::new(fast_cfg, model.clone());
+        let mut fast_store = RequestStore::new();
+        populate(&mut fast, &mut fast_store, np, nd, seed);
+
+        let mut refr = NiyamaScheduler::new(ref_cfg, model.clone());
+        let mut ref_store = RequestStore::new();
+        populate(&mut refr, &mut ref_store, np, nd, seed);
+
+        // Repeated plans at advancing times exercise relegation, the
+        // importance pass and the preemption guard; batches must match
+        // byte-for-byte at every step.
+        for step in 0..12 {
+            let now = 2.0 + step as f64 * 0.7;
+            let ctx = PlanContext { now, kv_capacity: 4_000_000, kv_used: 0 };
+            let a = fast.plan(ctx, &mut fast_store);
+            let b = refr.plan(ctx, &mut ref_store);
+            assert_eq!(
+                a, b,
+                "plan diverged: case ({np},{nd},{seed}) step {step} t={now}"
+            );
+        }
+    }
+}
+
+#[test]
+fn end_to_end_run_identical_to_reference_costing() {
+    let spec = WorkloadSpec::uniform(Dataset::azure_code(), 3.0, 60.0);
+    let trace = spec.generate(&mut Rng::new(1234));
+
+    let fast_cfg = Config::default();
+    let mut ref_cfg = Config::default();
+    ref_cfg.scheduler.reference_costing = true;
+
+    let mut fast = Engine::sim(&fast_cfg);
+    fast.submit_trace(trace.clone());
+    fast.run(4000.0);
+
+    let mut refr = Engine::sim(&ref_cfg);
+    refr.submit_trace(trace);
+    refr.run(4000.0);
+
+    assert_eq!(fast.stats.iterations, refr.stats.iterations);
+    assert_eq!(fast.now(), refr.now(), "virtual clocks diverged");
+    assert_eq!(fast.store.len(), refr.store.len());
+    for (a, b) in fast.store.iter().zip(refr.store.iter()) {
+        assert_eq!(a.phase, b.phase, "req {}", a.id);
+        assert_eq!(a.prefilled, b.prefilled, "req {}", a.id);
+        assert_eq!(a.decoded, b.decoded, "req {}", a.id);
+        assert_eq!(a.first_token_at, b.first_token_at, "req {}", a.id);
+        assert_eq!(a.finished_at, b.finished_at, "req {}", a.id);
+        assert_eq!(a.was_relegated, b.was_relegated, "req {}", a.id);
+        assert_eq!(a.max_lateness, b.max_lateness, "req {}", a.id);
+    }
+}
+
+#[test]
+fn fast_path_is_default() {
+    // Guard against the reference oracle leaking into real configs.
+    assert!(!Config::default().scheduler.reference_costing);
+}
