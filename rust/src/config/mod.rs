@@ -242,6 +242,12 @@ pub enum DispatchPolicy {
     /// regardless of replica count — the classic balanced-allocations
     /// result keeps the max load within O(log log R) of optimal.
     PowerOfTwoChoices,
+    /// Power-of-two-choices sampling scored by the fitted per-replica
+    /// latency predictor instead of `LeastLoaded`'s linear token rate:
+    /// the predicted TTFT accounts for the candidate's live decode load
+    /// inflating every prefill chunk it would serve ahead of this
+    /// arrival.
+    PredictedTtft,
 }
 
 impl DispatchPolicy {
@@ -251,6 +257,7 @@ impl DispatchPolicy {
             "join-shortest-queue" | "jsq" => DispatchPolicy::JoinShortestQueue,
             "least-loaded" | "ll" => DispatchPolicy::LeastLoaded,
             "power-of-two-choices" | "p2c" => DispatchPolicy::PowerOfTwoChoices,
+            "predicted-ttft" | "pttft" => DispatchPolicy::PredictedTtft,
             other => bail!("unknown dispatch policy '{other}'"),
         })
     }
@@ -261,6 +268,7 @@ impl DispatchPolicy {
             DispatchPolicy::JoinShortestQueue => "join-shortest-queue",
             DispatchPolicy::LeastLoaded => "least-loaded",
             DispatchPolicy::PowerOfTwoChoices => "power-of-two-choices",
+            DispatchPolicy::PredictedTtft => "predicted-ttft",
         }
     }
 }
@@ -285,6 +293,79 @@ impl Default for DispatchConfig {
     }
 }
 
+/// Elastic control-plane policy selector (see `simulator::control`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AutoscalePolicy {
+    /// Static replica set — the pre-control-plane behavior.
+    Off,
+    /// Hysteresis on queued-prefill-seconds per replica / KV pressure:
+    /// scale when the signal stays past a watermark for `hold_s`.
+    Reactive,
+    /// Tier-slack-aware predictive control: project queue growth over
+    /// the warm-up horizon and order capacity before the strictest
+    /// tier's slack is exhausted.
+    Predictive,
+}
+
+impl AutoscalePolicy {
+    pub fn parse(s: &str) -> Result<AutoscalePolicy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "off" | "none" | "static" => AutoscalePolicy::Off,
+            "reactive" | "hysteresis" => AutoscalePolicy::Reactive,
+            "predictive" | "tier-slack" => AutoscalePolicy::Predictive,
+            other => bail!("unknown autoscale policy '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoscalePolicy::Off => "off",
+            AutoscalePolicy::Reactive => "reactive",
+            AutoscalePolicy::Predictive => "predictive",
+        }
+    }
+}
+
+/// Elastic control-plane knobs: autoscaler bounds and signals plus the
+/// global admission policy applied at the dispatcher.
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    pub autoscale: AutoscalePolicy,
+    /// Lower bound on serving (active + warming) replicas.
+    pub min_replicas: usize,
+    /// Upper bound on serving replicas.
+    pub max_replicas: usize,
+    /// Cold-start seconds between provisioning a replica and the engine
+    /// accepting work.
+    pub warmup_s: f64,
+    /// Controller evaluation period on the shared virtual clock.
+    pub control_interval_s: f64,
+    /// Scale-up watermark: queued prefill seconds per serving replica.
+    pub scale_up_queue_s: f64,
+    /// Scale-down watermark (must not exceed the scale-up watermark).
+    pub scale_down_queue_s: f64,
+    /// How long a watermark must hold before the controller acts.
+    pub hold_s: f64,
+    /// Global admission control applied to every arrival at dispatch.
+    pub admission: crate::simulator::dispatch::AdmissionPolicy,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            autoscale: AutoscalePolicy::Off,
+            min_replicas: 1,
+            max_replicas: 8,
+            warmup_s: 20.0,
+            control_interval_s: 5.0,
+            scale_up_queue_s: 4.0,
+            scale_down_queue_s: 0.5,
+            hold_s: 10.0,
+            admission: crate::simulator::dispatch::AdmissionPolicy::None,
+        }
+    }
+}
+
 /// Cluster topology for multi-replica serving / silo experiments.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -292,11 +373,17 @@ pub struct ClusterConfig {
     pub replicas: usize,
     /// How arrivals are routed across those replicas.
     pub dispatch: DispatchConfig,
+    /// Elastic control plane: autoscaling + admission control.
+    pub control: ControlConfig,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        ClusterConfig { replicas: 1, dispatch: DispatchConfig::default() }
+        ClusterConfig {
+            replicas: 1,
+            dispatch: DispatchConfig::default(),
+            control: ControlConfig::default(),
+        }
     }
 }
 
@@ -383,6 +470,26 @@ impl Config {
             if let Some(v) = c.get("dispatch_seed").and_then(|v| v.as_f64()) {
                 cfg.cluster.dispatch.seed = v as u64;
             }
+            if let Some(ctl) = c.get("control") {
+                let k = &mut cfg.cluster.control;
+                if let Some(p) = ctl.get("autoscale").and_then(|v| v.as_str()) {
+                    k.autoscale = AutoscalePolicy::parse(p)?;
+                }
+                if let Some(v) = ctl.get("min_replicas").and_then(|v| v.as_usize()) {
+                    k.min_replicas = v;
+                }
+                if let Some(v) = ctl.get("max_replicas").and_then(|v| v.as_usize()) {
+                    k.max_replicas = v;
+                }
+                override_f64(ctl, "warmup_s", &mut k.warmup_s);
+                override_f64(ctl, "control_interval_s", &mut k.control_interval_s);
+                override_f64(ctl, "scale_up_queue_s", &mut k.scale_up_queue_s);
+                override_f64(ctl, "scale_down_queue_s", &mut k.scale_down_queue_s);
+                override_f64(ctl, "hold_s", &mut k.hold_s);
+                if let Some(p) = ctl.get("admission").and_then(|v| v.as_str()) {
+                    k.admission = crate::simulator::dispatch::AdmissionPolicy::parse(p)?;
+                }
+            }
         }
 
         if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
@@ -408,6 +515,22 @@ impl Config {
         }
         if self.cluster.replicas == 0 {
             bail!("cluster needs at least one replica");
+        }
+        let k = &self.cluster.control;
+        if k.min_replicas == 0 {
+            bail!("control.min_replicas must be at least 1");
+        }
+        if k.max_replicas < k.min_replicas {
+            bail!("control.max_replicas must be >= control.min_replicas");
+        }
+        if k.control_interval_s <= 0.0 {
+            bail!("control.control_interval_s must be positive");
+        }
+        if k.warmup_s < 0.0 {
+            bail!("control.warmup_s must be non-negative");
+        }
+        if k.scale_down_queue_s > k.scale_up_queue_s {
+            bail!("control.scale_down_queue_s must not exceed scale_up_queue_s");
         }
         Ok(())
     }
@@ -558,8 +681,60 @@ mod tests {
             DispatchPolicy::JoinShortestQueue,
             DispatchPolicy::LeastLoaded,
             DispatchPolicy::PowerOfTwoChoices,
+            DispatchPolicy::PredictedTtft,
         ] {
             assert_eq!(DispatchPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn control_defaults_are_off_and_valid() {
+        let c = Config::default();
+        assert_eq!(c.cluster.control.autoscale, AutoscalePolicy::Off);
+        assert_eq!(
+            c.cluster.control.admission,
+            crate::simulator::dispatch::AdmissionPolicy::None
+        );
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_control_overrides() {
+        let c = Config::from_json_str(
+            r#"{"cluster": {"replicas": 2, "control": {
+                "autoscale": "predictive", "min_replicas": 2, "max_replicas": 6,
+                "warmup_s": 15, "control_interval_s": 2.5,
+                "scale_up_queue_s": 3, "scale_down_queue_s": 0.25,
+                "hold_s": 5, "admission": "degrade"}}}"#,
+        )
+        .unwrap();
+        let k = &c.cluster.control;
+        assert_eq!(k.autoscale, AutoscalePolicy::Predictive);
+        assert_eq!(k.min_replicas, 2);
+        assert_eq!(k.max_replicas, 6);
+        assert_eq!(k.warmup_s, 15.0);
+        assert_eq!(k.control_interval_s, 2.5);
+        assert_eq!(k.admission, crate::simulator::dispatch::AdmissionPolicy::Degrade);
+    }
+
+    #[test]
+    fn rejects_bad_control_bounds() {
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"control": {"min_replicas": 4, "max_replicas": 2}}}"#
+        )
+        .is_err());
+        assert!(Config::from_json_str(r#"{"cluster": {"control": {"min_replicas": 0}}}"#)
+            .is_err());
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"control": {"autoscale": "magic"}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn autoscale_policy_names_round_trip() {
+        for p in [AutoscalePolicy::Off, AutoscalePolicy::Reactive, AutoscalePolicy::Predictive] {
+            assert_eq!(AutoscalePolicy::parse(p.name()).unwrap(), p);
         }
     }
 

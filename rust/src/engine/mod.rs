@@ -143,6 +143,23 @@ impl LoadSnapshot {
         self.tier_slack_s.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// The time half of the feasibility rule: queue wait plus priced
+    /// prefill (and, for TTLT SLOs, decode tail) beats `deadline` when
+    /// service starts no earlier than `start`. Dispatch, relegation
+    /// handoff and global admission all price waits through this one
+    /// expression so their verdicts can never drift apart; they differ
+    /// only in which KV predicate they pair it with (`feasible_for`
+    /// demands free headroom now, admission only hard capacity).
+    pub fn deadline_feasible(
+        &self,
+        start: f64,
+        est_prefill_s: f64,
+        est_decode_s: f64,
+        deadline: f64,
+    ) -> bool {
+        start + self.queued_prefill_s + est_prefill_s + est_decode_s <= deadline
+    }
+
     /// The one feasibility rule dispatch and relegation handoff share:
     /// can this replica still meet `deadline` for a request of the given
     /// footprint, starting no earlier than `start`? The request must fit
@@ -160,7 +177,7 @@ impl LoadSnapshot {
     ) -> bool {
         let kv_demand = prompt_tokens as u64 + decode_tokens as u64;
         kv_demand <= self.kv_free()
-            && start + self.queued_prefill_s + est_prefill_s + est_decode_s <= deadline
+            && self.deadline_feasible(start, est_prefill_s, est_decode_s, deadline)
     }
 }
 
@@ -340,19 +357,22 @@ impl<B: ExecutionBackend> Engine<B> {
         self.pending.insert(i, (spec.arrival_s, spec));
     }
 
-    /// Admit a handed-off request immediately, keeping its relegation
-    /// history. Its original arrival time is already in this replica's
-    /// past (the cluster advances our clock to the handoff instant
-    /// first), and bypassing the pending queue guarantees the request
-    /// can never be stranded unadmitted — and thus uncounted — when a
-    /// binding horizon stops the run before this replica steps again.
-    pub fn admit_migrated(&mut self, spec: RequestSpec) -> RequestId {
+    /// Admit a handed-off request immediately. Its original arrival time
+    /// is already in this replica's past (the cluster advances our clock
+    /// to the handoff instant first), and bypassing the pending queue
+    /// guarantees the request can never be stranded unadmitted — and
+    /// thus uncounted — when a binding horizon stops the run before this
+    /// replica steps again. `was_relegated` carries the origin replica's
+    /// relegation history: true for relegation handoffs, the origin
+    /// request's own flag for drain moves (a drained request that was
+    /// never relegated must not tally as relegated).
+    pub fn admit_migrated(&mut self, spec: RequestSpec, was_relegated: bool) -> RequestId {
         debug_assert!(
             spec.arrival_s <= self.now + 1e-9,
             "handoff must not admit requests from the future"
         );
         let id = self.admit(spec);
-        self.store.get_mut(id).was_relegated = true;
+        self.store.get_mut(id).was_relegated = was_relegated;
         id
     }
 
@@ -578,15 +598,19 @@ impl<B: ExecutionBackend> Engine<B> {
             .collect()
     }
 
-    /// Remove a relegated, not-yet-decoding request from this replica for
-    /// re-dispatch elsewhere. The local entry becomes a `Migrated`
-    /// tombstone (excluded from metrics, KV freed); the returned spec
-    /// keeps the original arrival time so deadlines do not reset at the
-    /// target, which re-prefills the prompt from scratch.
+    /// Remove a not-yet-decoding request from this replica for
+    /// re-dispatch elsewhere (relegation handoff, or a drain move when
+    /// this replica is being scaled down). The local entry becomes a
+    /// `Migrated` tombstone (excluded from metrics, KV freed); the
+    /// returned spec keeps the original arrival time so deadlines do not
+    /// reset at the target, which re-prefills the prompt from scratch.
     pub fn migrate_out(&mut self, id: RequestId) -> RequestSpec {
         let spec = {
             let r = self.store.get_mut(id);
-            debug_assert_eq!(r.phase, Phase::Relegated, "only relegated requests migrate");
+            debug_assert!(
+                matches!(r.phase, Phase::Relegated | Phase::Prefill),
+                "only queued (relegated or prefill) requests migrate"
+            );
             debug_assert_eq!(r.decoded, 0, "decoding requests hold live KV state");
             r.phase = Phase::Migrated;
             r.spec.clone()
@@ -594,6 +618,39 @@ impl<B: ExecutionBackend> Engine<B> {
         self.live.remove(&id);
         self.backend.release(id);
         spec
+    }
+
+    /// Requests that may leave this replica during a graceful drain:
+    /// admitted but not yet decoding (the target re-prefills from
+    /// scratch, so decoding requests stay and finish locally). Sorted by
+    /// id so drain order — and therefore the whole run — is independent
+    /// of hash-set iteration order.
+    pub fn drain_candidates(&self) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> = self
+            .live
+            .iter()
+            .copied()
+            .filter(|&id| {
+                let r = self.store.get(id);
+                matches!(r.phase, Phase::Prefill | Phase::Relegated) && r.decoded == 0
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Remove and return every dispatched-but-not-yet-admitted arrival
+    /// (the pending tail) so a draining replica's future work can be
+    /// re-dispatched; the specs keep their arrival times.
+    pub fn take_pending(&mut self) -> Vec<RequestSpec> {
+        self.pending.split_off(self.next_pending).into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// True when this replica owes no work at all: nothing admitted and
+    /// unfinished, nothing dispatched and pending. A draining replica
+    /// retires exactly when this first holds.
+    pub fn is_drained(&self) -> bool {
+        self.live.is_empty() && self.next_pending >= self.pending.len()
     }
 
     /// Evaluation summary at the current time.
@@ -831,7 +888,7 @@ mod tests {
         let cfg = Config::default();
         let mut eng = Engine::sim(&cfg);
         eng.advance_to(10.0);
-        let id = eng.admit_migrated(spec(4.0, 100, 2, 0));
+        let id = eng.admit_migrated(spec(4.0, 100, 2, 0), true);
         // Already in the store (counted even if the engine never steps
         // again), with deadlines from the original arrival.
         assert_eq!(eng.store.get(id).spec.arrival_s, 4.0);
@@ -839,6 +896,61 @@ mod tests {
         assert_eq!(eng.summary(5000).total, 1);
         eng.run(1e6);
         assert_eq!(eng.store.get(id).phase, Phase::Finished);
+
+        // A drain move of a never-relegated request must not invent a
+        // relegation.
+        let mut eng2 = Engine::sim(&cfg);
+        eng2.advance_to(10.0);
+        let id2 = eng2.admit_migrated(spec(4.0, 100, 2, 0), false);
+        assert!(!eng2.store.get(id2).was_relegated);
+    }
+
+    #[test]
+    fn drain_candidates_cover_queued_not_decoding() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        // Three queued requests, none admitted-to-decode yet.
+        eng.submit_now(spec(0.0, 4000, 10, 0));
+        eng.submit_now(spec(0.0, 4000, 10, 1));
+        eng.submit_now(spec(0.0, 4000, 10, 2));
+        let ids = eng.drain_candidates();
+        assert_eq!(ids, vec![0, 1, 2], "sorted, all queued requests movable");
+        // Drive one into decode: it must drop out of the candidate set.
+        while eng.store.get(0).decoded == 0 {
+            assert!(eng.step());
+        }
+        assert!(!eng.drain_candidates().contains(&0));
+    }
+
+    #[test]
+    fn take_pending_empties_the_undispatched_tail() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.enqueue(spec(5.0, 100, 2, 0));
+        eng.enqueue(spec(9.0, 200, 2, 1));
+        assert!(!eng.is_drained());
+        let specs = eng.take_pending();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].arrival_s, 5.0);
+        assert_eq!(specs[1].prompt_tokens, 200);
+        assert!(eng.is_drained(), "nothing admitted, pending tail removed");
+        assert_eq!(eng.next_event_time(), None);
+        // Snapshot no longer counts the removed commitments.
+        let s = eng.load_snapshot();
+        assert_eq!(s.backlog, 0);
+        assert_eq!(s.kv_committed, 0);
+    }
+
+    #[test]
+    fn migrate_out_accepts_queued_prefill_for_drain() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_now(spec(0.0, 5000, 10, 1));
+        assert_eq!(eng.store.get(0).phase, Phase::Prefill);
+        let out = eng.migrate_out(0);
+        assert_eq!(out.prompt_tokens, 5000);
+        assert_eq!(eng.store.get(0).phase, Phase::Migrated);
+        assert!(eng.is_drained());
     }
 
     #[test]

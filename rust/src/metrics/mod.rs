@@ -52,6 +52,19 @@ pub struct Summary {
     pub goodput_rps: f64,
     /// Fraction of requests that were ever relegated.
     pub relegated_pct: f64,
+    /// GPU-seconds billed over the run (replica lifetime × TP width).
+    /// Filled by `Cluster::summary`; zero for single-engine summaries.
+    pub gpu_seconds: f64,
+    /// Arrivals early-rejected by admission control, per tier. Rejected
+    /// requests never reach an engine store, so they are *not* part of
+    /// `total`/`violations` — they are accounted exactly once here.
+    pub rejected_per_tier: Vec<usize>,
+    /// Arrivals degraded to a looser tier by admission control, indexed
+    /// by original tier (they count in `total` under the tier they were
+    /// served at).
+    pub degraded_per_tier: Vec<usize>,
+    /// (time, billed replica count) at every provision/retire edge.
+    pub replica_timeline: Vec<(f64, usize)>,
 }
 
 /// Compute the summary at horizon `horizon_s` (typically the workload end
@@ -151,6 +164,10 @@ pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: 
         max_tbt_p99: max_tbt.quantile(0.99).unwrap_or(0.0),
         goodput_rps: served_ok as f64 / horizon_s.max(1e-9),
         relegated_pct: pct(relegated, total),
+        gpu_seconds: 0.0,
+        rejected_per_tier: Vec::new(),
+        degraded_per_tier: Vec::new(),
+        replica_timeline: Vec::new(),
     }
 }
 
@@ -161,6 +178,27 @@ impl Summary {
             0.0
         } else {
             100.0 * v as f64 / t as f64
+        }
+    }
+
+    /// Total arrivals early-rejected by admission control.
+    pub fn rejected_total(&self) -> usize {
+        self.rejected_per_tier.iter().sum()
+    }
+
+    /// Total arrivals degraded to a looser tier by admission control.
+    pub fn degraded_total(&self) -> usize {
+        self.degraded_per_tier.iter().sum()
+    }
+
+    /// Rejections as a percentage of everything submitted (admitted +
+    /// rejected) — the graceful-degradation price of admission control.
+    pub fn rejection_pct(&self) -> f64 {
+        let submitted = self.total + self.rejected_total();
+        if submitted == 0 {
+            0.0
+        } else {
+            100.0 * self.rejected_total() as f64 / submitted as f64
         }
     }
 }
@@ -350,6 +388,31 @@ mod tests {
         let s = summarize(&store, 100.0, 1000, 1);
         assert_eq!(s.total, 1);
         assert_eq!(s.relegated_pct, 100.0, "exactly once, never > 100%");
+    }
+
+    #[test]
+    fn control_plane_fields_default_empty() {
+        let mut store = RequestStore::new();
+        let id = add_request(&mut store, 0.0, 10, 1, 0, INT);
+        finish(&mut store, id, &[1.0]);
+        let s = summarize(&store, 10.0, 1000, 3);
+        assert_eq!(s.gpu_seconds, 0.0);
+        assert_eq!(s.rejected_total(), 0);
+        assert_eq!(s.degraded_total(), 0);
+        assert_eq!(s.rejection_pct(), 0.0);
+        assert!(s.replica_timeline.is_empty());
+    }
+
+    #[test]
+    fn rejection_pct_counts_submitted_base() {
+        let mut store = RequestStore::new();
+        let id = add_request(&mut store, 0.0, 10, 1, 0, INT);
+        finish(&mut store, id, &[1.0]);
+        let mut s = summarize(&store, 10.0, 1000, 3);
+        s.rejected_per_tier = vec![3, 0, 0];
+        // 1 admitted + 3 rejected: 75% of submissions rejected.
+        assert!((s.rejection_pct() - 75.0).abs() < 1e-9);
+        assert_eq!(s.rejected_total(), 3);
     }
 
     #[test]

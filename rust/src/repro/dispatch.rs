@@ -78,6 +78,7 @@ pub fn dispatch(scale: Scale) -> Result<()> {
         (DispatchPolicy::RoundRobin, false),
         (DispatchPolicy::JoinShortestQueue, false),
         (DispatchPolicy::PowerOfTwoChoices, false),
+        (DispatchPolicy::PredictedTtft, false),
         (DispatchPolicy::LeastLoaded, false),
         (DispatchPolicy::LeastLoaded, true),
     ] {

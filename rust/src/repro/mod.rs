@@ -8,6 +8,7 @@
 //!
 //! EXPERIMENTS.md records paper-vs-measured for every entry.
 
+pub mod autoscale;
 pub mod capacity;
 pub mod dispatch;
 pub mod load;
@@ -146,6 +147,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "tab1" => micro::tab1(),
         "tab3" => micro::tab3(scale),
         "dispatch" => dispatch::dispatch(scale),
+        "autoscale" => autoscale::autoscale(scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n=== {id} ===");
@@ -159,7 +161,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
 
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "tab1", "tab3", "dispatch",
+    "fig12", "tab1", "tab3", "dispatch", "autoscale",
 ];
 
 #[cfg(test)]

@@ -28,16 +28,50 @@
 //! Snapshots are cached and invalidated per replica on state change, so a
 //! burst of simultaneous arrivals sees each other's placements without
 //! rescanning every store per arrival.
+//!
+//! # Elastic control plane (see [`crate::simulator::control`])
+//!
+//! The replica set is **mutable**: a [`ScalingController`] evaluated on
+//! periodic control ticks of the shared clock can provision replicas
+//! (state `Warming` until a configurable cold-start elapses) and drain
+//! them (state `Draining`: excluded from dispatch, queued work
+//! re-dispatched through the relegation-handoff machinery, retirement
+//! only once empty). A global [`AdmissionController`] at the dispatcher
+//! early-rejects (or degrades) arrivals whose deadline is provably
+//! unmeetable on every dispatchable replica.
+//!
+//! **Index-stability invariants** (audited for the mutable replica set;
+//! `tests/control_plane.rs` holds regression tests against them):
+//!
+//! 1. replica slots are append-only — a retired replica keeps its index
+//!    forever, so entries in the lazy-deletion event heap, the snapshot
+//!    cache, and every per-replica stats vector never shift or alias;
+//! 2. every per-replica vector (`snaps`, `snap_dirty`, `wedged`,
+//!    `handoff_seen`, `states`, `provisioned_at`, `retired_at`,
+//!    `stats.dispatched`) grows in lockstep inside
+//!    [`Cluster::provision_replica`] — no other site pushes;
+//! 3. a retired replica's `next_event_time` is `None`, so any stale heap
+//!    entries it left behind are discarded by the lazy-deletion pop and
+//!    can never be returned as live events;
+//! 4. dispatch, handoff and drain targets are drawn only from `Active`
+//!    replicas, so no new work can reach a warming, draining or retired
+//!    slot.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::config::{Config, Policy, SchedulerConfig};
+use crate::config::{Config, ControlConfig, Policy, SchedulerConfig};
 use crate::engine::{Engine, LoadSnapshot, SimBackend};
 use crate::metrics::{summarize_many, Summary};
 use crate::qos::Slo;
 use crate::request::{RequestSpec, RequestStore};
-use crate::simulator::dispatch::{build_dispatcher, Dispatcher};
+use crate::simulator::control::{
+    build_controller, ControlView, ReplicaState, ScalingController, ScalingDecision,
+};
+use crate::simulator::dispatch::{
+    build_dispatcher_for, AdmissionController, AdmissionDecision, AdmissionPolicy, Dispatcher,
+    LeastLoaded,
+};
 use crate::workload::datasets::Dataset;
 
 /// Totally ordered event time for the replica-event heap (virtual times
@@ -64,16 +98,33 @@ impl Ord for EventKey {
 /// Per-run cluster counters.
 #[derive(Debug, Clone, Default)]
 pub struct ClusterStats {
-    /// Arrivals routed to each replica.
+    /// Arrivals routed to each replica (net of drain re-dispatch: a
+    /// pending arrival moved off a draining replica is re-counted at its
+    /// final home, so the vector always sums to the dispatched total).
     pub dispatched: Vec<usize>,
     /// Cross-replica relegation handoffs performed.
     pub handoffs: usize,
-    /// Events processed (arrivals + replica iterations).
+    /// Events processed (arrivals + replica iterations + control ticks).
     pub events: u64,
+    /// Arrivals early-rejected by admission control, per tier.
+    pub rejected: Vec<usize>,
+    /// Arrivals degraded to a looser tier by admission control, indexed
+    /// by *original* tier.
+    pub degraded: Vec<usize>,
+    /// Requests (admitted or pending) moved off draining replicas.
+    pub drain_redispatched: usize,
+    /// Replicas provisioned by the controller.
+    pub scale_ups: usize,
+    /// Replicas put into draining by the controller.
+    pub scale_downs: usize,
+    /// Draining replicas that emptied and retired.
+    pub retired: usize,
+    /// Controller evaluations performed.
+    pub control_ticks: u64,
 }
 
 /// A set of replicas interleaved on one shared virtual clock behind a
-/// global dispatcher.
+/// global dispatcher, optionally grown/shrunk by an elastic controller.
 pub struct Cluster {
     engines: Vec<Engine<SimBackend>>,
     dispatcher: Box<dyn Dispatcher>,
@@ -102,17 +153,41 @@ pub struct Cluster {
     sec_per_prefill_token: f64,
     sec_per_decode_token: f64,
     relegation_handoff: bool,
+    /// Config the cluster was built from — needed to provision replicas
+    /// after construction (identical engines by construction).
+    cfg: Config,
+    /// Per-replica lifecycle, index-aligned with `engines` (append-only).
+    states: Vec<ReplicaState>,
+    /// Virtual time each replica slot started billing (0 for the initial
+    /// set, the scale-up instant for provisioned ones).
+    provisioned_at: Vec<f64>,
+    /// Virtual time the slot retired; `None` while still billed.
+    retired_at: Vec<Option<f64>>,
+    /// Warming slots, maintained so the promote scan is gated O(1).
+    warming_count: usize,
+    /// Elastic scaling policy (None = static replica set).
+    controller: Option<Box<dyn ScalingController>>,
+    control: ControlConfig,
+    next_control_t: f64,
+    admission: AdmissionController,
+    /// Whether any control-plane feature can affect dispatch. False for
+    /// the default static/admit-all configuration, which then takes the
+    /// exact pre-control-plane fast path.
+    control_active: bool,
+    /// (time, billed replica count) at every provision/retire edge.
+    timeline: Vec<(f64, usize)>,
+    tp_degree: u32,
     pub stats: ClusterStats,
 }
 
 impl Cluster {
-    /// A cluster of `replicas` identical simulation engines; dispatcher
-    /// and handoff come from `cfg.cluster.dispatch`.
+    /// A cluster of `replicas` identical simulation engines; dispatcher,
+    /// handoff, autoscaling and admission come from `cfg.cluster`.
     pub fn new(cfg: &Config, replicas: usize) -> Cluster {
         Self::with_dispatcher(
             cfg,
             replicas,
-            build_dispatcher(&cfg.cluster.dispatch),
+            build_dispatcher_for(&cfg.cluster.dispatch, &cfg.hardware, cfg.scheduler.chunk_size),
             cfg.cluster.dispatch.relegation_handoff,
         )
     }
@@ -130,6 +205,11 @@ impl Cluster {
         let snaps: Vec<LoadSnapshot> = engines.iter().map(|e| e.load_snapshot()).collect();
         let sec_per_prefill_token = engines[0].sec_per_prefill_token();
         let sec_per_decode_token = engines[0].sec_per_decode_token();
+        let control = cfg.cluster.control.clone();
+        let controller = build_controller(&control, &cfg.tiers);
+        let admission = AdmissionController::new(control.admission);
+        let control_active = controller.is_some() || control.admission != AdmissionPolicy::None;
+        let n_tiers = cfg.tiers.len();
         Cluster {
             engines,
             dispatcher,
@@ -145,12 +225,59 @@ impl Cluster {
             sec_per_prefill_token,
             sec_per_decode_token,
             relegation_handoff,
-            stats: ClusterStats { dispatched: vec![0; replicas], ..Default::default() },
+            cfg: cfg.clone(),
+            states: vec![ReplicaState::Active; replicas],
+            provisioned_at: vec![0.0; replicas],
+            retired_at: vec![None; replicas],
+            warming_count: 0,
+            next_control_t: control.control_interval_s,
+            controller,
+            control,
+            admission,
+            control_active,
+            timeline: vec![(0.0, replicas)],
+            tp_degree: cfg.hardware.tp_degree,
+            stats: ClusterStats {
+                dispatched: vec![0; replicas],
+                rejected: vec![0; n_tiers],
+                degraded: vec![0; n_tiers],
+                ..Default::default()
+            },
         }
     }
 
+    /// Replica slots ever created (including warming and retired ones).
     pub fn replicas(&self) -> usize {
         self.engines.len()
+    }
+
+    /// Per-replica lifecycle states, index-aligned with `engines`.
+    pub fn replica_states(&self) -> &[ReplicaState] {
+        &self.states
+    }
+
+    /// (time, billed replica count) at every provision/retire edge.
+    pub fn replica_timeline(&self) -> &[(f64, usize)] {
+        &self.timeline
+    }
+
+    /// Currently billed (non-retired) replicas.
+    pub fn billed_replicas(&self) -> usize {
+        self.states.iter().filter(|s| s.is_billed()).count()
+    }
+
+    /// GPU-seconds consumed so far: each slot bills from its provision
+    /// instant until retirement (or the current evaluation horizon),
+    /// times the tensor-parallel width. Warm-up time bills — the
+    /// instance is up while the engine loads.
+    pub fn gpu_seconds(&self) -> f64 {
+        let horizon = self.eval_time();
+        (0..self.engines.len())
+            .map(|i| {
+                let end = self.retired_at[i].unwrap_or(horizon);
+                (end - self.provisioned_at[i]).max(0.0) * self.tp_degree as f64
+            })
+            .sum()
     }
 
     /// Queue a trace for dispatch-at-arrival. Arrivals need not be sorted.
@@ -175,9 +302,17 @@ impl Cluster {
         &self.engines
     }
 
-    /// Merged summary over all replicas at [`Cluster::eval_time`].
+    /// Merged summary over all replicas at [`Cluster::eval_time`],
+    /// including the control-plane accounting (GPU-seconds, per-tier
+    /// rejected/degraded counts, replica timeline).
     pub fn summary(&self, long_threshold: u32) -> Summary {
-        summarize_many(&self.stores(), self.eval_time(), long_threshold, self.tiers.len())
+        let mut s =
+            summarize_many(&self.stores(), self.eval_time(), long_threshold, self.tiers.len());
+        s.gpu_seconds = self.gpu_seconds();
+        s.rejected_per_tier = self.stats.rejected.clone();
+        s.degraded_per_tier = self.stats.degraded.clone();
+        s.replica_timeline = self.timeline.clone();
+        s
     }
 
     /// Seconds of decode work that count against `slo`'s deadline —
@@ -237,17 +372,154 @@ impl Cluster {
         }
     }
 
+    /// Account an admission verdict: bump the rejected/degraded tally
+    /// (indexed by the *original* tier) and rewrite the spec's tier on a
+    /// degrade. Returns false when the arrival was rejected — the
+    /// request then never touches an engine, never occupies KV, and is
+    /// accounted exactly once here.
+    fn apply_admission(&mut self, decision: AdmissionDecision, spec: &mut RequestSpec) -> bool {
+        let n_tiers = self.tiers.len();
+        match decision {
+            AdmissionDecision::Reject => {
+                self.stats.rejected[spec.tier.min(n_tiers - 1)] += 1;
+                false
+            }
+            AdmissionDecision::Degrade { to_tier } => {
+                self.stats.degraded[spec.tier.min(n_tiers - 1)] += 1;
+                spec.tier = to_tier;
+                true
+            }
+            AdmissionDecision::Accept => true,
+        }
+    }
+
+    /// Hand an admitted arrival to replica `r` and update every
+    /// dispatch-side structure.
+    fn place(&mut self, r: usize, spec: RequestSpec) {
+        self.engines[r].enqueue(spec);
+        self.stats.dispatched[r] += 1;
+        self.snap_dirty[r] = true;
+        self.wedged[r] = false;
+        self.reheap(r);
+    }
+
+    /// The one pricing rule every dispatch path shares: the arrival's
+    /// SLO, its prefill work at the reference rate, and its decode tail
+    /// when the deadline covers decoding.
+    fn priced(&self, spec: &RequestSpec) -> (Slo, f64, f64) {
+        let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
+        let est_prefill_s = spec.prompt_tokens as f64 * self.sec_per_prefill_token;
+        let est_decode_s = self.decode_tail_s(slo, spec.decode_tokens);
+        (slo, est_prefill_s, est_decode_s)
+    }
+
     /// Route one arrival using live snapshots of true cluster state.
     fn dispatch_arrival(&mut self, spec: RequestSpec) {
+        if !self.control_active {
+            // Static admit-all cluster: the exact pre-control-plane path.
+            self.dispatch_static(spec);
+            return;
+        }
+        self.promote_warming();
+        self.refresh_snapshots();
+
+        let mut spec = spec;
+        if self.states.iter().all(|s| s.is_dispatchable()) {
+            // Every slot Active (no scaling event has happened yet):
+            // judge and route on the full snapshot slice with zero
+            // copies, exactly like the static path plus admission.
+            let decision = self.admission.decide(
+                &spec,
+                &self.tiers,
+                self.sec_per_prefill_token,
+                self.sec_per_decode_token,
+                &self.snaps,
+            );
+            if !self.apply_admission(decision, &mut spec) {
+                return;
+            }
+            let (slo, est_prefill_s, est_decode_s) = self.priced(&spec);
+            let r =
+                self.dispatcher.dispatch(&spec, slo, est_prefill_s, est_decode_s, &self.snaps);
+            assert!(
+                r < self.engines.len(),
+                "dispatcher '{}' returned bad replica {r}",
+                self.dispatcher.name()
+            );
+            self.place(r, spec);
+            return;
+        }
+
+        // Some slot is warming, draining or retired: only Active
+        // replicas may receive new work, so build a filtered view whose
+        // indices map back to real slots. (Retired slots keep their
+        // index forever, so once a replica has retired this copying path
+        // is the permanent one — if profiles ever show it matters, the
+        // fix is an incrementally-maintained compacted view invalidated
+        // on state transitions, not index reuse.)
+        let eligible: Vec<usize> = (0..self.states.len())
+            .filter(|&i| self.states[i].is_dispatchable())
+            .collect();
+        // The constructor starts every slot Active, `drain_replica`
+        // refuses to demote the last Active replica, and no other
+        // transition leaves the Active state — so an Active slot always
+        // exists.
+        assert!(!eligible.is_empty(), "invariant: at least one Active replica always exists");
+        // The dispatcher routes over the Active snapshots (the first
+        // `eligible.len()` entries). Admission additionally sees warming
+        // capacity — already ordered, seconds away — with its start
+        // floored at `ready_at`, so a long-budget arrival that the
+        // warming replica will comfortably serve is not "provably
+        // infeasible" merely because warm-up has not finished.
+        let mut view: Vec<LoadSnapshot> =
+            eligible.iter().map(|&i| self.snaps[i].clone()).collect();
+        let n_eligible = view.len();
+        if self.admission.policy != AdmissionPolicy::None {
+            for (i, st) in self.states.iter().enumerate() {
+                if let ReplicaState::Warming { ready_at } = *st {
+                    let mut s = self.snaps[i].clone();
+                    s.now = s.now.max(ready_at);
+                    view.push(s);
+                }
+            }
+            let decision = self.admission.decide(
+                &spec,
+                &self.tiers,
+                self.sec_per_prefill_token,
+                self.sec_per_decode_token,
+                &view,
+            );
+            if !self.apply_admission(decision, &mut spec) {
+                return;
+            }
+        }
+        let (slo, est_prefill_s, est_decode_s) = self.priced(&spec);
+        let r_local = self.dispatcher.dispatch(
+            &spec,
+            slo,
+            est_prefill_s,
+            est_decode_s,
+            &view[..n_eligible],
+        );
+        assert!(
+            r_local < n_eligible,
+            "dispatcher '{}' returned bad replica {r_local}",
+            self.dispatcher.name()
+        );
+        self.place(eligible[r_local], spec);
+    }
+
+    /// The pre-control-plane dispatch path: every replica is Active and
+    /// every arrival is admitted. Kept verbatim so default-configured
+    /// clusters reproduce the PR-1 behavior bit-for-bit.
+    fn dispatch_static(&mut self, spec: RequestSpec) {
         // Load-oblivious policies (round-robin) never read the
         // snapshots; skip the refresh so the default configuration stays
         // as cheap as the seed's static shard split.
         if self.dispatcher.needs_snapshots() {
             self.refresh_snapshots();
         }
-        let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
-        let est_prefill_s = spec.prompt_tokens as f64 * self.sec_per_prefill_token;
-        let est_decode_s = self.decode_tail_s(slo, spec.decode_tokens);
+        let (slo, est_prefill_s, est_decode_s) = self.priced(&spec);
         let r = self.dispatcher.dispatch(&spec, slo, est_prefill_s, est_decode_s, &self.snaps);
         // Hard assert in every profile: a clamped reroute would make
         // debug and release runs of the same seed diverge and mask the
@@ -257,11 +529,216 @@ impl Cluster {
             "dispatcher '{}' returned bad replica {r}",
             self.dispatcher.name()
         );
-        self.engines[r].enqueue(spec);
-        self.stats.dispatched[r] += 1;
-        self.snap_dirty[r] = true;
-        self.wedged[r] = false;
-        self.reheap(r);
+        self.place(r, spec);
+    }
+
+    // ---- elastic control plane ------------------------------------------
+
+    /// Provision one new replica. It bills from now and accepts work
+    /// once the configured warm-up has elapsed. Appends one slot to
+    /// every per-replica structure (indices are stable forever).
+    pub fn provision_replica(&mut self) -> usize {
+        let i = self.engines.len();
+        let now = self.clock;
+        let warmup = self.control.warmup_s;
+        let engine = Engine::sim(&self.cfg);
+        self.snaps.push(engine.load_snapshot());
+        self.engines.push(engine);
+        self.snap_dirty.push(false);
+        self.wedged.push(false);
+        self.handoff_seen.push(0);
+        self.provisioned_at.push(now);
+        self.retired_at.push(None);
+        self.stats.dispatched.push(0);
+        if warmup > 0.0 {
+            self.states.push(ReplicaState::Warming { ready_at: now + warmup });
+            self.warming_count += 1;
+        } else {
+            self.states.push(ReplicaState::Active);
+            // Ready immediately: align its clock with the cluster.
+            self.engines[i].advance_to(now);
+        }
+        self.control_active = true;
+        self.timeline.push((now, self.billed_replicas()));
+        i
+    }
+
+    /// Promote warming replicas whose cold-start has elapsed.
+    fn promote_warming(&mut self) {
+        if self.warming_count == 0 {
+            return;
+        }
+        for i in 0..self.states.len() {
+            if let ReplicaState::Warming { ready_at } = self.states[i] {
+                if ready_at <= self.clock {
+                    self.states[i] = ReplicaState::Active;
+                    self.warming_count -= 1;
+                    // The replica cannot have served the past.
+                    self.engines[i].advance_to(self.clock.max(ready_at));
+                    self.snap_dirty[i] = true;
+                    self.reheap(i);
+                }
+            }
+        }
+    }
+
+    /// Begin a graceful drain of replica `i`: no new dispatch, queued
+    /// work re-dispatched to active replicas, retirement once empty.
+    /// Requires another Active replica to exist (the cluster must stay
+    /// serviceable).
+    pub fn drain_replica(&mut self, i: usize) {
+        assert!(matches!(self.states[i], ReplicaState::Active), "only active replicas can drain");
+        assert!(
+            self.states.iter().enumerate().any(|(j, s)| j != i && s.is_dispatchable()),
+            "cannot drain the last active replica"
+        );
+        self.states[i] = ReplicaState::Draining { since: self.clock };
+        self.control_active = true;
+        self.stats.scale_downs += 1;
+        self.try_drain_moves(i);
+        self.maybe_retire(i);
+    }
+
+    /// Move a draining replica's not-yet-started work to active
+    /// replicas: first the dispatched-but-unadmitted pending tail, then
+    /// admitted requests that have not begun decoding (via the
+    /// relegation-handoff machinery — `migrate_out` tombstone +
+    /// immediate admission at the target, original arrival time kept so
+    /// deadlines never reset). Decoding requests stay and finish
+    /// locally; the replica retires only once empty, so no request can
+    /// be stranded or lost.
+    fn try_drain_moves(&mut self, origin: usize) {
+        if !self.states.iter().enumerate().any(|(j, s)| j != origin && s.is_dispatchable()) {
+            return; // nowhere to move work; it finishes locally
+        }
+        // Un-admitted pending arrivals: physically re-dispatched, so the
+        // per-replica dispatch tally follows them to their final home.
+        let pending = self.engines[origin].take_pending();
+        if !pending.is_empty() {
+            self.snap_dirty[origin] = true;
+            for spec in pending {
+                self.refresh_snapshots();
+                let t = self.best_drain_target(origin);
+                self.engines[t].enqueue(spec);
+                self.stats.dispatched[origin] -= 1;
+                self.stats.dispatched[t] += 1;
+                self.stats.drain_redispatched += 1;
+                self.snap_dirty[t] = true;
+                self.wedged[t] = false;
+                self.reheap(t);
+            }
+        }
+        // Admitted, not-yet-decoding requests: relegation-handoff path.
+        for id in self.engines[origin].drain_candidates() {
+            self.refresh_snapshots();
+            let t = self.best_drain_target(origin);
+            let was_relegated = self.engines[origin].store.get(id).was_relegated;
+            let spec = self.engines[origin].migrate_out(id);
+            self.engines[t].advance_to(self.clock);
+            self.engines[t].admit_migrated(spec, was_relegated);
+            self.stats.drain_redispatched += 1;
+            self.snap_dirty[origin] = true;
+            self.snap_dirty[t] = true;
+            self.wedged[t] = false;
+            self.reheap(t);
+        }
+        self.reheap(origin);
+    }
+
+    /// Least-loaded Active replica (by `LeastLoaded::score`, ties toward
+    /// the lowest index), optionally excluding one slot. Drain-move
+    /// targeting and scale-down victim selection share this one scan so
+    /// their notion of "cheapest active slot" can never diverge.
+    fn least_loaded_active(&self, exclude: Option<usize>) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, s) in self.snaps.iter().enumerate() {
+            if Some(i) == exclude || !self.states[i].is_dispatchable() {
+                continue;
+            }
+            let score = LeastLoaded::score(s);
+            if best.map_or(true, |(b, _)| score < b) {
+                best = Some((score, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Least-loaded active replica other than `origin` (drain moves are
+    /// unconditional: the set is shrinking because the cluster is
+    /// underloaded, so the cheapest active slot is the right home).
+    fn best_drain_target(&self, origin: usize) -> usize {
+        self.least_loaded_active(Some(origin))
+            .expect("caller guarantees an active target exists")
+    }
+
+    /// Retire a draining replica that has emptied. Billing runs to the
+    /// replica's own clock (its final atomic iteration may overshoot the
+    /// shared clock and that work was really done), but the timeline
+    /// edge is stamped with the cluster clock so the recorded edges stay
+    /// monotone even when a later control tick fires before the
+    /// overshoot instant.
+    fn maybe_retire(&mut self, i: usize) {
+        if matches!(self.states[i], ReplicaState::Draining { .. }) && self.engines[i].is_drained() {
+            self.states[i] = ReplicaState::Retired;
+            self.retired_at[i] = Some(self.clock.max(self.engines[i].now()));
+            self.stats.retired += 1;
+            self.timeline.push((self.clock, self.billed_replicas()));
+        }
+    }
+
+    /// One controller evaluation on the shared clock: promote warming
+    /// replicas, push drain progress, then apply the scaling decision.
+    fn control_tick(&mut self) {
+        self.stats.control_ticks += 1;
+        self.promote_warming();
+        self.refresh_snapshots();
+        for i in 0..self.engines.len() {
+            if matches!(self.states[i], ReplicaState::Draining { .. }) {
+                self.try_drain_moves(i);
+                self.maybe_retire(i);
+            }
+        }
+        // Enforce the configured floor regardless of policy signals: a
+        // cluster started (or left) below `min_replicas` re-orders
+        // capacity up to it — the floor is a guarantee, not a hint.
+        let serving = self.states.iter().filter(|s| s.is_serving()).count();
+        for _ in serving..self.control.min_replicas.min(self.control.max_replicas) {
+            self.provision_replica();
+            self.stats.scale_ups += 1;
+        }
+        let Some(mut controller) = self.controller.take() else {
+            return;
+        };
+        self.refresh_snapshots();
+        let decision = {
+            let view = ControlView { now: self.clock, snaps: &self.snaps, states: &self.states };
+            controller.decide(&view)
+        };
+        self.controller = Some(controller);
+        match decision {
+            ScalingDecision::Hold => {}
+            ScalingDecision::ScaleUp(n) => {
+                let serving = self.states.iter().filter(|s| s.is_serving()).count();
+                let room = self.control.max_replicas.saturating_sub(serving);
+                for _ in 0..n.min(room) {
+                    self.provision_replica();
+                    self.stats.scale_ups += 1;
+                }
+            }
+            ScalingDecision::ScaleDown(n) => {
+                for _ in 0..n {
+                    let serving = self.states.iter().filter(|s| s.is_serving()).count();
+                    let active = self.states.iter().filter(|s| s.is_dispatchable()).count();
+                    if serving <= self.control.min_replicas || active < 2 {
+                        break;
+                    }
+                    self.refresh_snapshots();
+                    // Cheapest active replica drains (least work to move).
+                    let Some(i) = self.least_loaded_active(None) else { break };
+                    self.drain_replica(i);
+                }
+            }
+        }
     }
 
     /// Llumnix-style relegation handoff: after replica `origin` steps, try
@@ -301,7 +778,10 @@ impl Cluster {
             let mut target: Option<usize> = None;
             let mut best_wait = f64::INFINITY;
             for (i, s) in self.snaps.iter().enumerate() {
-                if i == origin {
+                if i == origin || !self.states[i].is_dispatchable() {
+                    // Warming, draining and retired replicas take no new
+                    // work — a handoff there would either serve nothing
+                    // yet or re-strand the request on a leaving replica.
                     continue;
                 }
                 let wait = s.queued_prefill_s;
@@ -336,7 +816,7 @@ impl Cluster {
             // directly (keeping the relegation history) so a binding
             // horizon can never strand the copy unadmitted/uncounted.
             self.engines[t].advance_to(self.clock);
-            self.engines[t].admit_migrated(spec);
+            self.engines[t].admit_migrated(spec, true);
             self.stats.handoffs += 1;
             self.snap_dirty[origin] = true;
             self.snap_dirty[t] = true;
@@ -347,13 +827,38 @@ impl Cluster {
     }
 
     /// Run the cluster event loop until every replica drains or the next
-    /// event would start at or past `horizon_s`.
+    /// event would start at or past `horizon_s`. With a scaling
+    /// controller configured, periodic control ticks race with work
+    /// events on the same clock (ties go to the tick, so scaling and
+    /// drain progress are visible to the dispatch decision at the same
+    /// instant); ticks stop when no work remains — a controller cannot
+    /// create work.
     pub fn run(&mut self, horizon_s: f64) {
         loop {
+            if self.warming_count > 0 {
+                self.promote_warming();
+            }
             let arrival_t = self.trace.get(self.next_arrival).map(|s| s.arrival_s);
             let engine_ev = self.next_engine_event();
+            if arrival_t.is_none() && engine_ev.is_none() {
+                break;
+            }
+            if self.controller.is_some() {
+                let next_work = arrival_t
+                    .unwrap_or(f64::INFINITY)
+                    .min(engine_ev.map_or(f64::INFINITY, |(t, _)| t));
+                let c = self.next_control_t;
+                if c <= next_work && c < horizon_s {
+                    self.clock = self.clock.max(c);
+                    self.next_control_t = c + self.control.control_interval_s;
+                    self.control_tick();
+                    self.stats.events += 1;
+                    continue;
+                }
+            }
             match (arrival_t, engine_ev) {
-                (None, None) => break,
+                // Both-None already broke out of the loop above.
+                (None, None) => unreachable!(),
                 // Arrivals win ties so the dispatcher always sees a burst
                 // before any replica races past it.
                 (Some(a), ev) if ev.map_or(true, |(t, _)| a <= t) => {
@@ -378,6 +883,13 @@ impl Cluster {
                     }
                     self.snap_dirty[i] = true;
                     self.reheap(i);
+                    if self.control_active
+                        && matches!(self.states[i], ReplicaState::Draining { .. })
+                    {
+                        // The step may have finished the replica's last
+                        // local work: retire at the exact drain instant.
+                        self.maybe_retire(i);
+                    }
                     if self.relegation_handoff {
                         // Scan for handoffs only when this replica
                         // relegated something new, with a periodic retry
@@ -455,6 +967,9 @@ pub fn run_silo(
         tier_cfg.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, g.chunk_size);
         tier_cfg.scheduler.policy = Policy::SarathiFcfs;
         tier_cfg.cluster.dispatch = crate::config::DispatchConfig::default();
+        // Silos are the static, admit-everything baseline regardless of
+        // what control plane the shared cluster under test runs.
+        tier_cfg.cluster.control = ControlConfig::default();
         let tier_trace: Vec<RequestSpec> =
             trace.iter().filter(|r| r.tier == g.tier).cloned().collect();
         let mut cluster = Cluster::new(&tier_cfg, g.replicas);
@@ -680,5 +1195,86 @@ mod tests {
         assert!(low > 0);
         let s = run_shared(&cfg, 2, &t, 4000.0, 6251);
         assert_eq!(s.total, t.len());
+    }
+
+    #[test]
+    fn static_cluster_reports_gpu_seconds_and_timeline() {
+        let cfg = Config::default();
+        let t = trace(2.0, 60.0, 8);
+        let mut cluster = Cluster::new(&cfg, 2);
+        cluster.submit_trace(t);
+        cluster.run(4000.0);
+        let s = cluster.summary(6251);
+        let expect = 2.0 * cluster.eval_time();
+        assert!((s.gpu_seconds - expect).abs() < 1e-6, "{} vs {expect}", s.gpu_seconds);
+        assert_eq!(s.replica_timeline, vec![(0.0, 2)]);
+        assert!(s.rejected_per_tier.iter().all(|&r| r == 0));
+    }
+
+    #[test]
+    fn provisioned_replica_warms_up_before_serving() {
+        let mut cfg = Config::default();
+        cfg.cluster.control.warmup_s = 50.0;
+        cfg.cluster.dispatch.policy = DispatchPolicy::JoinShortestQueue;
+        let mut cluster = Cluster::new(&cfg, 1);
+        // Arrivals heavy enough that replica 0 builds a real backlog, so
+        // join-shortest-queue must route to the new replica once it is
+        // up (an idle tie would break to index 0 and prove nothing).
+        let t: Vec<RequestSpec> = (0..240)
+            .map(|i| RequestSpec {
+                arrival_s: i as f64 * 0.5,
+                prompt_tokens: 4000,
+                decode_tokens: 8,
+                tier: 1,
+                app_id: 0,
+                importance: Importance::High,
+            })
+            .collect();
+        cluster.submit_trace(t.clone());
+        cluster.run(10.0);
+        let i = cluster.provision_replica();
+        let ready_at = match cluster.replica_states()[i] {
+            ReplicaState::Warming { ready_at } => ready_at,
+            other => panic!("freshly provisioned replica must warm up, got {other:?}"),
+        };
+        assert!(ready_at >= 50.0, "warm-up must span the configured cold start");
+        cluster.run(1e6);
+        // Promoted once the clock passed its ready time, and only then
+        // could it receive work.
+        assert!(cluster.replica_states()[i].is_dispatchable());
+        assert!(cluster.stats.dispatched[i] > 0, "new replica must take load");
+        let earliest = cluster.engines()[i]
+            .store
+            .iter()
+            .map(|r| r.spec.arrival_s)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            earliest >= ready_at - 1e-9,
+            "no work may start before warm-up ends (earliest arrival {earliest}, ready {ready_at})"
+        );
+        let s = cluster.summary(6251);
+        assert_eq!(s.total, t.len());
+        // The second slot bills only from its provision instant.
+        assert!(s.gpu_seconds < 2.0 * cluster.eval_time());
+        assert_eq!(s.replica_timeline.len(), 2);
+    }
+
+    #[test]
+    fn drained_replica_retires_and_stops_billing() {
+        let mut cfg = Config::default();
+        cfg.cluster.dispatch.policy = DispatchPolicy::JoinShortestQueue;
+        let t = trace(3.0, 120.0, 5);
+        let n = t.len();
+        let mut cluster = Cluster::new(&cfg, 2);
+        cluster.submit_trace(t);
+        cluster.run(30.0);
+        cluster.drain_replica(1);
+        cluster.run(1e6);
+        assert_eq!(cluster.replica_states()[1], ReplicaState::Retired);
+        let s = cluster.summary(6251);
+        assert_eq!(s.total, n, "drain must neither lose nor duplicate requests");
+        assert_eq!(s.finished, n);
+        // Retired replica billed less than the full run.
+        assert!(s.gpu_seconds < 2.0 * cluster.eval_time() - 1.0);
     }
 }

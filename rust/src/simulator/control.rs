@@ -1,0 +1,510 @@
+//! Elastic control plane: QoS-aware autoscaling over the replica set.
+//!
+//! The PR-1 cluster froze its replica set at construction; overload was
+//! handled purely by per-replica relegation. This module adds the
+//! missing control loop (the Llumnix/UELLM-shaped global coordinator):
+//! a [`ScalingController`] evaluated periodically on the shared virtual
+//! clock decides, from the live [`LoadSnapshot`]s, whether to *grow*
+//! the replica set (new replicas pay a cold-start warm-up before
+//! accepting work) or *shrink* it (a victim replica enters
+//! [`ReplicaState::Draining`]: no new dispatch, queued work re-dispatched
+//! through the relegation-handoff path, retirement only once empty — so
+//! scale-down is loss-free by construction).
+//!
+//! Two policies ship:
+//!
+//! - [`ReactiveHysteresis`]: classic dual-watermark hysteresis on queued
+//!   prefill seconds per serving replica (plus a KV-pressure override),
+//!   acting only after the signal persists for `hold_s` and backing off
+//!   between actions — stable, but it pays the warm-up lag *after* load
+//!   has already arrived;
+//! - [`TierSlackPredictive`]: projects queue growth over the warm-up
+//!   horizon and orders capacity *before* the strictest tier's slack
+//!   would be exhausted — the tier-slack-aware policy the ROADMAP calls
+//!   for, trading a little eagerness for surge absorption.
+//!
+//! Replica indices are append-only and never reused: retired replicas
+//! keep their slot (state [`ReplicaState::Retired`]) so the cluster's
+//! lazy-deletion event heap, snapshot cache, and per-replica stats stay
+//! index-stable as the set mutates.
+
+use crate::config::{AutoscalePolicy, ControlConfig};
+use crate::engine::LoadSnapshot;
+use crate::qos::QosTier;
+
+/// Lifecycle of one replica slot in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReplicaState {
+    /// Provisioned but cold: accepts no dispatch until `ready_at`.
+    Warming { ready_at: f64 },
+    /// Serving normally.
+    Active,
+    /// No new dispatch; existing work finishes locally or is
+    /// re-dispatched. `since` is the drain decision instant.
+    Draining { since: f64 },
+    /// Empty and out of service; accrues no further GPU-seconds.
+    Retired,
+}
+
+impl ReplicaState {
+    /// Counts toward provisioned (billed) capacity.
+    pub fn is_billed(&self) -> bool {
+        !matches!(self, ReplicaState::Retired)
+    }
+
+    /// Eligible for new dispatch right now.
+    pub fn is_dispatchable(&self) -> bool {
+        matches!(self, ReplicaState::Active)
+    }
+
+    /// Counts toward serving capacity the controller reasons about
+    /// (active now, or already ordered and warming up).
+    pub fn is_serving(&self) -> bool {
+        matches!(self, ReplicaState::Active | ReplicaState::Warming { .. })
+    }
+}
+
+/// One controller verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingDecision {
+    Hold,
+    /// Provision this many new replicas (cluster clamps to `max`).
+    ScaleUp(usize),
+    /// Drain this many active replicas (cluster clamps to `min`).
+    ScaleDown(usize),
+}
+
+/// What a controller sees at each tick: live snapshots and lifecycle
+/// states, index-aligned.
+pub struct ControlView<'a> {
+    pub now: f64,
+    pub snaps: &'a [LoadSnapshot],
+    pub states: &'a [ReplicaState],
+}
+
+impl ControlView<'_> {
+    /// Active + warming replicas (capacity paid for).
+    pub fn serving(&self) -> usize {
+        self.states.iter().filter(|s| s.is_serving()).count()
+    }
+
+    pub fn active(&self) -> usize {
+        self.states.iter().filter(|s| s.is_dispatchable()).count()
+    }
+
+    pub fn warming(&self) -> usize {
+        self.states.iter().filter(|s| matches!(s, ReplicaState::Warming { .. })).count()
+    }
+
+    /// Total queued prefill seconds across active replicas.
+    pub fn total_queued_s(&self) -> f64 {
+        self.states
+            .iter()
+            .zip(self.snaps)
+            .filter(|(st, _)| st.is_dispatchable())
+            .map(|(_, s)| s.queued_prefill_s)
+            .sum()
+    }
+
+    /// Worst KV occupancy across active replicas.
+    pub fn max_kv_utilization(&self) -> f64 {
+        self.states
+            .iter()
+            .zip(self.snaps)
+            .filter(|(st, _)| st.is_dispatchable())
+            .map(|(_, s)| s.kv_utilization())
+            .fold(0.0, f64::max)
+    }
+
+    /// Worst tier-slack headroom across active replicas (`+inf` idle).
+    pub fn min_slack_s(&self) -> f64 {
+        self.states
+            .iter()
+            .zip(self.snaps)
+            .filter(|(st, _)| st.is_dispatchable())
+            .map(|(_, s)| s.min_slack_s())
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// A scaling policy evaluated on the shared virtual clock.
+pub trait ScalingController: Send {
+    fn name(&self) -> &'static str;
+
+    /// One control tick: decide from the live view. Called every
+    /// `control_interval_s` of virtual time while work remains.
+    fn decide(&mut self, view: &ControlView) -> ScalingDecision;
+}
+
+/// Build the configured controller (`None` when autoscaling is off).
+pub fn build_controller(
+    cfg: &ControlConfig,
+    tiers: &[QosTier],
+) -> Option<Box<dyn ScalingController>> {
+    match cfg.autoscale {
+        AutoscalePolicy::Off => None,
+        AutoscalePolicy::Reactive => Some(Box::new(ReactiveHysteresis::new(cfg.clone()))),
+        AutoscalePolicy::Predictive => {
+            Some(Box::new(TierSlackPredictive::new(cfg.clone(), tiers)))
+        }
+    }
+}
+
+/// Dual-watermark hysteresis on queued prefill seconds per serving
+/// replica, with a KV-pressure override. A watermark must hold for
+/// `hold_s` before the controller acts, and actions are separated by a
+/// cooldown so capacity ordered during warm-up is not double-counted.
+pub struct ReactiveHysteresis {
+    cfg: ControlConfig,
+    above_since: Option<f64>,
+    below_since: Option<f64>,
+    last_action_t: f64,
+}
+
+/// KV occupancy that forces a scale-up regardless of queue depth — a
+/// nearly-full cache throttles chunk budgets long before queues show it.
+const KV_SCALE_UP_UTIL: f64 = 0.9;
+/// KV occupancy that must not be exceeded for a scale-down.
+const KV_SCALE_DOWN_UTIL: f64 = 0.5;
+
+impl ReactiveHysteresis {
+    pub fn new(cfg: ControlConfig) -> Self {
+        ReactiveHysteresis { cfg, above_since: None, below_since: None, last_action_t: f64::MIN }
+    }
+
+    /// Cooldown after any action before the next scale-up: at least one
+    /// warm-up (ordered capacity must land before re-evaluating).
+    fn up_cooldown_s(&self) -> f64 {
+        self.cfg.warmup_s.max(self.cfg.hold_s)
+    }
+
+    /// Scale-downs are the cautious direction: wait out two holds.
+    fn down_cooldown_s(&self) -> f64 {
+        (2.0 * self.cfg.hold_s).max(self.cfg.warmup_s)
+    }
+}
+
+impl ScalingController for ReactiveHysteresis {
+    fn name(&self) -> &'static str {
+        "reactive-hysteresis"
+    }
+
+    fn decide(&mut self, view: &ControlView) -> ScalingDecision {
+        let serving = view.serving();
+        if serving == 0 || view.active() == 0 {
+            return ScalingDecision::Hold;
+        }
+        let now = view.now;
+        let q = view.total_queued_s();
+        let load = q / serving as f64;
+        let kv = view.max_kv_utilization();
+
+        if load > self.cfg.scale_up_queue_s || kv > KV_SCALE_UP_UTIL {
+            self.below_since = None;
+            let since = *self.above_since.get_or_insert(now);
+            if now - since >= self.cfg.hold_s
+                && now - self.last_action_t >= self.up_cooldown_s()
+                && serving < self.cfg.max_replicas
+            {
+                self.above_since = None;
+                self.last_action_t = now;
+                // Enough replicas to bring the per-replica queue back
+                // under the watermark, in one step.
+                let want = ((q / self.cfg.scale_up_queue_s).ceil() as usize)
+                    .clamp(serving + 1, self.cfg.max_replicas);
+                return ScalingDecision::ScaleUp(want - serving);
+            }
+        } else if load < self.cfg.scale_down_queue_s
+            && kv < KV_SCALE_DOWN_UTIL
+            && serving > self.cfg.min_replicas
+        {
+            self.above_since = None;
+            let since = *self.below_since.get_or_insert(now);
+            if now - since >= self.cfg.hold_s && now - self.last_action_t >= self.down_cooldown_s()
+            {
+                self.below_since = None;
+                self.last_action_t = now;
+                return ScalingDecision::ScaleDown(1);
+            }
+        } else {
+            self.above_since = None;
+            self.below_since = None;
+        }
+        ScalingDecision::Hold
+    }
+}
+
+/// Tier-slack-aware predictive scaling.
+///
+/// Tracks queue growth between ticks and projects the total queued
+/// prefill seconds over the warm-up horizon (capacity ordered now only
+/// lands `warmup_s` later). Scales up as soon as the *projected*
+/// per-replica queue would eat more than half the strictest tier's
+/// deadline budget — i.e. before violations materialize — and also
+/// reacts immediately when an active replica's slack headroom is nearly
+/// exhausted with no capacity already on the way. Scales down only when
+/// the projection stays comfortable on one fewer replica for `hold_s`.
+pub struct TierSlackPredictive {
+    cfg: ControlConfig,
+    /// Deadline budget of the strictest configured tier, seconds.
+    strict_budget_s: f64,
+    prev: Option<(f64, f64)>,
+    below_since: Option<f64>,
+    last_down_t: f64,
+}
+
+impl TierSlackPredictive {
+    pub fn new(cfg: ControlConfig, tiers: &[QosTier]) -> Self {
+        let strict_budget_s = tiers
+            .iter()
+            .map(|t| t.slo.deadline_budget().0)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-3);
+        TierSlackPredictive {
+            cfg,
+            strict_budget_s,
+            prev: None,
+            below_since: None,
+            last_down_t: f64::MIN,
+        }
+    }
+
+    /// Queue level (seconds per replica) the controller tries to stay
+    /// under: half the strictest budget, or the configured watermark if
+    /// that is tighter.
+    fn up_threshold_s(&self) -> f64 {
+        (0.5 * self.strict_budget_s).min(self.cfg.scale_up_queue_s)
+    }
+}
+
+impl ScalingController for TierSlackPredictive {
+    fn name(&self) -> &'static str {
+        "tier-slack-predictive"
+    }
+
+    fn decide(&mut self, view: &ControlView) -> ScalingDecision {
+        let serving = view.serving();
+        if serving == 0 || view.active() == 0 {
+            return ScalingDecision::Hold;
+        }
+        let now = view.now;
+        let q = view.total_queued_s();
+        let growth = match self.prev {
+            Some((pt, pq)) if now > pt => ((q - pq) / (now - pt)).max(0.0),
+            _ => 0.0,
+        };
+        self.prev = Some((now, q));
+        let horizon = self.cfg.warmup_s + self.cfg.control_interval_s;
+        let projected = q + growth * horizon;
+        let per = projected / serving as f64;
+        let up_thresh = self.up_threshold_s();
+
+        // Distress override: an active replica is close to violating the
+        // strictest tier and no relief is already warming up.
+        let slack = view.min_slack_s();
+        let distress =
+            slack.is_finite() && slack < 0.25 * self.strict_budget_s && view.warming() == 0;
+
+        if (per > up_thresh || distress) && serving < self.cfg.max_replicas {
+            self.below_since = None;
+            let want = ((projected / up_thresh).ceil() as usize)
+                .clamp(serving + 1, self.cfg.max_replicas);
+            return ScalingDecision::ScaleUp(want - serving);
+        }
+
+        if serving > self.cfg.min_replicas
+            && projected / (serving - 1) as f64 < self.cfg.scale_down_queue_s
+        {
+            let since = *self.below_since.get_or_insert(now);
+            if now - since >= self.cfg.hold_s && now - self.last_down_t >= 2.0 * self.cfg.hold_s {
+                self.below_since = None;
+                self.last_down_t = now;
+                return ScalingDecision::ScaleDown(1);
+            }
+        } else {
+            self.below_since = None;
+        }
+        ScalingDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AutoscalePolicy;
+    use crate::qos::table2_tiers;
+
+    fn snap(queued_s: f64, kv_used: u64) -> LoadSnapshot {
+        LoadSnapshot {
+            now: 0.0,
+            active: 1,
+            backlog: 1,
+            queued_prefill_tokens: (queued_s * 3000.0) as u64,
+            relegated_prefill_tokens: 0,
+            queued_prefill_s: queued_s,
+            decodes: 0,
+            kv_used,
+            kv_committed: 0,
+            kv_capacity: 400_000,
+            tier_slack_s: vec![f64::INFINITY; 3],
+        }
+    }
+
+    fn cfg() -> ControlConfig {
+        ControlConfig {
+            autoscale: AutoscalePolicy::Reactive,
+            min_replicas: 1,
+            max_replicas: 4,
+            warmup_s: 10.0,
+            control_interval_s: 5.0,
+            scale_up_queue_s: 4.0,
+            scale_down_queue_s: 0.5,
+            hold_s: 10.0,
+            admission: crate::simulator::dispatch::AdmissionPolicy::None,
+        }
+    }
+
+    fn view<'a>(
+        now: f64,
+        snaps: &'a [LoadSnapshot],
+        states: &'a [ReplicaState],
+    ) -> ControlView<'a> {
+        ControlView { now, snaps, states }
+    }
+
+    #[test]
+    fn reactive_scales_up_only_after_hold() {
+        let mut c = ReactiveHysteresis::new(cfg());
+        let snaps = vec![snap(10.0, 0), snap(12.0, 0)];
+        let states = vec![ReplicaState::Active; 2];
+        // First sighting arms the timer but must not act yet.
+        assert_eq!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::Hold);
+        assert_eq!(c.decide(&view(5.0, &snaps, &states)), ScalingDecision::Hold);
+        // Past hold_s: acts, sized to clear the backlog (22 s / 4 s ≈ 6,
+        // clamped to max 4 ⇒ +2).
+        assert_eq!(c.decide(&view(10.0, &snaps, &states)), ScalingDecision::ScaleUp(2));
+    }
+
+    #[test]
+    fn reactive_scale_up_resets_when_signal_clears() {
+        let mut c = ReactiveHysteresis::new(cfg());
+        let hot = vec![snap(10.0, 0)];
+        let cool = vec![snap(1.0, 0)];
+        let states = vec![ReplicaState::Active];
+        assert_eq!(c.decide(&view(0.0, &hot, &states)), ScalingDecision::Hold);
+        assert_eq!(c.decide(&view(5.0, &cool, &states)), ScalingDecision::Hold);
+        // Signal re-appears: the hold clock must restart.
+        assert_eq!(c.decide(&view(10.0, &hot, &states)), ScalingDecision::Hold);
+        assert_eq!(c.decide(&view(15.0, &hot, &states)), ScalingDecision::Hold);
+        assert!(matches!(c.decide(&view(20.0, &hot, &states)), ScalingDecision::ScaleUp(_)));
+    }
+
+    #[test]
+    fn reactive_kv_pressure_forces_scale_up() {
+        let mut c = ReactiveHysteresis::new(cfg());
+        // Tiny queue but a nearly-full cache.
+        let snaps = vec![snap(0.1, 390_000)];
+        let states = vec![ReplicaState::Active];
+        assert_eq!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::Hold);
+        assert!(matches!(c.decide(&view(10.0, &snaps, &states)), ScalingDecision::ScaleUp(_)));
+    }
+
+    #[test]
+    fn reactive_scales_down_after_sustained_idle() {
+        let mut c = ReactiveHysteresis::new(cfg());
+        let snaps = vec![snap(0.0, 0), snap(0.1, 0)];
+        let states = vec![ReplicaState::Active; 2];
+        assert_eq!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::Hold);
+        assert_eq!(c.decide(&view(5.0, &snaps, &states)), ScalingDecision::Hold);
+        assert_eq!(c.decide(&view(12.0, &snaps, &states)), ScalingDecision::ScaleDown(1));
+    }
+
+    #[test]
+    fn reactive_respects_min_and_max() {
+        let mut c = ReactiveHysteresis::new(cfg());
+        // At max: no scale-up however hot.
+        let hot: Vec<LoadSnapshot> = (0..4).map(|_| snap(50.0, 0)).collect();
+        let states = vec![ReplicaState::Active; 4];
+        for t in [0.0, 20.0, 40.0] {
+            assert_eq!(c.decide(&view(t, &hot, &states)), ScalingDecision::Hold);
+        }
+        // At min: no scale-down however idle.
+        let mut c = ReactiveHysteresis::new(cfg());
+        let cold = vec![snap(0.0, 0)];
+        let states = vec![ReplicaState::Active];
+        for t in [0.0, 20.0, 40.0] {
+            assert_eq!(c.decide(&view(t, &cold, &states)), ScalingDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn predictive_orders_capacity_on_growth_before_queue_is_high() {
+        let mut k = cfg();
+        k.autoscale = AutoscalePolicy::Predictive;
+        let mut c = TierSlackPredictive::new(k, &table2_tiers());
+        let states = vec![ReplicaState::Active];
+        // Queue still modest (1.5 s < up threshold 3 s = 0.5*6) but
+        // growing at 0.3 s/s: projected over the 15 s horizon it blows
+        // past the threshold ⇒ scale up now, before violations.
+        let t0 = vec![snap(0.0, 0)];
+        assert_eq!(c.decide(&view(0.0, &t0, &states)), ScalingDecision::Hold);
+        let t1 = vec![snap(1.5, 0)];
+        assert!(matches!(c.decide(&view(5.0, &t1, &states)), ScalingDecision::ScaleUp(_)));
+    }
+
+    #[test]
+    fn predictive_reacts_to_slack_distress_without_warming_capacity() {
+        let mut k = cfg();
+        k.autoscale = AutoscalePolicy::Predictive;
+        let mut c = TierSlackPredictive::new(k, &table2_tiers());
+        let mut s = snap(0.5, 0);
+        s.tier_slack_s[0] = 0.5; // about to violate the 6 s tier
+        let snaps = vec![s];
+        let states = vec![ReplicaState::Active];
+        assert!(matches!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::ScaleUp(_)));
+        // Same distress with capacity already warming: hold.
+        let mut c2 = TierSlackPredictive::new(cfg_pred(), &table2_tiers());
+        let snaps2 = vec![snaps[0].clone(), snap(0.0, 0)];
+        let states2 = vec![ReplicaState::Active, ReplicaState::Warming { ready_at: 9.0 }];
+        assert_eq!(c2.decide(&view(0.0, &snaps2, &states2)), ScalingDecision::Hold);
+    }
+
+    fn cfg_pred() -> ControlConfig {
+        let mut k = cfg();
+        k.autoscale = AutoscalePolicy::Predictive;
+        k
+    }
+
+    #[test]
+    fn predictive_scales_down_only_after_sustained_comfort() {
+        let mut c = TierSlackPredictive::new(cfg_pred(), &table2_tiers());
+        let snaps = vec![snap(0.0, 0), snap(0.1, 0)];
+        let states = vec![ReplicaState::Active; 2];
+        assert_eq!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::Hold);
+        assert_eq!(c.decide(&view(5.0, &snaps, &states)), ScalingDecision::Hold);
+        assert_eq!(c.decide(&view(12.0, &snaps, &states)), ScalingDecision::ScaleDown(1));
+    }
+
+    #[test]
+    fn build_controller_matches_policy() {
+        let tiers = table2_tiers();
+        assert!(build_controller(&ControlConfig::default(), &tiers).is_none());
+        let mut k = cfg();
+        assert_eq!(build_controller(&k, &tiers).unwrap().name(), "reactive-hysteresis");
+        k.autoscale = AutoscalePolicy::Predictive;
+        assert_eq!(build_controller(&k, &tiers).unwrap().name(), "tier-slack-predictive");
+    }
+
+    #[test]
+    fn replica_state_classification() {
+        assert!(ReplicaState::Active.is_dispatchable());
+        assert!(ReplicaState::Active.is_serving());
+        assert!(ReplicaState::Active.is_billed());
+        let w = ReplicaState::Warming { ready_at: 5.0 };
+        assert!(!w.is_dispatchable() && w.is_serving() && w.is_billed());
+        let d = ReplicaState::Draining { since: 1.0 };
+        assert!(!d.is_dispatchable() && !d.is_serving() && d.is_billed());
+        let r = ReplicaState::Retired;
+        assert!(!r.is_dispatchable() && !r.is_serving() && !r.is_billed());
+    }
+}

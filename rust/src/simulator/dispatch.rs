@@ -5,7 +5,7 @@
 //! shared virtual clock, not a stale shard assignment — which is what
 //! makes load-aware and QoS-aware routing expressible at all (Llumnix's
 //! core observation: cross-instance request placement is where serving
-//! systems win at scale). Three policies ship:
+//! systems win at scale). The shipped policies:
 //!
 //! - [`RoundRobin`]: stateless rotation, the seed's behavior and the
 //!   standard load-oblivious baseline;
@@ -16,17 +16,32 @@
 //! - [`PowerOfTwoChoices`]: samples two replicas with a seeded PRNG and
 //!   applies the `LeastLoaded` pressure score to just that pair — an
 //!   O(1) decision independent of replica count, which is what keeps
-//!   the front-end off the critical path at large cluster sizes.
+//!   the front-end off the critical path at large cluster sizes;
+//! - [`PredictedTtft`]: the same two-choice sampling, but each candidate
+//!   is scored with the fitted per-replica latency predictor — the
+//!   predicted wait accounts for the candidate's live decode load
+//!   inflating every prefill chunk served ahead of this arrival, which
+//!   the linear token rate cannot see.
+//!
+//! The front-end is also where the **global admission controller**
+//! ([`AdmissionController`]) lives: it sees every arrival plus the live
+//! load of every dispatchable replica, so it can prove at arrival time
+//! that a deadline is unmeetable anywhere and reject (or degrade to a
+//! looser tier) immediately instead of letting the request die deep in a
+//! doomed queue — the paper's §5 "global early rejection" future work.
 //!
 //! All policies are deterministic: randomized ones draw from a seeded
 //! [`Rng`] and ties break toward the lowest replica index, so a fixed
 //! seed reproduces a run bit-for-bit.
 
-use crate::config::{DispatchConfig, DispatchPolicy};
+use crate::config::{DispatchConfig, DispatchPolicy, HardwareModel};
 use crate::engine::LoadSnapshot;
-use crate::qos::Slo;
+use crate::predictor::LatencyPredictor;
+use crate::qos::{slo_for_tier, QosTier, Slo};
 use crate::request::RequestSpec;
+use crate::simulator::cost_model::{BatchStats, CostModel, PrefillSegment};
 use crate::util::Rng;
+use anyhow::{bail, Result};
 
 /// A cluster-level routing policy. `dispatch` returns the index of the
 /// replica that should serve `spec`; `snaps[i]` is replica `i`'s live
@@ -56,13 +71,32 @@ pub trait Dispatcher: Send {
     ) -> usize;
 }
 
-/// Build the configured dispatcher.
+/// Build the configured dispatcher against the default (paper) hardware.
+/// Prefer [`build_dispatcher_for`] when the deployment's hardware model
+/// is known — `PredictedTtft` calibrates its latency predictor against
+/// it.
 pub fn build_dispatcher(cfg: &DispatchConfig) -> Box<dyn Dispatcher> {
+    build_dispatcher_for(cfg, &HardwareModel::llama3_8b_a100(), 256)
+}
+
+/// Build the configured dispatcher for a specific deployment: `hardware`
+/// and `chunk` parameterize the latency predictor behind
+/// [`PredictedTtft`]; the other policies ignore them.
+pub fn build_dispatcher_for(
+    cfg: &DispatchConfig,
+    hardware: &HardwareModel,
+    chunk: u32,
+) -> Box<dyn Dispatcher> {
     match cfg.policy {
         DispatchPolicy::RoundRobin => Box::new(RoundRobin::new()),
         DispatchPolicy::JoinShortestQueue => Box::new(JoinShortestQueue),
         DispatchPolicy::LeastLoaded => Box::new(LeastLoaded),
         DispatchPolicy::PowerOfTwoChoices => Box::new(PowerOfTwoChoices::new(cfg.seed)),
+        DispatchPolicy::PredictedTtft => {
+            let model = CostModel::new(hardware.clone());
+            let predictor = LatencyPredictor::calibrate(&model, cfg.seed);
+            Box::new(PredictedTtft::new(predictor, chunk, cfg.seed))
+        }
     }
 }
 
@@ -266,6 +300,238 @@ impl Dispatcher for PowerOfTwoChoices {
     }
 }
 
+/// Power-of-two-choices sampling scored by the fitted latency predictor.
+///
+/// `LeastLoaded` prices a candidate's queued work at a fixed reference
+/// token rate, which ignores that a decode-heavy replica serves every
+/// prefill chunk slower (the batch it co-schedules streams all that KV).
+/// This policy prices one reference chunk against the candidate's *live*
+/// decode load with the calibrated predictor and scores the candidate by
+/// the predicted TTFT this arrival would see there. Sampling two
+/// replicas keeps the decision O(1) in replica count, like
+/// [`PowerOfTwoChoices`].
+pub struct PredictedTtft {
+    rng: Rng,
+    predictor: LatencyPredictor,
+    /// Reference chunk size used to price queued prefill work.
+    chunk: u32,
+}
+
+impl PredictedTtft {
+    pub fn new(predictor: LatencyPredictor, chunk: u32, seed: u64) -> Self {
+        // Salt differs from PowerOfTwoChoices so the two policies draw
+        // decorrelated sample streams under a shared config seed.
+        PredictedTtft { rng: Rng::new(seed ^ 0x77F7_ACED), predictor, chunk: chunk.max(1) }
+    }
+
+    /// Predicted TTFT (seconds past `arrival_s`) for an arrival of
+    /// `prompt_tokens` routed to the replica behind `snap`.
+    pub fn predicted_ttft_s(&self, snap: &LoadSnapshot, prompt_tokens: u32, arrival_s: f64) -> f64 {
+        // Price one mid-prompt reference chunk co-scheduled with the
+        // replica's current decode set (mean KV length), then spread it
+        // over the chunk: a per-token rate that *sees* the decode load.
+        let seg = PrefillSegment { cache_len: 512, chunk: self.chunk };
+        let mut stats = BatchStats::default().with_prefill(seg);
+        if snap.decodes > 0 {
+            let avg_kv = (snap.kv_used / snap.decodes as u64).max(1).min(u32::MAX as u64) as u32;
+            stats.push_decodes(avg_kv, snap.decodes);
+        }
+        let sec_per_token = self.predictor.predict_stats(&stats) / self.chunk as f64;
+        let queued = snap.queued_prefill_tokens + prompt_tokens as u64;
+        let start_lag = (snap.now - arrival_s).max(0.0);
+        start_lag + queued as f64 * sec_per_token
+    }
+}
+
+impl Dispatcher for PredictedTtft {
+    fn name(&self) -> &'static str {
+        "predicted-ttft"
+    }
+
+    fn dispatch(
+        &mut self,
+        spec: &RequestSpec,
+        _slo: Slo,
+        _est_prefill_s: f64,
+        _est_decode_s: f64,
+        snaps: &[LoadSnapshot],
+    ) -> usize {
+        let n = snaps.len();
+        if n < 2 {
+            return 0;
+        }
+        let a = self.rng.below(n as u64) as usize;
+        let mut b = self.rng.below(n as u64 - 1) as usize;
+        if b >= a {
+            b += 1; // distinct second sample, uniform over the rest
+        }
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let t_lo = self.predicted_ttft_s(&snaps[lo], spec.prompt_tokens, spec.arrival_s);
+        let t_hi = self.predicted_ttft_s(&snaps[hi], spec.prompt_tokens, spec.arrival_s);
+        if t_hi < t_lo {
+            hi
+        } else {
+            lo
+        }
+    }
+}
+
+/// Global admission policy applied to every arrival before routing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit everything — the pre-control-plane behavior.
+    None,
+    /// Early-reject arrivals whose deadline is provably unmeetable on
+    /// every dispatchable replica.
+    Reject,
+    /// Like `Reject`, but first try to degrade the arrival to the
+    /// tightest looser QoS tier whose deadline is still meetable
+    /// somewhere; reject only when no tier fits.
+    Degrade,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Result<AdmissionPolicy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "off" | "accept-all" => AdmissionPolicy::None,
+            "reject" | "early-reject" => AdmissionPolicy::Reject,
+            "degrade" => AdmissionPolicy::Degrade,
+            other => bail!("unknown admission policy '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::None => "none",
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// Verdict for one arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    Accept,
+    /// Admit, but under tier `to_tier`'s (looser) SLO.
+    Degrade { to_tier: usize },
+    Reject,
+}
+
+/// Global early-rejection at the dispatcher (paper §5 future work).
+///
+/// The controller sees every arrival and the live [`LoadSnapshot`] of
+/// every dispatchable replica — the aggregate slack of the whole
+/// cluster. An arrival is *provably infeasible* when on every replica
+/// the work already committed ahead of it plus its own priced work
+/// cannot finish inside its deadline (queues drain at most at the
+/// service rate, so the bound is conservative in the arrival's favor),
+/// or when its KV footprint exceeds the cache outright. Rejecting such
+/// arrivals at the front door sheds load the cluster was going to
+/// violate anyway, which is what protects the strict tiers at the
+/// overload point.
+///
+/// Deliberately *not* part of the test: transient KV occupancy. A full
+/// cache drains; rejecting a 1800 s-budget batch request because the
+/// cache is momentarily full would shed load that was perfectly
+/// serviceable.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionController {
+    pub policy: AdmissionPolicy,
+}
+
+impl AdmissionController {
+    pub fn new(policy: AdmissionPolicy) -> Self {
+        AdmissionController { policy }
+    }
+
+    /// Can some replica in `snaps` meet tier `tier`'s deadline for this
+    /// arrival? Prices with the same reference rates dispatch uses.
+    fn feasible_somewhere(
+        spec: &RequestSpec,
+        tiers: &[QosTier],
+        tier: usize,
+        sec_per_prefill_token: f64,
+        sec_per_decode_token: f64,
+        snaps: &[LoadSnapshot],
+    ) -> bool {
+        let slo = slo_for_tier(tiers, tier);
+        let (budget, counts_decode) = slo.deadline_budget();
+        let deadline = spec.arrival_s + budget;
+        let est_prefill_s = spec.prompt_tokens as f64 * sec_per_prefill_token;
+        let est_decode_s = if counts_decode {
+            spec.decode_tokens as f64 * sec_per_decode_token
+        } else {
+            0.0
+        };
+        let kv_demand = spec.prompt_tokens as u64 + spec.decode_tokens as u64;
+        snaps.iter().any(|s| {
+            // Hard impossibility only: a request larger than the whole
+            // cache can never run; current occupancy is transient. The
+            // time half is the shared `deadline_feasible` rule, so
+            // admission can never price a wait differently than the
+            // dispatch/handoff feasibility gate does.
+            kv_demand <= s.kv_capacity
+                && s.deadline_feasible(
+                    s.now.max(spec.arrival_s),
+                    est_prefill_s,
+                    est_decode_s,
+                    deadline,
+                )
+        })
+    }
+
+    /// Judge one arrival against the dispatchable replicas' live load.
+    pub fn decide(
+        &self,
+        spec: &RequestSpec,
+        tiers: &[QosTier],
+        sec_per_prefill_token: f64,
+        sec_per_decode_token: f64,
+        snaps: &[LoadSnapshot],
+    ) -> AdmissionDecision {
+        if self.policy == AdmissionPolicy::None {
+            return AdmissionDecision::Accept;
+        }
+        let own = Self::feasible_somewhere(
+            spec,
+            tiers,
+            spec.tier,
+            sec_per_prefill_token,
+            sec_per_decode_token,
+            snaps,
+        );
+        if own {
+            return AdmissionDecision::Accept;
+        }
+        if self.policy == AdmissionPolicy::Degrade {
+            // Looser tiers in ascending budget order: the tightest one
+            // that still fits wins, preserving as much QoS as possible.
+            let own_budget = slo_for_tier(tiers, spec.tier).deadline_budget().0;
+            let mut looser: Vec<(f64, usize)> = tiers
+                .iter()
+                .enumerate()
+                .map(|(i, t)| (t.slo.deadline_budget().0, i))
+                .filter(|&(b, i)| b > own_budget && i != spec.tier.min(tiers.len() - 1))
+                .collect();
+            looser.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for (_, t) in looser {
+                if Self::feasible_somewhere(
+                    spec,
+                    tiers,
+                    t,
+                    sec_per_prefill_token,
+                    sec_per_decode_token,
+                    snaps,
+                ) {
+                    return AdmissionDecision::Degrade { to_tier: t };
+                }
+            }
+        }
+        AdmissionDecision::Reject
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -385,6 +651,7 @@ mod tests {
             DispatchPolicy::JoinShortestQueue,
             DispatchPolicy::LeastLoaded,
             DispatchPolicy::PowerOfTwoChoices,
+            DispatchPolicy::PredictedTtft,
         ] {
             let d = build_dispatcher(&DispatchConfig {
                 policy: p,
@@ -422,6 +689,119 @@ mod tests {
                 b.dispatch(&spec(), INT, 0.1, 0.0, &snaps)
             );
         }
+    }
+
+    fn predicted_ttft_dispatcher(seed: u64) -> PredictedTtft {
+        use crate::config::HardwareModel;
+        let model = CostModel::new(HardwareModel::llama3_8b_a100());
+        PredictedTtft::new(LatencyPredictor::calibrate(&model, 0), 256, seed)
+    }
+
+    #[test]
+    fn predicted_ttft_prefers_idle_over_decode_heavy() {
+        // With two replicas the sampled pair is always {0, 1}. Replica 0
+        // carries a huge decode set (every chunk it serves is slow) and a
+        // longer queue; replica 1 is idle — predicted TTFT must pick 1.
+        let mut d = predicted_ttft_dispatcher(5);
+        let mut busy = snap(6, 9000, 3.0);
+        busy.decodes = 200;
+        busy.kv_used = 350_000;
+        let idle = snap(0, 0, 0.0);
+        let snaps = vec![busy, idle];
+        for _ in 0..32 {
+            assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+        }
+    }
+
+    #[test]
+    fn predicted_ttft_sees_decode_load_at_equal_queues() {
+        // Same queued prefill tokens on both replicas: the linear token
+        // rate is blind to the difference, but the predictor prices
+        // replica 0's decode co-schedule and must route away from it.
+        let d = predicted_ttft_dispatcher(1);
+        let mut heavy = snap(4, 4000, 1.5);
+        heavy.decodes = 220;
+        heavy.kv_used = 380_000;
+        let light = snap(4, 4000, 1.5);
+        let t_heavy = d.predicted_ttft_s(&heavy, 1000, 0.0);
+        let t_light = d.predicted_ttft_s(&light, 1000, 0.0);
+        assert!(
+            t_heavy > t_light,
+            "decode load must inflate predicted TTFT: {t_heavy} vs {t_light}"
+        );
+    }
+
+    #[test]
+    fn predicted_ttft_is_deterministic_for_a_seed() {
+        let snaps: Vec<LoadSnapshot> =
+            (0..8).map(|i| snap(i, i as u64 * 300, i as f64 * 0.2)).collect();
+        let mut a = predicted_ttft_dispatcher(42);
+        let mut b = predicted_ttft_dispatcher(42);
+        for _ in 0..100 {
+            assert_eq!(
+                a.dispatch(&spec(), INT, 0.1, 0.0, &snaps),
+                b.dispatch(&spec(), INT, 0.1, 0.0, &snaps)
+            );
+        }
+    }
+
+    #[test]
+    fn admission_none_accepts_everything() {
+        let tiers = crate::qos::table2_tiers();
+        let ctl = AdmissionController::new(AdmissionPolicy::None);
+        // Even with zero replicas, None admits.
+        assert_eq!(ctl.decide(&spec(), &tiers, 3e-4, 0.03, &[]), AdmissionDecision::Accept);
+    }
+
+    #[test]
+    fn admission_rejects_provably_infeasible_everywhere() {
+        let tiers = crate::qos::table2_tiers();
+        let ctl = AdmissionController::new(AdmissionPolicy::Reject);
+        // 10 s of queue ahead on every replica: a 6 s TTFT tier-0
+        // arrival can't make it anywhere.
+        let snaps = vec![snap(20, 30_000, 10.0), snap(22, 33_000, 11.0)];
+        assert_eq!(
+            ctl.decide(&spec(), &tiers, 3e-4, 0.03, &snaps),
+            AdmissionDecision::Reject
+        );
+        // One replica with 2 s of queue: feasible there, accept.
+        let snaps = vec![snap(20, 30_000, 10.0), snap(4, 6000, 2.0)];
+        assert_eq!(
+            ctl.decide(&spec(), &tiers, 3e-4, 0.03, &snaps),
+            AdmissionDecision::Accept
+        );
+    }
+
+    #[test]
+    fn admission_degrades_to_tightest_feasible_tier() {
+        let tiers = crate::qos::table2_tiers();
+        let ctl = AdmissionController::new(AdmissionPolicy::Degrade);
+        // 10 s queues: tier 0 (6 s) infeasible, tier 1 (600 s) fine.
+        let snaps = vec![snap(20, 30_000, 10.0)];
+        assert_eq!(
+            ctl.decide(&spec(), &tiers, 3e-4, 0.03, &snaps),
+            AdmissionDecision::Degrade { to_tier: 1 }
+        );
+    }
+
+    #[test]
+    fn admission_rejects_kv_impossible_even_with_loose_deadline() {
+        let tiers = crate::qos::table2_tiers();
+        let ctl = AdmissionController::new(AdmissionPolicy::Degrade);
+        let mut s = spec();
+        s.prompt_tokens = 1_000_000; // larger than any cache
+        assert_eq!(
+            ctl.decide(&s, &tiers, 3e-4, 0.03, &[snap(0, 0, 0.0)]),
+            AdmissionDecision::Reject
+        );
+    }
+
+    #[test]
+    fn admission_policy_names_round_trip() {
+        for p in [AdmissionPolicy::None, AdmissionPolicy::Reject, AdmissionPolicy::Degrade] {
+            assert_eq!(AdmissionPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(AdmissionPolicy::parse("magic").is_err());
     }
 
     #[test]

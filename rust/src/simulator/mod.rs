@@ -4,12 +4,17 @@
 //! [`SimBackend`] exposes that as an [`crate::engine::ExecutionBackend`]
 //! so the identical scheduler/engine code drives both simulation and the
 //! real PJRT runtime. [`cluster`] interleaves many such engines on one
-//! shared virtual clock behind a global [`dispatch`] policy.
+//! shared virtual clock behind a global [`dispatch`] policy, and
+//! [`control`] is the elastic control plane on top: a scaling controller
+//! that grows/shrinks the replica set (with warm-up and graceful drain)
+//! plus the global admission controller at the dispatcher.
 
 pub mod cluster;
+pub mod control;
 pub mod cost_model;
 pub mod dispatch;
 
 pub use cluster::Cluster;
+pub use control::{ReplicaState, ScalingController, ScalingDecision};
 pub use cost_model::{BatchShape, BatchStats, CostModel, PrefillSegment};
-pub use dispatch::Dispatcher;
+pub use dispatch::{AdmissionController, AdmissionDecision, AdmissionPolicy, Dispatcher};
