@@ -8,7 +8,7 @@
 use niyama::config::{Config, Policy, SchedulerConfig};
 use niyama::engine::Engine;
 use niyama::repro::drain_budget;
-use niyama::simulator::cluster::{gpus_needed, max_qps};
+use niyama::simulator::cluster::{gpus_needed, max_qps, silo_chunk_for_tier};
 use niyama::util::Rng;
 use niyama::workload::datasets::Dataset;
 use niyama::workload::WorkloadSpec;
@@ -41,7 +41,8 @@ fn main() -> anyhow::Result<()> {
     let mut silo_total = 0;
     println!("siloed deployment:");
     for tier in 0..base.tiers.len() {
-        let chunk = if base.tiers[tier].slo.is_interactive() { 256 } else { 2048 };
+        // The shared silo chunk rule — the same one `run_silo`'s pools use.
+        let chunk = silo_chunk_for_tier(&base, tier);
         let mut cfg = base.clone();
         cfg.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, chunk);
         let cap = capacity(&cfg, &ds, Some(tier));

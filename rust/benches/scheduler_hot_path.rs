@@ -251,6 +251,10 @@ fn main() {
                     kv_committed: (i as u64 * 700) % 5000,
                     kv_capacity: 430_000,
                     tier_slack_s: vec![4.0 - (i % 7) as f64, 300.0, 900.0],
+                    sec_per_prefill_token: 3.2e-4,
+                    sec_per_decode_token: 0.03,
+                    chunk_size: 256,
+                    tier_affinity_mask: 0,
                 })
                 .collect();
             for policy in [
@@ -269,7 +273,7 @@ fn main() {
                     &format!("dispatch.{:<21} replicas={replicas}", policy.name()),
                     10_000,
                     || {
-                        std::hint::black_box(d.dispatch(&spec, slo, 0.4, 0.0, &snaps));
+                        std::hint::black_box(d.dispatch(&spec, slo, &snaps));
                     },
                 );
             }

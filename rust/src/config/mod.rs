@@ -106,6 +106,18 @@ impl HardwareModel {
         }
     }
 
+    /// Look up a built-in preset by name — the one table behind both the
+    /// global `hardware.preset` JSON key and per-pool `hardware`
+    /// overrides, so the two config surfaces can never drift.
+    pub fn preset(name: &str) -> Option<HardwareModel> {
+        Some(match name {
+            "llama3-8b-a100" => HardwareModel::llama3_8b_a100(),
+            "qwen-7b-a100-tp2" => HardwareModel::qwen_7b_a100_tp2(),
+            "tiny-cpu" => HardwareModel::tiny_cpu(),
+            _ => return None,
+        })
+    }
+
     /// KV-cache token capacity after weights + activation reserve.
     pub fn kv_capacity_tokens(&self) -> u64 {
         let reserve = 0.1 * self.hbm_bytes; // activations + fragmentation
@@ -224,6 +236,164 @@ impl SchedulerConfig {
     }
 }
 
+/// Immutable description of one replica: the hardware it runs on, the
+/// scheduler configuration it runs, and which QoS tiers it serves. A
+/// replica's spec is fixed from provision to retirement — the cluster
+/// never reconfigures a live slot (swap capacity by draining one pool
+/// and growing another instead).
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub hardware: HardwareModel,
+    pub scheduler: SchedulerConfig,
+    /// QoS tier indices this replica serves (empty = every tier). Hard
+    /// constraint at dispatch, handoff and drain targeting — unless no
+    /// serving replica claims the tier at all, in which case any active
+    /// replica may take it so work is never stranded.
+    pub tier_affinity: Vec<usize>,
+}
+
+impl ReplicaSpec {
+    /// The homogeneous spec `Config` has always described: the global
+    /// hardware + scheduler, serving every tier.
+    pub fn from_config(cfg: &Config) -> Self {
+        ReplicaSpec {
+            hardware: cfg.hardware.clone(),
+            scheduler: cfg.scheduler.clone(),
+            tier_affinity: Vec::new(),
+        }
+    }
+
+    /// Affinity as a bitmask over tier indices (0 = serves every tier),
+    /// the form `LoadSnapshot` carries so dispatch policies can check it
+    /// without an allocation.
+    pub fn affinity_mask(&self) -> u32 {
+        let mut mask = 0u32;
+        for &t in &self.tier_affinity {
+            mask |= 1 << t.min(31);
+        }
+        mask
+    }
+
+    /// The engine configuration for one replica of this spec: the
+    /// cluster-shared base (tiers, seed, dispatch/control plane) with
+    /// this spec's hardware and scheduler substituted.
+    pub fn engine_config(&self, base: &Config) -> Config {
+        let mut cfg = base.clone();
+        cfg.hardware = self.hardware.clone();
+        cfg.scheduler = self.scheduler.clone();
+        cfg
+    }
+}
+
+/// One replica pool: a spec, how many replicas it starts with, and the
+/// bounds the autoscaler may move it between.
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    pub name: String,
+    pub spec: ReplicaSpec,
+    /// Replicas provisioned at construction.
+    pub replicas: usize,
+    /// Autoscale floor for this pool (0 = the pool may drain empty while
+    /// other pools keep the cluster serviceable).
+    pub min_replicas: usize,
+    /// Autoscale ceiling for this pool.
+    pub max_replicas: usize,
+}
+
+impl PoolSpec {
+    /// A static pool: `replicas` instances of `spec`, never scaled.
+    pub fn fixed(name: &str, spec: ReplicaSpec, replicas: usize) -> Self {
+        PoolSpec {
+            name: name.to_string(),
+            spec,
+            replicas,
+            min_replicas: replicas,
+            max_replicas: replicas,
+        }
+    }
+}
+
+/// Cluster topology as a set of replica pools behind one dispatcher.
+/// The old single-`Config`-times-N constructor is the one-pool special
+/// case ([`ClusterSpec::homogeneous`]); a siloed deployment is pools
+/// with disjoint tier affinities behind tier-affinity dispatch.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub pools: Vec<PoolSpec>,
+}
+
+impl ClusterSpec {
+    /// The compatibility shim: one pool of `replicas` identical engines
+    /// built from the global config, bounded by the control-plane
+    /// min/max. `Cluster::new(&cfg, n)` is exactly this spec.
+    pub fn homogeneous(cfg: &Config, replicas: usize) -> Self {
+        ClusterSpec {
+            pools: vec![PoolSpec {
+                name: "pool0".to_string(),
+                spec: ReplicaSpec::from_config(cfg),
+                replicas,
+                min_replicas: cfg.cluster.control.min_replicas,
+                max_replicas: cfg.cluster.control.max_replicas,
+            }],
+        }
+    }
+
+    pub fn total_replicas(&self) -> usize {
+        self.pools.iter().map(|p| p.replicas).sum()
+    }
+
+    /// The spec randomized/predictive dispatchers calibrate against
+    /// (pool 0 — for the homogeneous shim this is the global config).
+    pub fn reference_spec(&self) -> &ReplicaSpec {
+        &self.pools[0].spec
+    }
+
+    pub fn validate(&self, n_tiers: usize) -> Result<()> {
+        if self.pools.is_empty() {
+            bail!("cluster spec needs at least one pool");
+        }
+        if self.total_replicas() == 0 {
+            bail!("cluster spec needs at least one initial replica across its pools");
+        }
+        let mut names = std::collections::HashSet::new();
+        for p in &self.pools {
+            if p.name.is_empty() {
+                bail!("pool names must be non-empty");
+            }
+            if !names.insert(p.name.as_str()) {
+                bail!("duplicate pool name '{}'", p.name);
+            }
+            if p.max_replicas < p.min_replicas {
+                bail!("pool '{}': max_replicas must be >= min_replicas", p.name);
+            }
+            // `replicas > max_replicas` is deliberately legal: a pool may
+            // start above its autoscale ceiling (static over-provisioned
+            // deployments); the controller simply never grows it further.
+            if p.spec.scheduler.chunk_size == 0 {
+                bail!("pool '{}': chunk_size must be positive", p.name);
+            }
+            if p.spec.scheduler.max_chunk_size < p.spec.scheduler.chunk_size {
+                bail!("pool '{}': max_chunk_size must be >= chunk_size", p.name);
+            }
+            for &t in &p.spec.tier_affinity {
+                // Affinity indices must name real tiers — the old silo
+                // sizing silently indexed `cfg.tiers[tier]` and could
+                // drift or panic out of range.
+                if t >= n_tiers {
+                    bail!(
+                        "pool '{}': tier_affinity {t} out of range (have {n_tiers} tiers)",
+                        p.name
+                    );
+                }
+                if t >= 32 {
+                    bail!("pool '{}': tier_affinity indices must be < 32", p.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Global dispatch policy: how the cluster front-end routes each arrival
 /// to a replica (see `simulator::dispatch`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -248,6 +418,11 @@ pub enum DispatchPolicy {
     /// inflating every prefill chunk it would serve ahead of this
     /// arrival.
     PredictedTtft,
+    /// Route each arrival round-robin among the replicas whose
+    /// tier-affinity claims its tier, with an independent rotation per
+    /// tier — a siloed deployment expressed as dispatch policy over
+    /// affinity-tagged pools (`run_silo` is built on this).
+    TierAffinity,
 }
 
 impl DispatchPolicy {
@@ -258,6 +433,7 @@ impl DispatchPolicy {
             "least-loaded" | "ll" => DispatchPolicy::LeastLoaded,
             "power-of-two-choices" | "p2c" => DispatchPolicy::PowerOfTwoChoices,
             "predicted-ttft" | "pttft" => DispatchPolicy::PredictedTtft,
+            "tier-affinity" | "silo" => DispatchPolicy::TierAffinity,
             other => bail!("unknown dispatch policy '{other}'"),
         })
     }
@@ -269,6 +445,7 @@ impl DispatchPolicy {
             DispatchPolicy::LeastLoaded => "least-loaded",
             DispatchPolicy::PowerOfTwoChoices => "power-of-two-choices",
             DispatchPolicy::PredictedTtft => "predicted-ttft",
+            DispatchPolicy::TierAffinity => "tier-affinity",
         }
     }
 }
@@ -369,8 +546,12 @@ impl Default for ControlConfig {
 /// Cluster topology for multi-replica serving / silo experiments.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
-    /// Number of identical replicas sharing the workload.
+    /// Number of identical replicas sharing the workload (the one-pool
+    /// layout; ignored when `pools` is non-empty).
     pub replicas: usize,
+    /// Heterogeneous replica pools (empty = one homogeneous pool of
+    /// `replicas` engines built from the global hardware + scheduler).
+    pub pools: Vec<PoolSpec>,
     /// How arrivals are routed across those replicas.
     pub dispatch: DispatchConfig,
     /// Elastic control plane: autoscaling + admission control.
@@ -381,6 +562,7 @@ impl Default for ClusterConfig {
     fn default() -> Self {
         ClusterConfig {
             replicas: 1,
+            pools: Vec::new(),
             dispatch: DispatchConfig::default(),
             control: ControlConfig::default(),
         }
@@ -424,11 +606,8 @@ impl Config {
 
         if let Some(hw) = j.get("hardware") {
             if let Some(name) = hw.get("preset").and_then(|v| v.as_str()) {
-                cfg.hardware = match name {
-                    "llama3-8b-a100" => HardwareModel::llama3_8b_a100(),
-                    "qwen-7b-a100-tp2" => HardwareModel::qwen_7b_a100_tp2(),
-                    other => bail!("unknown hardware preset '{other}'"),
-                };
+                cfg.hardware = HardwareModel::preset(name)
+                    .ok_or_else(|| anyhow!("unknown hardware preset '{name}'"))?;
             }
             override_f64(hw, "peak_flops", &mut cfg.hardware.peak_flops);
             override_f64(hw, "hbm_bw", &mut cfg.hardware.hbm_bw);
@@ -463,6 +642,11 @@ impl Config {
             if let Some(v) = c.get("replicas").and_then(|v| v.as_usize()) {
                 cfg.cluster.replicas = v;
             }
+            if let Some(pools) = c.get("pools").and_then(|v| v.as_arr()) {
+                let parsed: Vec<PoolSpec> =
+                    pools.iter().map(|p| parse_pool(p, &cfg)).collect::<Result<_>>()?;
+                cfg.cluster.pools = parsed;
+            }
             if let Some(p) = c.get("dispatch").and_then(|v| v.as_str()) {
                 cfg.cluster.dispatch.policy = DispatchPolicy::parse(p)?;
             }
@@ -471,6 +655,19 @@ impl Config {
                 cfg.cluster.dispatch.seed = v as u64;
             }
             if let Some(ctl) = c.get("control") {
+                // With pools configured, autoscale bounds live on the
+                // pools (the control-level ones only seed the one-pool
+                // homogeneous layout); accepting both silently would let
+                // an operator set a cluster-wide cap that does nothing.
+                if !cfg.cluster.pools.is_empty()
+                    && (ctl.get("min_replicas").is_some() || ctl.get("max_replicas").is_some())
+                {
+                    bail!(
+                        "cluster.control.min_replicas/max_replicas are ignored when \
+                         cluster.pools is set — give each pool its own \
+                         min_replicas/max_replicas instead"
+                    );
+                }
                 let k = &mut cfg.cluster.control;
                 if let Some(p) = ctl.get("autoscale").and_then(|v| v.as_str()) {
                     k.autoscale = AutoscalePolicy::parse(p)?;
@@ -532,8 +729,80 @@ impl Config {
         if k.scale_down_queue_s > k.scale_up_queue_s {
             bail!("control.scale_down_queue_s must not exceed scale_up_queue_s");
         }
+        if !self.cluster.pools.is_empty() {
+            self.cluster_spec().validate(self.tiers.len())?;
+        }
         Ok(())
     }
+
+    /// The cluster topology this config describes: the configured pools,
+    /// or the one-pool homogeneous layout of `cluster.replicas` engines.
+    pub fn cluster_spec(&self) -> ClusterSpec {
+        if self.cluster.pools.is_empty() {
+            ClusterSpec::homogeneous(self, self.cluster.replicas)
+        } else {
+            ClusterSpec { pools: self.cluster.pools.clone() }
+        }
+    }
+}
+
+/// Parse one entry of the cluster `pools` array. Hardware and scheduler
+/// default to the global config's; `policy`, `chunk_size`,
+/// `max_chunk_size`, `hardware` (preset name) and `tier_affinity`
+/// override per pool.
+fn parse_pool(j: &Json, base: &Config) -> Result<PoolSpec> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("pool missing 'name'"))?
+        .to_string();
+    let mut hardware = base.hardware.clone();
+    if let Some(h) = j.get("hardware").and_then(|v| v.as_str()) {
+        hardware = HardwareModel::preset(h)
+            .ok_or_else(|| anyhow!("pool '{name}': unknown hardware preset '{h}'"))?;
+    }
+    let chunk = j.get("chunk_size").and_then(|v| v.as_usize()).map(|v| v as u32);
+    let mut scheduler = match j.get("policy").and_then(|v| v.as_str()) {
+        Some(p) => {
+            let policy = Policy::parse(p)?;
+            if policy == Policy::Niyama {
+                let mut s = base.scheduler.clone();
+                s.policy = policy;
+                s
+            } else {
+                // Sarathi pools get the full baseline preset (fixed
+                // chunk, no Niyama machinery) at the requested chunk.
+                SchedulerConfig::sarathi(policy, chunk.unwrap_or(base.scheduler.chunk_size))
+            }
+        }
+        None => base.scheduler.clone(),
+    };
+    if let Some(c) = chunk {
+        scheduler.chunk_size = c;
+        scheduler.max_chunk_size = scheduler.max_chunk_size.max(c);
+    }
+    override_u32(j, "max_chunk_size", &mut scheduler.max_chunk_size)?;
+    let mut tier_affinity = Vec::new();
+    if let Some(arr) = j.get("tier_affinity").and_then(|v| v.as_arr()) {
+        for t in arr {
+            let t = t
+                .as_usize()
+                .ok_or_else(|| anyhow!("pool '{name}': tier_affinity entries must be tier indices"))?;
+            tier_affinity.push(t);
+        }
+    }
+    let replicas = j.get("replicas").and_then(|v| v.as_usize()).unwrap_or(1);
+    // Bounds default to the initial size: a pool is static unless the
+    // config opts it into autoscaling with explicit min/max.
+    let min_replicas = j.get("min_replicas").and_then(|v| v.as_usize()).unwrap_or(replicas);
+    let max_replicas = j.get("max_replicas").and_then(|v| v.as_usize()).unwrap_or(replicas);
+    Ok(PoolSpec {
+        name,
+        spec: ReplicaSpec { hardware, scheduler, tier_affinity },
+        replicas,
+        min_replicas,
+        max_replicas,
+    })
 }
 
 fn parse_tier(j: &Json) -> Result<QosTier> {
@@ -682,9 +951,99 @@ mod tests {
             DispatchPolicy::LeastLoaded,
             DispatchPolicy::PowerOfTwoChoices,
             DispatchPolicy::PredictedTtft,
+            DispatchPolicy::TierAffinity,
         ] {
             assert_eq!(DispatchPolicy::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn json_pools_build_heterogeneous_spec() {
+        let c = Config::from_json_str(
+            r#"{"cluster": {"dispatch": "least-loaded", "pools": [
+                {"name": "strict", "replicas": 2, "chunk_size": 256,
+                 "policy": "niyama", "max_chunk_size": 2048},
+                {"name": "batch", "replicas": 2, "chunk_size": 2048,
+                 "policy": "sarathi-fcfs", "tier_affinity": [1, 2],
+                 "min_replicas": 1, "max_replicas": 4}
+            ]}}"#,
+        )
+        .unwrap();
+        let spec = c.cluster_spec();
+        assert_eq!(spec.pools.len(), 2);
+        assert_eq!(spec.total_replicas(), 4);
+        let strict = &spec.pools[0];
+        assert_eq!(strict.spec.scheduler.policy, Policy::Niyama);
+        assert_eq!(strict.spec.scheduler.chunk_size, 256);
+        assert!(strict.spec.tier_affinity.is_empty());
+        assert_eq!(strict.spec.affinity_mask(), 0);
+        // Static by default: bounds pin to the initial size.
+        assert_eq!((strict.min_replicas, strict.max_replicas), (2, 2));
+        let batch = &spec.pools[1];
+        assert_eq!(batch.spec.scheduler.policy, Policy::SarathiFcfs);
+        assert_eq!(batch.spec.scheduler.chunk_size, 2048);
+        assert_eq!(batch.spec.scheduler.max_chunk_size, 2048, "sarathi pools fix the chunk");
+        assert_eq!(batch.spec.tier_affinity, vec![1, 2]);
+        assert_eq!(batch.spec.affinity_mask(), 0b110);
+        assert_eq!((batch.min_replicas, batch.max_replicas), (1, 4));
+    }
+
+    #[test]
+    fn homogeneous_spec_is_the_one_pool_shim() {
+        let cfg = Config::default();
+        let spec = cfg.cluster_spec();
+        assert_eq!(spec.pools.len(), 1);
+        assert_eq!(spec.total_replicas(), cfg.cluster.replicas);
+        assert_eq!(spec.reference_spec().scheduler.chunk_size, cfg.scheduler.chunk_size);
+        assert_eq!(spec.reference_spec().hardware.name, cfg.hardware.name);
+        spec.validate(cfg.tiers.len()).unwrap();
+    }
+
+    #[test]
+    fn pool_validation_catches_drift_and_bad_bounds() {
+        // Affinity naming a tier that does not exist — the indexing
+        // drift the old silo sizing could hit silently.
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"pools": [
+                {"name": "p", "replicas": 1, "tier_affinity": [7]}]}}"#
+        )
+        .is_err());
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"pools": [
+                {"name": "p", "replicas": 1, "min_replicas": 3, "max_replicas": 2}]}}"#
+        )
+        .is_err());
+        // Duplicate names.
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"pools": [
+                {"name": "p", "replicas": 1}, {"name": "p", "replicas": 1}]}}"#
+        )
+        .is_err());
+        // No initial capacity anywhere.
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"pools": [{"name": "p", "replicas": 0}]}}"#
+        )
+        .is_err());
+        // Control-level bounds conflict with per-pool bounds: with pools
+        // configured they would be silently ignored, so they are
+        // rejected outright.
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"pools": [{"name": "p", "replicas": 1}],
+                "control": {"max_replicas": 8}}}"#
+        )
+        .is_err());
+        // Pools with a plain autoscale policy (bounds on the pools) are
+        // fine, and the pool hardware preset table matches the global
+        // one ("tiny-cpu" works in both).
+        let c = Config::from_json_str(
+            r#"{"hardware": {"preset": "tiny-cpu"},
+                "cluster": {"pools": [
+                    {"name": "p", "replicas": 1, "hardware": "tiny-cpu",
+                     "min_replicas": 1, "max_replicas": 2}],
+                "control": {"autoscale": "reactive"}}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.cluster.pools[0].spec.hardware.name, "tiny-cpu");
     }
 
     #[test]
@@ -764,7 +1123,12 @@ mod tests {
     #[test]
     fn shipped_config_files_load() {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
-        for name in ["shared_niyama.json", "sarathi_edf_baseline.json", "qwen_tp2.json"] {
+        for name in [
+            "shared_niyama.json",
+            "sarathi_edf_baseline.json",
+            "qwen_tp2.json",
+            "hetero_pools.json",
+        ] {
             let path = dir.join(name);
             let cfg = Config::from_file(path.to_str().unwrap())
                 .unwrap_or_else(|e| panic!("{name}: {e}"));
@@ -775,6 +1139,11 @@ mod tests {
         assert_eq!(edf.scheduler.policy, Policy::SarathiEdf);
         let qwen = Config::from_file(dir.join("qwen_tp2.json").to_str().unwrap()).unwrap();
         assert_eq!(qwen.hardware.tp_degree, 2);
+        let hetero = Config::from_file(dir.join("hetero_pools.json").to_str().unwrap()).unwrap();
+        let spec = hetero.cluster_spec();
+        assert_eq!(spec.pools.len(), 2);
+        assert_eq!(spec.pools[1].spec.affinity_mask(), 0b110);
+        assert_eq!(hetero.cluster.dispatch.policy, DispatchPolicy::LeastLoaded);
     }
 
     #[test]

@@ -124,6 +124,23 @@ pub struct LoadSnapshot {
     /// definition, and their ever-growing lateness would otherwise poison
     /// the signal long after the replica recovered.
     pub tier_slack_s: Vec<f64>,
+    /// This replica's own reference prefill price (seconds per prompt
+    /// token, from its hardware + chunk config). Heterogeneous pools make
+    /// the rate per-replica, so every consumer that prices an arrival's
+    /// work against a candidate replica — dispatch scoring, relegation
+    /// handoff, global admission — must read it from the snapshot rather
+    /// than assume one cluster-wide rate.
+    pub sec_per_prefill_token: f64,
+    /// This replica's reference price of one decode token (one batched
+    /// iteration of wall clock).
+    pub sec_per_decode_token: f64,
+    /// The replica's configured prefill chunk size (scheduler floor) —
+    /// predictive dispatch prices one chunk of *this* size.
+    pub chunk_size: u32,
+    /// Bitmask of QoS tiers this replica serves (0 = every tier). Set by
+    /// the cluster from the replica's pool spec; the engine itself is
+    /// affinity-oblivious.
+    pub tier_affinity_mask: u32,
 }
 
 impl LoadSnapshot {
@@ -141,6 +158,30 @@ impl LoadSnapshot {
     /// Worst slack headroom across tiers (`+inf` when fully idle).
     pub fn min_slack_s(&self) -> f64 {
         self.tier_slack_s.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Whether this replica's pool serves `tier` (mask 0 = every tier).
+    pub fn serves_tier(&self, tier: usize) -> bool {
+        self.tier_affinity_mask == 0 || (self.tier_affinity_mask >> tier.min(31)) & 1 == 1
+    }
+
+    /// An arrival's prefill work priced at *this replica's* reference
+    /// rate — the per-replica cost model heterogeneous pools require.
+    pub fn price_prefill_s(&self, prompt_tokens: u32) -> f64 {
+        prompt_tokens as f64 * self.sec_per_prefill_token
+    }
+
+    /// Seconds of decode work that count against `slo`'s deadline on
+    /// this replica: zero when only first service is bound (TTFT), the
+    /// decode tail at this replica's own rate when the deadline covers
+    /// decoding (TTLT).
+    pub fn price_decode_tail_s(&self, slo: crate::qos::Slo, decode_tokens: u32) -> f64 {
+        let (_, counts_decode) = slo.deadline_budget();
+        if counts_decode {
+            decode_tokens as f64 * self.sec_per_decode_token
+        } else {
+            0.0
+        }
     }
 
     /// The time half of the feasibility rule: queue wait plus priced
@@ -208,6 +249,9 @@ pub struct Engine<B: ExecutionBackend> {
     /// Reference wall-clock cost of one decode token (one batched
     /// iteration) — prices a request's decode tail for TTLT feasibility.
     sec_per_decode_token: f64,
+    /// Configured prefill chunk size, published in load snapshots so
+    /// predictive dispatch prices chunks of this replica's own size.
+    chunk_size: u32,
 }
 
 /// Build the configured scheduler over a latency model.
@@ -281,6 +325,7 @@ impl<B: ExecutionBackend> Engine<B> {
             live: std::collections::HashSet::new(),
             sec_per_prefill_token,
             sec_per_decode_token,
+            chunk_size: chunk,
         }
     }
 
@@ -533,6 +578,10 @@ impl<B: ExecutionBackend> Engine<B> {
             kv_committed: 0,
             kv_capacity: self.kv_capacity,
             tier_slack_s: vec![f64::INFINITY; self.n_tiers],
+            sec_per_prefill_token: self.sec_per_prefill_token,
+            sec_per_decode_token: self.sec_per_decode_token,
+            chunk_size: self.chunk_size,
+            tier_affinity_mask: 0,
         };
         for &id in &self.live {
             let r = self.store.get(id);
@@ -881,6 +930,37 @@ mod tests {
         assert_eq!(done.backlog, 0);
         assert_eq!(done.kv_used, 0);
         assert_eq!(done.active, 0);
+    }
+
+    #[test]
+    fn snapshot_carries_the_replica_cost_model() {
+        let cfg = Config::default();
+        let eng = Engine::sim(&cfg);
+        let s = eng.load_snapshot();
+        assert_eq!(s.sec_per_prefill_token, eng.sec_per_prefill_token());
+        assert_eq!(s.sec_per_decode_token, eng.sec_per_decode_token());
+        assert_eq!(s.chunk_size, cfg.scheduler.chunk_size);
+        assert_eq!(s.price_prefill_s(1000), 1000.0 * eng.sec_per_prefill_token());
+        let int = crate::qos::Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
+        let batch = crate::qos::Slo::NonInteractive { ttlt_s: 600.0 };
+        assert_eq!(s.price_decode_tail_s(int, 50), 0.0, "TTFT deadlines exclude decode");
+        assert_eq!(s.price_decode_tail_s(batch, 50), 50.0 * eng.sec_per_decode_token());
+        // A bigger chunk config prices prefill cheaper per token (MFU).
+        let mut big = cfg.clone();
+        big.scheduler.chunk_size = 2048;
+        let s2 = Engine::sim(&big).load_snapshot();
+        assert!(s2.sec_per_prefill_token < s.sec_per_prefill_token);
+    }
+
+    #[test]
+    fn snapshot_tier_affinity_mask_gates_tiers() {
+        let cfg = Config::default();
+        let mut s = Engine::sim(&cfg).load_snapshot();
+        assert!(s.serves_tier(0) && s.serves_tier(2), "mask 0 serves everything");
+        s.tier_affinity_mask = 0b110;
+        assert!(!s.serves_tier(0));
+        assert!(s.serves_tier(1) && s.serves_tier(2));
+        assert!(!s.serves_tier(9));
     }
 
     #[test]

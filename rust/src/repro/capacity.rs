@@ -5,8 +5,7 @@
 use super::{drain_budget, f, policy_configs, run_uniform, CsvOut, Scale};
 use crate::config::{Config, Policy, SchedulerConfig};
 use crate::engine::Engine;
-use crate::qos::Slo;
-use crate::simulator::cluster::{gpus_needed, max_qps};
+use crate::simulator::cluster::{gpus_needed, max_qps, silo_chunk_for_tier};
 use crate::util::Rng;
 use crate::workload::datasets::Dataset;
 use crate::workload::{ArrivalProcess, WorkloadSpec};
@@ -52,14 +51,13 @@ pub struct CapacityRow {
 pub fn capacity_row(ds: &Dataset, scale: Scale) -> CapacityRow {
     let tp = Config::default().hardware.tp_degree;
 
-    // Siloed: per-tier Sarathi clusters with tier-appropriate chunks.
+    // Siloed: per-tier Sarathi clusters with tier-appropriate chunks —
+    // the same chunk rule `run_silo`'s pools use (`silo_chunk_for_tier`),
+    // so capacity sizing can never drift from the silo it models.
     let base = Config::default();
     let mut silo_gpus = 0u32;
     for tier in 0..base.tiers.len() {
-        let chunk = match base.tiers[tier].slo {
-            Slo::Interactive { .. } => 256,
-            Slo::NonInteractive { .. } => 2048,
-        };
+        let chunk = silo_chunk_for_tier(&base, tier);
         let mut cfg = base.clone();
         cfg.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, chunk);
         let cap = silo_tier_capacity(&cfg, ds, tier, scale);

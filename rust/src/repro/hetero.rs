@@ -1,0 +1,291 @@
+//! Heterogeneous-pool experiment (the ROADMAP "Heterogeneous replicas"
+//! item): a strict chunk-256 pool and a batch chunk-2048 pool behind
+//! *one* QoS-aware dispatcher, against the equivalent siloed split of
+//! the same four replicas.
+//!
+//! The paper's core claim is that silos waste capacity because each
+//! pool is sized for its own worst case; collapsing them into policy on
+//! shared infrastructure reclaims the slack. The trace here is skewed
+//! to make that concrete: batch tiers carry most of the traffic and
+//! surge past the batch silo's capacity in the middle third, while the
+//! strict tier leaves its own pool half idle. Compared:
+//!
+//! - **silo**: per-tier Sarathi-FCFS pools behind tier-affinity
+//!   dispatch (`run_silo`, now literally a [`ClusterSpec`] — the
+//!   baseline cannot move work across the tier boundary);
+//! - **hetero-pools**: the *same* replica split, but the strict pool
+//!   runs Niyama (chunk floor 256, dynamic up to 2048) with an open
+//!   affinity, the batch pool keeps its chunk-2048 Sarathi config with
+//!   affinity {1, 2}, and `least-loaded` dispatch prices every arrival
+//!   at each candidate's own rates — batch overflow spills onto the
+//!   strict pool's slack while tier 0 stays protected by the batch
+//!   pool's affinity and Niyama's QoS scheduling;
+//! - **hetero+handoff**: the same with Llumnix-style relegation handoff;
+//! - **shared-niyama**: four identical Niyama replicas (the fully
+//!   collapsed deployment) as the reference upper bound.
+//!
+//! Headlines (printed and written to `results/hetero.json`): the mixed
+//! pool must hold tier-0 violations at or below the silo split's while
+//! matching or beating its aggregate throughput.
+
+use super::{drain_budget, f, CsvOut, Scale};
+use crate::config::{
+    ClusterSpec, Config, DispatchPolicy, Policy, PoolSpec, ReplicaSpec, SchedulerConfig,
+};
+use crate::metrics::Summary;
+use crate::request::RequestSpec;
+use crate::simulator::cluster::{run_silo, Cluster, SiloGroup};
+use crate::util::Rng;
+use crate::workload::datasets::Dataset;
+use crate::workload::{ArrivalProcess, WorkloadSpec};
+use anyhow::Result;
+use std::io::Write;
+
+/// Strict-pool replicas (chunk 256) and batch-pool replicas (chunk 2048)
+/// — the same 2+2 split both deployments get.
+pub const STRICT_REPLICAS: usize = 2;
+pub const BATCH_REPLICAS: usize = 2;
+
+const BASE_QPS: f64 = 10.0;
+const BURST_FACTOR: f64 = 2.0;
+/// Batch-heavy tier mix: the strict tier underfills its silo while the
+/// batch tiers outgrow theirs.
+const TIER_SHARES: [f64; 3] = [0.2, 0.4, 0.4];
+
+/// The skewed trace: Poisson base load with a 2x burst in the middle
+/// third, 20% tier-0 / 80% batch tiers.
+pub fn skewed_tier_trace(scale: Scale) -> Vec<RequestSpec> {
+    let ds = Dataset::azure_code();
+    let mut spec = WorkloadSpec::uniform(ds, BASE_QPS, scale.duration_s);
+    spec.arrivals = ArrivalProcess::Burst {
+        base_qps: BASE_QPS,
+        burst_qps: BURST_FACTOR * BASE_QPS,
+        burst_start_s: scale.duration_s / 3.0,
+        burst_end_s: 2.0 * scale.duration_s / 3.0,
+    };
+    spec.tier_shares = TIER_SHARES.to_vec();
+    spec.low_importance_frac = 0.2;
+    spec.generate(&mut Rng::new(scale.seed))
+}
+
+/// The heterogeneous spec: an open Niyama strict pool plus an
+/// affinity-restricted Sarathi batch pool — the same GPUs the silo
+/// split gets, re-expressed as pools behind one dispatcher.
+pub fn hetero_cluster_spec(cfg: &Config) -> ClusterSpec {
+    let mut strict = ReplicaSpec::from_config(cfg);
+    strict.scheduler = SchedulerConfig::default(); // Niyama, 256..2048
+    let batch = ReplicaSpec {
+        hardware: cfg.hardware.clone(),
+        scheduler: SchedulerConfig::sarathi(Policy::SarathiFcfs, 2048),
+        tier_affinity: vec![1, 2],
+    };
+    ClusterSpec {
+        pools: vec![
+            PoolSpec::fixed("strict-256", strict, STRICT_REPLICAS),
+            PoolSpec::fixed("batch-2048", batch, BATCH_REPLICAS),
+        ],
+    }
+}
+
+struct Row {
+    scheme: String,
+    summary: Summary,
+    /// Arrivals each pool served (empty for the silo row, whose wrapper
+    /// returns only the merged summary).
+    per_pool: Vec<(String, usize)>,
+}
+
+fn run_spec_scheme(
+    name: &str,
+    cfg: &Config,
+    spec: &ClusterSpec,
+    trace: &[RequestSpec],
+    horizon: f64,
+    lt: u32,
+) -> Row {
+    let mut cluster = Cluster::from_spec(cfg, spec);
+    cluster.submit_trace(trace.to_vec());
+    cluster.run(horizon);
+    let mut per_pool = vec![0usize; cluster.pool_count()];
+    for (i, &n) in cluster.stats.dispatched.iter().enumerate() {
+        per_pool[cluster.pool_of()[i]] += n;
+    }
+    let per_pool = per_pool
+        .iter()
+        .enumerate()
+        .map(|(p, &n)| (cluster.pool_name(p).to_string(), n))
+        .collect();
+    Row { scheme: name.to_string(), summary: cluster.summary(lt), per_pool }
+}
+
+/// The experiment: `niyama repro --id hetero`.
+pub fn hetero(scale: Scale) -> Result<()> {
+    let ds = Dataset::azure_code();
+    let trace = skewed_tier_trace(scale);
+    let horizon = scale.duration_s + drain_budget(&Config::default());
+    let lt = ds.long_prompt_threshold();
+    let duration = scale.duration_s;
+    println!(
+        "Heterogeneous pools — {} requests over {duration} s ({}% tier-0), \
+         2x burst in the middle third; {STRICT_REPLICAS}x chunk-256 + \
+         {BATCH_REPLICAS}x chunk-2048 replicas in every scheme",
+        trace.len(),
+        (100.0 * TIER_SHARES[0]) as u32,
+    );
+
+    let base = Config::default();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // Silo baseline: the strict tier gets the chunk-256 pool, each batch
+    // tier one chunk-2048 replica — sized by the shared SiloGroup rule.
+    let groups = vec![
+        SiloGroup::for_tier(&base, 0, STRICT_REPLICAS),
+        SiloGroup::for_tier(&base, 1, BATCH_REPLICAS / 2),
+        SiloGroup::for_tier(&base, 2, BATCH_REPLICAS - BATCH_REPLICAS / 2),
+    ];
+    rows.push(Row {
+        scheme: "silo".to_string(),
+        summary: run_silo(&base, &groups, &trace, horizon, lt),
+        per_pool: Vec::new(),
+    });
+
+    for (name, handoff) in [("hetero-pools", false), ("hetero+handoff", true)] {
+        let mut cfg = base.clone();
+        cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+        cfg.cluster.dispatch.relegation_handoff = handoff;
+        let spec = hetero_cluster_spec(&cfg);
+        rows.push(run_spec_scheme(name, &cfg, &spec, &trace, horizon, lt));
+    }
+
+    {
+        let mut cfg = base.clone();
+        cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+        let spec = ClusterSpec::homogeneous(&cfg, STRICT_REPLICAS + BATCH_REPLICAS);
+        rows.push(run_spec_scheme("shared-niyama", &cfg, &spec, &trace, horizon, lt));
+    }
+
+    println!(
+        "{:<16} {:>8} {:>8} {:>8} {:>8} {:>9} {:>10}",
+        "scheme", "viol%", "tier0%", "tier1%", "tier2%", "goodput", "thru r/s"
+    );
+    let mut csv = CsvOut::create(
+        "hetero",
+        "scheme,violation_pct,tier0_violation_pct,tier1_violation_pct,\
+         tier2_violation_pct,goodput_rps,throughput_rps,finished",
+    )?;
+    for row in &rows {
+        let s = &row.summary;
+        let thru = s.finished as f64 / duration;
+        println!(
+            "{:<16} {:>8} {:>8} {:>8} {:>8} {:>9} {:>10}",
+            row.scheme,
+            f(s.violation_pct),
+            f(s.tier_violation_pct(0)),
+            f(s.tier_violation_pct(1)),
+            f(s.tier_violation_pct(2)),
+            f(s.goodput_rps),
+            f(thru)
+        );
+        if !row.per_pool.is_empty() {
+            let split: Vec<String> =
+                row.per_pool.iter().map(|(n, c)| format!("{n}:{c}")).collect();
+            println!("{:<16}   dispatched {}", "", split.join("  "));
+        }
+        csv.row(&[
+            row.scheme.clone(),
+            f(s.violation_pct),
+            f(s.tier_violation_pct(0)),
+            f(s.tier_violation_pct(1)),
+            f(s.tier_violation_pct(2)),
+            f(s.goodput_rps),
+            f(thru),
+            s.finished.to_string(),
+        ])?;
+    }
+
+    // ---- headlines -------------------------------------------------------
+    let silo = &rows[0];
+    let hetero = rows.iter().find(|r| r.scheme == "hetero-pools").expect("scheme present");
+    let tier0_ok = hetero.summary.tier_violation_pct(0) <= silo.summary.tier_violation_pct(0) + 1e-9;
+    let thru_ratio = hetero.summary.goodput_rps / silo.summary.goodput_rps.max(1e-9);
+    println!(
+        "\nheadline: mixed pools hold tier-0 at {:.2}% (silo {:.2}%) while serving \
+         {:.2}x the silo split's goodput ({:.2} vs {:.2} req/s) — silos as policy, \
+         not hardware",
+        hetero.summary.tier_violation_pct(0),
+        silo.summary.tier_violation_pct(0),
+        thru_ratio,
+        hetero.summary.goodput_rps,
+        silo.summary.goodput_rps
+    );
+    if !tier0_ok {
+        println!("WARNING: mixed pool exceeded the silo split's tier-0 violation rate");
+    }
+
+    // ---- JSON table ------------------------------------------------------
+    std::fs::create_dir_all("results")?;
+    let json_path = "results/hetero.json";
+    let mut out = std::fs::File::create(json_path)?;
+    writeln!(out, "{{")?;
+    writeln!(out, "  \"experiment\": \"hetero\",")?;
+    writeln!(out, "  \"duration_s\": {duration},")?;
+    writeln!(out, "  \"requests\": {},", trace.len())?;
+    writeln!(
+        out,
+        "  \"replicas\": {{\"strict_chunk256\": {STRICT_REPLICAS}, \"batch_chunk2048\": {BATCH_REPLICAS}}},"
+    )?;
+    writeln!(out, "  \"rows\": [")?;
+    for (i, row) in rows.iter().enumerate() {
+        let s = &row.summary;
+        writeln!(
+            out,
+            "    {{\"scheme\": \"{}\", \"violation_pct\": {:.4}, \
+             \"tier0_violation_pct\": {:.4}, \"tier1_violation_pct\": {:.4}, \
+             \"tier2_violation_pct\": {:.4}, \"goodput_rps\": {:.4}, \
+             \"throughput_rps\": {:.4}, \"finished\": {}}}{}",
+            row.scheme,
+            s.violation_pct,
+            s.tier_violation_pct(0),
+            s.tier_violation_pct(1),
+            s.tier_violation_pct(2),
+            s.goodput_rps,
+            s.finished as f64 / duration,
+            s.finished,
+            if i + 1 < rows.len() { "," } else { "" }
+        )?;
+    }
+    writeln!(out, "  ],")?;
+    writeln!(out, "  \"headline\": {{")?;
+    writeln!(out, "    \"tier0_within_silo\": {tier0_ok},")?;
+    writeln!(out, "    \"goodput_ratio_vs_silo\": {thru_ratio:.3}")?;
+    writeln!(out, "  }}")?;
+    writeln!(out, "}}")?;
+    println!("wrote {} and {json_path}", csv.path);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_batch_heavy() {
+        let scale = Scale { duration_s: 120.0, diurnal_s: 0.0, search_iters: 1, seed: 3 };
+        let t = skewed_tier_trace(scale);
+        assert!(t.len() > 200, "10+ qps over 120 s");
+        let tier0 = t.iter().filter(|r| r.tier == 0).count() as f64 / t.len() as f64;
+        assert!(tier0 < 0.3, "strict tier must be the minority: {tier0}");
+    }
+
+    #[test]
+    fn hetero_spec_is_valid_and_affinity_restricted() {
+        let cfg = Config::default();
+        let spec = hetero_cluster_spec(&cfg);
+        spec.validate(cfg.tiers.len()).unwrap();
+        assert_eq!(spec.total_replicas(), STRICT_REPLICAS + BATCH_REPLICAS);
+        assert_eq!(spec.pools[0].spec.scheduler.policy, Policy::Niyama);
+        assert_eq!(spec.pools[0].spec.affinity_mask(), 0, "strict pool serves every tier");
+        assert_eq!(spec.pools[1].spec.scheduler.chunk_size, 2048);
+        assert_eq!(spec.pools[1].spec.affinity_mask(), 0b110, "batch pool never takes tier 0");
+    }
+}

@@ -11,6 +11,7 @@
 pub mod autoscale;
 pub mod capacity;
 pub mod dispatch;
+pub mod hetero;
 pub mod load;
 pub mod micro;
 pub mod overload;
@@ -148,6 +149,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "tab3" => micro::tab3(scale),
         "dispatch" => dispatch::dispatch(scale),
         "autoscale" => autoscale::autoscale(scale),
+        "hetero" => hetero::hetero(scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n=== {id} ===");
@@ -161,7 +163,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
 
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "tab1", "tab3", "dispatch", "autoscale",
+    "fig12", "tab1", "tab3", "dispatch", "autoscale", "hetero",
 ];
 
 #[cfg(test)]

@@ -18,6 +18,32 @@
 //!    relegated are re-dispatched to a replica with spare headroom, the
 //!    origin keeping only a `Migrated` tombstone.
 //!
+//! # Heterogeneous replica pools (`ClusterSpec`)
+//!
+//! The cluster is constructed from a [`ClusterSpec`]: a set of
+//! [`crate::config::PoolSpec`]s, each pairing a [`ReplicaSpec`]
+//! (hardware model + scheduler/chunk config + optional tier-affinity
+//! tags) with an initial count and autoscale bounds. A replica's spec is
+//! **immutable from provision to retirement** — capacity changes kind by
+//! draining one pool and growing another, never by reconfiguring a live
+//! slot. Every consumer that prices work against a candidate replica
+//! (dispatch scoring, relegation handoff, drain targeting, global
+//! admission) reads that replica's own reference rates from its
+//! [`LoadSnapshot`] instead of assuming one cluster-wide cost model, and
+//! tier-affinity tags gate which replicas may take an arrival at all
+//! (with a fallback to any active replica when no serving pool claims
+//! the tier, so work is never stranded).
+//!
+//! [`Cluster::new`] remains as the one-pool compatibility shim
+//! ([`ClusterSpec::homogeneous`]) and reproduces pre-redesign
+//! homogeneous timelines bit-for-bit for every policy whose pricing
+//! survived unchanged (round-robin, JSQ, least-loaded, p2c — pinned by
+//! `tests/hetero_pools.rs`; `PredictedTtft` deliberately re-prices per
+//! replica and may route near-ties differently than PR 3 did);
+//! `run_silo` builds per-tier pools behind
+//! [`crate::simulator::dispatch::TierAffinity`] dispatch, making the
+//! siloed baseline literally a special case of the pool API.
+//!
 //! `run_shared` / `run_silo` keep their seed signatures as thin wrappers
 //! over [`Cluster`], so all of `repro/` works unchanged. Both use one
 //! merged-horizon rule: summaries are evaluated at [`Cluster::eval_time`]
@@ -36,9 +62,11 @@
 //! (state `Warming` until a configurable cold-start elapses) and drain
 //! them (state `Draining`: excluded from dispatch, queued work
 //! re-dispatched through the relegation-handoff machinery, retirement
-//! only once empty). A global [`AdmissionController`] at the dispatcher
-//! early-rejects (or degrades) arrivals whose deadline is provably
-//! unmeetable on every dispatchable replica.
+//! only once empty). The controller's decision names the *pool* to grow
+//! or shrink, clamped to that pool's own bounds. A global
+//! [`AdmissionController`] at the dispatcher early-rejects (or degrades)
+//! arrivals whose deadline is provably unmeetable on every dispatchable
+//! replica.
 //!
 //! **Index-stability invariants** (audited for the mutable replica set;
 //! `tests/control_plane.rs` holds regression tests against them):
@@ -48,22 +76,24 @@
 //!    cache, and every per-replica stats vector never shift or alias;
 //! 2. every per-replica vector (`snaps`, `snap_dirty`, `wedged`,
 //!    `handoff_seen`, `states`, `provisioned_at`, `retired_at`,
-//!    `stats.dispatched`) grows in lockstep inside
+//!    `pool_of`, `stats.dispatched`) grows in lockstep inside
 //!    [`Cluster::provision_replica`] — no other site pushes;
 //! 3. a retired replica's `next_event_time` is `None`, so any stale heap
 //!    entries it left behind are discarded by the lazy-deletion pop and
 //!    can never be returned as live events;
 //! 4. dispatch, handoff and drain targets are drawn only from `Active`
-//!    replicas, so no new work can reach a warming, draining or retired
-//!    slot.
+//!    replicas (respecting tier affinity), so no new work can reach a
+//!    warming, draining or retired slot.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::config::{Config, ControlConfig, Policy, SchedulerConfig};
+use crate::config::{
+    ClusterSpec, Config, ControlConfig, DispatchConfig, DispatchPolicy, Policy, ReplicaSpec,
+    SchedulerConfig,
+};
 use crate::engine::{Engine, LoadSnapshot, SimBackend};
 use crate::metrics::{summarize_many, Summary};
-use crate::qos::Slo;
 use crate::request::{RequestSpec, RequestStore};
 use crate::simulator::control::{
     build_controller, ControlView, ReplicaState, ScalingController, ScalingDecision,
@@ -123,8 +153,31 @@ pub struct ClusterStats {
     pub control_ticks: u64,
 }
 
+/// Per-pool runtime state: the engine config one replica of this pool is
+/// built from, plus the dispatch/control metadata derived from its
+/// [`crate::config::PoolSpec`]. Immutable after construction — which is
+/// what makes "a replica's spec is immutable from provision to
+/// retirement" hold by construction.
+struct PoolRuntime {
+    name: String,
+    /// Cluster base config with this pool's hardware + scheduler
+    /// substituted; every engine of this pool is `Engine::sim` of it.
+    engine_cfg: Config,
+    /// Tier-affinity bitmask (0 = serves every tier).
+    affinity_mask: u32,
+    /// Autoscale floor.
+    min: usize,
+    /// Autoscale ceiling.
+    max: usize,
+    /// GPUs per replica (tensor-parallel width) for GPU-seconds billing.
+    tp_degree: u32,
+}
+
 /// A set of replicas interleaved on one shared virtual clock behind a
 /// global dispatcher, optionally grown/shrunk by an elastic controller.
+/// Replicas are grouped into pools (see [`ClusterSpec`]); the
+/// homogeneous single-pool layout of [`Cluster::new`] is the special
+/// case every pre-pool experiment used.
 pub struct Cluster {
     engines: Vec<Engine<SimBackend>>,
     dispatcher: Box<dyn Dispatcher>,
@@ -150,12 +203,17 @@ pub struct Cluster {
     events: BinaryHeap<Reverse<(EventKey, usize)>>,
     clock: f64,
     tiers: Vec<crate::qos::QosTier>,
-    sec_per_prefill_token: f64,
-    sec_per_decode_token: f64,
     relegation_handoff: bool,
-    /// Config the cluster was built from — needed to provision replicas
-    /// after construction (identical engines by construction).
-    cfg: Config,
+    /// The replica pools this cluster was built from (immutable).
+    pools: Vec<PoolRuntime>,
+    /// Pool index of each replica slot, append-only alongside `engines`.
+    pool_of: Vec<usize>,
+    /// `(min, max)` per pool, cached in the shape `ControlView` borrows.
+    pool_bounds: Vec<(usize, usize)>,
+    /// Whether any pool restricts which tiers it serves. False for every
+    /// pre-pool configuration, which then keeps the exact old dispatch
+    /// paths.
+    has_affinity: bool,
     /// Per-replica lifecycle, index-aligned with `engines` (append-only).
     states: Vec<ReplicaState>,
     /// Virtual time each replica slot started billing (0 for the initial
@@ -176,40 +234,99 @@ pub struct Cluster {
     control_active: bool,
     /// (time, billed replica count) at every provision/retire edge.
     timeline: Vec<(f64, usize)>,
-    tp_degree: u32,
     pub stats: ClusterStats,
 }
 
 impl Cluster {
-    /// A cluster of `replicas` identical simulation engines; dispatcher,
-    /// handoff, autoscaling and admission come from `cfg.cluster`.
+    /// The one-pool compatibility shim: a cluster of `replicas` identical
+    /// engines built from the global config — exactly
+    /// [`ClusterSpec::homogeneous`]. Dispatcher, handoff, autoscaling and
+    /// admission come from `cfg.cluster`.
     pub fn new(cfg: &Config, replicas: usize) -> Cluster {
-        Self::with_dispatcher(
-            cfg,
-            replicas,
-            build_dispatcher_for(&cfg.cluster.dispatch, &cfg.hardware, cfg.scheduler.chunk_size),
-            cfg.cluster.dispatch.relegation_handoff,
-        )
+        Self::from_spec(cfg, &ClusterSpec::homogeneous(cfg, replicas))
     }
 
-    /// A cluster with an explicit dispatcher (tests / experiments).
+    /// One-pool cluster with an explicit dispatcher (tests/experiments).
     pub fn with_dispatcher(
         cfg: &Config,
         replicas: usize,
         dispatcher: Box<dyn Dispatcher>,
         relegation_handoff: bool,
     ) -> Cluster {
-        assert!(replicas > 0);
-        let engines: Vec<Engine<SimBackend>> =
-            (0..replicas).map(|_| Engine::sim(cfg)).collect();
-        let snaps: Vec<LoadSnapshot> = engines.iter().map(|e| e.load_snapshot()).collect();
-        let sec_per_prefill_token = engines[0].sec_per_prefill_token();
-        let sec_per_decode_token = engines[0].sec_per_decode_token();
+        Self::from_spec_with_dispatcher(
+            cfg,
+            &ClusterSpec::homogeneous(cfg, replicas),
+            dispatcher,
+            relegation_handoff,
+        )
+    }
+
+    /// A cluster of heterogeneous replica pools behind one dispatcher.
+    /// `cfg` supplies everything pools do not own (QoS tiers, dispatch
+    /// policy, control plane, seed); each pool supplies its replicas'
+    /// hardware, scheduler and tier affinity. Randomized/predictive
+    /// dispatchers calibrate against pool 0's spec.
+    pub fn from_spec(cfg: &Config, spec: &ClusterSpec) -> Cluster {
+        let reference = spec.reference_spec();
+        Self::from_spec_with_dispatcher(
+            cfg,
+            spec,
+            build_dispatcher_for(
+                &cfg.cluster.dispatch,
+                &reference.hardware,
+                reference.scheduler.chunk_size,
+            ),
+            cfg.cluster.dispatch.relegation_handoff,
+        )
+    }
+
+    /// [`Cluster::from_spec`] with an explicit dispatcher.
+    pub fn from_spec_with_dispatcher(
+        cfg: &Config,
+        spec: &ClusterSpec,
+        dispatcher: Box<dyn Dispatcher>,
+        relegation_handoff: bool,
+    ) -> Cluster {
+        spec.validate(cfg.tiers.len()).expect("invalid ClusterSpec");
+        let pools: Vec<PoolRuntime> = spec
+            .pools
+            .iter()
+            .map(|p| PoolRuntime {
+                name: p.name.clone(),
+                engine_cfg: p.spec.engine_config(cfg),
+                affinity_mask: p.spec.affinity_mask(),
+                min: p.min_replicas,
+                max: p.max_replicas,
+                tp_degree: p.spec.hardware.tp_degree,
+            })
+            .collect();
+        let pool_bounds: Vec<(usize, usize)> = pools.iter().map(|p| (p.min, p.max)).collect();
+        let total = spec.total_replicas();
+        assert!(total > 0);
+        let mut engines: Vec<Engine<SimBackend>> = Vec::with_capacity(total);
+        let mut pool_of: Vec<usize> = Vec::with_capacity(total);
+        for (pi, p) in spec.pools.iter().enumerate() {
+            for _ in 0..p.replicas {
+                engines.push(Engine::sim(&pools[pi].engine_cfg));
+                pool_of.push(pi);
+            }
+        }
+        let snaps: Vec<LoadSnapshot> = engines
+            .iter()
+            .zip(&pool_of)
+            .map(|(e, &pi)| {
+                let mut s = e.load_snapshot();
+                s.tier_affinity_mask = pools[pi].affinity_mask;
+                s
+            })
+            .collect();
+        let has_affinity = pools.iter().any(|p| p.affinity_mask != 0);
         let control = cfg.cluster.control.clone();
         let controller = build_controller(&control, &cfg.tiers);
         let admission = AdmissionController::new(control.admission);
         let control_active = controller.is_some() || control.admission != AdmissionPolicy::None;
         let n_tiers = cfg.tiers.len();
+        let replicas = engines.len();
         Cluster {
             engines,
             dispatcher,
@@ -222,10 +339,11 @@ impl Cluster {
             events: BinaryHeap::with_capacity(2 * replicas),
             clock: 0.0,
             tiers: cfg.tiers.clone(),
-            sec_per_prefill_token,
-            sec_per_decode_token,
             relegation_handoff,
-            cfg: cfg.clone(),
+            pools,
+            pool_of,
+            pool_bounds,
+            has_affinity,
             states: vec![ReplicaState::Active; replicas],
             provisioned_at: vec![0.0; replicas],
             retired_at: vec![None; replicas],
@@ -236,7 +354,6 @@ impl Cluster {
             admission,
             control_active,
             timeline: vec![(0.0, replicas)],
-            tp_degree: cfg.hardware.tp_degree,
             stats: ClusterStats {
                 dispatched: vec![0; replicas],
                 rejected: vec![0; n_tiers],
@@ -256,6 +373,23 @@ impl Cluster {
         &self.states
     }
 
+    /// Pool index of each replica slot (append-only; a slot's pool — and
+    /// therefore its spec — never changes between provision and
+    /// retirement).
+    pub fn pool_of(&self) -> &[usize] {
+        &self.pool_of
+    }
+
+    /// Number of replica pools.
+    pub fn pool_count(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Name of pool `p`.
+    pub fn pool_name(&self, p: usize) -> &str {
+        &self.pools[p].name
+    }
+
     /// (time, billed replica count) at every provision/retire edge.
     pub fn replica_timeline(&self) -> &[(f64, usize)] {
         &self.timeline
@@ -268,14 +402,15 @@ impl Cluster {
 
     /// GPU-seconds consumed so far: each slot bills from its provision
     /// instant until retirement (or the current evaluation horizon),
-    /// times the tensor-parallel width. Warm-up time bills — the
-    /// instance is up while the engine loads.
+    /// times its own pool's tensor-parallel width. Warm-up time bills —
+    /// the instance is up while the engine loads.
     pub fn gpu_seconds(&self) -> f64 {
         let horizon = self.eval_time();
         (0..self.engines.len())
             .map(|i| {
                 let end = self.retired_at[i].unwrap_or(horizon);
-                (end - self.provisioned_at[i]).max(0.0) * self.tp_degree as f64
+                (end - self.provisioned_at[i]).max(0.0)
+                    * self.pools[self.pool_of[i]].tp_degree as f64
             })
             .sum()
     }
@@ -315,22 +450,23 @@ impl Cluster {
         s
     }
 
-    /// Seconds of decode work that count against `slo`'s deadline —
-    /// zero when only first service is bound (TTFT), the priced tail
-    /// when the deadline covers decoding (TTLT).
-    fn decode_tail_s(&self, slo: Slo, decode_tokens: u32) -> f64 {
-        let (_, counts_decode) = slo.deadline_budget();
-        if counts_decode {
-            decode_tokens as f64 * self.sec_per_decode_token
-        } else {
-            0.0
-        }
+    /// Whether replica `i`'s pool serves `tier` (affinity mask 0 = all).
+    /// Delegates to the cached snapshot's mask — stamped at
+    /// construction, refresh and provision, and immutable for a live
+    /// slot — so this test and the dispatcher-side
+    /// [`LoadSnapshot::serves_tier`] can never drift apart.
+    fn replica_serves_tier(&self, i: usize, tier: usize) -> bool {
+        self.snaps[i].serves_tier(tier)
     }
 
     fn refresh_snapshots(&mut self) {
         for i in 0..self.engines.len() {
             if self.snap_dirty[i] {
-                self.snaps[i] = self.engines[i].load_snapshot();
+                let mut s = self.engines[i].load_snapshot();
+                // The engine is affinity-oblivious; re-stamp the pool's
+                // mask so dispatch policies keep seeing it.
+                s.tier_affinity_mask = self.pools[self.pool_of[i]].affinity_mask;
+                self.snaps[i] = s;
                 self.snap_dirty[i] = false;
             }
         }
@@ -403,20 +539,13 @@ impl Cluster {
         self.reheap(r);
     }
 
-    /// The one pricing rule every dispatch path shares: the arrival's
-    /// SLO, its prefill work at the reference rate, and its decode tail
-    /// when the deadline covers decoding.
-    fn priced(&self, spec: &RequestSpec) -> (Slo, f64, f64) {
-        let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
-        let est_prefill_s = spec.prompt_tokens as f64 * self.sec_per_prefill_token;
-        let est_decode_s = self.decode_tail_s(slo, spec.decode_tokens);
-        (slo, est_prefill_s, est_decode_s)
-    }
-
     /// Route one arrival using live snapshots of true cluster state.
     fn dispatch_arrival(&mut self, spec: RequestSpec) {
-        if !self.control_active {
-            // Static admit-all cluster: the exact pre-control-plane path.
+        // Static admit-all clusters take the zero-copy path — including
+        // affinity clusters whose dispatcher enforces affinity itself
+        // (tier-affinity round-robin, i.e. `run_silo`), which keeps the
+        // silo baseline as cheap as the seed's static shard split.
+        if !self.control_active && (!self.has_affinity || self.dispatcher.affinity_aware()) {
             self.dispatch_static(spec);
             return;
         }
@@ -424,23 +553,17 @@ impl Cluster {
         self.refresh_snapshots();
 
         let mut spec = spec;
-        if self.states.iter().all(|s| s.is_dispatchable()) {
-            // Every slot Active (no scaling event has happened yet):
-            // judge and route on the full snapshot slice with zero
-            // copies, exactly like the static path plus admission.
-            let decision = self.admission.decide(
-                &spec,
-                &self.tiers,
-                self.sec_per_prefill_token,
-                self.sec_per_decode_token,
-                &self.snaps,
-            );
+        if !self.has_affinity && self.states.iter().all(|s| s.is_dispatchable()) {
+            // Every slot Active and every pool serves every tier (no
+            // scaling event has happened yet): judge and route on the
+            // full snapshot slice with zero copies, exactly like the
+            // static path plus admission.
+            let decision = self.admission.decide(&spec, &self.tiers, &self.snaps);
             if !self.apply_admission(decision, &mut spec) {
                 return;
             }
-            let (slo, est_prefill_s, est_decode_s) = self.priced(&spec);
-            let r =
-                self.dispatcher.dispatch(&spec, slo, est_prefill_s, est_decode_s, &self.snaps);
+            let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
+            let r = self.dispatcher.dispatch(&spec, slo, &self.snaps);
             assert!(
                 r < self.engines.len(),
                 "dispatcher '{}' returned bad replica {r}",
@@ -450,59 +573,125 @@ impl Cluster {
             return;
         }
 
-        // Some slot is warming, draining or retired: only Active
-        // replicas may receive new work, so build a filtered view whose
-        // indices map back to real slots. (Retired slots keep their
-        // index forever, so once a replica has retired this copying path
-        // is the permanent one — if profiles ever show it matters, the
-        // fix is an incrementally-maintained compacted view invalidated
-        // on state transitions, not index reuse.)
-        let eligible: Vec<usize> = (0..self.states.len())
-            .filter(|&i| self.states[i].is_dispatchable())
+        if !self.has_affinity {
+            // Some slot is warming, draining or retired but every pool
+            // serves every tier, so eligibility is tier-independent —
+            // even a degrade verdict cannot change it. Admission and
+            // dispatch therefore share ONE cloned view, exactly like the
+            // pre-redesign path: Active snapshots first (the dispatch
+            // slice), warming capacity appended for admission only, its
+            // start floored at `ready_at` so a long-budget arrival the
+            // warming replica will comfortably serve is not "provably
+            // infeasible" merely because warm-up has not finished.
+            let eligible: Vec<usize> =
+                (0..self.states.len()).filter(|&i| self.states[i].is_dispatchable()).collect();
+            assert!(!eligible.is_empty(), "invariant: at least one Active replica always exists");
+            let mut view: Vec<LoadSnapshot> =
+                eligible.iter().map(|&i| self.snaps[i].clone()).collect();
+            let n_eligible = view.len();
+            if self.admission.policy != AdmissionPolicy::None {
+                for (i, st) in self.states.iter().enumerate() {
+                    if let ReplicaState::Warming { ready_at } = *st {
+                        let mut s = self.snaps[i].clone();
+                        s.now = s.now.max(ready_at);
+                        view.push(s);
+                    }
+                }
+                let decision = self.admission.decide(&spec, &self.tiers, &view);
+                if !self.apply_admission(decision, &mut spec) {
+                    return;
+                }
+            }
+            let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
+            let r_local = self.dispatcher.dispatch(&spec, slo, &view[..n_eligible]);
+            assert!(
+                r_local < n_eligible,
+                "dispatcher '{}' returned bad replica {r_local}",
+                self.dispatcher.name()
+            );
+            self.place(eligible[r_local], spec);
+            return;
+        }
+
+        // Affinity cluster: admission must run BEFORE eligibility is
+        // narrowed, judging over *every* Active replica (plus warming
+        // capacity, floored at `ready_at` as above). Tier affinity is
+        // applied inside the controller via the snapshot masks, so each
+        // candidate tier — including a degrade target — is priced
+        // against the pool that would actually take it, and the
+        // eligibility view below is built for the tier the request is
+        // finally admitted under.
+        if self.admission.policy != AdmissionPolicy::None {
+            let decision = if self.warming_count == 0
+                && self.states.iter().all(|s| s.is_dispatchable())
+            {
+                // Steady state (every slot Active, nothing warming): the
+                // filtered view would be exactly the cached snapshots —
+                // judge on them directly, no clones.
+                self.admission.decide(&spec, &self.tiers, &self.snaps)
+            } else {
+                let mut view: Vec<LoadSnapshot> = (0..self.states.len())
+                    .filter(|&i| self.states[i].is_dispatchable())
+                    .map(|i| self.snaps[i].clone())
+                    .collect();
+                for (i, st) in self.states.iter().enumerate() {
+                    if let ReplicaState::Warming { ready_at } = *st {
+                        let mut s = self.snaps[i].clone();
+                        s.now = s.now.max(ready_at);
+                        view.push(s);
+                    }
+                }
+                self.admission.decide(&spec, &self.tiers, &view)
+            };
+            if !self.apply_admission(decision, &mut spec) {
+                return;
+            }
+        }
+
+        // Only Active replicas whose affinity claims this (possibly
+        // degraded) tier may receive the arrival, so build a filtered
+        // view whose indices map back to real slots. (Retired slots keep
+        // their index forever, so once a replica has retired this
+        // copying path is the permanent one — if profiles ever show it
+        // matters, the fix is an incrementally-maintained compacted view
+        // invalidated on state transitions, not index reuse.)
+        let mut eligible: Vec<usize> = (0..self.states.len())
+            .filter(|&i| {
+                self.states[i].is_dispatchable() && self.replica_serves_tier(i, spec.tier)
+            })
             .collect();
+        // Affinity fallback: when no serving pool claims this tier (or
+        // every affine replica is warming/draining), any Active replica
+        // may take it — affinity shapes placement, it must never strand
+        // an arrival.
+        if eligible.is_empty() {
+            eligible =
+                (0..self.states.len()).filter(|&i| self.states[i].is_dispatchable()).collect();
+        }
         // The constructor starts every slot Active, `drain_replica`
         // refuses to demote the last Active replica, and no other
         // transition leaves the Active state — so an Active slot always
         // exists.
         assert!(!eligible.is_empty(), "invariant: at least one Active replica always exists");
-        // The dispatcher routes over the Active snapshots (the first
-        // `eligible.len()` entries). Admission additionally sees warming
-        // capacity — already ordered, seconds away — with its start
-        // floored at `ready_at`, so a long-budget arrival that the
-        // warming replica will comfortably serve is not "provably
-        // infeasible" merely because warm-up has not finished.
-        let mut view: Vec<LoadSnapshot> =
-            eligible.iter().map(|&i| self.snaps[i].clone()).collect();
-        let n_eligible = view.len();
-        if self.admission.policy != AdmissionPolicy::None {
-            for (i, st) in self.states.iter().enumerate() {
-                if let ReplicaState::Warming { ready_at } = *st {
-                    let mut s = self.snaps[i].clone();
-                    s.now = s.now.max(ready_at);
-                    view.push(s);
-                }
-            }
-            let decision = self.admission.decide(
-                &spec,
-                &self.tiers,
-                self.sec_per_prefill_token,
-                self.sec_per_decode_token,
-                &view,
+        let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
+        if eligible.len() == self.snaps.len() {
+            // Every slot is Active and serves this tier (e.g. the batch
+            // tiers of a half-restricted pool mix): the identity mapping
+            // needs no cloned view — dispatch over the cached snapshots
+            // directly.
+            let r = self.dispatcher.dispatch(&spec, slo, &self.snaps);
+            assert!(
+                r < self.engines.len(),
+                "dispatcher '{}' returned bad replica {r}",
+                self.dispatcher.name()
             );
-            if !self.apply_admission(decision, &mut spec) {
-                return;
-            }
+            self.place(r, spec);
+            return;
         }
-        let (slo, est_prefill_s, est_decode_s) = self.priced(&spec);
-        let r_local = self.dispatcher.dispatch(
-            &spec,
-            slo,
-            est_prefill_s,
-            est_decode_s,
-            &view[..n_eligible],
-        );
+        let view: Vec<LoadSnapshot> = eligible.iter().map(|&i| self.snaps[i].clone()).collect();
+        let r_local = self.dispatcher.dispatch(&spec, slo, &view);
         assert!(
-            r_local < n_eligible,
+            r_local < view.len(),
             "dispatcher '{}' returned bad replica {r_local}",
             self.dispatcher.name()
         );
@@ -513,14 +702,15 @@ impl Cluster {
     /// every arrival is admitted. Kept verbatim so default-configured
     /// clusters reproduce the PR-1 behavior bit-for-bit.
     fn dispatch_static(&mut self, spec: RequestSpec) {
-        // Load-oblivious policies (round-robin) never read the
-        // snapshots; skip the refresh so the default configuration stays
-        // as cheap as the seed's static shard split.
+        // Load-oblivious policies (round-robin, tier-affinity) never
+        // read the snapshots' load signals; skip the refresh so the
+        // default configuration stays as cheap as the seed's static
+        // shard split.
         if self.dispatcher.needs_snapshots() {
             self.refresh_snapshots();
         }
-        let (slo, est_prefill_s, est_decode_s) = self.priced(&spec);
-        let r = self.dispatcher.dispatch(&spec, slo, est_prefill_s, est_decode_s, &self.snaps);
+        let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
+        let r = self.dispatcher.dispatch(&spec, slo, &self.snaps);
         // Hard assert in every profile: a clamped reroute would make
         // debug and release runs of the same seed diverge and mask the
         // dispatcher bug.
@@ -534,21 +724,26 @@ impl Cluster {
 
     // ---- elastic control plane ------------------------------------------
 
-    /// Provision one new replica. It bills from now and accepts work
-    /// once the configured warm-up has elapsed. Appends one slot to
-    /// every per-replica structure (indices are stable forever).
-    pub fn provision_replica(&mut self) -> usize {
+    /// Provision one new replica in `pool`. It bills from now, is built
+    /// from the pool's immutable spec, and accepts work once the
+    /// configured warm-up has elapsed. Appends one slot to every
+    /// per-replica structure (indices are stable forever).
+    pub fn provision_replica(&mut self, pool: usize) -> usize {
+        assert!(pool < self.pools.len(), "no such pool {pool}");
         let i = self.engines.len();
         let now = self.clock;
         let warmup = self.control.warmup_s;
-        let engine = Engine::sim(&self.cfg);
-        self.snaps.push(engine.load_snapshot());
+        let engine = Engine::sim(&self.pools[pool].engine_cfg);
+        let mut snap = engine.load_snapshot();
+        snap.tier_affinity_mask = self.pools[pool].affinity_mask;
+        self.snaps.push(snap);
         self.engines.push(engine);
         self.snap_dirty.push(false);
         self.wedged.push(false);
         self.handoff_seen.push(0);
         self.provisioned_at.push(now);
         self.retired_at.push(None);
+        self.pool_of.push(pool);
         self.stats.dispatched.push(0);
         if warmup > 0.0 {
             self.states.push(ReplicaState::Warming { ready_at: now + warmup });
@@ -561,6 +756,28 @@ impl Cluster {
         self.control_active = true;
         self.timeline.push((now, self.billed_replicas()));
         i
+    }
+
+    /// Serving (active + warming) replicas currently in `pool`.
+    fn serving_in_pool(&self, pool: usize) -> usize {
+        self.states
+            .iter()
+            .zip(&self.pool_of)
+            .filter(|(s, &p)| p == pool && s.is_serving())
+            .count()
+    }
+
+    /// The cluster's current state in the shape controllers see it —
+    /// used when the cluster itself must re-apply a controller rule
+    /// (scale-up spill), so the two can never diverge.
+    fn control_view(&self) -> ControlView<'_> {
+        ControlView {
+            now: self.clock,
+            snaps: &self.snaps,
+            states: &self.states,
+            pool_of: &self.pool_of,
+            pool_bounds: &self.pool_bounds,
+        }
     }
 
     /// Promote warming replicas whose cold-start has elapsed.
@@ -604,9 +821,13 @@ impl Cluster {
     /// admitted requests that have not begun decoding (via the
     /// relegation-handoff machinery — `migrate_out` tombstone +
     /// immediate admission at the target, original arrival time kept so
-    /// deadlines never reset). Decoding requests stay and finish
-    /// locally; the replica retires only once empty, so no request can
-    /// be stranded or lost.
+    /// deadlines never reset). The receiving replica may have a
+    /// *different* spec (chunk size, hardware): targets are chosen among
+    /// replicas serving the request's tier, and their waits are already
+    /// priced at their own rates in `LeastLoaded::score`'s input, so the
+    /// move is re-priced at the target's cost model by construction.
+    /// Decoding requests stay and finish locally; the replica retires
+    /// only once empty, so no request can be stranded or lost.
     fn try_drain_moves(&mut self, origin: usize) {
         if !self.states.iter().enumerate().any(|(j, s)| j != origin && s.is_dispatchable()) {
             return; // nowhere to move work; it finishes locally
@@ -618,7 +839,7 @@ impl Cluster {
             self.snap_dirty[origin] = true;
             for spec in pending {
                 self.refresh_snapshots();
-                let t = self.best_drain_target(origin);
+                let t = self.best_drain_target(origin, spec.tier);
                 self.engines[t].enqueue(spec);
                 self.stats.dispatched[origin] -= 1;
                 self.stats.dispatched[t] += 1;
@@ -631,8 +852,11 @@ impl Cluster {
         // Admitted, not-yet-decoding requests: relegation-handoff path.
         for id in self.engines[origin].drain_candidates() {
             self.refresh_snapshots();
-            let t = self.best_drain_target(origin);
-            let was_relegated = self.engines[origin].store.get(id).was_relegated;
+            let (tier, was_relegated) = {
+                let r = self.engines[origin].store.get(id);
+                (r.spec.tier, r.was_relegated)
+            };
+            let t = self.best_drain_target(origin, tier);
             let spec = self.engines[origin].migrate_out(id);
             self.engines[t].advance_to(self.clock);
             self.engines[t].admit_migrated(spec, was_relegated);
@@ -646,28 +870,53 @@ impl Cluster {
     }
 
     /// Least-loaded Active replica (by `LeastLoaded::score`, ties toward
-    /// the lowest index), optionally excluding one slot. Drain-move
-    /// targeting and scale-down victim selection share this one scan so
-    /// their notion of "cheapest active slot" can never diverge.
-    fn least_loaded_active(&self, exclude: Option<usize>) -> Option<usize> {
+    /// the lowest index), with optional filters: exclude one slot,
+    /// require the replica's pool to serve a tier, restrict to one pool.
+    /// Drain-move targeting and scale-down victim selection share this
+    /// one scan so their notion of "cheapest active slot" can never
+    /// diverge. Scores come from the per-replica snapshots, whose queued
+    /// seconds are already priced at each replica's own rate.
+    fn least_loaded_active(
+        &self,
+        exclude: Option<usize>,
+        tier: Option<usize>,
+        pool: Option<usize>,
+    ) -> Option<usize> {
         let mut best: Option<(f64, usize)> = None;
         for (i, s) in self.snaps.iter().enumerate() {
             if Some(i) == exclude || !self.states[i].is_dispatchable() {
                 continue;
             }
+            if let Some(t) = tier {
+                if !self.replica_serves_tier(i, t) {
+                    continue;
+                }
+            }
+            if let Some(p) = pool {
+                if self.pool_of[i] != p {
+                    continue;
+                }
+            }
             let score = LeastLoaded::score(s);
-            if best.map_or(true, |(b, _)| score < b) {
+            let better = match best {
+                None => true,
+                Some((b, _)) => score < b,
+            };
+            if better {
                 best = Some((score, i));
             }
         }
         best.map(|(_, i)| i)
     }
 
-    /// Least-loaded active replica other than `origin` (drain moves are
-    /// unconditional: the set is shrinking because the cluster is
-    /// underloaded, so the cheapest active slot is the right home).
-    fn best_drain_target(&self, origin: usize) -> usize {
-        self.least_loaded_active(Some(origin))
+    /// Least-loaded active replica other than `origin` that serves
+    /// `tier`, falling back to any active replica when no affine one
+    /// exists (drain moves are unconditional: the set is shrinking
+    /// because the cluster is underloaded, so the cheapest eligible slot
+    /// is the right home).
+    fn best_drain_target(&self, origin: usize, tier: usize) -> usize {
+        self.least_loaded_active(Some(origin), Some(tier), None)
+            .or_else(|| self.least_loaded_active(Some(origin), None, None))
             .expect("caller guarantees an active target exists")
     }
 
@@ -688,6 +937,8 @@ impl Cluster {
 
     /// One controller evaluation on the shared clock: promote warming
     /// replicas, push drain progress, then apply the scaling decision.
+    /// The controller names the pool it grows or shrinks; the cluster
+    /// clamps to that pool's own bounds.
     fn control_tick(&mut self) {
         self.stats.control_ticks += 1;
         self.promote_warming();
@@ -698,43 +949,66 @@ impl Cluster {
                 self.maybe_retire(i);
             }
         }
-        // Enforce the configured floor regardless of policy signals: a
-        // cluster started (or left) below `min_replicas` re-orders
-        // capacity up to it — the floor is a guarantee, not a hint.
-        let serving = self.states.iter().filter(|s| s.is_serving()).count();
-        for _ in serving..self.control.min_replicas.min(self.control.max_replicas) {
-            self.provision_replica();
-            self.stats.scale_ups += 1;
+        // Enforce every pool's configured floor regardless of policy
+        // signals: a pool started (or left) below `min_replicas`
+        // re-orders capacity up to it — the floor is a guarantee, not a
+        // hint.
+        for p in 0..self.pools.len() {
+            let serving = self.serving_in_pool(p);
+            let floor = self.pools[p].min.min(self.pools[p].max);
+            for _ in serving..floor {
+                self.provision_replica(p);
+                self.stats.scale_ups += 1;
+            }
         }
         let Some(mut controller) = self.controller.take() else {
             return;
         };
         self.refresh_snapshots();
-        let decision = {
-            let view = ControlView { now: self.clock, snaps: &self.snaps, states: &self.states };
-            controller.decide(&view)
-        };
+        let decision = controller.decide(&self.control_view());
         self.controller = Some(controller);
         match decision {
             ScalingDecision::Hold => {}
-            ScalingDecision::ScaleUp(n) => {
-                let serving = self.states.iter().filter(|s| s.is_serving()).count();
-                let room = self.control.max_replicas.saturating_sub(serving);
-                for _ in 0..n.min(room) {
-                    self.provision_replica();
-                    self.stats.scale_ups += 1;
+            ScalingDecision::ScaleUp { pool, n } => {
+                // Fail as loudly as a direct provision_replica call
+                // would: silently clamping would grow the wrong
+                // hardware and mask the controller bug.
+                assert!(pool < self.pools.len(), "controller named unknown pool {pool}");
+                // `n` is sized to clear the cluster-wide deficit; if the
+                // named pool hits its ceiling first, spill the remainder
+                // into the hottest other pools with room — dropping it
+                // would under-provision the surge while the controller's
+                // cooldown blocks a retry for a full window. One-pool
+                // clusters never spill, preserving the old behavior.
+                let mut remaining = n;
+                let mut p = Some(pool);
+                while remaining > 0 {
+                    let Some(q) = p else { break };
+                    if self.serving_in_pool(q) < self.pools[q].max {
+                        self.provision_replica(q);
+                        self.stats.scale_ups += 1;
+                        remaining -= 1;
+                    } else {
+                        // Same rule the controller itself uses, so the
+                        // spill lands where its next decision would.
+                        p = self.control_view().scale_up_pool();
+                    }
                 }
             }
-            ScalingDecision::ScaleDown(n) => {
+            ScalingDecision::ScaleDown { pool, n } => {
+                assert!(pool < self.pools.len(), "controller named unknown pool {pool}");
                 for _ in 0..n {
-                    let serving = self.states.iter().filter(|s| s.is_serving()).count();
+                    let serving = self.serving_in_pool(pool);
                     let active = self.states.iter().filter(|s| s.is_dispatchable()).count();
-                    if serving <= self.control.min_replicas || active < 2 {
+                    if serving <= self.pools[pool].min || active < 2 {
                         break;
                     }
                     self.refresh_snapshots();
-                    // Cheapest active replica drains (least work to move).
-                    let Some(i) = self.least_loaded_active(None) else { break };
+                    // Cheapest active replica of the chosen pool drains
+                    // (least work to move).
+                    let Some(i) = self.least_loaded_active(None, None, Some(pool)) else {
+                        break;
+                    };
                     self.drain_replica(i);
                 }
             }
@@ -743,10 +1017,13 @@ impl Cluster {
 
     /// Llumnix-style relegation handoff: after replica `origin` steps, try
     /// to re-dispatch its relegated (not-yet-decoding) requests to a
-    /// replica that (a) is predicted to still meet their deadline and
-    /// (b) has strictly less queued prefill work. The target re-prefills
-    /// from scratch (no KV transfer is modeled), and the original arrival
-    /// time travels with the request so deadlines never reset.
+    /// replica that (a) serves the request's tier, (b) is predicted to
+    /// still meet its deadline *at the target's own rates* — migrated
+    /// work is re-priced at the receiving spec, which matters when pools
+    /// have different chunk/hardware configs — and (c) has strictly less
+    /// queued prefill work. The target re-prefills from scratch (no KV
+    /// transfer is modeled), and the original arrival time travels with
+    /// the request so deadlines never reset.
     fn try_handoff(&mut self, origin: usize) {
         if self.engines.len() < 2 {
             return;
@@ -761,22 +1038,15 @@ impl Cluster {
             // Deadline the target must beat, priced by the same
             // `Slo::deadline_budget` rule the dispatcher uses.
             let deadline = spec.arrival_s + slo.deadline_budget().0;
-            let est_decode_s = self.decode_tail_s(slo, spec.decode_tokens);
-            // The target re-prefills the whole prompt (no KV transfer),
-            // so the migration's full cost is its queue plus the entire
-            // prompt — while staying only costs the origin queue (which
-            // already prices just the *remaining* tokens). Comparing
-            // those totals keeps a mostly-prefilled request from being
-            // moved somewhere it would finish later.
-            let est_prefill_s = spec.prompt_tokens as f64 * self.sec_per_prefill_token;
             // Staying cost for a relegated candidate: it is served with
             // leftover budget only, behind both the serviceable queue
-            // and the rest of the relegated work.
+            // and the rest of the relegated work — priced at the
+            // origin's own rate.
             let origin_wait = self.snaps[origin].queued_prefill_s
                 + self.snaps[origin].relegated_prefill_tokens as f64
-                    * self.sec_per_prefill_token;
+                    * self.snaps[origin].sec_per_prefill_token;
             let mut target: Option<usize> = None;
-            let mut best_wait = f64::INFINITY;
+            let mut best_total = f64::INFINITY;
             for (i, s) in self.snaps.iter().enumerate() {
                 if i == origin || !self.states[i].is_dispatchable() {
                     // Warming, draining and retired replicas take no new
@@ -784,6 +1054,21 @@ impl Cluster {
                     // yet or re-strand the request on a leaving replica.
                     continue;
                 }
+                if !s.serves_tier(spec.tier) {
+                    continue;
+                }
+                // The target re-prefills the whole prompt (no KV
+                // transfer) at its *own* spec's rates, so the migration's
+                // full cost is its queue plus the entire prompt as the
+                // target would serve it — while staying only costs the
+                // origin queue (which already prices just the *remaining*
+                // tokens at the origin's rate). Comparing those totals
+                // keeps a mostly-prefilled request from being moved
+                // somewhere it would finish later — including a target
+                // whose bigger chunks or slower hardware would blow the
+                // deadline the origin could still scrape.
+                let est_prefill_s = s.price_prefill_s(spec.prompt_tokens);
+                let est_decode_s = s.price_decode_tail_s(slo, spec.decode_tokens);
                 let wait = s.queued_prefill_s;
                 // The same `LoadSnapshot::feasible_for` rule dispatch
                 // uses, started at the handoff instant (a target whose
@@ -803,8 +1088,16 @@ impl Cluster {
                 if wait + est_prefill_s >= origin_wait {
                     continue; // moving costs more than staying
                 }
-                if wait < best_wait {
-                    best_wait = wait;
+                // Rank candidates by *total* predicted completion work —
+                // queue plus the prompt at the candidate's own rate. With
+                // one homogeneous pool the prefill term is a constant
+                // shift, so this ordering (and its ties) is exactly the
+                // old wait-only ordering; across pools it stops a
+                // slow-but-idle replica from beating a fast one that
+                // would finish the migrated request sooner.
+                let total = wait + est_prefill_s;
+                if total < best_total {
+                    best_total = total;
                     target = Some(i);
                 }
             }
@@ -861,7 +1154,12 @@ impl Cluster {
                 (None, None) => unreachable!(),
                 // Arrivals win ties so the dispatcher always sees a burst
                 // before any replica races past it.
-                (Some(a), ev) if ev.map_or(true, |(t, _)| a <= t) => {
+                (Some(a), ev)
+                    if match ev {
+                        None => true,
+                        Some((t, _)) => a <= t,
+                    } =>
+                {
                     if a >= horizon_s {
                         break;
                     }
@@ -941,19 +1239,63 @@ pub struct SiloGroup {
     pub chunk_size: u32,
 }
 
+impl SiloGroup {
+    /// A tier's silo with the paper's chunk choice for its SLO class —
+    /// the one place pool sizing and chunk selection are decided, shared
+    /// by `run_silo`, the capacity experiments and the examples.
+    pub fn for_tier(cfg: &Config, tier: usize, replicas: usize) -> SiloGroup {
+        SiloGroup { tier, replicas, chunk_size: silo_chunk_for_tier(cfg, tier) }
+    }
+}
+
 /// Default silo chunk size per tier SLO (paper §4: 256 strict, 2K batch).
+/// Clamps out-of-range tiers to the loosest one like
+/// [`crate::qos::slo_for_tier`], so the chunk choice can never drift
+/// from the SLO the request is actually admitted under.
 pub fn silo_chunk_for_tier(cfg: &Config, tier: usize) -> u32 {
-    match cfg.tiers[tier].slo {
+    match crate::qos::slo_for_tier(&cfg.tiers, tier) {
         crate::qos::Slo::Interactive { .. } => 256,
         crate::qos::Slo::NonInteractive { .. } => 2048,
     }
 }
 
-/// Run a siloed deployment: the trace is partitioned by tier, each group
-/// served by its own Sarathi-FCFS cluster (round-robin within the group —
-/// silos are the load-oblivious baseline). All groups are summarized at
-/// the same merged horizon rule as `run_shared`: the latest replica clock
-/// across every silo.
+/// The [`ClusterSpec`] a siloed deployment is: one pool per group, each
+/// a static set of Sarathi-FCFS replicas at the group's chunk size whose
+/// tier affinity claims exactly that group's tier.
+pub fn silo_cluster_spec(cfg: &Config, groups: &[SiloGroup]) -> ClusterSpec {
+    ClusterSpec {
+        pools: groups
+            .iter()
+            .inspect(|g| {
+                // The old per-tier loop panicked on an empty group; an
+                // empty pool here would instead silently reroute the
+                // tier onto other silos via the affinity fallback and
+                // corrupt the baseline. Keep the loud failure.
+                assert!(g.replicas > 0, "silo group for tier {} needs replicas", g.tier);
+            })
+            .map(|g| crate::config::PoolSpec {
+                name: format!("silo-t{}", g.tier),
+                spec: ReplicaSpec {
+                    hardware: cfg.hardware.clone(),
+                    scheduler: SchedulerConfig::sarathi(Policy::SarathiFcfs, g.chunk_size),
+                    tier_affinity: vec![g.tier],
+                },
+                replicas: g.replicas,
+                min_replicas: g.replicas,
+                max_replicas: g.replicas,
+            })
+            .collect(),
+    }
+}
+
+/// Run a siloed deployment: per-tier pools of Sarathi-FCFS replicas
+/// behind tier-affinity dispatch — literally [`silo_cluster_spec`] on
+/// the shared cluster event loop, with round-robin rotation inside each
+/// tier's pool (silos are the load-oblivious baseline). No bespoke
+/// per-tier simulation remains: a silo *is* a dispatch policy over
+/// affinity-tagged pools. The summary is evaluated at the same merged
+/// horizon rule as `run_shared`: the latest replica clock across every
+/// pool.
 pub fn run_silo(
     cfg: &Config,
     groups: &[SiloGroup],
@@ -961,26 +1303,28 @@ pub fn run_silo(
     horizon_s: f64,
     long_threshold: u32,
 ) -> Summary {
-    let mut clusters: Vec<Cluster> = Vec::with_capacity(groups.len());
+    let mut silo_cfg = cfg.clone();
+    silo_cfg.cluster.dispatch = DispatchConfig {
+        policy: DispatchPolicy::TierAffinity,
+        relegation_handoff: false,
+        seed: 0,
+    };
+    // Silos are the static, admit-everything baseline regardless of
+    // what control plane the shared cluster under test runs.
+    silo_cfg.cluster.control = ControlConfig::default();
+    silo_cfg.cluster.pools.clear();
+    // The old per-tier loop simply never served arrivals whose tier had
+    // no silo group; keep that contract by pre-filtering.
+    let mut covered = 0u32;
     for g in groups {
-        let mut tier_cfg = cfg.clone();
-        tier_cfg.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, g.chunk_size);
-        tier_cfg.scheduler.policy = Policy::SarathiFcfs;
-        tier_cfg.cluster.dispatch = crate::config::DispatchConfig::default();
-        // Silos are the static, admit-everything baseline regardless of
-        // what control plane the shared cluster under test runs.
-        tier_cfg.cluster.control = ControlConfig::default();
-        let tier_trace: Vec<RequestSpec> =
-            trace.iter().filter(|r| r.tier == g.tier).cloned().collect();
-        let mut cluster = Cluster::new(&tier_cfg, g.replicas);
-        cluster.submit_trace(tier_trace);
-        cluster.run(horizon_s);
-        clusters.push(cluster);
+        covered |= 1 << g.tier.min(31);
     }
-    let t_end = clusters.iter().map(|c| c.eval_time()).fold(0.0, f64::max);
-    let stores: Vec<&RequestStore> =
-        clusters.iter().flat_map(|c| c.stores()).collect();
-    summarize_many(&stores, t_end, long_threshold, cfg.tiers.len())
+    let tier_trace: Vec<RequestSpec> =
+        trace.iter().filter(|r| (covered >> r.tier.min(31)) & 1 == 1).cloned().collect();
+    let mut cluster = Cluster::from_spec(&silo_cfg, &silo_cluster_spec(cfg, groups));
+    cluster.submit_trace(tier_trace);
+    cluster.run(horizon_s);
+    cluster.summary(long_threshold)
 }
 
 /// Maximum sustainable QPS on a single replica: the largest rate at which
@@ -1035,7 +1379,7 @@ pub fn violation_pct_at(cfg: &Config, dataset: &Dataset, qps: f64, duration_s: f
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::DispatchPolicy;
+    use crate::config::{DispatchPolicy, PoolSpec};
     use crate::qos::Importance;
     use crate::util::Rng;
     use crate::workload::WorkloadSpec;
@@ -1149,10 +1493,101 @@ mod tests {
     }
 
     #[test]
+    fn silo_drops_uncovered_tiers_like_the_old_loop() {
+        // The pre-redesign run_silo partitioned the trace by group tier,
+        // so a tier with no group was silently dropped; the dispatch-
+        // policy rebuild must keep that contract.
+        let cfg = Config::default();
+        let t = trace(2.0, 60.0, 4);
+        let covered = t.iter().filter(|r| r.tier != 2).count();
+        assert!(covered < t.len(), "test premise: tier 2 traffic exists");
+        let groups = vec![
+            SiloGroup { tier: 0, replicas: 1, chunk_size: 256 },
+            SiloGroup { tier: 1, replicas: 1, chunk_size: 2048 },
+        ];
+        let s = run_silo(&cfg, &groups, &t, 4000.0, 6251);
+        assert_eq!(s.total, covered);
+    }
+
+    #[test]
     fn silo_chunk_selection() {
         let cfg = Config::default();
         assert_eq!(silo_chunk_for_tier(&cfg, 0), 256);
         assert_eq!(silo_chunk_for_tier(&cfg, 1), 2048);
+        // Out-of-range tiers clamp to the loosest tier's class instead
+        // of panicking — the same rule `slo_for_tier` applies.
+        assert_eq!(silo_chunk_for_tier(&cfg, 99), 2048);
+        let g = SiloGroup::for_tier(&cfg, 0, 3);
+        assert_eq!((g.tier, g.replicas, g.chunk_size), (0, 3, 256));
+    }
+
+    #[test]
+    fn from_spec_builds_heterogeneous_pools() {
+        let mut cfg = Config::default();
+        cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+        let mut strict = ReplicaSpec::from_config(&cfg);
+        strict.scheduler.chunk_size = 256;
+        let mut batch = ReplicaSpec::from_config(&cfg);
+        batch.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, 2048);
+        batch.tier_affinity = vec![1, 2];
+        let spec = ClusterSpec {
+            pools: vec![
+                PoolSpec::fixed("strict", strict, 2),
+                PoolSpec::fixed("batch", batch, 2),
+            ],
+        };
+        let mut cluster = Cluster::from_spec(&cfg, &spec);
+        assert_eq!(cluster.replicas(), 4);
+        assert_eq!(cluster.pool_of(), &[0, 0, 1, 1]);
+        assert_eq!(cluster.pool_count(), 2);
+        assert_eq!(cluster.pool_name(1), "batch");
+        // Different chunk configs price prefill differently — the
+        // per-replica cost model dispatch routes on.
+        let r_strict = cluster.engines()[0].sec_per_prefill_token();
+        let r_batch = cluster.engines()[2].sec_per_prefill_token();
+        assert!(
+            r_batch < r_strict,
+            "2048-chunk pool must prefill cheaper per token: {r_batch} vs {r_strict}"
+        );
+
+        let t = trace(3.0, 60.0, 6);
+        let n = t.len();
+        cluster.submit_trace(t);
+        cluster.run(4000.0);
+        let s = cluster.summary(6251);
+        assert_eq!(s.total, n);
+        assert_eq!(s.finished, n);
+        // Affinity respected: the batch pool never holds tier-0 work.
+        for &i in &[2usize, 3] {
+            assert!(
+                cluster.engines()[i].store.iter().all(|r| r.spec.tier != 0),
+                "tier-0 request leaked into the affinity-restricted batch pool"
+            );
+        }
+        // The open strict pool still serves every tier.
+        let dispatched: usize = cluster.stats.dispatched.iter().sum();
+        assert_eq!(dispatched, n);
+    }
+
+    #[test]
+    fn one_pool_spec_matches_new_exactly() {
+        // The shim contract: Cluster::new and the explicit homogeneous
+        // ClusterSpec are the same constructor.
+        let mut cfg = Config::default();
+        cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+        let t = trace(3.0, 90.0, 11);
+        let run = |mut c: Cluster| {
+            c.submit_trace(t.clone());
+            c.run(4000.0);
+            (c.summary(6251), c.eval_time())
+        };
+        let (a, ta) = run(Cluster::new(&cfg, 2));
+        let (b, tb) = run(Cluster::from_spec(&cfg, &ClusterSpec::homogeneous(&cfg, 2)));
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.finished, b.finished);
+        assert_eq!(a.violations, b.violations);
+        assert_eq!(a.ttft_p99.to_bits(), b.ttft_p99.to_bits());
+        assert_eq!(ta.to_bits(), tb.to_bits());
     }
 
     #[test]
@@ -1232,12 +1667,13 @@ mod tests {
             .collect();
         cluster.submit_trace(t.clone());
         cluster.run(10.0);
-        let i = cluster.provision_replica();
+        let i = cluster.provision_replica(0);
         let ready_at = match cluster.replica_states()[i] {
             ReplicaState::Warming { ready_at } => ready_at,
             other => panic!("freshly provisioned replica must warm up, got {other:?}"),
         };
         assert!(ready_at >= 50.0, "warm-up must span the configured cold start");
+        assert_eq!(cluster.pool_of()[i], 0, "shim clusters have a single pool");
         cluster.run(1e6);
         // Promoted once the clock passed its ready time, and only then
         // could it receive work.

@@ -64,28 +64,118 @@ impl ReplicaState {
     }
 }
 
-/// One controller verdict.
+/// One controller verdict. Heterogeneous clusters are sets of replica
+/// *pools* (per-pool spec + bounds), so scaling decisions name the pool
+/// they act on — the controller, not the cluster, decides *which kind*
+/// of capacity to order or retire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScalingDecision {
     Hold,
-    /// Provision this many new replicas (cluster clamps to `max`).
-    ScaleUp(usize),
-    /// Drain this many active replicas (cluster clamps to `min`).
-    ScaleDown(usize),
+    /// Provision `n` new replicas in `pool` (cluster clamps to the
+    /// pool's `max_replicas`).
+    ScaleUp { pool: usize, n: usize },
+    /// Drain `n` active replicas from `pool` (cluster clamps to the
+    /// pool's `min_replicas` and keeps at least one active replica
+    /// cluster-wide).
+    ScaleDown { pool: usize, n: usize },
 }
 
 /// What a controller sees at each tick: live snapshots and lifecycle
-/// states, index-aligned.
+/// states (index-aligned), plus each slot's pool and the per-pool
+/// autoscale bounds.
 pub struct ControlView<'a> {
     pub now: f64,
     pub snaps: &'a [LoadSnapshot],
     pub states: &'a [ReplicaState],
+    /// Pool index of each replica slot, aligned with `snaps`/`states`.
+    pub pool_of: &'a [usize],
+    /// `(min_replicas, max_replicas)` per pool.
+    pub pool_bounds: &'a [(usize, usize)],
 }
 
 impl ControlView<'_> {
     /// Active + warming replicas (capacity paid for).
     pub fn serving(&self) -> usize {
         self.states.iter().filter(|s| s.is_serving()).count()
+    }
+
+    /// Serving replicas in one pool.
+    pub fn serving_in(&self, pool: usize) -> usize {
+        self.states
+            .iter()
+            .zip(self.pool_of)
+            .filter(|(s, &p)| p == pool && s.is_serving())
+            .count()
+    }
+
+    /// Queued prefill seconds across one pool's active replicas.
+    pub fn queued_s_in(&self, pool: usize) -> f64 {
+        (0..self.states.len())
+            .filter(|&i| self.pool_of[i] == pool && self.states[i].is_dispatchable())
+            .map(|i| self.snaps[i].queued_prefill_s)
+            .sum()
+    }
+
+    /// Sum of pool floors — the least total capacity the bounds allow.
+    pub fn min_total(&self) -> usize {
+        self.pool_bounds.iter().map(|&(lo, _)| lo).sum()
+    }
+
+    /// Sum of pool ceilings — the most total capacity the bounds allow.
+    pub fn max_total(&self) -> usize {
+        self.pool_bounds.iter().map(|&(_, hi)| hi).sum()
+    }
+
+    /// The pool new capacity should land in: the one with the highest
+    /// queued prefill seconds per serving replica among pools with room
+    /// to grow (ties toward the lowest index). `None` when every pool is
+    /// at its ceiling.
+    ///
+    /// Known limitation: selection is load-based, not demand-based — if
+    /// the drowning pool is already at its ceiling, the hottest pool
+    /// *with room* may be an affinity-restricted pool that cannot serve
+    /// the overloaded tier at all (capacity grown there gives the hot
+    /// tier no relief). Fixing this needs per-tier demand attribution
+    /// in the snapshots; see the ROADMAP "tier-aware pool selection"
+    /// item.
+    pub fn scale_up_pool(&self) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (p, &(_, hi)) in self.pool_bounds.iter().enumerate() {
+            let serving = self.serving_in(p);
+            if serving >= hi {
+                continue;
+            }
+            let load = self.queued_s_in(p) / serving.max(1) as f64;
+            if match best {
+                None => true,
+                Some((b, _)) => load > b,
+            } {
+                best = Some((load, p));
+            }
+        }
+        best.map(|(_, p)| p)
+    }
+
+    /// The pool capacity should leave from: the one with the lowest
+    /// queued prefill seconds per serving replica among pools above
+    /// their floor (ties toward the lowest index). `None` when every
+    /// pool sits at its floor.
+    pub fn scale_down_pool(&self) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (p, &(lo, _)) in self.pool_bounds.iter().enumerate() {
+            let serving = self.serving_in(p);
+            if serving <= lo {
+                continue;
+            }
+            let load = self.queued_s_in(p) / serving.max(1) as f64;
+            if match best {
+                None => true,
+                Some((b, _)) => load < b,
+            } {
+                best = Some((load, p));
+            }
+        }
+        best.map(|(_, p)| p)
     }
 
     pub fn active(&self) -> usize {
@@ -202,29 +292,39 @@ impl ScalingController for ReactiveHysteresis {
         if load > self.cfg.scale_up_queue_s || kv > KV_SCALE_UP_UTIL {
             self.below_since = None;
             let since = *self.above_since.get_or_insert(now);
-            if now - since >= self.cfg.hold_s
-                && now - self.last_action_t >= self.up_cooldown_s()
-                && serving < self.cfg.max_replicas
+            if now - since >= self.cfg.hold_s && now - self.last_action_t >= self.up_cooldown_s()
             {
-                self.above_since = None;
-                self.last_action_t = now;
-                // Enough replicas to bring the per-replica queue back
-                // under the watermark, in one step.
-                let want = ((q / self.cfg.scale_up_queue_s).ceil() as usize)
-                    .clamp(serving + 1, self.cfg.max_replicas);
-                return ScalingDecision::ScaleUp(want - serving);
+                // The hottest pool with room takes the new capacity;
+                // None means every pool is at its ceiling — keep the
+                // hold timer armed, exactly like the old at-max case.
+                if let Some(pool) = view.scale_up_pool() {
+                    self.above_since = None;
+                    self.last_action_t = now;
+                    // Enough replicas to bring the per-replica queue back
+                    // under the watermark, in one step. min-then-max (not
+                    // `clamp`) so a cluster serving above its total
+                    // ceiling — legal for static over-provisioned pools —
+                    // degrades to a single-step grow instead of panicking.
+                    let want = ((q / self.cfg.scale_up_queue_s).ceil() as usize)
+                        .min(view.max_total())
+                        .max(serving + 1);
+                    return ScalingDecision::ScaleUp { pool, n: want - serving };
+                }
             }
         } else if load < self.cfg.scale_down_queue_s
             && kv < KV_SCALE_DOWN_UTIL
-            && serving > self.cfg.min_replicas
+            && serving > view.min_total()
         {
             self.above_since = None;
             let since = *self.below_since.get_or_insert(now);
             if now - since >= self.cfg.hold_s && now - self.last_action_t >= self.down_cooldown_s()
             {
-                self.below_since = None;
-                self.last_action_t = now;
-                return ScalingDecision::ScaleDown(1);
+                // The coldest pool above its floor gives capacity back.
+                if let Some(pool) = view.scale_down_pool() {
+                    self.below_since = None;
+                    self.last_action_t = now;
+                    return ScalingDecision::ScaleDown { pool, n: 1 };
+                }
             }
         } else {
             self.above_since = None;
@@ -305,21 +405,30 @@ impl ScalingController for TierSlackPredictive {
         let distress =
             slack.is_finite() && slack < 0.25 * self.strict_budget_s && view.warming() == 0;
 
-        if (per > up_thresh || distress) && serving < self.cfg.max_replicas {
-            self.below_since = None;
-            let want = ((projected / up_thresh).ceil() as usize)
-                .clamp(serving + 1, self.cfg.max_replicas);
-            return ScalingDecision::ScaleUp(want - serving);
+        if per > up_thresh || distress {
+            // Capacity lands in the hottest pool with room; when every
+            // pool is at its ceiling, fall through to the down check
+            // exactly like the old at-max case did.
+            if let Some(pool) = view.scale_up_pool() {
+                self.below_since = None;
+                // min-then-max, not `clamp`: see ReactiveHysteresis.
+                let want = ((projected / up_thresh).ceil() as usize)
+                    .min(view.max_total())
+                    .max(serving + 1);
+                return ScalingDecision::ScaleUp { pool, n: want - serving };
+            }
         }
 
-        if serving > self.cfg.min_replicas
+        if serving > view.min_total()
             && projected / (serving - 1) as f64 < self.cfg.scale_down_queue_s
         {
             let since = *self.below_since.get_or_insert(now);
             if now - since >= self.cfg.hold_s && now - self.last_down_t >= 2.0 * self.cfg.hold_s {
-                self.below_since = None;
-                self.last_down_t = now;
-                return ScalingDecision::ScaleDown(1);
+                if let Some(pool) = view.scale_down_pool() {
+                    self.below_since = None;
+                    self.last_down_t = now;
+                    return ScalingDecision::ScaleDown { pool, n: 1 };
+                }
             }
         } else {
             self.below_since = None;
@@ -347,6 +456,10 @@ mod tests {
             kv_committed: 0,
             kv_capacity: 400_000,
             tier_slack_s: vec![f64::INFINITY; 3],
+            sec_per_prefill_token: 3e-4,
+            sec_per_decode_token: 0.03,
+            chunk_size: 256,
+            tier_affinity_mask: 0,
         }
     }
 
@@ -364,12 +477,22 @@ mod tests {
         }
     }
 
+    /// Every test cluster below is the one-pool shim with bounds (1, 4),
+    /// matching `cfg()` — the slice of zeros maps each slot to pool 0.
+    static POOL0: [usize; 8] = [0; 8];
+
     fn view<'a>(
         now: f64,
         snaps: &'a [LoadSnapshot],
         states: &'a [ReplicaState],
     ) -> ControlView<'a> {
-        ControlView { now, snaps, states }
+        ControlView {
+            now,
+            snaps,
+            states,
+            pool_of: &POOL0[..states.len()],
+            pool_bounds: &[(1, 4)],
+        }
     }
 
     #[test]
@@ -382,7 +505,7 @@ mod tests {
         assert_eq!(c.decide(&view(5.0, &snaps, &states)), ScalingDecision::Hold);
         // Past hold_s: acts, sized to clear the backlog (22 s / 4 s ≈ 6,
         // clamped to max 4 ⇒ +2).
-        assert_eq!(c.decide(&view(10.0, &snaps, &states)), ScalingDecision::ScaleUp(2));
+        assert_eq!(c.decide(&view(10.0, &snaps, &states)), ScalingDecision::ScaleUp { pool: 0, n: 2 });
     }
 
     #[test]
@@ -396,7 +519,7 @@ mod tests {
         // Signal re-appears: the hold clock must restart.
         assert_eq!(c.decide(&view(10.0, &hot, &states)), ScalingDecision::Hold);
         assert_eq!(c.decide(&view(15.0, &hot, &states)), ScalingDecision::Hold);
-        assert!(matches!(c.decide(&view(20.0, &hot, &states)), ScalingDecision::ScaleUp(_)));
+        assert!(matches!(c.decide(&view(20.0, &hot, &states)), ScalingDecision::ScaleUp { .. }));
     }
 
     #[test]
@@ -406,7 +529,7 @@ mod tests {
         let snaps = vec![snap(0.1, 390_000)];
         let states = vec![ReplicaState::Active];
         assert_eq!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::Hold);
-        assert!(matches!(c.decide(&view(10.0, &snaps, &states)), ScalingDecision::ScaleUp(_)));
+        assert!(matches!(c.decide(&view(10.0, &snaps, &states)), ScalingDecision::ScaleUp { .. }));
     }
 
     #[test]
@@ -416,7 +539,7 @@ mod tests {
         let states = vec![ReplicaState::Active; 2];
         assert_eq!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::Hold);
         assert_eq!(c.decide(&view(5.0, &snaps, &states)), ScalingDecision::Hold);
-        assert_eq!(c.decide(&view(12.0, &snaps, &states)), ScalingDecision::ScaleDown(1));
+        assert_eq!(c.decide(&view(12.0, &snaps, &states)), ScalingDecision::ScaleDown { pool: 0, n: 1 });
     }
 
     #[test]
@@ -449,7 +572,7 @@ mod tests {
         let t0 = vec![snap(0.0, 0)];
         assert_eq!(c.decide(&view(0.0, &t0, &states)), ScalingDecision::Hold);
         let t1 = vec![snap(1.5, 0)];
-        assert!(matches!(c.decide(&view(5.0, &t1, &states)), ScalingDecision::ScaleUp(_)));
+        assert!(matches!(c.decide(&view(5.0, &t1, &states)), ScalingDecision::ScaleUp { .. }));
     }
 
     #[test]
@@ -461,7 +584,7 @@ mod tests {
         s.tier_slack_s[0] = 0.5; // about to violate the 6 s tier
         let snaps = vec![s];
         let states = vec![ReplicaState::Active];
-        assert!(matches!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::ScaleUp(_)));
+        assert!(matches!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::ScaleUp { .. }));
         // Same distress with capacity already warming: hold.
         let mut c2 = TierSlackPredictive::new(cfg_pred(), &table2_tiers());
         let snaps2 = vec![snaps[0].clone(), snap(0.0, 0)];
@@ -482,7 +605,63 @@ mod tests {
         let states = vec![ReplicaState::Active; 2];
         assert_eq!(c.decide(&view(0.0, &snaps, &states)), ScalingDecision::Hold);
         assert_eq!(c.decide(&view(5.0, &snaps, &states)), ScalingDecision::Hold);
-        assert_eq!(c.decide(&view(12.0, &snaps, &states)), ScalingDecision::ScaleDown(1));
+        assert_eq!(c.decide(&view(12.0, &snaps, &states)), ScalingDecision::ScaleDown { pool: 0, n: 1 });
+    }
+
+    #[test]
+    fn controllers_pick_the_hot_pool_to_grow_and_the_cold_pool_to_shrink() {
+        // Two pools: pool 0 (strict) drowning, pool 1 (batch) idle.
+        let snaps = vec![snap(12.0, 0), snap(11.0, 0), snap(0.1, 0), snap(0.0, 0)];
+        let states = vec![ReplicaState::Active; 4];
+        let pool_of = [0usize, 0, 1, 1];
+        let bounds = [(1usize, 4usize), (1usize, 4usize)];
+        let v = ControlView {
+            now: 20.0,
+            snaps: &snaps,
+            states: &states,
+            pool_of: &pool_of,
+            pool_bounds: &bounds,
+        };
+        assert_eq!(v.scale_up_pool(), Some(0), "new capacity lands in the drowning pool");
+        assert_eq!(v.scale_down_pool(), Some(1), "the idle pool gives capacity back");
+        assert_eq!(v.serving_in(0), 2);
+        assert!((v.queued_s_in(0) - 23.0).abs() < 1e-9);
+        assert_eq!((v.min_total(), v.max_total()), (2, 8));
+
+        // The reactive controller routes its decision to that pool.
+        let mut c = ReactiveHysteresis::new(cfg());
+        assert_eq!(c.decide(&v), ScalingDecision::Hold, "hold timer arms first");
+        let v2 = ControlView {
+            now: 31.0,
+            snaps: &snaps,
+            states: &states,
+            pool_of: &pool_of,
+            pool_bounds: &bounds,
+        };
+        match c.decide(&v2) {
+            ScalingDecision::ScaleUp { pool, n } => {
+                assert_eq!(pool, 0);
+                assert!(n >= 1);
+            }
+            other => panic!("expected a pool-0 scale-up, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pools_at_ceiling_and_floor_yield_no_candidates() {
+        let snaps = vec![snap(50.0, 0)];
+        let states = vec![ReplicaState::Active];
+        let pool_of = [0usize];
+        let bounds = [(1usize, 1usize)];
+        let v = ControlView {
+            now: 0.0,
+            snaps: &snaps,
+            states: &states,
+            pool_of: &pool_of,
+            pool_bounds: &bounds,
+        };
+        assert_eq!(v.scale_up_pool(), None);
+        assert_eq!(v.scale_down_pool(), None);
     }
 
     #[test]

@@ -21,7 +21,19 @@
 //!   is scored with the fitted per-replica latency predictor — the
 //!   predicted wait accounts for the candidate's live decode load
 //!   inflating every prefill chunk served ahead of this arrival, which
-//!   the linear token rate cannot see.
+//!   the linear token rate cannot see;
+//! - [`TierAffinity`]: per-tier round-robin over the replicas whose
+//!   affinity claims the arrival's tier — a siloed deployment expressed
+//!   as a dispatch policy over affinity-tagged pools.
+//!
+//! Replicas may be **heterogeneous** (per-pool hardware and chunk
+//! configs): every [`LoadSnapshot`] carries its own replica's reference
+//! token rates, and every policy that prices an arrival's work against a
+//! candidate does so at *that candidate's* rates
+//! ([`LoadSnapshot::price_prefill_s`] /
+//! [`LoadSnapshot::price_decode_tail_s`]) — a chunk-256 strict replica
+//! and a chunk-2048 batch replica quote different waits for the same
+//! prompt.
 //!
 //! The front-end is also where the **global admission controller**
 //! ([`AdmissionController`]) lives: it sees every arrival plus the live
@@ -45,30 +57,32 @@ use anyhow::{bail, Result};
 
 /// A cluster-level routing policy. `dispatch` returns the index of the
 /// replica that should serve `spec`; `snaps[i]` is replica `i`'s live
-/// load. `est_prefill_s` is the request's own prefill work priced at the
-/// replicas' reference rate, and `est_decode_s` its decode tail when the
-/// SLO deadline covers decoding (zero for interactive/TTFT requests) —
-/// both provided by the cluster so stateless policies need no latency
-/// model.
+/// load. A policy that prices the arrival's own work does so at each
+/// *candidate's* rates, read from the snapshot
+/// ([`LoadSnapshot::price_prefill_s`] /
+/// [`LoadSnapshot::price_decode_tail_s`]) — there is no cluster-wide
+/// cost model once pools are heterogeneous.
 pub trait Dispatcher: Send {
     fn name(&self) -> &'static str;
 
-    /// Whether this policy reads the load snapshots at all. The cluster
-    /// skips the per-arrival snapshot refresh for policies that don't
-    /// (round-robin), keeping the default configuration as cheap as the
-    /// seed's static shard split.
+    /// Whether this policy reads the load snapshots' *load* signals at
+    /// all. The cluster skips the per-arrival snapshot refresh for
+    /// policies that don't (round-robin, tier-affinity), keeping the
+    /// default configuration as cheap as the seed's static shard split.
     fn needs_snapshots(&self) -> bool {
         true
     }
 
-    fn dispatch(
-        &mut self,
-        spec: &RequestSpec,
-        slo: Slo,
-        est_prefill_s: f64,
-        est_decode_s: f64,
-        snaps: &[LoadSnapshot],
-    ) -> usize;
+    /// Whether this policy enforces tier affinity itself (reads the
+    /// snapshot masks and never routes an arrival to a replica that
+    /// does not serve its tier). The cluster then hands it the full
+    /// snapshot slice instead of building a filtered eligibility view
+    /// per arrival.
+    fn affinity_aware(&self) -> bool {
+        false
+    }
+
+    fn dispatch(&mut self, spec: &RequestSpec, slo: Slo, snaps: &[LoadSnapshot]) -> usize;
 }
 
 /// Build the configured dispatcher against the default (paper) hardware.
@@ -97,6 +111,7 @@ pub fn build_dispatcher_for(
             let predictor = LatencyPredictor::calibrate(&model, cfg.seed);
             Box::new(PredictedTtft::new(predictor, chunk, cfg.seed))
         }
+        DispatchPolicy::TierAffinity => Box::new(TierAffinity::new()),
     }
 }
 
@@ -127,14 +142,7 @@ impl Dispatcher for RoundRobin {
         false
     }
 
-    fn dispatch(
-        &mut self,
-        _spec: &RequestSpec,
-        _slo: Slo,
-        _est_prefill_s: f64,
-        _est_decode_s: f64,
-        snaps: &[LoadSnapshot],
-    ) -> usize {
+    fn dispatch(&mut self, _spec: &RequestSpec, _slo: Slo, snaps: &[LoadSnapshot]) -> usize {
         let r = self.next % snaps.len();
         self.next = self.next.wrapping_add(1);
         r
@@ -150,14 +158,7 @@ impl Dispatcher for JoinShortestQueue {
         "join-shortest-queue"
     }
 
-    fn dispatch(
-        &mut self,
-        _spec: &RequestSpec,
-        _slo: Slo,
-        _est_prefill_s: f64,
-        _est_decode_s: f64,
-        snaps: &[LoadSnapshot],
-    ) -> usize {
+    fn dispatch(&mut self, _spec: &RequestSpec, _slo: Slo, snaps: &[LoadSnapshot]) -> usize {
         let mut best = 0usize;
         for (i, s) in snaps.iter().enumerate().skip(1) {
             let b = &snaps[best];
@@ -207,17 +208,11 @@ impl Dispatcher for LeastLoaded {
         "least-loaded"
     }
 
-    fn dispatch(
-        &mut self,
-        spec: &RequestSpec,
-        slo: Slo,
-        est_prefill_s: f64,
-        est_decode_s: f64,
-        snaps: &[LoadSnapshot],
-    ) -> usize {
+    fn dispatch(&mut self, spec: &RequestSpec, slo: Slo, snaps: &[LoadSnapshot]) -> usize {
         // Slack budget from the arrival's own SLO — the shared
-        // `Slo::deadline_budget` rule (the cluster prices `est_decode_s`
-        // with the same rule, so the two stay in sync by construction).
+        // `Slo::deadline_budget` rule. The arrival's own work is priced
+        // at each *candidate's* rates: heterogeneous pools quote
+        // different prefill/decode prices for the same request.
         let (slack_budget, _) = slo.deadline_budget();
         let deadline = spec.arrival_s + slack_budget;
         let mut best = 0usize;
@@ -231,8 +226,8 @@ impl Dispatcher for LeastLoaded {
                 spec.prompt_tokens,
                 spec.decode_tokens,
                 start,
-                est_prefill_s,
-                est_decode_s,
+                s.price_prefill_s(spec.prompt_tokens),
+                s.price_decode_tail_s(slo, spec.decode_tokens),
                 deadline,
             );
             let score = Self::score(s);
@@ -274,14 +269,7 @@ impl Dispatcher for PowerOfTwoChoices {
         "power-of-two-choices"
     }
 
-    fn dispatch(
-        &mut self,
-        _spec: &RequestSpec,
-        _slo: Slo,
-        _est_prefill_s: f64,
-        _est_decode_s: f64,
-        snaps: &[LoadSnapshot],
-    ) -> usize {
+    fn dispatch(&mut self, _spec: &RequestSpec, _slo: Slo, snaps: &[LoadSnapshot]) -> usize {
         let n = snaps.len();
         if n < 2 {
             return 0;
@@ -313,7 +301,8 @@ impl Dispatcher for PowerOfTwoChoices {
 pub struct PredictedTtft {
     rng: Rng,
     predictor: LatencyPredictor,
-    /// Reference chunk size used to price queued prefill work.
+    /// Fallback chunk size for snapshots that carry none (hand-built
+    /// test fixtures); live snapshots report their replica's own chunk.
     chunk: u32,
 }
 
@@ -327,16 +316,29 @@ impl PredictedTtft {
     /// Predicted TTFT (seconds past `arrival_s`) for an arrival of
     /// `prompt_tokens` routed to the replica behind `snap`.
     pub fn predicted_ttft_s(&self, snap: &LoadSnapshot, prompt_tokens: u32, arrival_s: f64) -> f64 {
-        // Price one mid-prompt reference chunk co-scheduled with the
-        // replica's current decode set (mean KV length), then spread it
-        // over the chunk: a per-token rate that *sees* the decode load.
-        let seg = PrefillSegment { cache_len: 512, chunk: self.chunk };
-        let mut stats = BatchStats::default().with_prefill(seg);
+        // Price one mid-prompt chunk of the *candidate's own* chunk size
+        // twice — alone, and co-scheduled with its current decode set
+        // (mean KV length). The ratio is the predicted decode-load
+        // inflation, applied to the candidate's own reference token rate
+        // so heterogeneous hardware/chunk configs are priced per replica
+        // while the decode co-schedule effect still comes from the
+        // calibrated predictor.
+        let chunk = if snap.chunk_size > 0 { snap.chunk_size } else { self.chunk };
+        let seg = PrefillSegment { cache_len: 512, chunk };
+        let idle = BatchStats::default().with_prefill(seg);
+        let mut loaded = idle;
         if snap.decodes > 0 {
             let avg_kv = (snap.kv_used / snap.decodes as u64).max(1).min(u32::MAX as u64) as u32;
-            stats.push_decodes(avg_kv, snap.decodes);
+            loaded.push_decodes(avg_kv, snap.decodes);
         }
-        let sec_per_token = self.predictor.predict_stats(&stats) / self.chunk as f64;
+        let idle_s = self.predictor.predict_stats(&idle).max(1e-12);
+        let inflation = (self.predictor.predict_stats(&loaded) / idle_s).max(1.0);
+        let base_rate = if snap.sec_per_prefill_token > 0.0 {
+            snap.sec_per_prefill_token
+        } else {
+            idle_s / chunk as f64
+        };
+        let sec_per_token = base_rate * inflation;
         let queued = snap.queued_prefill_tokens + prompt_tokens as u64;
         let start_lag = (snap.now - arrival_s).max(0.0);
         start_lag + queued as f64 * sec_per_token
@@ -348,14 +350,7 @@ impl Dispatcher for PredictedTtft {
         "predicted-ttft"
     }
 
-    fn dispatch(
-        &mut self,
-        spec: &RequestSpec,
-        _slo: Slo,
-        _est_prefill_s: f64,
-        _est_decode_s: f64,
-        snaps: &[LoadSnapshot],
-    ) -> usize {
+    fn dispatch(&mut self, spec: &RequestSpec, _slo: Slo, snaps: &[LoadSnapshot]) -> usize {
         let n = snaps.len();
         if n < 2 {
             return 0;
@@ -373,6 +368,71 @@ impl Dispatcher for PredictedTtft {
         } else {
             lo
         }
+    }
+}
+
+/// Per-tier round-robin over the replicas whose tier-affinity claims
+/// the arrival's tier — the siloed deployment as a dispatch policy.
+///
+/// Each tier keeps its own rotation cursor, so tier `t`'s arrivals
+/// rotate over tier `t`'s pool exactly like a dedicated per-tier
+/// cluster fronted by [`RoundRobin`] would — which is what makes the
+/// rebuilt `run_silo` reproduce the old bespoke per-tier loop
+/// bit-for-bit. Arrivals whose tier no replica claims fall back to
+/// rotating over the whole slice (the cluster's affinity fallback will
+/// normally have widened the slice already).
+pub struct TierAffinity {
+    /// Rotation cursor per tier, grown on demand.
+    next_per_tier: Vec<usize>,
+}
+
+impl TierAffinity {
+    pub fn new() -> Self {
+        TierAffinity { next_per_tier: Vec::new() }
+    }
+}
+
+impl Default for TierAffinity {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dispatcher for TierAffinity {
+    fn name(&self) -> &'static str {
+        "tier-affinity"
+    }
+
+    fn needs_snapshots(&self) -> bool {
+        // Reads only the affinity masks, which are stamped on every
+        // snapshot at construction and never change for a live slot —
+        // no per-arrival refresh needed.
+        false
+    }
+
+    fn affinity_aware(&self) -> bool {
+        true
+    }
+
+    fn dispatch(&mut self, spec: &RequestSpec, _slo: Slo, snaps: &[LoadSnapshot]) -> usize {
+        let tier = spec.tier;
+        if self.next_per_tier.len() <= tier {
+            self.next_per_tier.resize(tier + 1, 0);
+        }
+        let eligible = snaps.iter().filter(|s| s.serves_tier(tier)).count();
+        let cursor = self.next_per_tier[tier];
+        self.next_per_tier[tier] = cursor.wrapping_add(1);
+        if eligible == 0 {
+            return cursor % snaps.len();
+        }
+        let k = cursor % eligible;
+        snaps
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.serves_tier(tier))
+            .nth(k)
+            .map(|(i, _)| i)
+            .expect("k < eligible count")
     }
 }
 
@@ -446,26 +506,27 @@ impl AdmissionController {
     }
 
     /// Can some replica in `snaps` meet tier `tier`'s deadline for this
-    /// arrival? Prices with the same reference rates dispatch uses.
+    /// arrival? Each candidate prices the arrival's work at *its own*
+    /// reference rates (heterogeneous pools quote different waits), via
+    /// the same `deadline_feasible` rule dispatch and handoff use. A
+    /// tier is judged only against replicas whose affinity serves it —
+    /// an idle batch-only replica must not make a strict-tier arrival
+    /// look feasible, and a degrade verdict must price each candidate
+    /// tier against the pool that would actually take it. When no
+    /// replica claims the tier, every replica may serve it (the
+    /// cluster's never-strand fallback).
     fn feasible_somewhere(
         spec: &RequestSpec,
         tiers: &[QosTier],
         tier: usize,
-        sec_per_prefill_token: f64,
-        sec_per_decode_token: f64,
         snaps: &[LoadSnapshot],
     ) -> bool {
         let slo = slo_for_tier(tiers, tier);
-        let (budget, counts_decode) = slo.deadline_budget();
+        let (budget, _) = slo.deadline_budget();
         let deadline = spec.arrival_s + budget;
-        let est_prefill_s = spec.prompt_tokens as f64 * sec_per_prefill_token;
-        let est_decode_s = if counts_decode {
-            spec.decode_tokens as f64 * sec_per_decode_token
-        } else {
-            0.0
-        };
         let kv_demand = spec.prompt_tokens as u64 + spec.decode_tokens as u64;
-        snaps.iter().any(|s| {
+        let affine = snaps.iter().any(|s| s.serves_tier(tier));
+        snaps.iter().filter(|s| !affine || s.serves_tier(tier)).any(|s| {
             // Hard impossibility only: a request larger than the whole
             // cache can never run; current occupancy is transient. The
             // time half is the shared `deadline_feasible` rule, so
@@ -474,8 +535,8 @@ impl AdmissionController {
             kv_demand <= s.kv_capacity
                 && s.deadline_feasible(
                     s.now.max(spec.arrival_s),
-                    est_prefill_s,
-                    est_decode_s,
+                    s.price_prefill_s(spec.prompt_tokens),
+                    s.price_decode_tail_s(slo, spec.decode_tokens),
                     deadline,
                 )
         })
@@ -486,22 +547,12 @@ impl AdmissionController {
         &self,
         spec: &RequestSpec,
         tiers: &[QosTier],
-        sec_per_prefill_token: f64,
-        sec_per_decode_token: f64,
         snaps: &[LoadSnapshot],
     ) -> AdmissionDecision {
         if self.policy == AdmissionPolicy::None {
             return AdmissionDecision::Accept;
         }
-        let own = Self::feasible_somewhere(
-            spec,
-            tiers,
-            spec.tier,
-            sec_per_prefill_token,
-            sec_per_decode_token,
-            snaps,
-        );
-        if own {
+        if Self::feasible_somewhere(spec, tiers, spec.tier, snaps) {
             return AdmissionDecision::Accept;
         }
         if self.policy == AdmissionPolicy::Degrade {
@@ -516,14 +567,7 @@ impl AdmissionController {
                 .collect();
             looser.sort_by(|a, b| a.0.total_cmp(&b.0));
             for (_, t) in looser {
-                if Self::feasible_somewhere(
-                    spec,
-                    tiers,
-                    t,
-                    sec_per_prefill_token,
-                    sec_per_decode_token,
-                    snaps,
-                ) {
+                if Self::feasible_somewhere(spec, tiers, t, snaps) {
                     return AdmissionDecision::Degrade { to_tier: t };
                 }
             }
@@ -550,6 +594,10 @@ mod tests {
             kv_committed: 0,
             kv_capacity: 400_000,
             tier_slack_s: vec![f64::INFINITY; 3],
+            sec_per_prefill_token: 3e-4,
+            sec_per_decode_token: 0.03,
+            chunk_size: 256,
+            tier_affinity_mask: 0,
         }
     }
 
@@ -571,7 +619,7 @@ mod tests {
         let mut d = RoundRobin::new();
         let snaps = vec![snap(0, 0, 0.0), snap(0, 0, 0.0), snap(0, 0, 0.0)];
         let picks: Vec<usize> =
-            (0..6).map(|_| d.dispatch(&spec(), INT, 0.1, 0.0, &snaps)).collect();
+            (0..6).map(|_| d.dispatch(&spec(), INT, &snaps)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -579,35 +627,49 @@ mod tests {
     fn jsq_picks_shortest_backlog() {
         let mut d = JoinShortestQueue;
         let snaps = vec![snap(4, 100, 1.0), snap(1, 900, 2.0), snap(2, 10, 0.1)];
-        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+        assert_eq!(d.dispatch(&spec(), INT, &snaps), 1);
     }
 
     #[test]
     fn jsq_breaks_backlog_ties_by_queued_tokens() {
         let mut d = JoinShortestQueue;
         let snaps = vec![snap(2, 500, 1.0), snap(2, 100, 0.3), snap(3, 0, 0.0)];
-        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+        assert_eq!(d.dispatch(&spec(), INT, &snaps), 1);
     }
 
     #[test]
     fn least_loaded_prefers_lowest_pressure() {
         let mut d = LeastLoaded;
         let snaps = vec![snap(3, 3000, 2.0), snap(1, 500, 0.4), snap(5, 8000, 5.0)];
-        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+        assert_eq!(d.dispatch(&spec(), INT, &snaps), 1);
     }
 
     #[test]
     fn least_loaded_prefers_feasible_over_lowest_score() {
         let mut d = LeastLoaded;
         // Replica 0 has the lowest pressure score but cannot meet the 6 s
-        // TTFT budget (wait 6.5 + 0.5 > 6); replica 1 scores worse (a
-        // nearly-full KV cache adds ~+3.6) yet still fits the request
-        // and meets the budget, so it must win anyway.
+        // TTFT budget (wait 6.5 + the prompt's own 0.3 s at the snapshot
+        // rate > 6); replica 1 scores worse (a nearly-full KV cache adds
+        // ~+3.6) yet still fits the request and meets the budget, so it
+        // must win anyway.
         let s0 = snap(2, 9000, 6.5); // score 6.5, infeasible
-        let mut s1 = snap(4, 4000, 5.0); // 5.0 + 0.5 <= 6: feasible
+        let mut s1 = snap(4, 4000, 5.0); // 5.0 + 0.3 <= 6: feasible
         s1.kv_used = s1.kv_capacity - 20_000; // score 5.0 + ~3.6 = ~8.6
         let snaps = vec![s0, s1];
-        assert_eq!(d.dispatch(&spec(), INT, 0.5, 0.0, &snaps), 1);
+        assert_eq!(d.dispatch(&spec(), INT, &snaps), 1);
+    }
+
+    #[test]
+    fn least_loaded_prices_at_each_candidates_own_rate() {
+        let mut d = LeastLoaded;
+        // Same queue seconds everywhere; replica 0's own rate makes the
+        // 1000-token prompt cost 2 s (5.0 + 2.0 > 6: infeasible) while
+        // replica 1's cheap rate keeps it feasible — per-candidate
+        // pricing must route to 1 even though scores tie.
+        let mut slow = snap(3, 3000, 5.0);
+        slow.sec_per_prefill_token = 2e-3;
+        let fast = snap(3, 3000, 5.0);
+        assert_eq!(d.dispatch(&spec(), INT, &[slow, fast]), 1);
     }
 
     #[test]
@@ -621,7 +683,7 @@ mod tests {
         // budget — feasibility beats replica 0's lower wait.
         let s1 = snap(3, 3000, 2.0);
         let snaps = vec![s0, s1];
-        assert_eq!(d.dispatch(&spec(), INT, 0.5, 0.0, &snaps), 1);
+        assert_eq!(d.dispatch(&spec(), INT, &snaps), 1);
     }
 
     #[test]
@@ -631,7 +693,7 @@ mod tests {
         distressed.tier_slack_s[0] = -5.0; // already violating Q1
         let healthy = snap(1, 500, 0.4);
         let snaps = vec![distressed, healthy];
-        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+        assert_eq!(d.dispatch(&spec(), INT, &snaps), 1);
     }
 
     #[test]
@@ -639,8 +701,8 @@ mod tests {
         let mut jsq = JoinShortestQueue;
         let mut ll = LeastLoaded;
         let snaps = vec![snap(2, 100, 1.0), snap(2, 100, 1.0)];
-        assert_eq!(jsq.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 0);
-        assert_eq!(ll.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 0);
+        assert_eq!(jsq.dispatch(&spec(), INT, &snaps), 0);
+        assert_eq!(ll.dispatch(&spec(), INT, &snaps), 0);
     }
 
     #[test]
@@ -652,6 +714,7 @@ mod tests {
             DispatchPolicy::LeastLoaded,
             DispatchPolicy::PowerOfTwoChoices,
             DispatchPolicy::PredictedTtft,
+            DispatchPolicy::TierAffinity,
         ] {
             let d = build_dispatcher(&DispatchConfig {
                 policy: p,
@@ -663,17 +726,52 @@ mod tests {
     }
 
     #[test]
+    fn tier_affinity_rotates_within_the_claiming_pool() {
+        let mut d = TierAffinity::new();
+        // Replicas 0-1 claim tier 0, replicas 2-3 claim tiers 1-2.
+        let mut snaps: Vec<LoadSnapshot> = (0..4).map(|_| snap(0, 0, 0.0)).collect();
+        snaps[0].tier_affinity_mask = 0b001;
+        snaps[1].tier_affinity_mask = 0b001;
+        snaps[2].tier_affinity_mask = 0b110;
+        snaps[3].tier_affinity_mask = 0b110;
+        let mut s0 = spec();
+        s0.tier = 0;
+        let mut s1 = spec();
+        s1.tier = 1;
+        // Per-tier rotation: tier 0 rotates over {0, 1}, tier 1 over
+        // {2, 3}, each with an independent cursor.
+        assert_eq!(d.dispatch(&s0, INT, &snaps), 0);
+        assert_eq!(d.dispatch(&s1, INT, &snaps), 2);
+        assert_eq!(d.dispatch(&s0, INT, &snaps), 1);
+        assert_eq!(d.dispatch(&s0, INT, &snaps), 0);
+        assert_eq!(d.dispatch(&s1, INT, &snaps), 3);
+    }
+
+    #[test]
+    fn tier_affinity_unclaimed_tier_falls_back_to_all() {
+        let mut d = TierAffinity::new();
+        let mut snaps: Vec<LoadSnapshot> = (0..2).map(|_| snap(0, 0, 0.0)).collect();
+        snaps[0].tier_affinity_mask = 0b001;
+        snaps[1].tier_affinity_mask = 0b001;
+        let mut s2 = spec();
+        s2.tier = 2; // nobody claims tier 2
+        assert_eq!(d.dispatch(&s2, INT, &snaps), 0);
+        assert_eq!(d.dispatch(&s2, INT, &snaps), 1);
+        assert_eq!(d.dispatch(&s2, INT, &snaps), 0);
+    }
+
+    #[test]
     fn p2c_picks_lower_score_of_sampled_pair() {
         // With two replicas the sampled pair is always {0, 1}, so p2c
         // must behave exactly like least-loaded restricted to the pair.
         let mut d = PowerOfTwoChoices::new(7);
         let snaps = vec![snap(9, 9000, 9.0), snap(1, 100, 0.1)];
         for _ in 0..32 {
-            assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+            assert_eq!(d.dispatch(&spec(), INT, &snaps), 1);
         }
         let snaps = vec![snap(1, 100, 0.1), snap(9, 9000, 9.0)];
         for _ in 0..32 {
-            assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 0);
+            assert_eq!(d.dispatch(&spec(), INT, &snaps), 0);
         }
     }
 
@@ -685,8 +783,8 @@ mod tests {
         let mut b = PowerOfTwoChoices::new(42);
         for _ in 0..200 {
             assert_eq!(
-                a.dispatch(&spec(), INT, 0.1, 0.0, &snaps),
-                b.dispatch(&spec(), INT, 0.1, 0.0, &snaps)
+                a.dispatch(&spec(), INT, &snaps),
+                b.dispatch(&spec(), INT, &snaps)
             );
         }
     }
@@ -709,7 +807,7 @@ mod tests {
         let idle = snap(0, 0, 0.0);
         let snaps = vec![busy, idle];
         for _ in 0..32 {
-            assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &snaps), 1);
+            assert_eq!(d.dispatch(&spec(), INT, &snaps), 1);
         }
     }
 
@@ -739,8 +837,8 @@ mod tests {
         let mut b = predicted_ttft_dispatcher(42);
         for _ in 0..100 {
             assert_eq!(
-                a.dispatch(&spec(), INT, 0.1, 0.0, &snaps),
-                b.dispatch(&spec(), INT, 0.1, 0.0, &snaps)
+                a.dispatch(&spec(), INT, &snaps),
+                b.dispatch(&spec(), INT, &snaps)
             );
         }
     }
@@ -750,7 +848,7 @@ mod tests {
         let tiers = crate::qos::table2_tiers();
         let ctl = AdmissionController::new(AdmissionPolicy::None);
         // Even with zero replicas, None admits.
-        assert_eq!(ctl.decide(&spec(), &tiers, 3e-4, 0.03, &[]), AdmissionDecision::Accept);
+        assert_eq!(ctl.decide(&spec(), &tiers, &[]), AdmissionDecision::Accept);
     }
 
     #[test]
@@ -761,13 +859,13 @@ mod tests {
         // arrival can't make it anywhere.
         let snaps = vec![snap(20, 30_000, 10.0), snap(22, 33_000, 11.0)];
         assert_eq!(
-            ctl.decide(&spec(), &tiers, 3e-4, 0.03, &snaps),
+            ctl.decide(&spec(), &tiers, &snaps),
             AdmissionDecision::Reject
         );
         // One replica with 2 s of queue: feasible there, accept.
         let snaps = vec![snap(20, 30_000, 10.0), snap(4, 6000, 2.0)];
         assert_eq!(
-            ctl.decide(&spec(), &tiers, 3e-4, 0.03, &snaps),
+            ctl.decide(&spec(), &tiers, &snaps),
             AdmissionDecision::Accept
         );
     }
@@ -779,9 +877,31 @@ mod tests {
         // 10 s queues: tier 0 (6 s) infeasible, tier 1 (600 s) fine.
         let snaps = vec![snap(20, 30_000, 10.0)];
         assert_eq!(
-            ctl.decide(&spec(), &tiers, 3e-4, 0.03, &snaps),
+            ctl.decide(&spec(), &tiers, &snaps),
             AdmissionDecision::Degrade { to_tier: 1 }
         );
+    }
+
+    #[test]
+    fn admission_judges_each_tier_against_its_own_pool() {
+        let tiers = crate::qos::table2_tiers();
+        let ctl = AdmissionController::new(AdmissionPolicy::Degrade);
+        // Strict pool (tier 0 only) drowned; batch pool (tiers 1-2) idle.
+        let mut strict = snap(20, 30_000, 10.0);
+        strict.tier_affinity_mask = 0b001;
+        let mut batch = snap(0, 0, 0.0);
+        batch.tier_affinity_mask = 0b110;
+        let snaps = vec![strict, batch];
+        // The idle batch replica will never serve tier 0, so it must not
+        // make the tier-0 deadline look feasible — but it does make the
+        // degraded tier 1 feasible.
+        assert_eq!(
+            ctl.decide(&spec(), &tiers, &snaps),
+            AdmissionDecision::Degrade { to_tier: 1 }
+        );
+        // With rejection only, the same arrival is simply refused.
+        let ctl = AdmissionController::new(AdmissionPolicy::Reject);
+        assert_eq!(ctl.decide(&spec(), &tiers, &snaps), AdmissionDecision::Reject);
     }
 
     #[test]
@@ -791,7 +911,7 @@ mod tests {
         let mut s = spec();
         s.prompt_tokens = 1_000_000; // larger than any cache
         assert_eq!(
-            ctl.decide(&s, &tiers, 3e-4, 0.03, &[snap(0, 0, 0.0)]),
+            ctl.decide(&s, &tiers, &[snap(0, 0, 0.0)]),
             AdmissionDecision::Reject
         );
     }
@@ -807,14 +927,14 @@ mod tests {
     #[test]
     fn p2c_single_replica_and_coverage() {
         let mut d = PowerOfTwoChoices::new(3);
-        assert_eq!(d.dispatch(&spec(), INT, 0.1, 0.0, &[snap(0, 0, 0.0)]), 0);
+        assert_eq!(d.dispatch(&spec(), INT, &[snap(0, 0, 0.0)]), 0);
         // Over many draws on uniform snapshots the sampling spreads: with
         // equal scores the pick is the pair minimum, so every replica but
         // the highest index must appear.
         let snaps: Vec<LoadSnapshot> = (0..8).map(|_| snap(2, 100, 1.0)).collect();
         let mut seen = [false; 8];
         for _ in 0..500 {
-            seen[d.dispatch(&spec(), INT, 0.1, 0.0, &snaps)] = true;
+            seen[d.dispatch(&spec(), INT, &snaps)] = true;
         }
         let hit = seen.iter().filter(|&&s| s).count();
         assert!(hit >= 7, "p2c sampling too narrow: {hit}/8 replicas picked");

@@ -14,7 +14,7 @@ pub mod control;
 pub mod cost_model;
 pub mod dispatch;
 
-pub use cluster::Cluster;
+pub use cluster::{silo_chunk_for_tier, silo_cluster_spec, Cluster, SiloGroup};
 pub use control::{ReplicaState, ScalingController, ScalingDecision};
 pub use cost_model::{BatchShape, BatchStats, CostModel, PrefillSegment};
 pub use dispatch::{AdmissionController, AdmissionDecision, AdmissionPolicy, Dispatcher};

@@ -195,7 +195,7 @@ fn drain_protocol_is_loss_free() {
     cluster.drain_replica(1);
     cluster.run(120.0);
     cluster.drain_replica(2);
-    let added = cluster.provision_replica();
+    let added = cluster.provision_replica(0);
     cluster.run(1e6);
 
     assert_eq!(cluster.replica_states()[1], ReplicaState::Retired);
@@ -245,10 +245,10 @@ fn replica_growth_mid_run_keeps_heap_and_snapshots_consistent() {
     cluster.submit_trace(trace);
 
     cluster.run(50.0);
-    let r1 = cluster.provision_replica();
+    let r1 = cluster.provision_replica(0);
     assert!(cluster.replica_states()[r1].is_dispatchable(), "zero warm-up is immediate");
     cluster.run(120.0);
-    let r2 = cluster.provision_replica();
+    let r2 = cluster.provision_replica(0);
     cluster.run(200.0);
     cluster.drain_replica(0);
     cluster.run(1e6);

@@ -1,0 +1,333 @@
+//! Property tests for the ReplicaSpec-first cluster API (ISSUE 4
+//! acceptance):
+//!
+//! 1. the one-pool compatibility shim (`Cluster::new` =
+//!    `ClusterSpec::homogeneous`) reproduces the pre-redesign
+//!    homogeneous timelines bit-for-bit — including against a manual
+//!    sequential per-shard oracle;
+//! 2. `run_silo` (now tier-affinity dispatch over per-tier pools) is
+//!    bit-for-bit identical to the pre-redesign bespoke per-tier loop,
+//!    reconstructed here as independent round-robin engine groups;
+//! 3. relegation handoff between replicas with *different* specs
+//!    re-prices the migrated work at the target's own rates — a slow
+//!    target that would blow the deadline is refused even when idle;
+//! 4. graceful drain across pools with different chunk sizes conserves
+//!    every request and never resets deadlines.
+
+use niyama::config::{
+    ClusterSpec, Config, DispatchPolicy, Policy, PoolSpec, ReplicaSpec, SchedulerConfig,
+};
+use niyama::engine::{Engine, SimBackend};
+use niyama::metrics::summarize_many;
+use niyama::qos::Importance;
+use niyama::request::{Phase, RequestSpec, RequestStore};
+use niyama::simulator::cluster::{run_silo, Cluster, SiloGroup};
+use niyama::simulator::{AdmissionPolicy, ReplicaState};
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::WorkloadSpec;
+
+const LT: u32 = 6251;
+const HORIZON: f64 = 4000.0;
+
+fn poisson_trace(qps: f64, duration: f64, seed: u64) -> Vec<RequestSpec> {
+    WorkloadSpec::uniform(Dataset::azure_code(), qps, duration).generate(&mut Rng::new(seed))
+}
+
+#[test]
+fn one_pool_shim_is_bit_identical_to_sequential_oracle() {
+    // Pre-redesign `Cluster::new` with default round-robin dispatch was
+    // proven equal to the seed's sequential per-shard simulation; the
+    // shim must still satisfy that oracle after the pool redesign.
+    let cfg = Config::default();
+    let trace = poisson_trace(3.0, 120.0, 21);
+
+    let mut cluster = Cluster::new(&cfg, 3);
+    cluster.submit_trace(trace.clone());
+    cluster.run(HORIZON);
+    let shared = cluster.summary(LT);
+
+    let mut engines: Vec<Engine<SimBackend>> = (0..3).map(|_| Engine::sim(&cfg)).collect();
+    for (i, s) in trace.iter().enumerate() {
+        engines[i % 3].enqueue(s.clone());
+    }
+    let mut t_end: f64 = 0.0;
+    for eng in engines.iter_mut() {
+        eng.run(HORIZON);
+        t_end = t_end.max(eng.now());
+    }
+    let stores: Vec<&RequestStore> = engines.iter().map(|e| &e.store).collect();
+    let oracle = summarize_many(&stores, t_end, LT, cfg.tiers.len());
+
+    assert_eq!(shared.total, oracle.total);
+    assert_eq!(shared.finished, oracle.finished);
+    assert_eq!(shared.violations, oracle.violations);
+    assert_eq!(shared.ttft_p99.to_bits(), oracle.ttft_p99.to_bits());
+    assert_eq!(shared.ttlt_p99.to_bits(), oracle.ttlt_p99.to_bits());
+    // And the explicit homogeneous spec is the very same constructor.
+    let mut via_spec = Cluster::from_spec(&cfg, &ClusterSpec::homogeneous(&cfg, 3));
+    via_spec.submit_trace(trace);
+    via_spec.run(HORIZON);
+    let b = via_spec.summary(LT);
+    assert_eq!(b.ttft_p99.to_bits(), shared.ttft_p99.to_bits());
+    assert_eq!(b.violations, shared.violations);
+    assert_eq!(via_spec.eval_time().to_bits(), cluster.eval_time().to_bits());
+}
+
+#[test]
+fn run_silo_matches_the_pre_redesign_per_tier_loop() {
+    // The old run_silo built one independent round-robin cluster per
+    // tier (engines never interact). Reconstruct exactly that and hold
+    // the tier-affinity-pool rebuild against it bit-for-bit.
+    let cfg = Config::default();
+    let trace = poisson_trace(2.5, 150.0, 13);
+    let groups = vec![
+        SiloGroup { tier: 0, replicas: 2, chunk_size: 256 },
+        SiloGroup { tier: 1, replicas: 1, chunk_size: 2048 },
+        SiloGroup { tier: 2, replicas: 1, chunk_size: 2048 },
+    ];
+
+    let new = run_silo(&cfg, &groups, &trace, HORIZON, LT);
+
+    // Oracle: per-tier engine groups, round-robin within each group, all
+    // summarized at the merged horizon.
+    let mut engines: Vec<Engine<SimBackend>> = Vec::new();
+    let mut slot_of_group: Vec<Vec<usize>> = Vec::new();
+    for g in &groups {
+        let mut tier_cfg = cfg.clone();
+        tier_cfg.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, g.chunk_size);
+        let mut slots = Vec::new();
+        for _ in 0..g.replicas {
+            slots.push(engines.len());
+            engines.push(Engine::sim(&tier_cfg));
+        }
+        slot_of_group.push(slots);
+    }
+    for (gi, g) in groups.iter().enumerate() {
+        let tier_trace: Vec<&RequestSpec> =
+            trace.iter().filter(|r| r.tier == g.tier).collect();
+        for (k, r) in tier_trace.iter().enumerate() {
+            let slot = slot_of_group[gi][k % g.replicas];
+            engines[slot].enqueue((*r).clone());
+        }
+    }
+    let mut t_end: f64 = 0.0;
+    for eng in engines.iter_mut() {
+        eng.run(HORIZON);
+        t_end = t_end.max(eng.now());
+    }
+    let stores: Vec<&RequestStore> = engines.iter().map(|e| &e.store).collect();
+    let oracle = summarize_many(&stores, t_end, LT, cfg.tiers.len());
+
+    assert_eq!(new.total, oracle.total);
+    assert_eq!(new.finished, oracle.finished);
+    assert_eq!(new.violations, oracle.violations);
+    assert_eq!(new.ttft_p99.to_bits(), oracle.ttft_p99.to_bits());
+    assert_eq!(new.ttlt_p99.to_bits(), oracle.ttlt_p99.to_bits());
+    assert_eq!(new.goodput_rps.to_bits(), oracle.goodput_rps.to_bits());
+}
+
+/// Two-pool cluster: an ordinary fast pool and a second pool whose
+/// hardware is crippled by `slowdown` (peak FLOPs and HBM bandwidth
+/// divided), with relegation handoff on.
+fn handoff_cluster(slowdown: f64) -> Cluster {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::RoundRobin;
+    cfg.cluster.dispatch.relegation_handoff = true;
+    let fast = ReplicaSpec::from_config(&cfg);
+    let mut slow = ReplicaSpec::from_config(&cfg);
+    slow.hardware.peak_flops /= slowdown;
+    slow.hardware.hbm_bw /= slowdown;
+    let spec = ClusterSpec {
+        pools: vec![
+            PoolSpec::fixed("fast", fast, 1),
+            PoolSpec::fixed("other", slow, 1),
+        ],
+    };
+    Cluster::from_spec(&cfg, &spec)
+}
+
+/// Round-robin over two replicas with every even arrival a 20k-token
+/// tier-0 prompt: replica 0 drowns and relegates, replica 1 stays
+/// near-idle — the PR-1 handoff forcing trace.
+fn overload_trace() -> Vec<RequestSpec> {
+    (0..120)
+        .map(|i| RequestSpec {
+            arrival_s: i as f64 * 0.5,
+            prompt_tokens: if i % 2 == 0 { 20_000 } else { 256 },
+            decode_tokens: 8,
+            tier: if i % 2 == 0 { 0 } else { 1 },
+            app_id: 0,
+            importance: Importance::High,
+        })
+        .collect()
+}
+
+#[test]
+fn handoff_reprices_migrated_work_at_the_target_spec() {
+    let n = overload_trace().len();
+
+    // Equal-speed twin: the idle second replica passes the feasibility
+    // gate at its own (identical) rates, so handoffs must happen.
+    let mut same = handoff_cluster(1.0);
+    same.submit_trace(overload_trace());
+    same.run(1e5);
+    assert!(same.stats.handoffs > 0, "equal-spec target must accept handoffs");
+    assert_eq!(same.summary(LT).total, n);
+
+    // 60x-slower second pool: pricing the 20k-token prompt at the
+    // *target's* rate blows the 6 s TTFT budget, so the feasibility gate
+    // must refuse every handoff — even though the slow replica is idle
+    // and the old global-rate pricing would happily have moved the work.
+    let mut slow = handoff_cluster(60.0);
+    slow.submit_trace(overload_trace());
+    slow.run(1e5);
+    assert_eq!(
+        slow.stats.handoffs, 0,
+        "a target whose own rates cannot meet the deadline must be refused"
+    );
+    assert_eq!(slow.summary(LT).total, n, "refused handoffs must not lose requests");
+}
+
+#[test]
+fn drain_across_different_chunk_pools_conserves_and_keeps_deadlines() {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::JoinShortestQueue;
+    let mut strict = ReplicaSpec::from_config(&cfg);
+    strict.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, 256);
+    let mut batch = ReplicaSpec::from_config(&cfg);
+    batch.scheduler = SchedulerConfig::sarathi(Policy::SarathiFcfs, 2048);
+    let spec = ClusterSpec {
+        pools: vec![
+            PoolSpec::fixed("strict", strict, 1),
+            PoolSpec::fixed("batch", batch, 2),
+        ],
+    };
+    let mut cluster = Cluster::from_spec(&cfg, &spec);
+    let trace = poisson_trace(3.0, 180.0, 17);
+    let n = trace.len();
+    cluster.submit_trace(trace);
+
+    cluster.run(40.0);
+    // Drain the chunk-256 replica mid-run: its queued work moves to the
+    // chunk-2048 pool — a different spec, so the move is priced at the
+    // target's rates and admitted with the original arrival time.
+    cluster.drain_replica(0);
+    cluster.run(1e6);
+
+    assert_eq!(cluster.replica_states()[0], ReplicaState::Retired);
+    let s = cluster.summary(LT);
+    assert_eq!(s.total, n, "cross-spec drain must conserve requests");
+    assert_eq!(s.finished, n, "feasible load must fully complete");
+    // Deadlines never reset: every request the batch pool ended up with
+    // kept an arrival time from the original trace (<= 180 s), not the
+    // drain instant.
+    for &i in &[1usize, 2] {
+        for r in cluster.engines()[i].store.iter() {
+            if r.phase == Phase::Migrated {
+                continue;
+            }
+            assert!(
+                r.spec.arrival_s <= 180.0 + 1e-9,
+                "migrated request must keep its original arrival time"
+            );
+        }
+    }
+    // The retired strict replica holds only tombstones/finished work.
+    for r in cluster.engines()[0].store.iter() {
+        assert!(matches!(r.phase, Phase::Finished | Phase::Migrated));
+    }
+    // GPU-seconds bill per-pool: the drained slot stopped billing early.
+    assert!(s.gpu_seconds < 3.0 * cluster.eval_time() - 1.0);
+}
+
+#[test]
+fn degraded_arrivals_are_judged_and_routed_against_the_degraded_tiers_pool() {
+    // Strict pool serves only tier 0 and is drowned; batch pool serves
+    // tiers 1-2 and idles. Admission must (a) not let the idle batch
+    // replica make tier 0 look feasible — it will never serve it — and
+    // (b) after degrading to tier 1, dispatch against the *batch* pool,
+    // not the tier-0 eligibility set the arrival started with.
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+    cfg.cluster.control.admission = AdmissionPolicy::Degrade;
+    let mut strict = ReplicaSpec::from_config(&cfg);
+    strict.tier_affinity = vec![0];
+    let mut batch = ReplicaSpec::from_config(&cfg);
+    batch.tier_affinity = vec![1, 2];
+    let spec = ClusterSpec {
+        pools: vec![
+            PoolSpec::fixed("strict", strict, 1),
+            PoolSpec::fixed("batch", batch, 1),
+        ],
+    };
+    let mut cluster = Cluster::from_spec(&cfg, &spec);
+    // 20 tier-0 arrivals/s of 6k-token prompts: the single strict
+    // replica's queue blows past the 6 s TTFT budget within a second.
+    let trace: Vec<RequestSpec> = (0..300)
+        .map(|i| RequestSpec {
+            arrival_s: i as f64 * 0.05,
+            prompt_tokens: 6000,
+            decode_tokens: 8,
+            tier: 0,
+            app_id: 0,
+            importance: Importance::High,
+        })
+        .collect();
+    let n = trace.len();
+    cluster.submit_trace(trace);
+    cluster.run(1e6);
+
+    let s = cluster.summary(LT);
+    assert!(
+        s.degraded_per_tier[0] > 0,
+        "overload must degrade tier-0 arrivals toward the batch pool's tiers"
+    );
+    assert_eq!(s.total + s.rejected_total(), n);
+    // The strict pool holds only its own tier; every degraded arrival
+    // (now tier 1+) landed on the batch pool, which serves those tiers.
+    for r in cluster.engines()[0].store.iter() {
+        assert_eq!(r.spec.tier, 0, "strict pool must serve only tier 0");
+    }
+    let batch_served =
+        cluster.engines()[1].store.iter().filter(|r| r.phase != Phase::Migrated).count();
+    assert!(batch_served > 0, "degraded arrivals must reach the batch pool");
+    for r in cluster.engines()[1].store.iter() {
+        assert_ne!(r.spec.tier, 0, "tier-0 work must never reach the batch-only pool");
+    }
+}
+
+#[test]
+fn affinity_restricted_pools_never_take_foreign_tiers() {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+    cfg.cluster.dispatch.relegation_handoff = true;
+    let open = ReplicaSpec::from_config(&cfg);
+    let mut batch_only = ReplicaSpec::from_config(&cfg);
+    batch_only.tier_affinity = vec![1, 2];
+    let spec = ClusterSpec {
+        pools: vec![
+            PoolSpec::fixed("open", open, 2),
+            PoolSpec::fixed("batch-only", batch_only, 2),
+        ],
+    };
+    let mut cluster = Cluster::from_spec(&cfg, &spec);
+    let trace = poisson_trace(5.0, 150.0, 29);
+    let n = trace.len();
+    cluster.submit_trace(trace);
+    cluster.run(1e6);
+
+    let s = cluster.summary(LT);
+    assert_eq!(s.total, n);
+    // Dispatch, handoff and drain targeting all honor affinity: the
+    // restricted pool's stores never contain tier-0 work.
+    for &i in &[2usize, 3] {
+        for r in cluster.engines()[i].store.iter() {
+            assert_ne!(r.spec.tier, 0, "tier-0 request reached an affinity-restricted pool");
+        }
+    }
+    assert!(
+        cluster.stats.dispatched[2] + cluster.stats.dispatched[3] > 0,
+        "the restricted pool must still serve its own tiers"
+    );
+}
