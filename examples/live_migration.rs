@@ -1,0 +1,68 @@
+//! Live KV migration in action: interconnect-priced mid-flight request
+//! movement (Llumnix-style stop-and-copy on the shared virtual clock).
+//!
+//! Two demonstrations:
+//!
+//! 1. A decode-heavy replica is drained mid-decode. Handoff-only, its
+//!    retirement waits for every local decode to finish; with
+//!    `cluster.interconnect` configured, the decoding requests stream
+//!    their KV to the peer (longest-remaining-first, priced as
+//!    `bytes / bandwidth + latency`) and the replica retires orders of
+//!    magnitude sooner — loss-free either way.
+//! 2. A tier-0 surge outgrows one replica's decode batch cap, stalling
+//!    requests that are *already decoding* — victims relegation handoff
+//!    cannot touch. The proactive rebalancer migrates decoders to the
+//!    idle peer and the strict tier's violations collapse.
+//!
+//!     cargo run --release --example live_migration
+
+use niyama::config::{Config, DispatchPolicy, InterconnectConfig};
+use niyama::repro::drain_budget;
+use niyama::repro::migration::{run_drain, surge_trace};
+use niyama::simulator::cluster::Cluster;
+
+fn main() -> anyhow::Result<()> {
+    println!("== 1. Draining a decode-heavy replica (40 x 2500-token decodes)\n");
+    for live in [false, true] {
+        let label = if live { "with live migration" } else { "handoff-only" };
+        let out = run_drain(live);
+        println!(
+            "   {label:<20} retirement {:>8.3}s after the drain decision \
+             (migrated {} requests, {:.3} GB of KV)",
+            out.drain_s,
+            out.summary.migrated_live_total(),
+            out.summary.kv_bytes_migrated / 1e9
+        );
+    }
+
+    println!("\n== 2. Tier-0 surge past the decode batch cap (240s)\n");
+    let trace = surge_trace(240.0);
+    for live in [false, true] {
+        let label = if live { "with live migration" } else { "handoff-only" };
+        let mut cfg = Config::default();
+        cfg.cluster.dispatch.policy = DispatchPolicy::RoundRobin;
+        cfg.cluster.dispatch.relegation_handoff = true;
+        cfg.cluster.control.control_interval_s = 2.5;
+        if live {
+            cfg.cluster.interconnect =
+                Some(InterconnectConfig { bandwidth_gbytes_per_s: 25.0, latency_s: 1e-3 });
+        }
+        let mut cluster = Cluster::new(&cfg, 2);
+        cluster.submit_trace(trace.clone());
+        cluster.run(240.0 + drain_budget(&cfg));
+        let s = cluster.summary(6251);
+        println!(
+            "   {label:<20} tier-0 violations {:>6.2}%   migrated-live {:>4}   \
+             ({:.2} GB over the wire, {:.2}s of transfer windows)",
+            s.tier_violation_pct(0),
+            s.migrated_live_total(),
+            s.kv_bytes_migrated / 1e9,
+            s.migration_transfer_s
+        );
+    }
+
+    println!("\nAny request is movable once a move is priced as KV bytes over the");
+    println!("interconnect: drains stop waiting on decode tails, and overloaded");
+    println!("replicas shed *decoding* work that handoff could never touch.");
+    Ok(())
+}

@@ -246,6 +246,7 @@ fn main() {
                     queued_prefill_tokens: ((i as u64 * 977) % 9000),
                     relegated_prefill_tokens: ((i as u64 * 131) % 2000),
                     queued_prefill_s: (i as f64 * 0.37) % 3.0,
+                    queued_prefill_s_per_tier: vec![(i as f64 * 0.37) % 3.0, 0.0, 0.0],
                     decodes: 16,
                     kv_used: (i as u64 * 31_000) % 400_000,
                     kv_committed: (i as u64 * 700) % 5000,
@@ -253,7 +254,9 @@ fn main() {
                     tier_slack_s: vec![4.0 - (i % 7) as f64, 300.0, 900.0],
                     sec_per_prefill_token: 3.2e-4,
                     sec_per_decode_token: 0.03,
+                    kv_bytes_per_token: 131_072.0,
                     chunk_size: 256,
+                    max_batch_decodes: 256,
                     tier_affinity_mask: 0,
                 })
                 .collect();

@@ -298,10 +298,18 @@ pub struct PoolSpec {
     pub min_replicas: usize,
     /// Autoscale ceiling for this pool.
     pub max_replicas: usize,
+    /// This pool's interconnect attachment for live KV migration
+    /// (`None` = inherit `cluster.interconnect`). A transfer between two
+    /// pools is priced at the bottleneck of the two attachments: the
+    /// lower bandwidth, the higher latency. A pool whose effective
+    /// bandwidth is zero/absent neither sends nor receives live
+    /// migrations.
+    pub interconnect: Option<InterconnectConfig>,
 }
 
 impl PoolSpec {
-    /// A static pool: `replicas` instances of `spec`, never scaled.
+    /// A static pool: `replicas` instances of `spec`, never scaled,
+    /// inheriting the cluster-level interconnect.
     pub fn fixed(name: &str, spec: ReplicaSpec, replicas: usize) -> Self {
         PoolSpec {
             name: name.to_string(),
@@ -309,6 +317,7 @@ impl PoolSpec {
             replicas,
             min_replicas: replicas,
             max_replicas: replicas,
+            interconnect: None,
         }
     }
 }
@@ -334,6 +343,7 @@ impl ClusterSpec {
                 replicas,
                 min_replicas: cfg.cluster.control.min_replicas,
                 max_replicas: cfg.cluster.control.max_replicas,
+                interconnect: None,
             }],
         }
     }
@@ -374,6 +384,9 @@ impl ClusterSpec {
             }
             if p.spec.scheduler.max_chunk_size < p.spec.scheduler.chunk_size {
                 bail!("pool '{}': max_chunk_size must be >= chunk_size", p.name);
+            }
+            if let Some(ic) = &p.interconnect {
+                ic.validate(&format!("pool '{}': interconnect", p.name))?;
             }
             for &t in &p.spec.tier_affinity {
                 // Affinity indices must name real tiers — the old silo
@@ -470,6 +483,55 @@ impl Default for DispatchConfig {
     }
 }
 
+/// Interconnect between replicas, the price model live KV migration
+/// runs on (see `simulator::migration`): moving a request whose KV
+/// occupies `B` bytes costs `B / bandwidth + latency` seconds of
+/// virtual time, during which the KV occupies both replicas. Configured
+/// under `cluster.interconnect`; when absent — or with zero bandwidth —
+/// live migration is disabled and every timeline is bit-for-bit the
+/// handoff-only one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InterconnectConfig {
+    /// Usable cross-replica bandwidth, decimal gigabytes per second.
+    /// Defaults to a PCIe/InfiniBand-class 25 GB/s; zero disables live
+    /// migration.
+    pub bandwidth_gbytes_per_s: f64,
+    /// Fixed per-transfer setup latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        InterconnectConfig { bandwidth_gbytes_per_s: 25.0, latency_s: 1e-3 }
+    }
+}
+
+impl InterconnectConfig {
+    /// Parse a JSON `interconnect` object: defaults from
+    /// [`InterconnectConfig::default`], overridden per key. The one
+    /// parser behind both the cluster-level and per-pool surfaces, so
+    /// the two can never drift.
+    fn from_json(j: &Json) -> InterconnectConfig {
+        let mut k = InterconnectConfig::default();
+        override_f64(j, "bandwidth_gbytes_per_s", &mut k.bandwidth_gbytes_per_s);
+        override_f64(j, "latency_s", &mut k.latency_s);
+        k
+    }
+
+    /// Range-check both fields; `what` names the config surface in the
+    /// error (NaN fails both comparisons and is rejected too). Shared by
+    /// `Config::validate` and `ClusterSpec::validate`.
+    fn validate(&self, what: &str) -> Result<()> {
+        if self.bandwidth_gbytes_per_s.is_nan() || self.bandwidth_gbytes_per_s < 0.0 {
+            bail!("{what}.bandwidth_gbytes_per_s must be >= 0 (0 disables live migration)");
+        }
+        if self.latency_s.is_nan() || self.latency_s < 0.0 {
+            bail!("{what}.latency_s must be non-negative");
+        }
+        Ok(())
+    }
+}
+
 /// Elastic control-plane policy selector (see `simulator::control`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AutoscalePolicy {
@@ -556,6 +618,9 @@ pub struct ClusterConfig {
     pub dispatch: DispatchConfig,
     /// Elastic control plane: autoscaling + admission control.
     pub control: ControlConfig,
+    /// Cross-replica interconnect for live KV migration (`None` — the
+    /// default — keeps the handoff-only behavior bit-for-bit).
+    pub interconnect: Option<InterconnectConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -565,6 +630,7 @@ impl Default for ClusterConfig {
             pools: Vec::new(),
             dispatch: DispatchConfig::default(),
             control: ControlConfig::default(),
+            interconnect: None,
         }
     }
 }
@@ -654,6 +720,9 @@ impl Config {
             if let Some(v) = c.get("dispatch_seed").and_then(|v| v.as_f64()) {
                 cfg.cluster.dispatch.seed = v as u64;
             }
+            if let Some(ic) = c.get("interconnect") {
+                cfg.cluster.interconnect = Some(InterconnectConfig::from_json(ic));
+            }
             if let Some(ctl) = c.get("control") {
                 // With pools configured, autoscale bounds live on the
                 // pools (the control-level ones only seed the one-pool
@@ -729,6 +798,9 @@ impl Config {
         if k.scale_down_queue_s > k.scale_up_queue_s {
             bail!("control.scale_down_queue_s must not exceed scale_up_queue_s");
         }
+        if let Some(ic) = &self.cluster.interconnect {
+            ic.validate("cluster.interconnect")?;
+        }
         if !self.cluster.pools.is_empty() {
             self.cluster_spec().validate(self.tiers.len())?;
         }
@@ -796,12 +868,16 @@ fn parse_pool(j: &Json, base: &Config) -> Result<PoolSpec> {
     // config opts it into autoscaling with explicit min/max.
     let min_replicas = j.get("min_replicas").and_then(|v| v.as_usize()).unwrap_or(replicas);
     let max_replicas = j.get("max_replicas").and_then(|v| v.as_usize()).unwrap_or(replicas);
+    // Per-pool interconnect attachment; absence inherits the
+    // cluster-level setting.
+    let interconnect = j.get("interconnect").map(InterconnectConfig::from_json);
     Ok(PoolSpec {
         name,
         spec: ReplicaSpec { hardware, scheduler, tier_affinity },
         replicas,
         min_replicas,
         max_replicas,
+        interconnect,
     })
 }
 
@@ -1098,6 +1174,58 @@ mod tests {
     }
 
     #[test]
+    fn interconnect_defaults_off_and_parses() {
+        assert!(Config::default().cluster.interconnect.is_none());
+        // An empty object takes the defaults (25 GB/s, 1 ms).
+        let c = Config::from_json_str(r#"{"cluster": {"interconnect": {}}}"#).unwrap();
+        assert_eq!(c.cluster.interconnect, Some(InterconnectConfig::default()));
+        let c = Config::from_json_str(
+            r#"{"cluster": {"interconnect": {"bandwidth_gbytes_per_s": 100, "latency_s": 0.005}}}"#,
+        )
+        .unwrap();
+        let ic = c.cluster.interconnect.unwrap();
+        assert_eq!(ic.bandwidth_gbytes_per_s, 100.0);
+        assert_eq!(ic.latency_s, 0.005);
+        // Zero bandwidth is legal (it disables migration), negative is not.
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"interconnect": {"bandwidth_gbytes_per_s": 0}}}"#
+        )
+        .is_ok());
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"interconnect": {"bandwidth_gbytes_per_s": -1}}}"#
+        )
+        .is_err());
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"interconnect": {"latency_s": -0.5}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pool_interconnect_overrides_parse_and_validate() {
+        let c = Config::from_json_str(
+            r#"{"cluster": {
+                "interconnect": {"bandwidth_gbytes_per_s": 25},
+                "pools": [
+                    {"name": "fast", "replicas": 1,
+                     "interconnect": {"bandwidth_gbytes_per_s": 100, "latency_s": 0.0005}},
+                    {"name": "inherits", "replicas": 1}
+                ]}}"#,
+        )
+        .unwrap();
+        let fast = c.cluster.pools[0].interconnect.unwrap();
+        assert_eq!((fast.bandwidth_gbytes_per_s, fast.latency_s), (100.0, 0.0005));
+        assert!(c.cluster.pools[1].interconnect.is_none(), "absent = inherit cluster-level");
+        // Per-pool values are validated like the cluster-level ones.
+        assert!(Config::from_json_str(
+            r#"{"cluster": {"pools": [
+                {"name": "p", "replicas": 1,
+                 "interconnect": {"bandwidth_gbytes_per_s": -5}}]}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
     fn json_dispatch_seed_override() {
         let c = Config::from_json_str(
             r#"{"cluster": {"replicas": 4, "dispatch": "p2c", "dispatch_seed": 99}}"#,
@@ -1128,6 +1256,7 @@ mod tests {
             "sarathi_edf_baseline.json",
             "qwen_tp2.json",
             "hetero_pools.json",
+            "live_migration.json",
         ] {
             let path = dir.join(name);
             let cfg = Config::from_file(path.to_str().unwrap())
@@ -1144,6 +1273,9 @@ mod tests {
         assert_eq!(spec.pools.len(), 2);
         assert_eq!(spec.pools[1].spec.affinity_mask(), 0b110);
         assert_eq!(hetero.cluster.dispatch.policy, DispatchPolicy::LeastLoaded);
+        let mig = Config::from_file(dir.join("live_migration.json").to_str().unwrap()).unwrap();
+        let ic = mig.cluster.interconnect.expect("interconnect configured");
+        assert!(ic.bandwidth_gbytes_per_s > 0.0);
     }
 
     #[test]

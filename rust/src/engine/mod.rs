@@ -30,6 +30,7 @@ use crate::request::{Phase, RequestId, RequestSpec, RequestStore};
 use crate::scheduler::{
     Batch, NiyamaScheduler, PlanContext, SarathiPolicy, SarathiScheduler, Scheduler,
 };
+use crate::simulator::migration::{LiveMigration, MigrationCandidate};
 use crate::simulator::{BatchStats, CostModel, PrefillSegment};
 use std::sync::Arc;
 
@@ -107,6 +108,13 @@ pub struct LoadSnapshot {
     /// `queued_prefill_tokens` converted to seconds at this replica's
     /// reference prefill rate — the dispatcher's wait-time estimate.
     pub queued_prefill_s: f64,
+    /// The serviceable queued prefill seconds attributed to each QoS
+    /// tier (index-aligned with the tier table; sums to
+    /// `queued_prefill_s` up to float association). This is the
+    /// per-tier demand signal tier-aware pool selection ranks scale-up
+    /// candidates with: capacity helps a drowning tier only if the
+    /// receiving pool's affinity lets it serve that tier.
+    pub queued_prefill_s_per_tier: Vec<f64>,
     /// Requests currently in decode phase.
     pub decodes: usize,
     /// KV-cache occupancy, tokens.
@@ -134,9 +142,17 @@ pub struct LoadSnapshot {
     /// This replica's reference price of one decode token (one batched
     /// iteration of wall clock).
     pub sec_per_decode_token: f64,
+    /// KV-cache bytes one token occupies on this replica's hardware —
+    /// what live migration multiplies by a request's KV tokens to price
+    /// its transfer over the interconnect.
+    pub kv_bytes_per_token: f64,
     /// The replica's configured prefill chunk size (scheduler floor) —
     /// predictive dispatch prices one chunk of *this* size.
     pub chunk_size: u32,
+    /// The replica's decode batch cap (`max_batch_decodes`): decodes
+    /// beyond it stall outright, so the migration planners refuse to
+    /// plan more inbound decoders than the target has slots for.
+    pub max_batch_decodes: usize,
     /// Bitmask of QoS tiers this replica serves (0 = every tier). Set by
     /// the cluster from the replica's pool spec; the engine itself is
     /// affinity-oblivious.
@@ -252,6 +268,25 @@ pub struct Engine<B: ExecutionBackend> {
     /// Configured prefill chunk size, published in load snapshots so
     /// predictive dispatch prices chunks of this replica's own size.
     chunk_size: u32,
+    /// Configured decode batch cap, published in load snapshots so the
+    /// migration planners can respect the target's decode slots.
+    max_batch_decodes: usize,
+    /// KV bytes per token of the configured hardware — prices live-KV
+    /// transfers and is published in load snapshots.
+    kv_bytes_per_token: f64,
+    /// Outbound live-KV transfers still streaming: `(release_at,
+    /// kv_tokens)`. The local request is already a `Migrated` tombstone,
+    /// but its pages stay resident until the copy completes, so the
+    /// reservation counts toward KV occupancy (the source half of the
+    /// double-occupancy window) and blocks `is_drained` until released.
+    outbound: Vec<(f64, u64)>,
+    /// Inbound live migrations still in their transfer window:
+    /// `(resume_at, id)`, sorted by resume time. The request is already
+    /// in the store and the live set (so it is counted and its KV —
+    /// the target half of the double-occupancy window — is occupied),
+    /// but the scheduler is only told about it once the copy completes,
+    /// so it cannot emit tokens mid-transfer (stop-and-copy).
+    held: Vec<(f64, RequestId)>,
 }
 
 /// Build the configured scheduler over a latency model.
@@ -326,6 +361,10 @@ impl<B: ExecutionBackend> Engine<B> {
             sec_per_prefill_token,
             sec_per_decode_token,
             chunk_size: chunk,
+            max_batch_decodes: cfg.scheduler.max_batch_decodes,
+            kv_bytes_per_token: cfg.hardware.kv_bytes_per_token,
+            outbound: Vec::new(),
+            held: Vec::new(),
         }
     }
 
@@ -435,21 +474,36 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// Run one scheduling iteration. Returns false when there is nothing
-    /// left to do (no active work and no future arrivals).
+    /// left to do (no active work, no future arrivals, no live-KV
+    /// transfer still in flight).
     pub fn step(&mut self) -> bool {
+        self.settle_transfers();
         self.admit_due();
 
         let ctx = PlanContext {
             now: self.now,
             kv_capacity: self.kv_capacity,
-            kv_used: self.store.total_kv_tokens(),
+            // Outbound live-KV reservations occupy real pages until the
+            // copy completes, so the scheduler's headroom must see them.
+            kv_used: self.store.total_kv_tokens() + self.reserved_outbound_kv(),
         };
         let batch = self.scheduler.plan(ctx, &mut self.store);
 
         if batch.is_empty() {
-            // Idle: jump to the next arrival, or stop.
-            if self.next_pending < self.pending.len() {
-                self.now = self.pending[self.next_pending].0;
+            // Idle (or everything here is mid-transfer): jump to the
+            // next wake-up — arrival, inbound resume, or outbound
+            // release — or stop when none exists. `settle_transfers`
+            // already cleared everything due, so each wake-up is
+            // strictly in the future and the loop always progresses.
+            let mut wake = self.pending.get(self.next_pending).map(|&(t, _)| t);
+            if let Some(&(t, _)) = self.held.first() {
+                wake = Some(wake.map_or(t, |w| w.min(t)));
+            }
+            for &(t, _) in &self.outbound {
+                wake = Some(wake.map_or(t, |w| w.min(t)));
+            }
+            if let Some(t) = wake {
+                self.now = self.now.max(t);
                 return true;
             }
             return false;
@@ -537,14 +591,31 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// Time of this replica's next event on the shared virtual clock:
-    /// `now` while it has admitted work (an iteration can start
-    /// immediately), the next dispatched arrival while idle, `None` when
-    /// fully drained. O(1) — the cluster event loop polls this per event.
+    /// `now` while it has *schedulable* admitted work (an iteration can
+    /// start immediately), otherwise the earliest of the next dispatched
+    /// arrival, inbound live-migration resume, or outbound live-KV
+    /// release; `None` when fully drained. Held inbound requests are in
+    /// the live set but invisible to the scheduler, so a replica whose
+    /// only live work is mid-transfer must NOT report an immediate
+    /// event — stepping it early would park its clock at the resume
+    /// instant and delay any arrival dispatched to it during the window
+    /// (the machine is idle while the DMA streams; only the moved
+    /// request pauses). O(1) in the live set and O(transfers-in-flight)
+    /// — the cluster event loop polls this per event.
     pub fn next_event_time(&self) -> Option<f64> {
-        if !self.live.is_empty() {
+        // `held` ids are always members of `live`, so a strict excess
+        // means some admitted request is actually schedulable now.
+        if self.live.len() > self.held.len() {
             return Some(self.now);
         }
-        self.pending.get(self.next_pending).map(|&(t, _)| t.max(self.now))
+        let mut next = self.pending.get(self.next_pending).map(|&(t, _)| t);
+        if let Some(&(t, _)) = self.held.first() {
+            next = Some(next.map_or(t, |n| n.min(t)));
+        }
+        for &(t, _) in &self.outbound {
+            next = Some(next.map_or(t, |n| n.min(t)));
+        }
+        next.map(|t| t.max(self.now))
     }
 
     /// Advance this replica up to virtual time `t`: run every iteration
@@ -573,6 +644,7 @@ impl<B: ExecutionBackend> Engine<B> {
             queued_prefill_tokens: 0,
             relegated_prefill_tokens: 0,
             queued_prefill_s: 0.0,
+            queued_prefill_s_per_tier: vec![0.0; self.n_tiers],
             decodes: 0,
             kv_used: 0,
             kv_committed: 0,
@@ -580,13 +652,19 @@ impl<B: ExecutionBackend> Engine<B> {
             tier_slack_s: vec![f64::INFINITY; self.n_tiers],
             sec_per_prefill_token: self.sec_per_prefill_token,
             sec_per_decode_token: self.sec_per_decode_token,
+            kv_bytes_per_token: self.kv_bytes_per_token,
             chunk_size: self.chunk_size,
+            max_batch_decodes: self.max_batch_decodes,
             tier_affinity_mask: 0,
         };
+        // Outbound live-KV reservations are occupied pages: the request
+        // left the store, its KV has not left the cache yet.
+        snap.kv_used += self.reserved_outbound_kv();
         for &id in &self.live {
             let r = self.store.get(id);
             debug_assert!(r.is_active(), "live set out of sync for {id}");
             let rem = r.prefill_remaining();
+            let tier = r.spec.tier.min(self.n_tiers - 1);
             if r.phase == Phase::Decode {
                 snap.decodes += 1;
             }
@@ -601,13 +679,14 @@ impl<B: ExecutionBackend> Engine<B> {
             if rem > 0 {
                 snap.backlog += 1;
                 snap.queued_prefill_tokens += rem as u64;
+                snap.queued_prefill_s_per_tier[tier] +=
+                    rem as f64 * self.sec_per_prefill_token;
             }
             let next_deadline = if r.decoded == 0 {
                 r.deadlines().first_token()
             } else {
                 r.next_token_deadline(self.now, r.decode_remaining().max(1))
             };
-            let tier = r.spec.tier.min(self.n_tiers - 1);
             let slack = next_deadline - self.now;
             if slack < snap.tier_slack_s[tier] {
                 snap.tier_slack_s[tier] = slack;
@@ -619,6 +698,8 @@ impl<B: ExecutionBackend> Engine<B> {
             snap.queued_prefill_tokens += spec.prompt_tokens as u64;
             snap.kv_committed += spec.prompt_tokens as u64 + spec.decode_tokens as u64;
             let tier = spec.tier.min(self.n_tiers - 1);
+            snap.queued_prefill_s_per_tier[tier] +=
+                spec.prompt_tokens as f64 * self.sec_per_prefill_token;
             let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
             let deadline = crate::qos::Deadlines::new(*arrival_s, slo).first_token();
             let slack = deadline - self.now;
@@ -695,11 +776,185 @@ impl<B: ExecutionBackend> Engine<B> {
         self.pending.split_off(self.next_pending).into_iter().map(|(_, s)| s).collect()
     }
 
+    // ---- live KV migration (see `simulator::migration`) -----------------
+
+    /// KV tokens still reserved by outbound live-KV transfers.
+    fn reserved_outbound_kv(&self) -> u64 {
+        self.outbound.iter().map(|&(_, tok)| tok).sum()
+    }
+
+    /// Whether `id` is an inbound live migration still in its transfer
+    /// window (in the store and live set, invisible to the scheduler).
+    fn is_held(&self, id: RequestId) -> bool {
+        self.held.iter().any(|&(_, h)| h == id)
+    }
+
+    /// Resolve every transfer whose window has closed at the current
+    /// clock: outbound reservations release their KV, inbound requests
+    /// are handed to the scheduler and resume. Runs at the top of every
+    /// `step`, so a transfer completion is processed before the next
+    /// batch is planned.
+    fn settle_transfers(&mut self) {
+        if !self.outbound.is_empty() {
+            let now = self.now;
+            self.outbound.retain(|&(t, _)| t > now);
+        }
+        while self.held.first().is_some_and(|&(t, _)| t <= self.now) {
+            let (_, id) = self.held.remove(0);
+            self.release_hold(id);
+        }
+    }
+
+    /// Hand a resumed live migration to the scheduler: a decode-phase
+    /// request enters the decode set directly (no re-prefill), a
+    /// mid-prefill one re-enters the prefill queue with its transferred
+    /// progress intact.
+    fn release_hold(&mut self, id: RequestId) {
+        if self.store.get(id).phase == Phase::Decode {
+            self.scheduler.on_prefill_complete(id, &self.store);
+        } else {
+            self.scheduler.on_arrival(id, &self.store);
+        }
+    }
+
+    /// Export a mid-flight request for live migration (stop-and-copy):
+    /// its full progress and latency history are returned for the target
+    /// to resume from, the local entry becomes a `Migrated` tombstone,
+    /// and the KV pages stay reserved here until `release_at` (the end
+    /// of the transfer window) — the source half of double occupancy.
+    /// Unlike [`Engine::migrate_out`], the request may be decoding.
+    pub fn migrate_out_live(&mut self, id: RequestId, release_at: f64) -> LiveMigration {
+        debug_assert!(!self.is_held(id), "cannot re-export a request mid-transfer");
+        let m = {
+            let r = self.store.get_mut(id);
+            debug_assert!(r.is_active(), "only live requests migrate");
+            let m = LiveMigration {
+                spec: r.spec.clone(),
+                prefilled: r.prefilled,
+                decoded: r.decoded,
+                first_token_at: r.first_token_at,
+                last_token_at: r.last_token_at,
+                max_tbt: r.max_tbt,
+                max_lateness: r.max_lateness,
+                was_relegated: r.was_relegated,
+            };
+            r.phase = Phase::Migrated;
+            m
+        };
+        self.live.remove(&id);
+        // No scheduler callback: its queue retention prunes `Migrated`
+        // tombstones on the next plan, exactly like `migrate_out`.
+        self.backend.release(id);
+        if m.kv_tokens() > 0 && release_at > self.now {
+            self.outbound.push((release_at, m.kv_tokens() as u64));
+        }
+        m
+    }
+
+    /// Admit a live migration on the receiving replica. The request is
+    /// inserted into the store immediately — it is counted, its original
+    /// arrival time and latency history are intact, and its KV is
+    /// occupied from this instant (the target half of double occupancy)
+    /// — but the scheduler only learns of it at `resume_at`, when the
+    /// copy completes, so no token can be emitted mid-transfer.
+    /// Decoding resumes exactly where the source stopped: no re-prefill.
+    pub fn admit_migrated_live(&mut self, m: LiveMigration, resume_at: f64) -> RequestId {
+        debug_assert!(
+            m.spec.arrival_s <= self.now + 1e-9,
+            "live migration must not admit requests from the future"
+        );
+        let slo = crate::qos::slo_for_tier(&self.tiers, m.spec.tier);
+        let id = self.store.insert(m.spec, slo);
+        {
+            let r = self.store.get_mut(id);
+            r.prefilled = m.prefilled;
+            r.decoded = m.decoded;
+            r.first_token_at = m.first_token_at;
+            r.last_token_at = m.last_token_at;
+            r.max_tbt = m.max_tbt;
+            r.max_lateness = m.max_lateness;
+            r.was_relegated = m.was_relegated;
+            r.was_migrated_live = true;
+            r.phase = if r.prefill_remaining() == 0 { Phase::Decode } else { Phase::Prefill };
+        }
+        self.live.insert(id);
+        if resume_at <= self.now {
+            self.release_hold(id);
+        } else {
+            let mut i = self.held.len();
+            while i > 0 && self.held[i - 1].0 > resume_at {
+                i -= 1;
+            }
+            self.held.insert(i, (resume_at, id));
+        }
+        id
+    }
+
+    /// Everything the migration planner needs to know about one movable
+    /// request, with the deadline arithmetic resolved at the current
+    /// clock.
+    fn migration_candidate(&self, id: RequestId) -> MigrationCandidate {
+        let r = self.store.get(id);
+        MigrationCandidate {
+            id,
+            tier: r.spec.tier,
+            kv_tokens: r.kv_tokens(),
+            decode_remaining: r.decode_remaining(),
+            next_deadline: r.next_token_deadline(self.now, r.decode_remaining().max(1)),
+            last_deadline: r.deadlines().total(r.spec.decode_tokens),
+        }
+    }
+
+    /// Decoding requests a graceful drain may move out live (the ones
+    /// [`Engine::drain_candidates`] cannot touch): anything already
+    /// emitting tokens — relegated or not — that is not itself
+    /// mid-transfer. Sorted by id so drain order is deterministic.
+    pub fn drain_live_candidates(&self) -> Vec<MigrationCandidate> {
+        let mut ids: Vec<RequestId> = self
+            .live
+            .iter()
+            .copied()
+            .filter(|&id| {
+                let r = self.store.get(id);
+                r.decoded > 0
+                    && matches!(r.phase, Phase::Decode | Phase::Relegated)
+                    && !self.is_held(id)
+            })
+            .collect();
+        ids.sort_unstable();
+        ids.into_iter().map(|id| self.migration_candidate(id)).collect()
+    }
+
+    /// Decoding requests the proactive rebalancer may move off this
+    /// replica: in-service decodes that have not already been moved once
+    /// (one live move per request keeps the rebalancer from bouncing a
+    /// request between replicas) and are not mid-transfer.
+    pub fn rebalance_candidates(&self) -> Vec<MigrationCandidate> {
+        let mut ids: Vec<RequestId> = self
+            .live
+            .iter()
+            .copied()
+            .filter(|&id| {
+                let r = self.store.get(id);
+                r.decoded > 0
+                    && r.phase == Phase::Decode
+                    && !r.was_migrated_live
+                    && !self.is_held(id)
+            })
+            .collect();
+        ids.sort_unstable();
+        ids.into_iter().map(|id| self.migration_candidate(id)).collect()
+    }
+
     /// True when this replica owes no work at all: nothing admitted and
-    /// unfinished, nothing dispatched and pending. A draining replica
-    /// retires exactly when this first holds.
+    /// unfinished, nothing dispatched and pending, and no outbound
+    /// live-KV transfer still streaming from its cache (the source of a
+    /// stop-and-copy holds the pages until the copy completes, so it
+    /// cannot release the hardware mid-transfer). Inbound holds are in
+    /// the live set and need no extra term. A draining replica retires
+    /// exactly when this first holds.
     pub fn is_drained(&self) -> bool {
-        self.live.is_empty() && self.next_pending >= self.pending.len()
+        self.live.is_empty() && self.next_pending >= self.pending.len() && self.outbound.is_empty()
     }
 
     /// Evaluation summary at the current time.
@@ -1031,6 +1286,165 @@ mod tests {
         assert_eq!(out.prompt_tokens, 5000);
         assert_eq!(eng.store.get(0).phase, Phase::Migrated);
         assert!(eng.is_drained());
+    }
+
+    /// Drive `eng` until request `id` has emitted at least `n` tokens.
+    fn decode_until(eng: &mut Engine<SimBackend>, id: crate::request::RequestId, n: u32) {
+        while eng.store.get(id).decoded < n {
+            assert!(eng.step(), "request must still be making progress");
+        }
+    }
+
+    #[test]
+    fn live_migration_round_trip_resumes_without_reprefill() {
+        let cfg = Config::default();
+        let mut src = Engine::sim(&cfg);
+        src.submit_now(spec(0.0, 2000, 50, 1));
+        decode_until(&mut src, 0, 10);
+        let decoded_at_move = src.store.get(0).decoded;
+        let first_tok = src.store.get(0).first_token_at;
+        let t0 = src.now();
+
+        let m = src.migrate_out_live(0, t0 + 0.5);
+        assert_eq!(m.prefilled, 2000);
+        assert_eq!(m.decoded, decoded_at_move);
+        assert_eq!(src.store.get(0).phase, Phase::Migrated);
+
+        let mut dst = Engine::sim(&cfg);
+        dst.advance_to(t0);
+        let id = dst.admit_migrated_live(m, t0 + 0.5);
+        // Counted immediately, history intact, no prefill owed.
+        assert_eq!(dst.summary(5000).total, 1);
+        let r = dst.store.get(id);
+        assert_eq!(r.phase, Phase::Decode);
+        assert_eq!(r.prefilled, 2000);
+        assert_eq!(r.decoded, decoded_at_move);
+        assert_eq!(r.first_token_at, first_tok, "TTFT survives the move");
+        assert!(r.was_migrated_live);
+
+        dst.run(1e6);
+        let r = dst.store.get(id);
+        assert_eq!(r.phase, Phase::Finished);
+        assert_eq!(r.decoded, 50);
+        assert_eq!(
+            dst.stats.scheduled_prefill_tokens, 0,
+            "live migration must not re-prefill at the target"
+        );
+        // The transferred tail resumed only after the window closed.
+        assert!(r.finished_at.unwrap() >= t0 + 0.5);
+    }
+
+    #[test]
+    fn live_migration_kv_occupies_both_ends_during_the_window_only() {
+        let cfg = Config::default();
+        let mut src = Engine::sim(&cfg);
+        src.submit_now(spec(0.0, 1000, 40, 1));
+        decode_until(&mut src, 0, 5);
+        let t0 = src.now();
+        let kv = src.store.get(0).kv_tokens() as u64;
+        assert!(kv >= 1005);
+
+        let release = t0 + 1.0;
+        let m = src.migrate_out_live(0, release);
+        assert_eq!(m.kv_tokens() as u64, kv);
+        // Source: store freed, but the snapshot still carries the
+        // reservation until the copy completes.
+        assert_eq!(src.store.total_kv_tokens(), 0);
+        assert_eq!(src.load_snapshot().kv_used, kv);
+        assert!(!src.is_drained(), "streaming KV pins the source");
+        assert_eq!(src.next_event_time(), Some(release));
+
+        let mut dst = Engine::sim(&cfg);
+        dst.advance_to(t0);
+        dst.admit_migrated_live(m, release);
+        // Target occupies the same tokens from the transfer start.
+        assert_eq!(dst.load_snapshot().kv_used, kv);
+
+        // Past the window: source side fully free and drained (the step
+        // settles the release and then reports nothing left to do).
+        src.advance_to(release);
+        assert!(!src.step(), "nothing left after the release settles");
+        assert_eq!(src.load_snapshot().kv_used, 0);
+        assert!(src.is_drained());
+    }
+
+    #[test]
+    fn held_migration_emits_no_tokens_before_resume() {
+        let cfg = Config::default();
+        let mut src = Engine::sim(&cfg);
+        src.submit_now(spec(0.0, 500, 30, 0));
+        decode_until(&mut src, 0, 3);
+        let t0 = src.now();
+        let resume = t0 + 2.0;
+        let m = src.migrate_out_live(0, resume);
+
+        let mut dst = Engine::sim(&cfg);
+        dst.advance_to(t0);
+        let id = dst.admit_migrated_live(m, resume);
+        // The only live work is mid-transfer, so the next event is the
+        // resume itself — the engine must NOT report an immediate event
+        // (stepping it early would park its clock at the resume instant
+        // and delay arrivals dispatched during the window).
+        assert_eq!(dst.next_event_time(), Some(resume));
+        // An arrival dispatched into the window is served during it:
+        // the machine is idle while the DMA streams, only the moved
+        // request pauses.
+        dst.enqueue(spec(t0 + 0.2, 300, 1, 1));
+        assert_eq!(dst.next_event_time(), Some(t0 + 0.2));
+        dst.step_to(resume - 1e-9);
+        assert_eq!(dst.store.get(id).decoded, 3, "no tokens mid-transfer");
+        let newcomer = 1; // second store entry
+        assert_eq!(
+            dst.store.get(newcomer).phase,
+            Phase::Finished,
+            "arrival must be served inside the transfer window"
+        );
+        assert!(dst.store.get(newcomer).finished_at.unwrap() < resume);
+        dst.run(1e6);
+        assert_eq!(dst.store.get(id).phase, Phase::Finished);
+        assert!(dst.store.get(id).last_token_at.unwrap() > resume);
+    }
+
+    #[test]
+    fn snapshot_splits_queued_seconds_by_tier() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_now(spec(0.0, 1000, 10, 0));
+        eng.enqueue(spec(50.0, 500, 10, 1));
+        let s = eng.load_snapshot();
+        assert_eq!(s.queued_prefill_s_per_tier.len(), 3);
+        let spt = eng.sec_per_prefill_token();
+        assert!((s.queued_prefill_s_per_tier[0] - 1000.0 * spt).abs() < 1e-12);
+        assert!((s.queued_prefill_s_per_tier[1] - 500.0 * spt).abs() < 1e-12);
+        assert_eq!(s.queued_prefill_s_per_tier[2], 0.0);
+        let total: f64 = s.queued_prefill_s_per_tier.iter().sum();
+        assert!((total - s.queued_prefill_s).abs() < 1e-9, "split sums to the total");
+        assert_eq!(s.kv_bytes_per_token, cfg.hardware.kv_bytes_per_token);
+    }
+
+    #[test]
+    fn migration_candidate_sets_cover_decoders_only() {
+        let cfg = Config::default();
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_now(spec(0.0, 800, 20, 0));
+        eng.submit_now(spec(0.0, 9000, 20, 1));
+        decode_until(&mut eng, 0, 1);
+        assert!(eng.store.get(1).decoded == 0, "test premise: request 1 still prefilling");
+        let drain: Vec<_> = eng.drain_live_candidates();
+        assert_eq!(drain.len(), 1);
+        assert_eq!(drain[0].id, 0);
+        assert_eq!(drain[0].kv_tokens, eng.store.get(0).kv_tokens());
+        assert_eq!(drain[0].decode_remaining, eng.store.get(0).decode_remaining());
+        let reb = eng.rebalance_candidates();
+        assert_eq!(reb.len(), 1);
+        // A request that already moved once is not rebalanced again.
+        let t0 = eng.now();
+        let m = eng.migrate_out_live(0, t0);
+        let mut dst = Engine::sim(&cfg);
+        dst.advance_to(t0);
+        dst.admit_migrated_live(m, t0);
+        assert!(dst.rebalance_candidates().is_empty());
+        assert_eq!(dst.drain_live_candidates().len(), 1, "drain may still move it");
     }
 
     #[test]

@@ -65,6 +65,15 @@ pub struct Summary {
     pub degraded_per_tier: Vec<usize>,
     /// (time, billed replica count) at every provision/retire edge.
     pub replica_timeline: Vec<(f64, usize)>,
+    /// Mid-flight requests moved by live KV migration, per tier. A
+    /// migrated request is counted (once) by the replica that finished
+    /// it; this tally records the moves themselves. Filled by
+    /// `Cluster::summary`; empty for single-engine summaries.
+    pub migrated_live_per_tier: Vec<usize>,
+    /// KV bytes streamed over the interconnect by live migrations.
+    pub kv_bytes_migrated: f64,
+    /// Virtual seconds spent inside live-migration transfer windows.
+    pub migration_transfer_s: f64,
 }
 
 /// Compute the summary at horizon `horizon_s` (typically the workload end
@@ -168,6 +177,9 @@ pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: 
         rejected_per_tier: Vec::new(),
         degraded_per_tier: Vec::new(),
         replica_timeline: Vec::new(),
+        migrated_live_per_tier: Vec::new(),
+        kv_bytes_migrated: 0.0,
+        migration_transfer_s: 0.0,
     }
 }
 
@@ -189,6 +201,11 @@ impl Summary {
     /// Total arrivals degraded to a looser tier by admission control.
     pub fn degraded_total(&self) -> usize {
         self.degraded_per_tier.iter().sum()
+    }
+
+    /// Total mid-flight requests moved by live KV migration.
+    pub fn migrated_live_total(&self) -> usize {
+        self.migrated_live_per_tier.iter().sum()
     }
 
     /// Rejections as a percentage of everything submitted (admitted +

@@ -14,6 +14,7 @@ pub mod dispatch;
 pub mod hetero;
 pub mod load;
 pub mod micro;
+pub mod migration;
 pub mod overload;
 
 use crate::config::{Config, Policy, SchedulerConfig};
@@ -150,6 +151,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "dispatch" => dispatch::dispatch(scale),
         "autoscale" => autoscale::autoscale(scale),
         "hetero" => hetero::hetero(scale),
+        "migration" => migration::migration(scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n=== {id} ===");
@@ -163,7 +165,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
 
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "tab1", "tab3", "dispatch", "autoscale", "hetero",
+    "fig12", "tab1", "tab3", "dispatch", "autoscale", "hetero", "migration",
 ];
 
 #[cfg(test)]

@@ -56,6 +56,11 @@ pub struct Request {
     /// Whether this request was ever relegated (for metrics; a relegated
     /// request that re-enters service keeps this flag).
     pub was_relegated: bool,
+    /// Whether this request was ever moved mid-flight by live KV
+    /// migration (set on the receiving replica's copy). The proactive
+    /// rebalancer skips flagged requests, so a request is never bounced
+    /// between replicas; loss-free drain may still move it again.
+    pub was_migrated_live: bool,
     /// Prompt tokens prefilled so far.
     pub prefilled: u32,
     /// Output tokens emitted so far.
@@ -85,6 +90,7 @@ impl Request {
             slo,
             phase: Phase::Prefill,
             was_relegated: false,
+            was_migrated_live: false,
             prefilled: 0,
             decoded: 0,
             first_token_at: None,

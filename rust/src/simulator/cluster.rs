@@ -16,7 +16,13 @@
 //! 3. optionally (Llumnix-style relegation handoff,
 //!    `DispatchConfig::relegation_handoff`), requests a replica has
 //!    relegated are re-dispatched to a replica with spare headroom, the
-//!    origin keeping only a `Migrated` tombstone.
+//!    origin keeping only a `Migrated` tombstone;
+//! 4. optionally (`cluster.interconnect`, see
+//!    [`crate::simulator::migration`]), even *decoding* requests move
+//!    between replicas: live KV migration prices a move as KV bytes
+//!    over interconnect bandwidth, accelerates loss-free drains
+//!    (retirement no longer waits for local decode completion) and
+//!    proactively rebalances distressed replicas on control ticks.
 //!
 //! # Heterogeneous replica pools (`ClusterSpec`)
 //!
@@ -102,6 +108,7 @@ use crate::simulator::dispatch::{
     build_dispatcher_for, AdmissionController, AdmissionDecision, AdmissionPolicy, Dispatcher,
     LeastLoaded,
 };
+use crate::simulator::migration::{MigrationCandidate, MigrationMove, MigrationPlanner};
 use crate::workload::datasets::Dataset;
 
 /// Totally ordered event time for the replica-event heap (virtual times
@@ -151,6 +158,14 @@ pub struct ClusterStats {
     pub retired: usize,
     /// Controller evaluations performed.
     pub control_ticks: u64,
+    /// Mid-flight requests moved by live KV migration, per tier (drain
+    /// acceleration + proactive rebalancing combined).
+    pub migrated_live_per_tier: Vec<usize>,
+    /// KV bytes streamed over the interconnect by live migrations.
+    pub kv_bytes_migrated: f64,
+    /// Virtual seconds spent in live-migration transfer windows (sum
+    /// over moves; windows on different replica pairs may overlap).
+    pub migration_transfer_s: f64,
 }
 
 /// Per-pool runtime state: the engine config one replica of this pool is
@@ -210,6 +225,9 @@ pub struct Cluster {
     pool_of: Vec<usize>,
     /// `(min, max)` per pool, cached in the shape `ControlView` borrows.
     pool_bounds: Vec<(usize, usize)>,
+    /// Affinity mask per pool, cached in the shape `ControlView` borrows
+    /// (tier-aware scale-up ranks candidate pools with it).
+    pool_affinity: Vec<u32>,
     /// Whether any pool restricts which tiers it serves. False for every
     /// pre-pool configuration, which then keeps the exact old dispatch
     /// paths.
@@ -223,6 +241,10 @@ pub struct Cluster {
     retired_at: Vec<Option<f64>>,
     /// Warming slots, maintained so the promote scan is gated O(1).
     warming_count: usize,
+    /// Live KV migration policy (None = interconnect absent or zero
+    /// bandwidth: decoding requests pin their replica, the PR 3/4
+    /// handoff-only behavior bit-for-bit).
+    migration: Option<MigrationPlanner>,
     /// Elastic scaling policy (None = static replica set).
     controller: Option<Box<dyn ScalingController>>,
     control: ControlConfig,
@@ -301,6 +323,7 @@ impl Cluster {
             })
             .collect();
         let pool_bounds: Vec<(usize, usize)> = pools.iter().map(|p| (p.min, p.max)).collect();
+        let pool_affinity: Vec<u32> = pools.iter().map(|p| p.affinity_mask).collect();
         let total = spec.total_replicas();
         assert!(total > 0);
         let mut engines: Vec<Engine<SimBackend>> = Vec::with_capacity(total);
@@ -343,12 +366,14 @@ impl Cluster {
             pools,
             pool_of,
             pool_bounds,
+            pool_affinity,
             has_affinity,
             states: vec![ReplicaState::Active; replicas],
             provisioned_at: vec![0.0; replicas],
             retired_at: vec![None; replicas],
             warming_count: 0,
             next_control_t: control.control_interval_s,
+            migration: MigrationPlanner::for_cluster(cfg, spec),
             controller,
             control,
             admission,
@@ -358,6 +383,7 @@ impl Cluster {
                 dispatched: vec![0; replicas],
                 rejected: vec![0; n_tiers],
                 degraded: vec![0; n_tiers],
+                migrated_live_per_tier: vec![0; n_tiers],
                 ..Default::default()
             },
         }
@@ -393,6 +419,12 @@ impl Cluster {
     /// (time, billed replica count) at every provision/retire edge.
     pub fn replica_timeline(&self) -> &[(f64, usize)] {
         &self.timeline
+    }
+
+    /// Virtual time each slot retired (`None` while still billed) —
+    /// what the drain experiments measure retirement latency from.
+    pub fn retirement_times(&self) -> &[Option<f64>] {
+        &self.retired_at
     }
 
     /// Currently billed (non-retired) replicas.
@@ -447,6 +479,9 @@ impl Cluster {
         s.rejected_per_tier = self.stats.rejected.clone();
         s.degraded_per_tier = self.stats.degraded.clone();
         s.replica_timeline = self.timeline.clone();
+        s.migrated_live_per_tier = self.stats.migrated_live_per_tier.clone();
+        s.kv_bytes_migrated = self.stats.kv_bytes_migrated;
+        s.migration_transfer_s = self.stats.migration_transfer_s;
         s
     }
 
@@ -777,6 +812,7 @@ impl Cluster {
             states: &self.states,
             pool_of: &self.pool_of,
             pool_bounds: &self.pool_bounds,
+            pool_affinity: &self.pool_affinity,
         }
     }
 
@@ -866,7 +902,90 @@ impl Cluster {
             self.wedged[t] = false;
             self.reheap(t);
         }
+        // Decoding requests: live KV migration, when the interconnect is
+        // configured — retirement is then no longer gated on local
+        // decode completion. Without it they finish locally as before.
+        if self.migration.is_some() {
+            self.drain_live_moves(origin);
+        }
         self.reheap(origin);
+    }
+
+    /// Move a draining replica's decoding requests out via live KV
+    /// migration, longest-remaining-first (see
+    /// [`MigrationPlanner::plan_drain`]).
+    fn drain_live_moves(&mut self, origin: usize) {
+        let Some(planner) = self.migration.take() else { return };
+        self.refresh_snapshots();
+        let cands = self.engines[origin].drain_live_candidates();
+        if !cands.is_empty() {
+            let moves = planner.plan_drain(
+                origin,
+                cands,
+                &self.snaps,
+                &self.states,
+                &self.pool_of,
+                self.clock,
+            );
+            for mv in &moves {
+                self.execute_live_migration(mv);
+            }
+        }
+        self.migration = Some(planner);
+    }
+
+    /// One proactive-rebalance evaluation: find distressed Active
+    /// replicas (predicted deadline slack negative within the tick
+    /// horizon, or KV nearly full), plan bounded live moves to peers
+    /// with slack to absorb them, and execute. No-op without an
+    /// interconnect.
+    fn live_rebalance_tick(&mut self) {
+        let Some(planner) = self.migration.take() else { return };
+        self.refresh_snapshots();
+        let mut origins: Vec<(usize, Vec<MigrationCandidate>)> = Vec::new();
+        for i in 0..self.engines.len() {
+            if !self.states[i].is_dispatchable() || !planner.is_distressed(&self.snaps[i]) {
+                continue;
+            }
+            let cands = self.engines[i].rebalance_candidates();
+            if !cands.is_empty() {
+                origins.push((i, cands));
+            }
+        }
+        if !origins.is_empty() {
+            let moves = planner.plan_rebalance(
+                &origins,
+                &self.snaps,
+                &self.states,
+                &self.pool_of,
+                self.clock,
+            );
+            for mv in &moves {
+                self.execute_live_migration(mv);
+            }
+        }
+        self.migration = Some(planner);
+    }
+
+    /// Execute one planned live move: stop-and-copy export at the
+    /// origin (KV stays reserved there until `resume_at`), immediate
+    /// counted admission at the target with decoding resuming at
+    /// `resume_at` — the transfer-in-flight events surface through each
+    /// engine's `next_event_time`, so the lazy-deletion heap wakes both
+    /// ends exactly when the window closes.
+    fn execute_live_migration(&mut self, mv: &MigrationMove) {
+        let m = self.engines[mv.origin].migrate_out_live(mv.id, mv.resume_at);
+        let tier = m.spec.tier.min(self.tiers.len() - 1);
+        self.engines[mv.target].advance_to(self.clock);
+        self.engines[mv.target].admit_migrated_live(m, mv.resume_at);
+        self.stats.migrated_live_per_tier[tier] += 1;
+        self.stats.kv_bytes_migrated += mv.kv_bytes;
+        self.stats.migration_transfer_s += mv.transfer_s;
+        self.snap_dirty[mv.origin] = true;
+        self.snap_dirty[mv.target] = true;
+        self.wedged[mv.target] = false;
+        self.reheap(mv.origin);
+        self.reheap(mv.target);
     }
 
     /// Least-loaded Active replica (by `LeastLoaded::score`, ties toward
@@ -935,10 +1054,14 @@ impl Cluster {
         }
     }
 
-    /// One controller evaluation on the shared clock: promote warming
-    /// replicas, push drain progress, then apply the scaling decision.
-    /// The controller names the pool it grows or shrinks; the cluster
-    /// clamps to that pool's own bounds.
+    /// One control evaluation on the shared clock: promote warming
+    /// replicas, push drain progress, run the live-migration rebalancer,
+    /// then apply the scaling decision. The controller names the pool it
+    /// grows or shrinks; the cluster clamps to that pool's own bounds.
+    /// With an interconnect but no autoscaler, ticks still fire for the
+    /// migration planner alone (drain progress + rebalance); the
+    /// floor-enforcement and scaling logic below stay tied to the
+    /// controller, exactly as before.
     fn control_tick(&mut self) {
         self.stats.control_ticks += 1;
         self.promote_warming();
@@ -948,6 +1071,10 @@ impl Cluster {
                 self.try_drain_moves(i);
                 self.maybe_retire(i);
             }
+        }
+        self.live_rebalance_tick();
+        if self.controller.is_none() {
+            return;
         }
         // Enforce every pool's configured floor regardless of policy
         // signals: a pool started (or left) below `min_replicas`
@@ -1121,11 +1248,11 @@ impl Cluster {
 
     /// Run the cluster event loop until every replica drains or the next
     /// event would start at or past `horizon_s`. With a scaling
-    /// controller configured, periodic control ticks race with work
-    /// events on the same clock (ties go to the tick, so scaling and
-    /// drain progress are visible to the dispatch decision at the same
-    /// instant); ticks stop when no work remains — a controller cannot
-    /// create work.
+    /// controller (or live-migration planner) configured, periodic
+    /// control ticks race with work events on the same clock (ties go to
+    /// the tick, so scaling, drain and migration progress are visible to
+    /// the dispatch decision at the same instant); ticks stop when no
+    /// work remains — a controller cannot create work.
     pub fn run(&mut self, horizon_s: f64) {
         loop {
             if self.warming_count > 0 {
@@ -1136,7 +1263,7 @@ impl Cluster {
             if arrival_t.is_none() && engine_ev.is_none() {
                 break;
             }
-            if self.controller.is_some() {
+            if self.controller.is_some() || self.migration.is_some() {
                 let next_work = arrival_t
                     .unwrap_or(f64::INFINITY)
                     .min(engine_ev.map_or(f64::INFINITY, |(t, _)| t));
@@ -1283,6 +1410,7 @@ pub fn silo_cluster_spec(cfg: &Config, groups: &[SiloGroup]) -> ClusterSpec {
                 replicas: g.replicas,
                 min_replicas: g.replicas,
                 max_replicas: g.replicas,
+                interconnect: None,
             })
             .collect(),
     }
@@ -1309,9 +1437,11 @@ pub fn run_silo(
         relegation_handoff: false,
         seed: 0,
     };
-    // Silos are the static, admit-everything baseline regardless of
-    // what control plane the shared cluster under test runs.
+    // Silos are the static, admit-everything, no-migration baseline
+    // regardless of what control plane the shared cluster under test
+    // runs.
     silo_cfg.cluster.control = ControlConfig::default();
+    silo_cfg.cluster.interconnect = None;
     silo_cfg.cluster.pools.clear();
     // The old per-tier loop simply never served arrivals whose tier had
     // no silo group; keep that contract by pre-filtering.

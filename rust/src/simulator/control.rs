@@ -91,6 +91,11 @@ pub struct ControlView<'a> {
     pub pool_of: &'a [usize],
     /// `(min_replicas, max_replicas)` per pool.
     pub pool_bounds: &'a [(usize, usize)],
+    /// Tier-affinity bitmask per pool (0 = serves every tier) — what
+    /// tier-aware scale-up ranks candidate pools with, so capacity is
+    /// never grown in a pool whose affinity cannot serve the drowning
+    /// tier while a pool that can still has room.
+    pub pool_affinity: &'a [u32],
 }
 
 impl ControlView<'_> {
@@ -126,34 +131,78 @@ impl ControlView<'_> {
         self.pool_bounds.iter().map(|&(_, hi)| hi).sum()
     }
 
-    /// The pool new capacity should land in: the one with the highest
-    /// queued prefill seconds per serving replica among pools with room
-    /// to grow (ties toward the lowest index). `None` when every pool is
-    /// at its ceiling.
-    ///
-    /// Known limitation: selection is load-based, not demand-based — if
-    /// the drowning pool is already at its ceiling, the hottest pool
-    /// *with room* may be an affinity-restricted pool that cannot serve
-    /// the overloaded tier at all (capacity grown there gives the hot
-    /// tier no relief). Fixing this needs per-tier demand attribution
-    /// in the snapshots; see the ROADMAP "tier-aware pool selection"
-    /// item.
-    pub fn scale_up_pool(&self) -> Option<usize> {
+    /// Whether `pool`'s affinity lets it serve `tier` (mask 0 = all).
+    pub fn pool_serves(&self, pool: usize, tier: usize) -> bool {
+        let mask = self.pool_affinity.get(pool).copied().unwrap_or(0);
+        mask == 0 || (mask >> tier.min(31)) & 1 == 1
+    }
+
+    /// Queued prefill seconds attributed to `tier` across active
+    /// replicas — the per-tier demand signal `LoadSnapshot` carries.
+    pub fn queued_s_for_tier(&self, tier: usize) -> f64 {
+        self.states
+            .iter()
+            .zip(self.snaps)
+            .filter(|(st, _)| st.is_dispatchable())
+            .map(|(_, s)| s.queued_prefill_s_per_tier.get(tier).copied().unwrap_or(0.0))
+            .sum()
+    }
+
+    /// The tier with the most queued demand across active replicas —
+    /// the tier a scale-up is supposed to relieve. `None` when no tier
+    /// has queued work (nothing is drowning).
+    pub fn drowning_tier(&self) -> Option<usize> {
+        let n_tiers = self.snaps.iter().map(|s| s.queued_prefill_s_per_tier.len()).max()?;
         let mut best: Option<(f64, usize)> = None;
+        for t in 0..n_tiers {
+            let q = self.queued_s_for_tier(t);
+            if q <= 0.0 {
+                continue;
+            }
+            if match best {
+                None => true,
+                Some((b, _)) => q > b,
+            } {
+                best = Some((q, t));
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+
+    /// The pool new capacity should land in, among pools with room to
+    /// grow: pools whose affinity serves the drowning tier (the tier
+    /// with the most queued demand) rank strictly above pools that
+    /// cannot — capacity grown in a pool that cannot serve the
+    /// overloaded tier gives it no relief — and within a rank the
+    /// highest queued prefill seconds per serving replica wins (ties
+    /// toward the lowest index). With no affinity-restricted pools, or
+    /// no queued demand at all, every pool ranks equal and this is
+    /// exactly the old hottest-pool-with-room rule. Falls back to the
+    /// hottest pool with room when no serving pool has room (capacity
+    /// may still relieve other tiers). `None` when every pool is at its
+    /// ceiling.
+    pub fn scale_up_pool(&self) -> Option<usize> {
+        let tier = self.drowning_tier();
+        let mut best: Option<(bool, f64, usize)> = None;
         for (p, &(_, hi)) in self.pool_bounds.iter().enumerate() {
             let serving = self.serving_in(p);
             if serving >= hi {
                 continue;
             }
-            let load = self.queued_s_in(p) / serving.max(1) as f64;
-            if match best {
+            let serves = match tier {
                 None => true,
-                Some((b, _)) => load > b,
-            } {
-                best = Some((load, p));
+                Some(t) => self.pool_serves(p, t),
+            };
+            let load = self.queued_s_in(p) / serving.max(1) as f64;
+            let better = match best {
+                None => true,
+                Some((bs, bl, _)) => (serves && !bs) || (serves == bs && load > bl),
+            };
+            if better {
+                best = Some((serves, load, p));
             }
         }
-        best.map(|(_, p)| p)
+        best.map(|(_, _, p)| p)
     }
 
     /// The pool capacity should leave from: the one with the lowest
@@ -451,6 +500,8 @@ mod tests {
             queued_prefill_tokens: (queued_s * 3000.0) as u64,
             relegated_prefill_tokens: 0,
             queued_prefill_s: queued_s,
+            // All demand on tier 0 unless a test reshapes it.
+            queued_prefill_s_per_tier: vec![queued_s, 0.0, 0.0],
             decodes: 0,
             kv_used,
             kv_committed: 0,
@@ -458,7 +509,9 @@ mod tests {
             tier_slack_s: vec![f64::INFINITY; 3],
             sec_per_prefill_token: 3e-4,
             sec_per_decode_token: 0.03,
+            kv_bytes_per_token: 131_072.0,
             chunk_size: 256,
+            max_batch_decodes: 256,
             tier_affinity_mask: 0,
         }
     }
@@ -492,6 +545,7 @@ mod tests {
             states,
             pool_of: &POOL0[..states.len()],
             pool_bounds: &[(1, 4)],
+            pool_affinity: &[0],
         }
     }
 
@@ -621,6 +675,7 @@ mod tests {
             states: &states,
             pool_of: &pool_of,
             pool_bounds: &bounds,
+            pool_affinity: &[0, 0],
         };
         assert_eq!(v.scale_up_pool(), Some(0), "new capacity lands in the drowning pool");
         assert_eq!(v.scale_down_pool(), Some(1), "the idle pool gives capacity back");
@@ -637,6 +692,7 @@ mod tests {
             states: &states,
             pool_of: &pool_of,
             pool_bounds: &bounds,
+            pool_affinity: &[0, 0],
         };
         match c.decide(&v2) {
             ScalingDecision::ScaleUp { pool, n } => {
@@ -659,9 +715,62 @@ mod tests {
             states: &states,
             pool_of: &pool_of,
             pool_bounds: &bounds,
+            pool_affinity: &[0],
         };
         assert_eq!(v.scale_up_pool(), None);
         assert_eq!(v.scale_down_pool(), None);
+    }
+
+    #[test]
+    fn scale_up_never_grows_a_pool_that_cannot_serve_the_drowning_tier() {
+        // Pool 0 (serves only tier 0) is at its ceiling and drowning in
+        // tier-0 demand; pool 1 (tiers 1-2 only) is the hottest pool
+        // with room but cannot serve tier 0; pool 2 (open) has room.
+        let mut s0 = snap(40.0, 0);
+        s0.queued_prefill_s_per_tier = vec![40.0, 0.0, 0.0];
+        let mut s1 = snap(6.0, 0);
+        s1.queued_prefill_s_per_tier = vec![0.0, 6.0, 0.0];
+        let s2 = {
+            let mut s = snap(0.5, 0);
+            s.queued_prefill_s_per_tier = vec![0.5, 0.0, 0.0];
+            s
+        };
+        let snaps = vec![s0, s1, s2];
+        let states = vec![ReplicaState::Active; 3];
+        let pool_of = [0usize, 1, 2];
+        let bounds = [(1usize, 1usize), (1usize, 4usize), (1usize, 4usize)];
+        let v = ControlView {
+            now: 0.0,
+            snaps: &snaps,
+            states: &states,
+            pool_of: &pool_of,
+            pool_bounds: &bounds,
+            pool_affinity: &[0b001, 0b110, 0],
+        };
+        assert_eq!(v.drowning_tier(), Some(0));
+        assert!((v.queued_s_for_tier(0) - 40.5).abs() < 1e-9);
+        assert!(v.pool_serves(2, 0) && !v.pool_serves(1, 0));
+        // The old load-only rule would have picked pool 1 (6.0 > 0.5);
+        // tier-aware selection must grow the open pool instead.
+        assert_eq!(v.scale_up_pool(), Some(2));
+
+        // With no tier-0 demand the drowning tier is tier 1, which pool
+        // 1 serves — the load ordering applies again.
+        let mut cooled = snaps.clone();
+        cooled[0].queued_prefill_s_per_tier = vec![0.0, 0.0, 0.0];
+        cooled[0].queued_prefill_s = 0.0;
+        cooled[2].queued_prefill_s_per_tier = vec![0.0, 0.0, 0.0];
+        cooled[2].queued_prefill_s = 0.0;
+        let v2 = ControlView {
+            now: 0.0,
+            snaps: &cooled,
+            states: &states,
+            pool_of: &pool_of,
+            pool_bounds: &bounds,
+            pool_affinity: &[0b001, 0b110, 0],
+        };
+        assert_eq!(v2.drowning_tier(), Some(1));
+        assert_eq!(v2.scale_up_pool(), Some(1));
     }
 
     #[test]

@@ -589,6 +589,7 @@ mod tests {
             queued_prefill_tokens: queued_tokens,
             relegated_prefill_tokens: 0,
             queued_prefill_s: queued_s,
+            queued_prefill_s_per_tier: vec![queued_s, 0.0, 0.0],
             decodes: 0,
             kv_used: 0,
             kv_committed: 0,
@@ -596,7 +597,9 @@ mod tests {
             tier_slack_s: vec![f64::INFINITY; 3],
             sec_per_prefill_token: 3e-4,
             sec_per_decode_token: 0.03,
+            kv_bytes_per_token: 131_072.0,
             chunk_size: 256,
+            max_batch_decodes: 256,
             tier_affinity_mask: 0,
         }
     }

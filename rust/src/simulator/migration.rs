@@ -1,0 +1,787 @@
+//! Live KV migration: interconnect-priced mid-flight request movement.
+//!
+//! Relegation handoff (PR 1) and the drain protocol (PR 3) can only move
+//! requests that have not started decoding — the target re-prefills from
+//! scratch, so a decoding request pins its replica until completion.
+//! That slows retirement (a drain waits out every local decode), strands
+//! hot replicas behind long decodes, and caps what selective relegation
+//! can recover during overload. Llumnix's observation is that pricing a
+//! move as *KV bytes over interconnect bandwidth* makes any request
+//! movable: the KV cache (prompt + generated tokens) is copied to the
+//! target and decoding resumes there with no re-prefill.
+//!
+//! Three pieces live here:
+//!
+//! - [`InterconnectModel`]: the transfer price. Moving a request whose
+//!   KV occupies `B` bytes costs `B / bandwidth + latency` seconds of
+//!   virtual time. Config-wired under `cluster.interconnect`; absent —
+//!   or with zero bandwidth — live migration is disabled and every
+//!   timeline is bit-for-bit the handoff-only one.
+//! - [`LiveMigration`]: the exported state of a mid-flight request —
+//!   spec plus prefill/decode progress and latency history — produced by
+//!   `Engine::migrate_out_live` and resumed by
+//!   `Engine::admit_migrated_live` *without re-prefill*. The move is
+//!   stop-and-copy on the shared virtual clock: the request emits no
+//!   tokens during the transfer window, and its KV occupies **both**
+//!   replicas until the copy completes (the source holds the pages being
+//!   streamed out, the target has already reserved the pages being
+//!   streamed in).
+//! - [`MigrationPlanner`]: the policy, evaluated on cluster control
+//!   ticks. (a) *Drain acceleration*: a Draining replica's decoding
+//!   requests move out longest-remaining-first, so retirement is no
+//!   longer gated on local decode completion. (b) *Proactive
+//!   rebalancing*: when a replica's predicted deadline slack goes
+//!   negative over the next tick (or its KV cache is nearly full), its
+//!   decoding requests move to a peer with slack to absorb them —
+//!   affinity-permitting, priced at the *target's* cost model (the PR 4
+//!   invariant), and only when transfer cost plus remaining work still
+//!   meets the moved request's own deadline.
+//!
+//! All planning is a pure function of [`LoadSnapshot`]s and candidate
+//! descriptors, so the policy is unit-testable without a cluster.
+
+use crate::config::InterconnectConfig;
+use crate::engine::LoadSnapshot;
+use crate::request::{RequestId, RequestSpec};
+use crate::simulator::control::ReplicaState;
+use crate::simulator::dispatch::LeastLoaded;
+
+/// KV occupancy that marks a replica as distressed for the rebalancer
+/// even when its deadline slack still looks healthy — a nearly-full
+/// cache throttles prefill chunk budgets long before deadlines slip
+/// (the same threshold `ReactiveHysteresis` scales up on).
+pub const KV_DISTRESS_UTIL: f64 = 0.9;
+/// A rebalance target's KV occupancy (current + committed + planned
+/// moves) must stay under this fraction of capacity, so absorbing a
+/// neighbor's distress can never create new KV distress.
+pub const TARGET_KV_UTIL_CAP: f64 = 0.8;
+/// Rebalance moves per distressed replica per control tick. Transfers
+/// are cheap (milliseconds of interconnect time) but each one pauses a
+/// request, so the planner relieves pressure in bounded steps instead
+/// of evacuating a replica in one tick.
+pub const REBALANCE_MOVES_PER_TICK: usize = 16;
+
+const EPS: f64 = 1e-9;
+
+/// Prices a cross-replica KV transfer: `bytes / bandwidth + latency`.
+#[derive(Debug, Clone, Copy)]
+pub struct InterconnectModel {
+    /// Usable cross-replica bandwidth, bytes per second.
+    pub bandwidth_bytes_per_s: f64,
+    /// Fixed per-transfer setup latency, seconds.
+    pub latency_s: f64,
+}
+
+impl InterconnectModel {
+    /// Build from the config surface. `None` (interconnect absent) or a
+    /// non-positive bandwidth disables live migration entirely — the
+    /// bit-for-bit degradation gate the tests pin.
+    pub fn from_config(cfg: Option<&InterconnectConfig>) -> Option<InterconnectModel> {
+        let cfg = cfg?;
+        if cfg.bandwidth_gbytes_per_s <= 0.0 {
+            return None;
+        }
+        Some(InterconnectModel {
+            bandwidth_bytes_per_s: cfg.bandwidth_gbytes_per_s * 1e9,
+            latency_s: cfg.latency_s.max(0.0),
+        })
+    }
+
+    /// Seconds of virtual time to move `kv_bytes` across the interconnect.
+    pub fn transfer_s(&self, kv_bytes: f64) -> f64 {
+        kv_bytes / self.bandwidth_bytes_per_s + self.latency_s
+    }
+}
+
+/// The exported state of a mid-flight request: everything the target
+/// replica needs to resume it without re-prefill, and everything the
+/// metrics need so the request's latency history survives the move
+/// (TTFT stays the source-side first token; the transfer pause shows up
+/// honestly as token lateness if it overruns banked slack).
+#[derive(Debug, Clone)]
+pub struct LiveMigration {
+    pub spec: RequestSpec,
+    /// Prompt tokens prefilled at export (the KV prefix transferred).
+    pub prefilled: u32,
+    /// Output tokens emitted at export.
+    pub decoded: u32,
+    pub first_token_at: Option<f64>,
+    pub last_token_at: Option<f64>,
+    pub max_tbt: f64,
+    pub max_lateness: f64,
+    pub was_relegated: bool,
+}
+
+impl LiveMigration {
+    /// KV tokens transferred — exactly what the source frees at the end
+    /// of the transfer window and the target occupies from its start.
+    pub fn kv_tokens(&self) -> u32 {
+        self.prefilled + self.decoded
+    }
+}
+
+/// One movable request as the planner sees it (engine-derived, with the
+/// deadline arithmetic already resolved so planning stays a pure
+/// function of snapshots).
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationCandidate {
+    pub id: RequestId,
+    pub tier: usize,
+    /// KV tokens the transfer must move (prefilled + decoded).
+    pub kv_tokens: u32,
+    /// Output tokens still owed.
+    pub decode_remaining: u32,
+    /// Absolute deadline of the first token emitted after resume.
+    pub next_deadline: f64,
+    /// Absolute deadline of the request's final token.
+    pub last_deadline: f64,
+}
+
+/// One planned move, ready for the cluster to execute.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationMove {
+    pub origin: usize,
+    pub target: usize,
+    pub id: RequestId,
+    /// KV bytes streamed over the interconnect.
+    pub kv_bytes: f64,
+    /// Transfer window length, seconds.
+    pub transfer_s: f64,
+    /// Instant decoding resumes at the target (transfer start + window);
+    /// the source also frees its copy of the KV at this instant.
+    pub resume_at: f64,
+}
+
+/// Can the moved request still meet its own deadlines, resuming at
+/// `resume_at` and decoding at the *target's* reference rate? Two
+/// checks cover both regimes: the first post-resume token against its
+/// absolute deadline (binding when the target decodes faster than the
+/// TBT budget), and the full remaining tail against the final deadline
+/// (binding when it decodes slower).
+fn deadline_holds(c: &MigrationCandidate, target: &LoadSnapshot, resume_at: f64) -> bool {
+    let spd = target.sec_per_decode_token;
+    resume_at + spd <= c.next_deadline + EPS
+        && resume_at + c.decode_remaining as f64 * spd <= c.last_deadline + EPS
+}
+
+/// Transfer start on the shared clock: no earlier than either endpoint's
+/// own clock (an engine whose last atomic iteration overshot the tick
+/// cannot have started streaming KV before it).
+fn transfer_start(now: f64, origin: &LoadSnapshot, target: &LoadSnapshot) -> f64 {
+    now.max(origin.now).max(target.now)
+}
+
+/// The live-migration policy, evaluated on cluster control ticks.
+pub struct MigrationPlanner {
+    /// Effective interconnect attachment per *pool* (pool override or
+    /// the cluster-level default; `None` = that pool neither sends nor
+    /// receives live migrations). A transfer between two pools is
+    /// priced at the bottleneck of the two attachments — the lower
+    /// bandwidth, the higher latency.
+    pub links: Vec<Option<InterconnectModel>>,
+    /// Projection horizon for "predicted slack goes negative": the
+    /// control tick interval — an interactive deadline that will pass
+    /// before the next tick is a predicted violation the planner can
+    /// still act on.
+    pub horizon_s: f64,
+    /// Bit per tier whose SLO is interactive. Interactive token
+    /// deadlines are absolute, so slack below the horizon is a predicted
+    /// violation; non-interactive *pacing* deadlines re-spread the
+    /// remaining budget over every remaining token (their slack is
+    /// designed to hover near `budget / remaining`), so for those tiers
+    /// only negative slack — genuinely behind pace — signals distress.
+    pub interactive_mask: u32,
+}
+
+impl MigrationPlanner {
+    pub fn new(
+        links: Vec<Option<InterconnectModel>>,
+        horizon_s: f64,
+        interactive_mask: u32,
+    ) -> Self {
+        MigrationPlanner { links, horizon_s: horizon_s.max(0.0), interactive_mask }
+    }
+
+    /// The planner a cluster spec describes, or `None` when live
+    /// migration is disabled everywhere (no pool has an effective
+    /// interconnect: `cluster.interconnect` absent or zero-bandwidth
+    /// and no pool override).
+    pub fn for_cluster(
+        cfg: &crate::config::Config,
+        spec: &crate::config::ClusterSpec,
+    ) -> Option<MigrationPlanner> {
+        let links: Vec<Option<InterconnectModel>> = spec
+            .pools
+            .iter()
+            .map(|p| {
+                let eff = p.interconnect.as_ref().or(cfg.cluster.interconnect.as_ref());
+                InterconnectModel::from_config(eff)
+            })
+            .collect();
+        if links.iter().all(|l| l.is_none()) {
+            return None;
+        }
+        let mut mask = 0u32;
+        for (t, tier) in cfg.tiers.iter().enumerate().take(32) {
+            if tier.slo.is_interactive() {
+                mask |= 1 << t;
+            }
+        }
+        Some(MigrationPlanner::new(links, cfg.cluster.control.control_interval_s, mask))
+    }
+
+    /// The bottleneck link between two pools: lower bandwidth, higher
+    /// latency. `None` when either end has no interconnect attachment.
+    fn link(&self, pool_a: usize, pool_b: usize) -> Option<InterconnectModel> {
+        let a = self.links.get(pool_a).copied().flatten()?;
+        let b = self.links.get(pool_b).copied().flatten()?;
+        Some(InterconnectModel {
+            bandwidth_bytes_per_s: a.bandwidth_bytes_per_s.min(b.bandwidth_bytes_per_s),
+            latency_s: a.latency_s.max(b.latency_s),
+        })
+    }
+
+    /// Slack below this is distress for tier `t` (see `interactive_mask`).
+    fn slack_threshold(&self, tier: usize) -> f64 {
+        if (self.interactive_mask >> tier.min(31)) & 1 == 1 {
+            self.horizon_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Whether any tier's slack signal marks real deadline distress on
+    /// this replica.
+    fn slack_distress(&self, s: &LoadSnapshot) -> bool {
+        s.tier_slack_s
+            .iter()
+            .enumerate()
+            .any(|(t, &sl)| sl.is_finite() && sl < self.slack_threshold(t))
+    }
+
+    /// Whether the rebalancer should try to move work off this replica:
+    /// some tier's deadline slack is (predicted) negative, or its KV
+    /// cache is nearly full.
+    pub fn is_distressed(&self, s: &LoadSnapshot) -> bool {
+        self.slack_distress(s) || s.kv_utilization() > KV_DISTRESS_UTIL
+    }
+
+    /// Plan the live moves that empty a Draining replica of its decoding
+    /// requests. Candidates leave **longest-remaining-first** — the
+    /// request that would otherwise pin the replica longest goes first —
+    /// so retirement time is minimized and monotonically no worse than
+    /// finishing everything locally. Targets must be Active, hold the
+    /// request's KV + decode tail, have a free decode slot (counting
+    /// moves already planned this pass), and serve its tier (falling
+    /// back to any Active replica only when no serving one exists — the
+    /// never-strand rule); deadline-preserving targets are preferred,
+    /// but a drain move is taken even when no target keeps the deadline
+    /// (the replica is leaving; blocking retirement on a lost cause
+    /// helps nobody). A candidate no target can hold simply stays and
+    /// finishes locally — drain remains loss-free either way.
+    pub fn plan_drain(
+        &self,
+        origin: usize,
+        mut cands: Vec<MigrationCandidate>,
+        snaps: &[LoadSnapshot],
+        states: &[ReplicaState],
+        pool_of: &[usize],
+        now: f64,
+    ) -> Vec<MigrationMove> {
+        cands.sort_by(|a, b| b.decode_remaining.cmp(&a.decode_remaining).then(a.id.cmp(&b.id)));
+        let mut added = vec![0u64; snaps.len()];
+        // Decoders planned onto each target this pass: together with the
+        // snapshot's own decode count they must stay inside the target's
+        // decode batch cap, or a bulk evacuation would stack the whole
+        // drain onto the cheapest (stale-snapshot) peer and stall its
+        // decode set — the exact failure live migration exists to fix.
+        // Capped leftovers retry on the next control tick with fresh
+        // snapshots, or simply finish locally; drain stays loss-free.
+        let mut taken = vec![0usize; snaps.len()];
+        let mut moves = Vec::new();
+        for c in cands {
+            let kv_bytes = c.kv_tokens as f64 * snaps[origin].kv_bytes_per_token;
+            // Affinity restricts targets only when a *reachable* affine
+            // peer exists — a serving peer in a detached pool can never
+            // take the transfer, and letting it suppress the
+            // never-strand fallback would silently pin the drain on
+            // local decode completion.
+            let affine = snaps.iter().enumerate().any(|(i, s)| {
+                i != origin
+                    && states[i].is_dispatchable()
+                    && s.serves_tier(c.tier)
+                    && self.link(pool_of[origin], pool_of[i]).is_some()
+            });
+            // (deadline-feasible, LeastLoaded score, slot, transfer_s,
+            // resume_at).
+            let mut best: Option<(bool, f64, usize, f64, f64)> = None;
+            for (i, s) in snaps.iter().enumerate() {
+                if i == origin || !states[i].is_dispatchable() {
+                    continue;
+                }
+                if affine && !s.serves_tier(c.tier) {
+                    continue;
+                }
+                let Some(link) = self.link(pool_of[origin], pool_of[i]) else {
+                    continue; // no interconnect path between the pools
+                };
+                if s.decodes + taken[i] >= s.max_batch_decodes {
+                    continue; // no decode slot free: the mover would stall
+                }
+                let demand = c.kv_tokens as u64 + c.decode_remaining as u64;
+                if demand > s.kv_free().saturating_sub(added[i]) {
+                    continue;
+                }
+                let transfer_s = link.transfer_s(kv_bytes);
+                let resume_at = transfer_start(now, &snaps[origin], s) + transfer_s;
+                let feasible = deadline_holds(&c, s, resume_at);
+                let score = LeastLoaded::score(s);
+                let better = match best {
+                    None => true,
+                    Some((bf, bs, _, _, _)) => (feasible && !bf) || (feasible == bf && score < bs),
+                };
+                if better {
+                    best = Some((feasible, score, i, transfer_s, resume_at));
+                }
+            }
+            if let Some((_, _, target, transfer_s, resume_at)) = best {
+                added[target] += c.kv_tokens as u64 + c.decode_remaining as u64;
+                taken[target] += 1;
+                moves.push(MigrationMove {
+                    origin,
+                    target,
+                    id: c.id,
+                    kv_bytes,
+                    transfer_s,
+                    resume_at,
+                });
+            }
+        }
+        moves
+    }
+
+    /// Plan proactive rebalance moves for the given distressed origins
+    /// (each with its movable decoding requests). Biggest KV footprint
+    /// moves first — the transfer that buys the origin the most relief —
+    /// capped at [`REBALANCE_MOVES_PER_TICK`] per origin. A target must
+    /// be an Active peer that serves the request's tier (no never-strand
+    /// fallback here: rebalancing is optional, affinity is not), has
+    /// slack to absorb it (its own worst slack stays clear of the
+    /// horizon and its KV — including moves already planned this tick —
+    /// stays under [`TARGET_KV_UTIL_CAP`]), scores strictly better than
+    /// the origin, keeps the moved request's own deadline per
+    /// [`deadline_holds`] at the target's rates, and has not already
+    /// absorbed [`REBALANCE_MOVES_PER_TICK`] planned moves this tick
+    /// (the intake cap that keeps several distressed origins from
+    /// stacking onto one stale-snapshot-cheap peer).
+    pub fn plan_rebalance(
+        &self,
+        origins: &[(usize, Vec<MigrationCandidate>)],
+        snaps: &[LoadSnapshot],
+        states: &[ReplicaState],
+        pool_of: &[usize],
+        now: f64,
+    ) -> Vec<MigrationMove> {
+        let mut added = vec![0u64; snaps.len()];
+        // Moves planned *onto* each target this tick. All target-health
+        // checks below read one snapshot for the whole tick, so without
+        // this cap several distressed origins would stack their full
+        // budgets onto whichever peer scored cheapest at tick start —
+        // pushing it toward the very overload the rebalancer exists to
+        // relieve. Bounded intake per tick lets the next tick's fresh
+        // snapshots (score, slack, KV) gate further absorption.
+        let mut taken = vec![0usize; snaps.len()];
+        let mut moves = Vec::new();
+        for (origin, cands) in origins {
+            let origin = *origin;
+            if !self.is_distressed(&snaps[origin]) {
+                continue;
+            }
+            let origin_score = LeastLoaded::score(&snaps[origin]);
+            let mut cands = cands.clone();
+            cands.sort_by(|a, b| b.kv_tokens.cmp(&a.kv_tokens).then(a.id.cmp(&b.id)));
+            let mut done = 0usize;
+            for c in cands {
+                if done >= REBALANCE_MOVES_PER_TICK {
+                    break;
+                }
+                let kv_bytes = c.kv_tokens as f64 * snaps[origin].kv_bytes_per_token;
+                // (LeastLoaded score, slot, transfer_s, resume_at).
+                let mut best: Option<(f64, usize, f64, f64)> = None;
+                for (i, s) in snaps.iter().enumerate() {
+                    if i == origin || !states[i].is_dispatchable() || !s.serves_tier(c.tier) {
+                        continue;
+                    }
+                    if taken[i] >= REBALANCE_MOVES_PER_TICK {
+                        continue; // this peer absorbed its tick budget
+                    }
+                    if s.decodes + taken[i] >= s.max_batch_decodes {
+                        continue; // no decode slot free: the mover would stall
+                    }
+                    let Some(link) = self.link(pool_of[origin], pool_of[i]) else {
+                        continue; // no interconnect path between the pools
+                    };
+                    let demand = c.kv_tokens as u64 + c.decode_remaining as u64;
+                    let projected = s.kv_used + s.kv_committed + added[i] + demand;
+                    if projected as f64 > TARGET_KV_UTIL_CAP * s.kv_capacity as f64 {
+                        continue;
+                    }
+                    // A peer already violating some deadline absorbs
+                    // nothing. (Merely-low banked slack does not
+                    // disqualify it: an on-pace interactive decode's
+                    // next-token slack legitimately hovers near its
+                    // banked headroom, which can sit under the horizon
+                    // on any busy-but-healthy replica.)
+                    if s.min_slack_s() < 0.0 {
+                        continue;
+                    }
+                    let score = LeastLoaded::score(s);
+                    if score >= origin_score {
+                        continue; // moving there would not relieve anything
+                    }
+                    let transfer_s = link.transfer_s(kv_bytes);
+                    let resume_at = transfer_start(now, &snaps[origin], s) + transfer_s;
+                    if !deadline_holds(&c, s, resume_at) {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((bs, _, _, _)) => score < bs,
+                    };
+                    if better {
+                        best = Some((score, i, transfer_s, resume_at));
+                    }
+                }
+                if let Some((_, target, transfer_s, resume_at)) = best {
+                    added[target] += c.kv_tokens as u64 + c.decode_remaining as u64;
+                    taken[target] += 1;
+                    moves.push(MigrationMove {
+                        origin,
+                        target,
+                        id: c.id,
+                        kv_bytes,
+                        transfer_s,
+                        resume_at,
+                    });
+                    done += 1;
+                }
+            }
+        }
+        moves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(queued_s: f64, kv_used: u64) -> LoadSnapshot {
+        LoadSnapshot {
+            now: 0.0,
+            active: 1,
+            backlog: 1,
+            queued_prefill_tokens: (queued_s * 3000.0) as u64,
+            relegated_prefill_tokens: 0,
+            queued_prefill_s: queued_s,
+            queued_prefill_s_per_tier: vec![queued_s, 0.0, 0.0],
+            decodes: 0,
+            kv_used,
+            kv_committed: 0,
+            kv_capacity: 400_000,
+            tier_slack_s: vec![f64::INFINITY; 3],
+            sec_per_prefill_token: 3e-4,
+            sec_per_decode_token: 0.03,
+            kv_bytes_per_token: 131_072.0,
+            chunk_size: 256,
+            max_batch_decodes: 256,
+            tier_affinity_mask: 0,
+        }
+    }
+
+    fn cand(id: RequestId, tier: usize, kv: u32, rem: u32) -> MigrationCandidate {
+        MigrationCandidate {
+            id,
+            tier,
+            kv_tokens: kv,
+            decode_remaining: rem,
+            next_deadline: 1e6,
+            last_deadline: 1e6,
+        }
+    }
+
+    /// Every test below is a one-pool cluster unless it builds its own
+    /// links; the slice maps each slot to pool 0.
+    static POOL0: [usize; 4] = [0; 4];
+
+    fn model() -> InterconnectModel {
+        InterconnectModel { bandwidth_bytes_per_s: 25e9, latency_s: 1e-3 }
+    }
+
+    fn planner() -> MigrationPlanner {
+        // Tier 0 interactive, tiers 1-2 paced — the Table 2 shape.
+        MigrationPlanner::new(vec![Some(model())], 5.0, 0b001)
+    }
+
+    #[test]
+    fn transfer_price_is_bytes_over_bandwidth_plus_latency() {
+        let ic = InterconnectModel { bandwidth_bytes_per_s: 25e9, latency_s: 1e-3 };
+        assert!((ic.transfer_s(25e9) - 1.001).abs() < 1e-12);
+        assert!((ic.transfer_s(0.0) - 1e-3).abs() < 1e-15);
+        // A 4k-token Llama3-8B KV block (~0.5 GB) moves in ~22 ms.
+        let t = ic.transfer_s(4096.0 * 131_072.0);
+        assert!(t > 0.02 && t < 0.03, "4k-token transfer {t}s");
+    }
+
+    #[test]
+    fn zero_bandwidth_or_absent_config_disables_migration() {
+        assert!(InterconnectModel::from_config(None).is_none());
+        let zero = InterconnectConfig { bandwidth_gbytes_per_s: 0.0, latency_s: 1e-3 };
+        assert!(InterconnectModel::from_config(Some(&zero)).is_none());
+        let neg = InterconnectConfig { bandwidth_gbytes_per_s: -1.0, latency_s: 1e-3 };
+        assert!(InterconnectModel::from_config(Some(&neg)).is_none());
+        let ok = InterconnectConfig::default();
+        let m = InterconnectModel::from_config(Some(&ok)).unwrap();
+        assert!((m.bandwidth_bytes_per_s - ok.bandwidth_gbytes_per_s * 1e9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn drain_moves_longest_remaining_first() {
+        let p = planner();
+        let snaps = vec![snap(0.0, 0), snap(0.0, 0)];
+        let states = vec![ReplicaState::Draining { since: 0.0 }, ReplicaState::Active];
+        let cands = vec![cand(1, 1, 500, 10), cand(2, 1, 500, 900), cand(3, 1, 500, 90)];
+        let moves = p.plan_drain(0, cands, &snaps, &states, &POOL0[..snaps.len()], 0.0);
+        let order: Vec<RequestId> = moves.iter().map(|m| m.id).collect();
+        assert_eq!(order, vec![2, 3, 1], "longest decode tail leaves first");
+        assert!(moves.iter().all(|m| m.target == 1));
+        assert!(moves.iter().all(|m| m.transfer_s > 0.0 && m.resume_at > 0.0));
+    }
+
+    #[test]
+    fn drain_respects_affinity_when_a_serving_target_exists() {
+        let p = planner();
+        let mut restricted = snap(0.0, 0);
+        restricted.tier_affinity_mask = 0b110; // tiers 1-2 only
+        let open = snap(5.0, 0); // busier, but serves tier 0
+        let snaps = vec![snap(0.0, 0), restricted, open];
+        let states = vec![
+            ReplicaState::Draining { since: 0.0 },
+            ReplicaState::Active,
+            ReplicaState::Active,
+        ];
+        let moves = p.plan_drain(0, vec![cand(7, 0, 400, 50)], &snaps, &states, &POOL0[..3], 0.0);
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].target, 2, "tier-0 work must skip the restricted pool");
+        // With no serving peer at all, the never-strand fallback applies.
+        let snaps2 = vec![snap(0.0, 0), snaps[1].clone()];
+        let states2 = vec![ReplicaState::Draining { since: 0.0 }, ReplicaState::Active];
+        let moves2 =
+            p.plan_drain(0, vec![cand(7, 0, 400, 50)], &snaps2, &states2, &POOL0[..2], 0.0);
+        assert_eq!(moves2.len(), 1);
+        assert_eq!(moves2[0].target, 1);
+    }
+
+    #[test]
+    fn drain_skips_candidates_no_target_can_hold() {
+        let p = planner();
+        let mut full = snap(0.0, 0);
+        full.kv_used = full.kv_capacity; // no room anywhere
+        let snaps = vec![snap(0.0, 0), full];
+        let states = vec![ReplicaState::Draining { since: 0.0 }, ReplicaState::Active];
+        let moves =
+            p.plan_drain(0, vec![cand(1, 1, 5000, 100)], &snaps, &states, &POOL0[..2], 0.0);
+        assert!(moves.is_empty(), "an unplaceable request finishes locally");
+    }
+
+    #[test]
+    fn drain_tracks_planned_kv_so_targets_do_not_overcommit() {
+        let p = planner();
+        let mut tight = snap(0.0, 0);
+        tight.kv_used = tight.kv_capacity - 1200; // fits one 600+400 move
+        let snaps = vec![snap(0.0, 0), tight];
+        let states = vec![ReplicaState::Draining { since: 0.0 }, ReplicaState::Active];
+        let cands = vec![cand(1, 1, 600, 400), cand(2, 1, 600, 400)];
+        let moves = p.plan_drain(0, cands, &snaps, &states, &POOL0[..snaps.len()], 0.0);
+        assert_eq!(moves.len(), 1, "second move must not overcommit the target's KV");
+    }
+
+    #[test]
+    fn rebalance_triggers_on_predicted_slack_and_kv_pressure() {
+        let p = planner();
+        let mut slack_bad = snap(0.0, 0);
+        slack_bad.tier_slack_s[0] = 2.0; // interactive, < 5 s horizon
+        assert!(p.is_distressed(&slack_bad));
+        let mut kv_bad = snap(0.0, 390_000); // > 0.9 utilization
+        kv_bad.tier_slack_s = vec![f64::INFINITY; 3];
+        assert!(p.is_distressed(&kv_bad));
+        assert!(!p.is_distressed(&snap(0.0, 0)));
+        // Non-interactive pacing slack hovers near budget/remaining by
+        // design: small-but-positive is healthy, only behind-pace
+        // (negative) is distress.
+        let mut paced = snap(0.0, 0);
+        paced.tier_slack_s[1] = 0.2;
+        assert!(!p.is_distressed(&paced));
+        paced.tier_slack_s[1] = -0.1;
+        assert!(p.is_distressed(&paced));
+    }
+
+    #[test]
+    fn rebalance_moves_biggest_kv_to_the_cheapest_absorber() {
+        let p = planner();
+        let mut hot = snap(20.0, 395_000);
+        hot.tier_slack_s[0] = -1.0;
+        let cool = snap(0.5, 10_000);
+        let snaps = vec![hot, cool];
+        let states = vec![ReplicaState::Active; 2];
+        let cands = vec![cand(1, 1, 800, 100), cand(2, 1, 6000, 100), cand(3, 1, 50, 100)];
+        let moves = p.plan_rebalance(&[(0, cands)], &snaps, &states, &POOL0[..2], 0.0);
+        assert!(!moves.is_empty());
+        assert_eq!(moves[0].id, 2, "largest KV footprint moves first");
+        assert!(moves.iter().all(|m| m.target == 1));
+        assert!(moves.len() <= REBALANCE_MOVES_PER_TICK);
+    }
+
+    #[test]
+    fn rebalance_refuses_moves_that_blow_the_moved_deadline() {
+        let p = planner();
+        let mut hot = snap(20.0, 395_000);
+        hot.tier_slack_s[0] = -1.0;
+        let snaps = vec![hot, snap(0.0, 0)];
+        let states = vec![ReplicaState::Active; 2];
+        // Next-token deadline already in the past: nothing can save it,
+        // so the planner must leave it where it is.
+        let mut doomed = cand(1, 0, 4000, 100);
+        doomed.next_deadline = -5.0;
+        let moves = p.plan_rebalance(&[(0, vec![doomed])], &snaps, &states, &POOL0[..2], 10.0);
+        assert!(moves.is_empty());
+        // The same request with banked slack is movable.
+        let mut healthy = cand(1, 0, 4000, 100);
+        healthy.next_deadline = 15.0;
+        healthy.last_deadline = 100.0;
+        let moves = p.plan_rebalance(&[(0, vec![healthy])], &snaps, &states, &POOL0[..2], 10.0);
+        assert_eq!(moves.len(), 1);
+    }
+
+    #[test]
+    fn rebalance_never_targets_a_distressed_or_restricted_peer() {
+        let p = planner();
+        let mut hot = snap(20.0, 395_000);
+        hot.tier_slack_s[0] = -1.0;
+        let mut also_hot = snap(0.0, 0);
+        also_hot.tier_slack_s[0] = -2.0; // already violating: absorbs nothing
+        let mut restricted = snap(0.0, 0);
+        restricted.tier_affinity_mask = 0b110; // does not serve tier 0
+        let snaps = vec![hot, also_hot, restricted];
+        let states = vec![ReplicaState::Active; 3];
+        let origins = [(0usize, vec![cand(1, 0, 4000, 100)])];
+        let moves = p.plan_rebalance(&origins, &snaps, &states, &POOL0[..3], 0.0);
+        assert!(moves.is_empty(), "no healthy affine absorber exists");
+
+        // Low-but-positive banked slack does NOT disqualify an absorber:
+        // an on-pace interactive decode's next-token slack legitimately
+        // hovers near its banked headroom on a busy-but-healthy replica.
+        let mut busy_healthy = snaps.clone();
+        busy_healthy[1].tier_slack_s[0] = 1.0;
+        let moves = p.plan_rebalance(&origins, &busy_healthy, &states, &POOL0[..3], 0.0);
+        assert_eq!(moves.len(), 1, "busy-but-healthy peer must absorb");
+        assert_eq!(moves[0].target, 1);
+    }
+
+    #[test]
+    fn drain_respects_target_decode_slots() {
+        let p = planner();
+        let mut tight = snap(0.0, 0);
+        tight.decodes = 255; // one decode slot left (cap 256)
+        let snaps = vec![snap(0.0, 0), tight];
+        let states = vec![ReplicaState::Draining { since: 0.0 }, ReplicaState::Active];
+        let cands = vec![cand(1, 1, 600, 400), cand(2, 1, 600, 300)];
+        let moves = p.plan_drain(0, cands, &snaps, &states, &POOL0[..2], 0.0);
+        assert_eq!(moves.len(), 1, "only one decode slot is free on the target");
+        assert_eq!(moves[0].id, 1, "longest-remaining-first takes the slot");
+    }
+
+    #[test]
+    fn rebalance_caps_each_targets_intake_per_tick() {
+        let p = planner();
+        // Two distressed origins, one cool absorber: their combined
+        // budgets must not exceed the peer's per-tick intake cap.
+        let mut hot_a = snap(20.0, 395_000);
+        hot_a.tier_slack_s[0] = -1.0;
+        let mut hot_b = snap(20.0, 395_000);
+        hot_b.tier_slack_s[0] = -1.0;
+        let cool = snap(0.0, 0);
+        let snaps = vec![hot_a, hot_b, cool];
+        let states = vec![ReplicaState::Active; 3];
+        let many = |base: u32| -> Vec<MigrationCandidate> {
+            (0..REBALANCE_MOVES_PER_TICK as u32 + 4).map(|i| cand(base + i, 1, 500, 50)).collect()
+        };
+        let origins = [(0usize, many(0)), (1usize, many(100))];
+        let moves = p.plan_rebalance(&origins, &snaps, &states, &POOL0[..3], 0.0);
+        assert!(!moves.is_empty());
+        let onto_cool = moves.iter().filter(|m| m.target == 2).count();
+        assert_eq!(onto_cool, moves.len(), "only the cool peer is eligible");
+        assert!(
+            onto_cool <= REBALANCE_MOVES_PER_TICK,
+            "one peer absorbed {onto_cool} moves in a single tick"
+        );
+    }
+
+    #[test]
+    fn per_pool_links_price_at_the_bottleneck_and_gate_detached_pools() {
+        // Pool 0: fast 25 GB/s link; pool 1: slow 5 GB/s, higher
+        // latency; pool 2: detached (no interconnect).
+        let slow = InterconnectModel { bandwidth_bytes_per_s: 5e9, latency_s: 5e-3 };
+        let p = MigrationPlanner::new(vec![Some(model()), Some(slow), None], 5.0, 0b001);
+        let snaps = vec![snap(0.0, 0), snap(0.0, 0), snap(0.0, 0)];
+        let states = vec![
+            ReplicaState::Draining { since: 0.0 },
+            ReplicaState::Active,
+            ReplicaState::Active,
+        ];
+        // Replica 1 is in the slow pool, replica 2 in the detached one.
+        let pool_of = [0usize, 1, 2];
+        let c = cand(1, 1, 5000, 100);
+        let moves = p.plan_drain(0, vec![c], &snaps, &states, &pool_of, 0.0);
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].target, 1, "the detached pool can never receive a transfer");
+        // Bottleneck pricing: 5000 tokens * 131072 B at min(25, 5) GB/s
+        // plus max(1, 5) ms of latency.
+        let expect = 5000.0 * 131_072.0 / 5e9 + 5e-3;
+        assert!(
+            (moves[0].transfer_s - expect).abs() < 1e-12,
+            "transfer {} vs bottleneck {expect}",
+            moves[0].transfer_s
+        );
+
+        // A planner whose pools are all detached never exists via
+        // for_cluster; link() itself also refuses.
+        assert!(p.link(0, 2).is_none());
+        assert!(p.link(2, 1).is_none());
+        assert!(p.link(0, 1).is_some());
+
+        // An affine peer that is unreachable (detached pool) must not
+        // suppress the never-strand fallback to a reachable peer: the
+        // tier-0 candidate still moves, to the linked tiers-1-2 pool.
+        let mut snaps2 = vec![snap(0.0, 0), snap(0.0, 0), snap(0.0, 0)];
+        snaps2[1].tier_affinity_mask = 0b110; // linked, but tiers 1-2 only
+        snaps2[2].tier_affinity_mask = 0; // serves tier 0, yet detached
+        let moves2 = p.plan_drain(0, vec![cand(9, 0, 500, 50)], &snaps2, &states, &pool_of, 0.0);
+        assert_eq!(moves2.len(), 1, "unreachable affine peer must not strand the drain");
+        assert_eq!(moves2[0].target, 1);
+    }
+
+    #[test]
+    fn rebalance_respects_target_kv_cap() {
+        let p = planner();
+        let mut hot = snap(20.0, 395_000);
+        hot.tier_slack_s[0] = -1.0;
+        let mut nearly_full = snap(0.0, 0);
+        nearly_full.kv_used = (0.79 * nearly_full.kv_capacity as f64) as u64;
+        let snaps = vec![hot, nearly_full];
+        let states = vec![ReplicaState::Active; 2];
+        // 20k tokens of demand would push the target past the 0.8 cap.
+        let origins = [(0usize, vec![cand(1, 1, 15_000, 5_000)])];
+        let moves = p.plan_rebalance(&origins, &snaps, &states, &POOL0[..2], 0.0);
+        assert!(moves.is_empty());
+    }
+}

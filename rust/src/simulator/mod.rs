@@ -7,14 +7,19 @@
 //! shared virtual clock behind a global [`dispatch`] policy, and
 //! [`control`] is the elastic control plane on top: a scaling controller
 //! that grows/shrinks the replica set (with warm-up and graceful drain)
-//! plus the global admission controller at the dispatcher.
+//! plus the global admission controller at the dispatcher. [`migration`]
+//! adds live KV migration: an interconnect price model and a planner
+//! that moves even *decoding* requests between replicas mid-flight
+//! (drain acceleration + proactive rebalancing).
 
 pub mod cluster;
 pub mod control;
 pub mod cost_model;
 pub mod dispatch;
+pub mod migration;
 
 pub use cluster::{silo_chunk_for_tier, silo_cluster_spec, Cluster, SiloGroup};
 pub use control::{ReplicaState, ScalingController, ScalingDecision};
 pub use cost_model::{BatchShape, BatchStats, CostModel, PrefillSegment};
 pub use dispatch::{AdmissionController, AdmissionDecision, AdmissionPolicy, Dispatcher};
+pub use migration::{InterconnectModel, LiveMigration, MigrationPlanner};

@@ -1,0 +1,234 @@
+//! Property tests for live KV migration (ISSUE 5 acceptance):
+//!
+//! 1. with `cluster.interconnect` unset — or set with zero bandwidth —
+//!    every timeline is bit-for-bit the PR 3/4 handoff-only one, pinned
+//!    against the sequential round-robin oracle and against each other;
+//! 2. every submitted request still ends as exactly one of {completed,
+//!    migrated-and-completed, rejected-at-admission}, and KV is
+//!    conserved: after the run no engine holds a token, and during a
+//!    transfer window the moved KV occupies exactly both ends;
+//! 3. live drain retires a decode-heavy replica no later than the
+//!    finish-locally baseline (and in practice orders of magnitude
+//!    earlier), with decoding requests leaving longest-remaining-first;
+//! 4. migration never violates tier affinity: an affinity-restricted
+//!    pool never receives another tier's decoders while an affine
+//!    target exists;
+//! 5. at the overload point the proactive rebalancer cuts tier-0
+//!    violations vs the handoff-only baseline (the repro headline).
+
+use niyama::config::{Config, DispatchPolicy, InterconnectConfig, PoolSpec, ReplicaSpec};
+use niyama::engine::{Engine, SimBackend};
+use niyama::metrics::summarize_many;
+use niyama::qos::Importance;
+use niyama::repro::migration::{drain_trace, interconnect, run_drain, run_surge};
+use niyama::request::{Phase, RequestSpec, RequestStore};
+use niyama::simulator::cluster::Cluster;
+
+const LT: u32 = 6251;
+
+fn spec(arrival_s: f64, prompt: u32, decode: u32, tier: usize) -> RequestSpec {
+    RequestSpec {
+        arrival_s,
+        prompt_tokens: prompt,
+        decode_tokens: decode,
+        tier,
+        app_id: tier as u32,
+        importance: Importance::High,
+    }
+}
+
+/// The drain scenario parameterized by interconnect config, mirroring
+/// `repro::migration::run_drain` but exposing the cluster for deeper
+/// assertions.
+fn drain_cluster(ic: Option<InterconnectConfig>) -> Cluster {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::RoundRobin;
+    cfg.cluster.interconnect = ic;
+    let mut cluster = Cluster::new(&cfg, 2);
+    cluster.submit_trace(drain_trace(40));
+    cluster.run(30.0);
+    cluster.drain_replica(0);
+    cluster.run(1e9);
+    cluster
+}
+
+#[test]
+fn zero_bandwidth_is_bitforbit_the_handoff_only_timeline() {
+    // Zero bandwidth must disable the subsystem entirely: same drain
+    // scenario, identical bits against the interconnect-absent run.
+    let absent = drain_cluster(None);
+    let zero =
+        drain_cluster(Some(InterconnectConfig { bandwidth_gbytes_per_s: 0.0, latency_s: 1e-3 }));
+    let (a, z) = (absent.summary(LT), zero.summary(LT));
+    assert_eq!(a.total, z.total);
+    assert_eq!(a.finished, z.finished);
+    assert_eq!(a.violations, z.violations);
+    assert_eq!(a.ttft_p99.to_bits(), z.ttft_p99.to_bits());
+    assert_eq!(a.ttlt_p99.to_bits(), z.ttlt_p99.to_bits());
+    assert_eq!(absent.eval_time().to_bits(), zero.eval_time().to_bits());
+    assert_eq!(absent.retirement_times()[0], zero.retirement_times()[0]);
+    assert_eq!(a.migrated_live_total(), 0);
+    assert_eq!(z.migrated_live_total(), 0);
+    assert_eq!(absent.stats.control_ticks, zero.stats.control_ticks, "no planner, no ticks");
+}
+
+#[test]
+fn zero_bandwidth_matches_the_sequential_round_robin_oracle() {
+    // The PR 1 oracle: with round-robin and no handoff, replicas never
+    // interact, so the cluster must reproduce independent sequential
+    // engines exactly — including with a zero-bandwidth interconnect
+    // configured (the degradation gate of the acceptance criteria).
+    let mut cfg = Config::default();
+    cfg.cluster.interconnect =
+        Some(InterconnectConfig { bandwidth_gbytes_per_s: 0.0, latency_s: 0.0 });
+    let trace: Vec<RequestSpec> = (0..80)
+        .map(|i| spec(i as f64 * 0.4, 1000 + (i % 7) * 500, 50 + (i % 5) * 40, i % 3))
+        .collect();
+    let mut cluster = Cluster::new(&cfg, 2);
+    cluster.submit_trace(trace.clone());
+    cluster.run(4000.0);
+    let shared = cluster.summary(LT);
+
+    let mut engines: Vec<Engine<SimBackend>> = (0..2).map(|_| Engine::sim(&cfg)).collect();
+    for (i, s) in trace.iter().enumerate() {
+        engines[i % 2].enqueue(s.clone());
+    }
+    let mut t_end: f64 = 0.0;
+    for eng in engines.iter_mut() {
+        eng.run(4000.0);
+        t_end = t_end.max(eng.now());
+    }
+    let stores: Vec<&RequestStore> = engines.iter().map(|e| &e.store).collect();
+    let seq = summarize_many(&stores, t_end, LT, cfg.tiers.len());
+
+    assert_eq!(shared.total, seq.total);
+    assert_eq!(shared.finished, seq.finished);
+    assert_eq!(shared.violations, seq.violations);
+    assert_eq!(shared.ttft_p99.to_bits(), seq.ttft_p99.to_bits());
+}
+
+#[test]
+fn live_migration_conserves_requests_and_kv() {
+    // The surge scenario with the rebalancer active: every submission
+    // completes exactly once (no loss, no double count), and when the
+    // run drains no engine holds a single KV token — the source freed
+    // exactly what the target allocated.
+    let s = run_surge(90.0, true);
+    assert!(s.migrated_live_total() > 0, "the overloaded replica must shed decoders");
+    assert!(s.kv_bytes_migrated > 0.0);
+    assert!(s.migration_transfer_s > 0.0);
+    assert_eq!(s.finished, s.total, "every request must complete exactly once");
+    assert_eq!(s.rejected_total(), 0, "no admission control in this scenario");
+
+    // Re-run with direct cluster access for the KV checks.
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::RoundRobin;
+    cfg.cluster.dispatch.relegation_handoff = true;
+    cfg.cluster.control.control_interval_s = 2.5;
+    cfg.cluster.interconnect = Some(interconnect());
+    let trace = niyama::repro::migration::surge_trace(90.0);
+    let n = trace.len();
+    let mut cluster = Cluster::new(&cfg, 2);
+    cluster.submit_trace(trace);
+    cluster.run(1e9);
+    assert!(cluster.stats.migrated_live_per_tier.iter().sum::<usize>() > 0);
+    for eng in cluster.engines() {
+        assert_eq!(eng.store.total_kv_tokens(), 0, "drained run must hold no KV");
+        assert_eq!(eng.load_snapshot().kv_used, 0, "no transfer reservation may leak");
+        for r in eng.store.iter() {
+            assert!(
+                matches!(r.phase, Phase::Finished | Phase::Migrated),
+                "request {} stranded in {:?}",
+                r.id,
+                r.phase
+            );
+        }
+    }
+    // Tombstones on one engine are matched by exactly one live copy on
+    // the other: the merged summary counts every submission once.
+    assert_eq!(cluster.summary(LT).total, n);
+    assert_eq!(cluster.summary(LT).finished, n);
+}
+
+#[test]
+fn live_drain_retires_no_later_than_finish_locally() {
+    let base = run_drain(false);
+    let live = run_drain(true);
+    assert_eq!(base.summary.migrated_live_total(), 0);
+    assert!(
+        live.summary.migrated_live_total() > 0,
+        "a decode-heavy drain must use live migration when available"
+    );
+    assert!(
+        live.drain_s <= base.drain_s + 1e-9,
+        "live drain ({}s) must retire no later than finish-locally ({}s)",
+        live.drain_s,
+        base.drain_s
+    );
+    // The headline regime: transfers are milliseconds, local decode
+    // tails are seconds — retirement is not just no worse but much
+    // faster.
+    assert!(
+        live.drain_s * 10.0 < base.drain_s,
+        "expected an order-of-magnitude drain speedup: {}s vs {}s",
+        live.drain_s,
+        base.drain_s
+    );
+}
+
+#[test]
+fn live_migration_never_violates_tier_affinity() {
+    // Two open "front" replicas plus one batch replica restricted to
+    // tiers 1-2. Tier-0 decoders drained off front#0 must land on
+    // front#1, never on the restricted pool.
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::RoundRobin;
+    cfg.cluster.interconnect = Some(interconnect());
+    let front = ReplicaSpec::from_config(&cfg);
+    let mut batch = ReplicaSpec::from_config(&cfg);
+    batch.tier_affinity = vec![1, 2];
+    let spec_set = niyama::config::ClusterSpec {
+        pools: vec![PoolSpec::fixed("front", front, 2), PoolSpec::fixed("batch", batch, 1)],
+    };
+    // Long decodes so every request is still mid-decode at the drain
+    // instant (t=10): ~10 ms iterations put completion near t=21.
+    let trace: Vec<RequestSpec> = (0..12).map(|i| spec(i as f64 * 0.1, 512, 2000, 0)).collect();
+    let n = trace.len();
+    let mut cluster = Cluster::from_spec(&cfg, &spec_set);
+    cluster.submit_trace(trace);
+    cluster.run(10.0);
+    cluster.drain_replica(0);
+    cluster.run(1e9);
+    assert!(
+        cluster.stats.migrated_live_per_tier[0] > 0,
+        "tier-0 decoders must move off the drained front replica"
+    );
+    assert!(
+        cluster.engines()[2].store.iter().all(|r| r.spec.tier != 0),
+        "tier-0 work leaked into the affinity-restricted batch pool"
+    );
+    let s = cluster.summary(LT);
+    assert_eq!(s.total, n);
+    assert_eq!(s.finished, n);
+}
+
+#[test]
+fn rebalancer_cuts_tier0_violations_at_the_overload_point() {
+    // The repro headline as a regression test: the decode set outgrows
+    // the batch cap on replica 0, stalling requests that are already
+    // decoding — handoff cannot move them, live migration can.
+    let base = run_surge(120.0, false);
+    let live = run_surge(120.0, true);
+    let base_t0 = base.tier_violation_pct(0);
+    let live_t0 = live.tier_violation_pct(0);
+    assert_eq!(base.migrated_live_total(), 0);
+    assert!(live.migrated_live_total() > 0, "the rebalancer must act under distress");
+    assert!(
+        base_t0 > 5.0,
+        "test premise: the handoff-only baseline must drown in the surge ({base_t0}%)"
+    );
+    assert!(
+        live_t0 < base_t0,
+        "live migration must cut tier-0 violations: {live_t0}% vs {base_t0}%"
+    );
+}
