@@ -311,5 +311,42 @@ fn main() {
         sims.push((format!("sim.{name}"), n, eng.stats.iterations, wall));
     }
 
+    println!("\n== cluster loop: sequential vs sharded supersteps ==");
+    {
+        use niyama::config::{DispatchPolicy, ParallelConfig};
+        use niyama::simulator::cluster::Cluster;
+        // Static fleet, no control plane: these rows isolate the event
+        // loop itself, so the w=1 column is the sequential oracle and
+        // the w>1 columns show what the superstep sharding buys (or
+        // costs — at 8 replicas barrier overhead should dominate).
+        let cluster_duration = if iter_cap() < 300 { 10.0 } else { 120.0 };
+        for replicas in [8usize, 64, 256] {
+            let spec = WorkloadSpec::uniform(
+                Dataset::azure_code(),
+                replicas as f64 * 2.0,
+                cluster_duration,
+            );
+            let trace = spec.generate(&mut Rng::new(11));
+            let n = trace.len();
+            for workers in [1usize, 4, 8] {
+                let mut c = Config::default();
+                c.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+                c.cluster.parallel = Some(ParallelConfig { workers });
+                let t0 = Instant::now();
+                let mut cl = Cluster::new(&c, replicas);
+                cl.submit_trace(trace.clone());
+                cl.run(4000.0);
+                let wall = t0.elapsed().as_secs_f64();
+                let events = cl.stats.events;
+                println!(
+                    "cluster r={replicas:<4} w={workers} {n} reqs, {events} events in {wall:.3}s \
+                     ({:.0} events/s)",
+                    events as f64 / wall
+                );
+                sims.push((format!("cluster.r{replicas}.w{workers}"), n, events, wall));
+            }
+        }
+    }
+
     write_json(&stats, &sims);
 }

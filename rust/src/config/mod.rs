@@ -532,6 +532,37 @@ impl InterconnectConfig {
     }
 }
 
+/// Sharded-execution knobs for the cluster event loop (see
+/// `simulator::parallel`). Configured under `cluster.parallel`; when the
+/// block is absent the `NIYAMA_WORKERS` environment variable supplies
+/// the default, and `workers: 1` (or no override at all) selects the
+/// sequential event loop — the bit-for-bit oracle the sharded path is
+/// pinned against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Worker threads the engines are striped across (replica `i` lives
+    /// on shard `i % workers`). Must be >= 1; 1 means sequential.
+    pub workers: usize,
+}
+
+impl ParallelConfig {
+    /// Parse a JSON `parallel` object (`{"workers": N}`).
+    fn from_json(j: &Json) -> Result<ParallelConfig> {
+        let mut k = ParallelConfig { workers: 1 };
+        if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
+            k.workers = v;
+        }
+        Ok(k)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("cluster.parallel.workers must be at least 1 (1 = sequential)");
+        }
+        Ok(())
+    }
+}
+
 /// Elastic control-plane policy selector (see `simulator::control`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AutoscalePolicy {
@@ -621,6 +652,9 @@ pub struct ClusterConfig {
     /// Cross-replica interconnect for live KV migration (`None` — the
     /// default — keeps the handoff-only behavior bit-for-bit).
     pub interconnect: Option<InterconnectConfig>,
+    /// Sharded cluster-loop execution (`None` = the `NIYAMA_WORKERS`
+    /// env default, falling back to the sequential loop).
+    pub parallel: Option<ParallelConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -631,7 +665,25 @@ impl Default for ClusterConfig {
             dispatch: DispatchConfig::default(),
             control: ControlConfig::default(),
             interconnect: None,
+            parallel: None,
         }
+    }
+}
+
+impl ClusterConfig {
+    /// Effective worker-thread count for the cluster event loop: the
+    /// explicit `parallel` block when present, else the `NIYAMA_WORKERS`
+    /// environment override (the CI matrix leg), else 1 — the sequential
+    /// path. Unparseable or zero env values fall back to 1 rather than
+    /// failing a run that never asked for sharding.
+    pub fn effective_workers(&self) -> usize {
+        if let Some(p) = &self.parallel {
+            return p.workers.max(1);
+        }
+        std::env::var("NIYAMA_WORKERS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .map_or(1, |w| w.max(1))
     }
 }
 
@@ -723,6 +775,9 @@ impl Config {
             if let Some(ic) = c.get("interconnect") {
                 cfg.cluster.interconnect = Some(InterconnectConfig::from_json(ic));
             }
+            if let Some(par) = c.get("parallel") {
+                cfg.cluster.parallel = Some(ParallelConfig::from_json(par)?);
+            }
             if let Some(ctl) = c.get("control") {
                 // With pools configured, autoscale bounds live on the
                 // pools (the control-level ones only seed the one-pool
@@ -800,6 +855,9 @@ impl Config {
         }
         if let Some(ic) = &self.cluster.interconnect {
             ic.validate("cluster.interconnect")?;
+        }
+        if let Some(par) = &self.cluster.parallel {
+            par.validate()?;
         }
         if !self.cluster.pools.is_empty() {
             self.cluster_spec().validate(self.tiers.len())?;
@@ -1199,6 +1257,31 @@ mod tests {
             r#"{"cluster": {"interconnect": {"latency_s": -0.5}}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parallel_defaults_off_and_parses() {
+        assert!(Config::default().cluster.parallel.is_none());
+        // An empty object means "sharded with 1 worker" = sequential.
+        let c = Config::from_json_str(r#"{"cluster": {"parallel": {}}}"#).unwrap();
+        assert_eq!(c.cluster.parallel, Some(ParallelConfig { workers: 1 }));
+        assert_eq!(c.cluster.effective_workers(), 1);
+        let c = Config::from_json_str(r#"{"cluster": {"parallel": {"workers": 8}}}"#).unwrap();
+        assert_eq!(c.cluster.parallel, Some(ParallelConfig { workers: 8 }));
+        assert_eq!(c.cluster.effective_workers(), 8);
+        // workers: 0 is a config error, not a silent fallback.
+        assert!(Config::from_json_str(r#"{"cluster": {"parallel": {"workers": 0}}}"#).is_err());
+    }
+
+    #[test]
+    fn explicit_parallel_config_beats_env_default() {
+        // Explicit block wins regardless of NIYAMA_WORKERS (the env var
+        // only supplies the default when the block is absent) — asserted
+        // without touching the process env, which other tests share.
+        let c = Config::from_json_str(r#"{"cluster": {"parallel": {"workers": 3}}}"#).unwrap();
+        assert_eq!(c.cluster.effective_workers(), 3);
+        // Absent block: 1 or whatever NIYAMA_WORKERS says — both legal.
+        assert!(Config::default().cluster.effective_workers() >= 1);
     }
 
     #[test]

@@ -83,6 +83,27 @@ pub struct RunStats {
     pub sim_time_s: f64,
 }
 
+/// Outcome of one [`Engine::advance_window`] call — everything the
+/// sharded cluster loop's coordinator needs to merge a shard's window
+/// back into the shared state at the superstep barrier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowAdvance {
+    /// Iterations executed inside the window (each one is a cluster
+    /// event, so the coordinator adds them to `ClusterStats::events`).
+    pub steps: u64,
+    /// Start time of the last iteration executed — `NEG_INFINITY` when
+    /// no event fell inside the window. Per-engine event times are
+    /// nondecreasing, so this is also the maximum.
+    pub t_last: f64,
+    /// The engine reported no progress despite active work (KV-starved
+    /// baseline): park it until new work arrives, like the sequential
+    /// loop's `wedged` flag.
+    pub wedged: bool,
+    /// First event time at which the engine was fully drained (only
+    /// tracked when the caller asked — i.e. the replica is draining).
+    pub drained_at: Option<f64>,
+}
+
 /// Live load signals of one replica, published to the cluster dispatcher.
 ///
 /// Counts cover both admitted requests and arrivals already dispatched to
@@ -631,6 +652,41 @@ impl<B: ExecutionBackend> Engine<B> {
                 break;
             }
         }
+    }
+
+    /// Advance this engine through every event strictly before `horizon`
+    /// — the per-shard half of one bulk-synchronous superstep (see
+    /// `simulator::parallel`). The loop is exactly the engine branch of
+    /// the sequential cluster loop restricted to one replica: take the
+    /// next event time `t`, stop at `t >= horizon` (the boundary event —
+    /// arrival, control tick or run horizon — belongs to the
+    /// coordinator), step, park on a wedge. Event times are nondecreasing
+    /// per engine ([`Engine::next_event_time`] floors at `now`), so
+    /// `t_last` is the same value the shared clock would have after
+    /// sequentially processing this engine's window events.
+    ///
+    /// With `track_drain`, records the first event time at which
+    /// [`Engine::is_drained`] held after a step — the coordinator turns
+    /// it into the retirement edge a sequential run would have stamped
+    /// mid-window.
+    pub fn advance_window(&mut self, horizon: f64, track_drain: bool) -> WindowAdvance {
+        let mut out =
+            WindowAdvance { steps: 0, t_last: f64::NEG_INFINITY, wedged: false, drained_at: None };
+        while let Some(t) = self.next_event_time() {
+            if t >= horizon {
+                break;
+            }
+            out.steps += 1;
+            out.t_last = t;
+            if !self.step() {
+                out.wedged = true;
+                break;
+            }
+            if track_drain && out.drained_at.is_none() && self.is_drained() {
+                out.drained_at = Some(t);
+            }
+        }
+        out
     }
 
     /// Publish this replica's live load signals for dispatch decisions.

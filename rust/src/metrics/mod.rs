@@ -184,6 +184,60 @@ pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: 
 }
 
 impl Summary {
+    /// Canonical bit-exact rendering of every field — what the
+    /// shard-count-invariance tests compare, so "identical summaries"
+    /// means identical to the last mantissa bit, not within an epsilon.
+    /// Floats are rendered via `f64::to_bits`; all counters merge
+    /// associatively (sums over disjoint stores, sorted timeline
+    /// replays), which is why the sharded cluster loop can promise this
+    /// equality across worker counts at all.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write as _;
+        fn b(v: f64) -> u64 {
+            v.to_bits()
+        }
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "total={};finished={};violations={};vpct={:016x};ivpct={:016x};\
+             lvpct={:016x};svpct={:016x};",
+            self.total,
+            self.finished,
+            self.violations,
+            b(self.violation_pct),
+            b(self.important_violation_pct),
+            b(self.long_violation_pct),
+            b(self.short_violation_pct),
+        );
+        let _ = write!(
+            out,
+            "ttft={:016x}/{:016x}/{:016x};ttlt={:016x}/{:016x}/{:016x};tbt={:016x};\
+             goodput={:016x};relegated={:016x};gpu_s={:016x};kv_bytes={:016x};transfer={:016x};",
+            b(self.ttft_p50),
+            b(self.ttft_p95),
+            b(self.ttft_p99),
+            b(self.ttlt_p50),
+            b(self.ttlt_p95),
+            b(self.ttlt_p99),
+            b(self.max_tbt_p99),
+            b(self.goodput_rps),
+            b(self.relegated_pct),
+            b(self.gpu_seconds),
+            b(self.kv_bytes_migrated),
+            b(self.migration_transfer_s),
+        );
+        let _ = write!(
+            out,
+            "per_tier={:?};rejected={:?};degraded={:?};migrated={:?};",
+            self.per_tier, self.rejected_per_tier, self.degraded_per_tier,
+            self.migrated_live_per_tier,
+        );
+        for (t, n) in &self.replica_timeline {
+            let _ = write!(out, "edge={:016x}@{n};", b(*t));
+        }
+        out
+    }
+
     pub fn tier_violation_pct(&self, tier: usize) -> f64 {
         let (v, t) = self.per_tier[tier];
         if t == 0 {
@@ -430,6 +484,22 @@ mod tests {
         // 1 admitted + 3 rejected: 75% of submissions rejected.
         assert!((s.rejection_pct() - 75.0).abs() < 1e-9);
         assert_eq!(s.rejected_total(), 3);
+    }
+
+    #[test]
+    fn fingerprint_is_bit_exact() {
+        let mut store = RequestStore::new();
+        let id = add_request(&mut store, 0.0, 100, 2, 0, INT);
+        finish(&mut store, id, &[1.0, 1.04]);
+        let a = summarize(&store, 100.0, 1000, 3);
+        let mut b = a.clone();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "identical summaries must match");
+        // A one-ULP perturbation of any float must change the rendering.
+        b.ttft_p99 = f64::from_bits(b.ttft_p99.to_bits() ^ 1);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "fingerprint must see the last bit");
+        let mut c = a.clone();
+        c.replica_timeline = vec![(0.0, 2)];
+        assert_ne!(a.fingerprint(), c.fingerprint(), "timeline edges are part of the identity");
     }
 
     #[test]

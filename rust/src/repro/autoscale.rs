@@ -157,6 +157,7 @@ fn base_cfg() -> Config {
 
 /// The experiment: `niyama repro --id autoscale`.
 pub fn autoscale(scale: Scale) -> Result<()> {
+    let wall_t0 = std::time::Instant::now();
     let ds = Dataset::azure_code();
     let duration = scale.diurnal_s;
     let (trace, surge_start, surge_end) = diurnal_surge_trace(scale.seed, duration);
@@ -279,6 +280,7 @@ pub fn autoscale(scale: Scale) -> Result<()> {
     writeln!(out, "{{")?;
     writeln!(out, "  \"experiment\": \"autoscale\",")?;
     writeln!(out, "  \"duration_s\": {duration},")?;
+    writeln!(out, "  \"wall_clock_s\": {:.3},", wall_t0.elapsed().as_secs_f64())?;
     writeln!(out, "  \"surge_window_s\": [{surge_start}, {surge_end}],")?;
     writeln!(out, "  \"requests\": {},", trace.len())?;
     writeln!(out, "  \"rows\": [")?;

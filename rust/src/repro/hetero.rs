@@ -120,6 +120,7 @@ fn run_spec_scheme(
 
 /// The experiment: `niyama repro --id hetero`.
 pub fn hetero(scale: Scale) -> Result<()> {
+    let wall_t0 = std::time::Instant::now();
     let ds = Dataset::azure_code();
     let trace = skewed_tier_trace(scale);
     let horizon = scale.duration_s + drain_budget(&Config::default());
@@ -229,6 +230,7 @@ pub fn hetero(scale: Scale) -> Result<()> {
     writeln!(out, "{{")?;
     writeln!(out, "  \"experiment\": \"hetero\",")?;
     writeln!(out, "  \"duration_s\": {duration},")?;
+    writeln!(out, "  \"wall_clock_s\": {:.3},", wall_t0.elapsed().as_secs_f64())?;
     writeln!(out, "  \"requests\": {},", trace.len())?;
     writeln!(
         out,

@@ -140,6 +140,7 @@ pub fn run_surge(duration_s: f64, live_migration: bool) -> Summary {
 
 /// The experiment: `niyama repro --id migration`.
 pub fn migration(scale: Scale) -> Result<()> {
+    let wall_t0 = std::time::Instant::now();
     // ---- scenario 1: drain of a decode-heavy replica --------------------
     let base = run_drain(false);
     let live = run_drain(true);
@@ -209,6 +210,7 @@ pub fn migration(scale: Scale) -> Result<()> {
     let mut out = std::fs::File::create(json_path)?;
     writeln!(out, "{{")?;
     writeln!(out, "  \"experiment\": \"migration\",")?;
+    writeln!(out, "  \"wall_clock_s\": {:.3},", wall_t0.elapsed().as_secs_f64())?;
     writeln!(out, "  \"drain\": {{")?;
     writeln!(out, "    \"handoff_only_drain_s\": {:.4},", base.drain_s)?;
     writeln!(out, "    \"live_migration_drain_s\": {:.4},", live.drain_s)?;

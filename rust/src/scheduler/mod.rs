@@ -197,8 +197,11 @@ impl AppHistory {
     }
 }
 
-/// The scheduler interface the engine drives.
-pub trait Scheduler {
+/// The scheduler interface the engine drives. `Send` so an engine (and
+/// its boxed scheduler) can move between the sharded cluster loop's
+/// worker threads — schedulers own plain queue state, never thread-bound
+/// resources.
+pub trait Scheduler: Send {
     /// A new request entered the system (goes to the prefill queue).
     fn on_arrival(&mut self, id: RequestId, store: &RequestStore);
 

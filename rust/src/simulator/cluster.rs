@@ -109,6 +109,7 @@ use crate::simulator::dispatch::{
     LeastLoaded,
 };
 use crate::simulator::migration::{MigrationCandidate, MigrationMove, MigrationPlanner};
+use crate::simulator::parallel::ShardPool;
 use crate::workload::datasets::Dataset;
 
 /// Totally ordered event time for the replica-event heap (virtual times
@@ -256,6 +257,10 @@ pub struct Cluster {
     control_active: bool,
     /// (time, billed replica count) at every provision/retire edge.
     timeline: Vec<(f64, usize)>,
+    /// Worker threads for the sharded event loop
+    /// (`cluster.parallel.workers`, or the `NIYAMA_WORKERS` env default).
+    /// 1 selects the sequential loop — the bit-for-bit oracle.
+    workers: usize,
     pub stats: ClusterStats,
 }
 
@@ -379,6 +384,7 @@ impl Cluster {
             admission,
             control_active,
             timeline: vec![(0.0, replicas)],
+            workers: cfg.cluster.effective_workers(),
             stats: ClusterStats {
                 dispatched: vec![0; replicas],
                 rejected: vec![0; n_tiers],
@@ -512,6 +518,12 @@ impl Cluster {
     /// enqueue, migration, unwedging); superseded entries stay in the
     /// heap and are lazily discarded by [`Cluster::next_engine_event`].
     fn reheap(&mut self, i: usize) {
+        if self.workers > 1 {
+            // The sharded loop never pops the heap (it rescans per
+            // superstep — see `next_engine_event_scan`); pushing here
+            // would only accumulate entries nothing ever drains.
+            return;
+        }
         if self.wedged[i] {
             return;
         }
@@ -1253,7 +1265,24 @@ impl Cluster {
     /// the tick, so scaling, drain and migration progress are visible to
     /// the dispatch decision at the same instant); ticks stop when no
     /// work remains — a controller cannot create work.
+    ///
+    /// With `cluster.parallel.workers > 1` (or the `NIYAMA_WORKERS` env
+    /// default) the loop runs as bulk-synchronous supersteps on a shard
+    /// pool ([`crate::simulator::parallel`]); otherwise it is the
+    /// sequential event loop, unchanged — the bit-for-bit oracle the
+    /// sharded path is pinned against by `tests/parallel_core.rs`.
     pub fn run(&mut self, horizon_s: f64) {
+        if self.workers > 1 {
+            self.run_parallel(horizon_s);
+        } else {
+            self.run_sequential(horizon_s);
+        }
+    }
+
+    /// The sequential event loop: one shared clock, earliest event first
+    /// via the lazy-deletion heap. This body is the pre-sharding loop,
+    /// verbatim.
+    fn run_sequential(&mut self, horizon_s: f64) {
         loop {
             if self.warming_count > 0 {
                 self.promote_warming();
@@ -1333,6 +1362,176 @@ impl Cluster {
                 (Some(_), None) => unreachable!(),
             }
             self.stats.events += 1;
+        }
+    }
+
+    /// Earliest replica event among non-wedged engines by linear scan —
+    /// the sharded loop's replacement for the event heap. The heap's
+    /// lazy-deletion entries are coordinator-only state the shards
+    /// cannot keep fresh mid-window, and one O(R) scan per superstep is
+    /// cheaper than the window of parallel work it opens. Ties break
+    /// toward the lowest index (strict `<`), exactly like the heap's
+    /// `(EventKey, index)` tuple ordering.
+    fn next_engine_event_scan(&self) -> Option<(f64, usize)> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, e) in self.engines.iter().enumerate() {
+            if self.wedged[i] {
+                continue;
+            }
+            if let Some(t) = e.next_event_time() {
+                let better = match best {
+                    None => true,
+                    Some((bt, _)) => t < bt,
+                };
+                if better {
+                    best = Some((t, i));
+                }
+            }
+        }
+        best
+    }
+
+    /// The bulk-synchronous sharded event loop (`parallel.workers > 1`).
+    ///
+    /// Each superstep computes the **global safe horizon** — the
+    /// earliest event that can couple replicas: the next trace arrival,
+    /// the next control tick, or `horizon_s` itself. Everything a
+    /// replica does strictly before that instant is provably local
+    /// (dispatch, handoff, drain moves and live migrations all execute
+    /// on this coordinator at barriers, and in-flight migration windows
+    /// surface through each engine's own `next_event_time`), so all
+    /// shards advance their stripes to the horizon in parallel, then the
+    /// barrier merges their reports in a deterministic order and the
+    /// boundary event is applied with the sequential loop's exact
+    /// selection rules (ties to the control tick, then arrivals, lowest
+    /// replica index last).
+    ///
+    /// Outcome invariants, pinned by `tests/parallel_core.rs`:
+    /// worker-count invariance always; bit-for-bit equality with
+    /// [`Cluster::run_sequential`] for every configuration without
+    /// mid-window relegation handoff (with handoff enabled the scans run
+    /// at barriers instead of after each step, which may accept or order
+    /// moves differently — still deterministically).
+    fn run_parallel(&mut self, horizon_s: f64) {
+        let pool = ShardPool::new(self.workers);
+        loop {
+            if self.warming_count > 0 {
+                self.promote_warming();
+            }
+            let arrival_t = self.trace.get(self.next_arrival).map(|s| s.arrival_s);
+            let engine_ev = self.next_engine_event_scan();
+            if arrival_t.is_none() && engine_ev.is_none() {
+                break;
+            }
+            let control_on = self.controller.is_some() || self.migration.is_some();
+            let a = arrival_t.unwrap_or(f64::INFINITY);
+            let c = if control_on { self.next_control_t } else { f64::INFINITY };
+            let safe_h = a.min(c).min(horizon_s);
+            if let Some((t, _)) = engine_ev {
+                if t < safe_h {
+                    self.superstep_window(&pool, safe_h);
+                    continue;
+                }
+            }
+            // No replica event before the safe horizon: the boundary
+            // event is global. Same selection rules as the sequential
+            // loop, whose engine-event term is now >= safe_h by
+            // construction.
+            if control_on {
+                let next_work = a.min(engine_ev.map_or(f64::INFINITY, |(t, _)| t));
+                if c <= next_work && c < horizon_s {
+                    self.clock = self.clock.max(c);
+                    self.next_control_t = c + self.control.control_interval_s;
+                    self.control_tick();
+                    self.stats.events += 1;
+                    continue;
+                }
+            }
+            match (arrival_t, engine_ev) {
+                // Arrivals win ties against replica events, as in the
+                // sequential loop.
+                (Some(at), ev)
+                    if match ev {
+                        None => true,
+                        Some((t, _)) => at <= t,
+                    } =>
+                {
+                    if at >= horizon_s {
+                        break;
+                    }
+                    self.clock = self.clock.max(at);
+                    let spec = self.trace[self.next_arrival].clone();
+                    self.next_arrival += 1;
+                    self.dispatch_arrival(spec);
+                    self.stats.events += 1;
+                }
+                // Only replica events remain and none is before the safe
+                // horizon, which here must be `horizon_s` itself: done.
+                _ => break,
+            }
+        }
+    }
+
+    /// One superstep window: every non-wedged engine advances through
+    /// its events strictly before `safe_h` on the shard pool, then this
+    /// barrier merges the per-shard reports deterministically:
+    ///
+    /// 1. wedge flags and stale-snapshot marks (order-free, stripes are
+    ///    disjoint);
+    /// 2. retirement edges replayed in global `(time, replica)` order,
+    ///    rebuilding the shared clock per edge exactly as the sequential
+    ///    loop stamped it (its events arrive in nondecreasing time
+    ///    order, so its clock at an event `(t, i)` was
+    ///    `max(window-start clock, t)`);
+    /// 3. the shared clock advanced to the window's latest event;
+    /// 4. relegation-handoff scans for stepped replicas in ascending
+    ///    index order.
+    ///
+    /// GPU-seconds, per-tier counters and event totals all merge
+    /// associatively (sums, maxes and sorted replays), which is what
+    /// makes the result worker-count-invariant.
+    fn superstep_window(&mut self, pool: &ShardPool, safe_h: f64) {
+        let window_start_clock = self.clock;
+        let reports = pool.run_window(&mut self.engines, &self.states, &self.wedged, safe_h);
+        let mut t_max: Option<f64> = None;
+        let mut drains: Vec<(f64, usize)> = Vec::new();
+        let mut stepped: Vec<usize> = Vec::new();
+        for rep in reports {
+            self.stats.events += rep.steps;
+            if let Some(t) = rep.t_max {
+                t_max = Some(t_max.map_or(t, |m| m.max(t)));
+            }
+            for &i in &rep.wedged {
+                self.wedged[i] = true;
+            }
+            for &i in &rep.stepped {
+                self.snap_dirty[i] = true;
+            }
+            stepped.extend_from_slice(&rep.stepped);
+            drains.extend_from_slice(&rep.drained);
+        }
+        debug_assert_eq!(self.clock.to_bits(), window_start_clock.to_bits());
+        drains.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        for (t, i) in drains {
+            // Sequential clock at this retire was max(window-start
+            // clock, t): earlier window events all had time <= t.
+            self.clock = self.clock.max(t);
+            if self.control_active {
+                self.maybe_retire(i);
+            }
+        }
+        if let Some(t) = t_max {
+            self.clock = self.clock.max(t);
+        }
+        if self.relegation_handoff {
+            stepped.sort_unstable();
+            for i in stepped {
+                let rel = self.engines[i].relegated_total();
+                if rel > self.handoff_seen[i] || self.engines[i].stats.iterations % 8 == 0 {
+                    self.try_handoff(i);
+                    self.handoff_seen[i] = rel;
+                }
+            }
         }
     }
 }

@@ -27,6 +27,13 @@
 //! keep their slot (state [`ReplicaState::Retired`]) so the cluster's
 //! lazy-deletion event heap, snapshot cache, and per-replica stats stay
 //! index-stable as the set mutates.
+//!
+//! Under the sharded cluster loop (`cluster.parallel.workers > 1`) the
+//! controller runs exclusively on the coordinator at superstep barriers:
+//! control ticks bound every superstep's safe horizon, so no engine ever
+//! advances past a tick before the controller has seen the pre-tick
+//! state. Scaling decisions, warm-up promotion and drain/retire edges
+//! are therefore identical in either execution mode.
 
 use crate::config::{AutoscalePolicy, ControlConfig};
 use crate::engine::LoadSnapshot;

@@ -39,6 +39,13 @@
 //!
 //! All planning is a pure function of [`LoadSnapshot`]s and candidate
 //! descriptors, so the policy is unit-testable without a cluster.
+//!
+//! Under the sharded cluster loop (`cluster.parallel.workers > 1`),
+//! planning — like all cross-replica effects — happens only on the
+//! coordinator at superstep barriers: ticks bound the safe horizon, and
+//! an in-flight transfer's `resume_at` instant surfaces through the
+//! *target engine's own* `next_event_time`, so a shard advancing that
+//! engine stops exactly where the sequential loop would.
 
 use crate::config::InterconnectConfig;
 use crate::engine::LoadSnapshot;

@@ -10,13 +10,17 @@
 //! plus the global admission controller at the dispatcher. [`migration`]
 //! adds live KV migration: an interconnect price model and a planner
 //! that moves even *decoding* requests between replicas mid-flight
-//! (drain acceleration + proactive rebalancing).
+//! (drain acceleration + proactive rebalancing). [`parallel`] shards the
+//! engines across a worker-thread pool and runs the cluster loop as
+//! bulk-synchronous supersteps (`cluster.parallel` config block; the
+//! sequential loop remains the bit-for-bit oracle).
 
 pub mod cluster;
 pub mod control;
 pub mod cost_model;
 pub mod dispatch;
 pub mod migration;
+pub mod parallel;
 
 pub use cluster::{silo_chunk_for_tier, silo_cluster_spec, Cluster, SiloGroup};
 pub use control::{ReplicaState, ScalingController, ScalingDecision};

@@ -1,0 +1,307 @@
+//! Sharded execution of the cluster event loop: a persistent
+//! worker-thread pool that advances disjoint stripes of the engine set
+//! through one bulk-synchronous superstep window.
+//!
+//! # Execution model
+//!
+//! The coordinator ([`crate::simulator::cluster::Cluster::run`] with
+//! `cluster.parallel.workers > 1`) repeatedly:
+//!
+//! 1. computes the **global safe horizon** `H` — the earliest event that
+//!    can couple replicas: the next trace arrival, the next control tick
+//!    (scaling, drain progress, live-migration planning) or the run
+//!    horizon itself. Replica-local events strictly before `H` cannot
+//!    affect any other replica: dispatch, handoff, drain moves and live
+//!    migrations all happen on the coordinator at barriers, and
+//!    in-flight transfer windows surface through each engine's own
+//!    `next_event_time` (so `resume_at` instants need no special term);
+//! 2. hands every shard its stripe (`replica i` lives on shard
+//!    `i % workers`) to advance independently up to `H`
+//!    ([`crate::engine::Engine::advance_window`]);
+//! 3. **barriers**: merges the per-shard [`ShardReport`]s back into the
+//!    shared state in a deterministic order (retirement edges sorted by
+//!    `(time, replica)`, handoff scans in ascending replica index), then
+//!    applies the boundary event itself.
+//!
+//! Merging is associative and the stripes are disjoint, so the outcome
+//! is invariant in the worker count — `tests/parallel_core.rs` pins
+//! workers ∈ {1, 2, 8} byte-identical, and (for configurations without
+//! mid-window relegation handoff) bit-identical to the sequential
+//! oracle.
+//!
+//! # Why raw pointers
+//!
+//! Workers need `&mut` access to *their* engines while the coordinator
+//! owns the `Vec<Engine<_>>`. The stripes are index-disjoint, which the
+//! borrow checker cannot see through a slice, so the pool passes a
+//! [`SharedView`] of raw pointers instead. Soundness argument:
+//!
+//! * a view is built from `&mut [Engine<_>]` inside [`ShardPool::run_window`],
+//!   which holds that exclusive borrow until every shard has reported —
+//!   the coordinator never touches engines while a window is in flight;
+//! * shard `w` dereferences only indices `i` with `i % workers == w`
+//!   (see [`advance_stripe`]) — no two shards alias an engine;
+//! * `states` / `wedged` are read-only for every shard and mutated only
+//!   by the coordinator between windows;
+//! * workers hold the view only while processing one job; they own no
+//!   pointer across jobs, so reallocation of the engine vector between
+//!   windows (replica provisioning) is harmless — every window re-derives
+//!   fresh pointers.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::engine::{Engine, SimBackend};
+use crate::simulator::control::ReplicaState;
+
+// The whole module moves `Engine<SimBackend>` values across threads;
+// that is only sound because the engine (scheduler, store, backend) is
+// plain owned data. Keep the proof at compile time.
+const _: fn() = || {
+    fn assert_send<T: Send>() {}
+    assert_send::<Engine<SimBackend>>();
+};
+
+/// One superstep window's view of the coordinator's per-replica vectors.
+/// See the module docs for the aliasing argument that makes the `Send`
+/// impl sound.
+#[derive(Clone, Copy)]
+struct SharedView {
+    engines: *mut Engine<SimBackend>,
+    states: *const ReplicaState,
+    wedged: *const bool,
+    len: usize,
+}
+
+// SAFETY: the pointed-to data is `Send` (asserted above) and the
+// run_window protocol guarantees exclusive, stripe-disjoint access — see
+// the module docs.
+unsafe impl Send for SharedView {}
+
+struct WindowJob {
+    view: SharedView,
+    horizon: f64,
+}
+
+/// What one shard did inside a window — everything the coordinator
+/// needs to reconstruct, at the barrier, exactly the bookkeeping the
+/// sequential loop would have done mid-window.
+#[derive(Debug, Default)]
+pub struct ShardReport {
+    /// Engine iterations executed (cluster events).
+    pub steps: u64,
+    /// Latest event start time processed; `None` if the stripe was idle.
+    pub t_max: Option<f64>,
+    /// Replicas that stepped at least once (their snapshots are stale).
+    pub stepped: Vec<usize>,
+    /// Replicas that wedged (no progress despite active work).
+    pub wedged: Vec<usize>,
+    /// `(event time, replica)` at which a draining replica first became
+    /// fully drained — the coordinator replays these in global `(t, i)`
+    /// order to stamp retirement edges exactly where the sequential loop
+    /// would have.
+    pub drained: Vec<(f64, usize)>,
+}
+
+/// Advance shard `shard`'s stripe (indices `shard`, `shard + stride`,
+/// ...) through every engine event strictly before `horizon`.
+///
+/// # Safety
+///
+/// Caller must guarantee the [`SharedView`] protocol: `view` pointers
+/// valid for `view.len` elements, no other thread touching this stripe,
+/// `states`/`wedged` not written by anyone while the call runs.
+unsafe fn advance_stripe(
+    view: &SharedView,
+    shard: usize,
+    stride: usize,
+    horizon: f64,
+) -> ShardReport {
+    let mut rep = ShardReport::default();
+    let mut i = shard;
+    while i < view.len {
+        if !*view.wedged.add(i) {
+            let draining = matches!(*view.states.add(i), ReplicaState::Draining { .. });
+            let adv = (*view.engines.add(i)).advance_window(horizon, draining);
+            if adv.steps > 0 {
+                rep.steps += adv.steps;
+                rep.t_max = Some(rep.t_max.map_or(adv.t_last, |m: f64| m.max(adv.t_last)));
+                rep.stepped.push(i);
+            }
+            if adv.wedged {
+                rep.wedged.push(i);
+            }
+            if let Some(t) = adv.drained_at {
+                rep.drained.push((t, i));
+            }
+        }
+        i += stride;
+    }
+    rep
+}
+
+fn worker_loop(
+    shard: usize,
+    stride: usize,
+    jobs: Receiver<WindowJob>,
+    results: Sender<ShardReport>,
+) {
+    while let Ok(job) = jobs.recv() {
+        // SAFETY: run_window holds `&mut [Engine]` for the whole window
+        // and this shard only touches indices ≡ shard (mod stride).
+        let rep = unsafe { advance_stripe(&job.view, shard, stride, job.horizon) };
+        if results.send(rep).is_err() {
+            return; // pool dropped mid-window; nothing left to report to
+        }
+    }
+}
+
+/// Persistent shard workers for one `Cluster::run` call. Threads are
+/// spawned once and fed per-window jobs over channels — a cluster run
+/// barriers at every arrival and control tick, so per-window thread
+/// spawning would dominate exactly the fleet sizes the sharding is for.
+pub struct ShardPool {
+    jobs: Vec<Sender<WindowJob>>,
+    results: Receiver<ShardReport>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    pub fn new(workers: usize) -> ShardPool {
+        let workers = workers.max(1);
+        let (res_tx, res_rx) = channel();
+        let mut jobs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<WindowJob>();
+            let res = res_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("niyama-shard-{w}"))
+                .spawn(move || worker_loop(w, workers, rx, res))
+                .expect("failed to spawn shard worker");
+            jobs.push(tx);
+            handles.push(handle);
+        }
+        ShardPool { jobs, results: res_rx, handles }
+    }
+
+    /// Shard count (also the stripe stride).
+    pub fn workers(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Run one superstep window: every engine advances through its
+    /// events strictly before `horizon` in parallel; returns once all
+    /// shards have reported. Blocking until every report is in IS the
+    /// barrier — the exclusive `engines` borrow is held throughout, so
+    /// no coordinator state can race a shard.
+    pub fn run_window(
+        &self,
+        engines: &mut [Engine<SimBackend>],
+        states: &[ReplicaState],
+        wedged: &[bool],
+        horizon: f64,
+    ) -> Vec<ShardReport> {
+        assert_eq!(engines.len(), states.len());
+        assert_eq!(engines.len(), wedged.len());
+        let view = SharedView {
+            engines: engines.as_mut_ptr(),
+            states: states.as_ptr(),
+            wedged: wedged.as_ptr(),
+            len: engines.len(),
+        };
+        for tx in &self.jobs {
+            tx.send(WindowJob { view, horizon }).expect("shard worker exited early");
+        }
+        let mut out = Vec::with_capacity(self.jobs.len());
+        for _ in 0..self.jobs.len() {
+            out.push(self.results.recv().expect("shard worker died mid-window"));
+        }
+        out
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // Closing the job channels ends every worker loop.
+        self.jobs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::workload::datasets::Dataset;
+    use crate::workload::WorkloadSpec;
+    use crate::util::Rng;
+
+    fn loaded_engine(seed: u64) -> Engine<SimBackend> {
+        let cfg = Config::default();
+        let spec = WorkloadSpec::uniform(Dataset::azure_code(), 2.0, 30.0);
+        let trace = spec.generate(&mut Rng::new(seed));
+        let mut eng = Engine::sim(&cfg);
+        eng.submit_trace(trace);
+        eng
+    }
+
+    #[test]
+    fn window_advance_respects_horizon_strictly() {
+        let mut eng = loaded_engine(1);
+        let adv = eng.advance_window(10.0, false);
+        assert!(adv.steps > 0);
+        assert!(adv.t_last < 10.0, "no processed event may start at/past the horizon");
+        // Everything left starts at or past the horizon.
+        if let Some(t) = eng.next_event_time() {
+            assert!(t >= 10.0);
+        }
+        // An empty window is a no-op.
+        let again = eng.advance_window(10.0, false);
+        assert_eq!(again.steps, 0);
+        assert_eq!(again.t_last, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn pool_matches_inline_advance() {
+        // The pool over 3 workers must leave every engine in exactly the
+        // state a direct advance_window sweep leaves its twin.
+        let mut pooled: Vec<Engine<SimBackend>> = (0..5u64).map(loaded_engine).collect();
+        let mut inline: Vec<Engine<SimBackend>> = (0..5u64).map(loaded_engine).collect();
+        let states = vec![ReplicaState::Active; 5];
+        let wedged = vec![false; 5];
+        let pool = ShardPool::new(3);
+        let reports = pool.run_window(&mut pooled, &states, &wedged, 20.0);
+        let (mut steps, mut t_max) = (0u64, f64::NEG_INFINITY);
+        for r in &reports {
+            steps += r.steps;
+            if let Some(t) = r.t_max {
+                t_max = t_max.max(t);
+            }
+            assert!(r.wedged.is_empty());
+            assert!(r.drained.is_empty());
+        }
+        let mut want_steps = 0;
+        let mut want_t = f64::NEG_INFINITY;
+        for e in inline.iter_mut() {
+            let adv = e.advance_window(20.0, false);
+            want_steps += adv.steps;
+            if adv.steps > 0 {
+                want_t = want_t.max(adv.t_last);
+            }
+        }
+        assert_eq!(steps, want_steps);
+        assert_eq!(t_max.to_bits(), want_t.to_bits());
+        for (p, s) in pooled.iter().zip(&inline) {
+            assert_eq!(p.now().to_bits(), s.now().to_bits());
+            assert_eq!(p.stats.iterations, s.stats.iterations);
+        }
+        // A stripe visits exactly its own indices.
+        let mut seen: Vec<usize> = reports.iter().flat_map(|r| r.stepped.clone()).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), reports.iter().map(|r| r.stepped.len()).sum::<usize>());
+    }
+}

@@ -1,0 +1,211 @@
+//! Shard-count invariance for the bulk-synchronous parallel cluster
+//! loop (ISSUE 6 acceptance):
+//!
+//! 1. `parallel` absent / `workers: 1` runs the sequential event loop —
+//!    and for every configuration without mid-window relegation handoff
+//!    the sharded path is **bit-for-bit** that oracle: identical
+//!    `Summary` fingerprints (every float compared via `to_bits`),
+//!    replica timelines, retirement instants and cluster stats on a
+//!    scenario exercising dispatch + autoscale + drain + live migration
+//!    together;
+//! 2. the outcome is invariant in the worker count (1/2/8), the way p2c
+//!    dispatch determinism is pinned;
+//! 3. conservation invariants hold under the parallel path: every
+//!    submitted request is served exactly once (tombstones excluded),
+//!    and a retired replica holds no KV and owes no work.
+
+use niyama::config::{
+    AutoscalePolicy, Config, DispatchPolicy, InterconnectConfig, ParallelConfig,
+};
+use niyama::metrics::Summary;
+use niyama::request::{Phase, RequestSpec};
+use niyama::simulator::cluster::Cluster;
+use niyama::simulator::ReplicaState;
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::{ArrivalProcess, WorkloadSpec};
+
+const LT: u32 = 6251;
+
+/// Quiet base load plus a 20 QPS step surge: enough pressure to trigger
+/// predictive scale-ups (warming replicas), a post-surge trough that
+/// drains capacity back down (graceful drain + retirement), and decode
+/// backlogs deep enough for live KV migration to move work during the
+/// mid-run forced drain.
+fn surge_trace() -> Vec<RequestSpec> {
+    let mut base = WorkloadSpec::uniform(Dataset::azure_code(), 0.5, 1000.0);
+    base.arrivals = ArrivalProcess::Poisson { qps: 0.5 };
+    let mut trace = base.generate(&mut Rng::new(3));
+    let mut surge = WorkloadSpec::uniform(Dataset::azure_code(), 1.0, 1000.0);
+    surge.arrivals = ArrivalProcess::Burst {
+        base_qps: 0.0,
+        burst_qps: 20.0,
+        burst_start_s: 400.0,
+        burst_end_s: 550.0,
+    };
+    surge.tier_shares = vec![0.6, 0.2, 0.2];
+    trace.extend(surge.generate(&mut Rng::new(4)));
+    trace
+}
+
+/// The everything-at-once control-plane config: load-aware dispatch,
+/// predictive autoscaling with warm-up, and an interconnect so drains
+/// and rebalancing use live KV migration.
+fn scenario_cfg(workers: Option<usize>) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+    cfg.cluster.control.autoscale = AutoscalePolicy::Predictive;
+    cfg.cluster.control.min_replicas = 1;
+    cfg.cluster.control.max_replicas = 4;
+    cfg.cluster.control.warmup_s = 10.0;
+    cfg.cluster.control.control_interval_s = 2.5;
+    cfg.cluster.control.hold_s = 5.0;
+    cfg.cluster.interconnect = Some(InterconnectConfig::default());
+    cfg.cluster.parallel = workers.map(|w| ParallelConfig { workers: w });
+    cfg
+}
+
+/// Run the full scenario: surge to mid-burst, force-drain one active
+/// replica while decodes are in flight (pinning the drain + live
+/// migration path deterministically), then run to completion.
+fn run_scenario(workers: Option<usize>) -> (Cluster, Summary) {
+    let cfg = scenario_cfg(workers);
+    let mut cluster = Cluster::new(&cfg, 1);
+    cluster.submit_trace(surge_trace());
+    cluster.run(470.0);
+    let active: Vec<usize> = cluster
+        .replica_states()
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| matches!(s, ReplicaState::Active))
+        .map(|(i, _)| i)
+        .collect();
+    if active.len() >= 2 {
+        cluster.drain_replica(active[0]);
+    }
+    cluster.run(4000.0);
+    let s = cluster.summary(LT);
+    (cluster, s)
+}
+
+fn assert_identical(label: &str, a: &(Cluster, Summary), b: &(Cluster, Summary)) {
+    assert_eq!(a.1.fingerprint(), b.1.fingerprint(), "{label}: Summary must be byte-identical");
+    assert_eq!(
+        a.0.eval_time().to_bits(),
+        b.0.eval_time().to_bits(),
+        "{label}: evaluation horizon must match to the bit"
+    );
+    assert_eq!(a.0.replica_timeline(), b.0.replica_timeline(), "{label}: timelines");
+    assert_eq!(
+        a.0.retirement_times().len(),
+        b.0.retirement_times().len(),
+        "{label}: slot count"
+    );
+    for (i, (x, y)) in a.0.retirement_times().iter().zip(b.0.retirement_times()).enumerate() {
+        assert_eq!(
+            x.map(f64::to_bits),
+            y.map(f64::to_bits),
+            "{label}: retirement instant of replica {i}"
+        );
+    }
+    assert_eq!(a.0.replica_states(), b.0.replica_states(), "{label}: lifecycle states");
+    assert_eq!(a.0.stats.events, b.0.stats.events, "{label}: event count");
+    assert_eq!(a.0.stats.dispatched, b.0.stats.dispatched, "{label}: per-replica dispatch");
+    assert_eq!(a.0.stats.handoffs, b.0.stats.handoffs, "{label}: handoffs");
+    assert_eq!(
+        a.0.stats.drain_redispatched,
+        b.0.stats.drain_redispatched,
+        "{label}: drain moves"
+    );
+    assert_eq!(a.0.stats.scale_ups, b.0.stats.scale_ups, "{label}: scale-ups");
+    assert_eq!(a.0.stats.scale_downs, b.0.stats.scale_downs, "{label}: scale-downs");
+    assert_eq!(a.0.stats.retired, b.0.stats.retired, "{label}: retirements");
+    assert_eq!(a.0.stats.control_ticks, b.0.stats.control_ticks, "{label}: control ticks");
+}
+
+#[test]
+fn sharded_loop_is_bitforbit_the_sequential_oracle_and_worker_count_invariant() {
+    // workers: 1 is the sequential loop by construction; `parallel`
+    // absent defaults to it too (unless the NIYAMA_WORKERS CI leg
+    // overrides — under which this comparison still must hold, because
+    // the scenario has no mid-window handoff and the sharded path is
+    // pinned bit-for-bit to the oracle).
+    let oracle = run_scenario(Some(1));
+
+    // Premises: the scenario actually exercises every subsystem at once.
+    assert!(oracle.0.stats.scale_ups > 0, "premise: the surge must trigger scale-ups");
+    assert!(oracle.0.stats.retired > 0, "premise: capacity must drain back down");
+    assert!(
+        oracle.1.migrated_live_total() > 0,
+        "premise: the forced mid-burst drain must move decoders via live migration"
+    );
+    assert!(oracle.1.total > 1000, "premise: a real workload, not a toy");
+
+    let absent = run_scenario(None);
+    assert_identical("parallel-absent vs workers=1", &oracle, &absent);
+    for workers in [2usize, 8] {
+        let sharded = run_scenario(Some(workers));
+        assert_identical(&format!("workers={workers} vs sequential oracle"), &oracle, &sharded);
+    }
+}
+
+#[test]
+fn handoff_configs_are_worker_count_invariant() {
+    // With relegation handoff enabled the sharded loop scans at
+    // superstep barriers instead of after every engine step, so it may
+    // legitimately order moves differently than the sequential loop —
+    // but it must still be deterministic and invariant in the worker
+    // count.
+    let run = |workers: usize| {
+        let mut cfg = scenario_cfg(Some(workers));
+        cfg.cluster.dispatch.relegation_handoff = true;
+        let mut cluster = Cluster::new(&cfg, 2);
+        cluster.submit_trace(surge_trace());
+        cluster.run(4000.0);
+        let s = cluster.summary(LT);
+        (cluster, s)
+    };
+    let two = run(2);
+    let eight = run(8);
+    assert_identical("handoff workers=2 vs workers=8", &two, &eight);
+}
+
+#[test]
+fn conservation_invariants_hold_under_the_parallel_path() {
+    let (cluster, summary) = run_scenario(Some(8));
+    let n = surge_trace().len();
+
+    // Every submitted request is accounted exactly once: admission is
+    // wide open here, so the tombstone-free total must equal the trace.
+    assert_eq!(summary.total, n, "no request may be lost or double-counted");
+    assert_eq!(summary.rejected_total(), 0);
+    let stored: usize = cluster
+        .stores()
+        .iter()
+        .map(|s| s.iter().filter(|r| r.phase != Phase::Migrated).count())
+        .sum();
+    assert_eq!(stored, n, "stores must hold each request exactly once (tombstones aside)");
+
+    // The per-replica dispatch tally follows requests to their final
+    // home and must sum to the dispatched total.
+    let dispatched: usize = cluster.stats.dispatched.iter().sum();
+    assert_eq!(dispatched, n);
+
+    // A retired replica owes nothing: fully drained, zero KV held.
+    let mut saw_retired = false;
+    for (i, st) in cluster.replica_states().iter().enumerate() {
+        if matches!(st, ReplicaState::Retired) {
+            saw_retired = true;
+            assert!(cluster.engines()[i].is_drained(), "retired replica {i} still owes work");
+            assert_eq!(
+                cluster.engines()[i].store.total_kv_tokens(),
+                0,
+                "retired replica {i} still holds KV"
+            );
+        }
+    }
+    assert!(saw_retired, "premise: the scenario must retire at least one replica");
+
+    // Everything finished by the evaluation horizon.
+    assert_eq!(summary.finished, summary.total, "the drained run must finish everything");
+}
