@@ -96,6 +96,8 @@ fn populate(
                 tier: i % 3,
                 app_id: (i % 3) as u32,
                 importance: if i % 5 == 0 { Importance::Low } else { Importance::High },
+                session_id: None,
+                prefix_tokens: 0,
             },
             slo,
         );
@@ -117,7 +119,11 @@ fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-fn write_json(stats: &[BenchStat], sims: &[(String, usize, u64, f64)]) {
+fn write_json(
+    stats: &[BenchStat],
+    sims: &[(String, usize, u64, f64)],
+    sessions: &[(String, f64, u64, f64)],
+) {
     let path = std::env::var("NIYAMA_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_scheduler_hot_path.json".to_string());
     let mut s = String::new();
@@ -144,6 +150,18 @@ fn write_json(stats: &[BenchStat], sims: &[(String, usize, u64, f64)]) {
             wall,
             *iters as f64 / wall,
             if i + 1 < sims.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"sessions\": [\n");
+    for (i, (name, hit_rate, saved, wall)) in sessions.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"hit_rate\": {:.4}, \"prefill_tokens_saved\": {}, \
+             \"wall_s\": {:.3}}}{}\n",
+            json_escape(name),
+            hit_rate,
+            saved,
+            wall,
+            if i + 1 < sessions.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -232,6 +250,8 @@ fn main() {
             tier: 0,
             app_id: 0,
             importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
         };
         let slo = Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
         for replicas in [8usize, 32] {
@@ -258,6 +278,8 @@ fn main() {
                     chunk_size: 256,
                     max_batch_decodes: 256,
                     tier_affinity_mask: 0,
+                    cache_sessions: Vec::new(),
+                    cache_resident_tokens: 0,
                 })
                 .collect();
             for policy in [
@@ -265,6 +287,7 @@ fn main() {
                 DispatchPolicy::JoinShortestQueue,
                 DispatchPolicy::LeastLoaded,
                 DispatchPolicy::PowerOfTwoChoices,
+                DispatchPolicy::CacheAffinity,
             ] {
                 let mut d = build_dispatcher(&DispatchConfig {
                     policy,
@@ -348,5 +371,31 @@ fn main() {
         }
     }
 
-    write_json(&stats, &sims);
+    println!("\n== session serving: prefix-cache hit rates ==");
+    let mut sessions: Vec<(String, f64, u64, f64)> = Vec::new();
+    {
+        use niyama::repro::sessions::{run_sessions, VARIANTS};
+        let session_duration = if iter_cap() < 300 { 60.0 } else { 240.0 };
+        for v in VARIANTS {
+            let t0 = Instant::now();
+            let s = run_sessions(v, 0.4, session_duration, 9);
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "sessions.{:<16} hit_rate {:>6.1}% saved {:>9} prefill tokens \
+                 ({} turns in {wall:.3}s)",
+                v.name,
+                100.0 * s.cache_hit_rate(),
+                s.prefill_tokens_saved,
+                s.total
+            );
+            sessions.push((
+                format!("sessions.{}", v.name),
+                s.cache_hit_rate(),
+                s.prefill_tokens_saved,
+                wall,
+            ));
+        }
+    }
+
+    write_json(&stats, &sims, &sessions);
 }

@@ -436,6 +436,13 @@ pub enum DispatchPolicy {
     /// tier — a siloed deployment expressed as dispatch policy over
     /// affinity-tagged pools (`run_silo` is built on this).
     TierAffinity,
+    /// Prefix-cache-aware routing for session workloads: score each
+    /// replica's queue wait plus the cheapest way to acquire the turn's
+    /// session prefix there — reuse its own cached prefix, re-prefill
+    /// the miss, or (when an interconnect is configured) ship the best
+    /// cached prefix over it. Falls back to `LeastLoaded`-style scoring
+    /// for sessionless arrivals.
+    CacheAffinity,
 }
 
 impl DispatchPolicy {
@@ -447,6 +454,7 @@ impl DispatchPolicy {
             "power-of-two-choices" | "p2c" => DispatchPolicy::PowerOfTwoChoices,
             "predicted-ttft" | "pttft" => DispatchPolicy::PredictedTtft,
             "tier-affinity" | "silo" => DispatchPolicy::TierAffinity,
+            "cache-affinity" | "ca" => DispatchPolicy::CacheAffinity,
             other => bail!("unknown dispatch policy '{other}'"),
         })
     }
@@ -459,6 +467,7 @@ impl DispatchPolicy {
             DispatchPolicy::PowerOfTwoChoices => "power-of-two-choices",
             DispatchPolicy::PredictedTtft => "predicted-ttft",
             DispatchPolicy::TierAffinity => "tier-affinity",
+            DispatchPolicy::CacheAffinity => "cache-affinity",
         }
     }
 }
@@ -527,6 +536,110 @@ impl InterconnectConfig {
         }
         if self.latency_s.is_nan() || self.latency_s < 0.0 {
             bail!("{what}.latency_s must be non-negative");
+        }
+        Ok(())
+    }
+}
+
+/// Per-replica prefix cache over retained session KV (see
+/// [`crate::kv::PrefixCache`]). Configured under `cluster.prefix_cache`;
+/// when absent the cache does not exist and every timeline is
+/// bit-for-bit the session-oblivious one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixCacheConfig {
+    /// Fraction of each replica's KV capacity the cache may occupy.
+    /// Residency is strictly subordinate to live requests: the engine
+    /// evicts down to the live-KV headroom every step, so this is a cap,
+    /// not a reservation.
+    pub capacity_frac: f64,
+    /// Cache block granularity, tokens: hits are floored to whole blocks
+    /// and residency is charged block-rounded (vLLM-style paging).
+    pub block_tokens: u32,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig { capacity_frac: 0.2, block_tokens: 64 }
+    }
+}
+
+impl PrefixCacheConfig {
+    /// Parse a JSON `prefix_cache` object: defaults from
+    /// [`PrefixCacheConfig::default`], overridden per key.
+    fn from_json(j: &Json) -> Result<PrefixCacheConfig> {
+        let mut k = PrefixCacheConfig::default();
+        override_f64(j, "capacity_frac", &mut k.capacity_frac);
+        override_u32(j, "block_tokens", &mut k.block_tokens)?;
+        Ok(k)
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        if self.capacity_frac.is_nan()
+            || self.capacity_frac <= 0.0
+            || self.capacity_frac > 1.0
+        {
+            bail!("{what}.capacity_frac must be in (0, 1]");
+        }
+        if self.block_tokens == 0 {
+            bail!("{what}.block_tokens must be at least 1");
+        }
+        Ok(())
+    }
+}
+
+/// Multi-turn session workload shape, layered over a dataset's
+/// prompt/decode statistics (see `workload::SessionSpec`). Configured
+/// under `workload.session`; absence keeps the single-shot generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionConfig {
+    /// Mean turns per session (geometric distribution, min 1).
+    pub mean_turns: f64,
+    /// Mean think time between a turn finishing and the next being sent
+    /// (exponential), seconds.
+    pub mean_think_s: f64,
+    /// Fraction of sessions that belong to the flash crowd: they all
+    /// share one hot system prompt (session id 0), so a single retained
+    /// prefix serves many users.
+    pub flash_frac: f64,
+    /// Token length of the shared hot system prompt.
+    pub hot_prompt_tokens: u32,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            mean_turns: 4.0,
+            mean_think_s: 10.0,
+            flash_frac: 0.0,
+            hot_prompt_tokens: 1024,
+        }
+    }
+}
+
+impl SessionConfig {
+    /// Parse a JSON `session` object: defaults from
+    /// [`SessionConfig::default`], overridden per key.
+    fn from_json(j: &Json) -> Result<SessionConfig> {
+        let mut k = SessionConfig::default();
+        override_f64(j, "mean_turns", &mut k.mean_turns);
+        override_f64(j, "mean_think_s", &mut k.mean_think_s);
+        override_f64(j, "flash_frac", &mut k.flash_frac);
+        override_u32(j, "hot_prompt_tokens", &mut k.hot_prompt_tokens)?;
+        Ok(k)
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        if self.mean_turns.is_nan() || self.mean_turns < 1.0 {
+            bail!("{what}.mean_turns must be at least 1");
+        }
+        if self.mean_think_s.is_nan() || self.mean_think_s < 0.0 {
+            bail!("{what}.mean_think_s must be non-negative");
+        }
+        if self.flash_frac.is_nan() || !(0.0..=1.0).contains(&self.flash_frac) {
+            bail!("{what}.flash_frac must be in [0, 1]");
+        }
+        if self.flash_frac > 0.0 && self.hot_prompt_tokens == 0 {
+            bail!("{what}.hot_prompt_tokens must be positive when flash_frac > 0");
         }
         Ok(())
     }
@@ -652,6 +765,9 @@ pub struct ClusterConfig {
     /// Cross-replica interconnect for live KV migration (`None` — the
     /// default — keeps the handoff-only behavior bit-for-bit).
     pub interconnect: Option<InterconnectConfig>,
+    /// Per-replica prefix cache over retained session KV (`None` — the
+    /// default — keeps the session-oblivious behavior bit-for-bit).
+    pub prefix_cache: Option<PrefixCacheConfig>,
     /// Sharded cluster-loop execution (`None` = the `NIYAMA_WORKERS`
     /// env default, falling back to the sequential loop).
     pub parallel: Option<ParallelConfig>,
@@ -665,6 +781,7 @@ impl Default for ClusterConfig {
             dispatch: DispatchConfig::default(),
             control: ControlConfig::default(),
             interconnect: None,
+            prefix_cache: None,
             parallel: None,
         }
     }
@@ -694,6 +811,10 @@ pub struct Config {
     pub scheduler: SchedulerConfig,
     pub tiers: Vec<QosTier>,
     pub cluster: ClusterConfig,
+    /// Multi-turn session workload shape (`workload.session` in JSON;
+    /// `None` keeps the single-shot generator). Consumed by
+    /// `workload::SessionSpec::from_config`.
+    pub session: Option<SessionConfig>,
     /// Random seed for workload generation.
     pub seed: u64,
 }
@@ -705,6 +826,7 @@ impl Default for Config {
             scheduler: SchedulerConfig::default(),
             tiers: table2_tiers(),
             cluster: ClusterConfig::default(),
+            session: None,
             seed: 0,
         }
     }
@@ -775,6 +897,9 @@ impl Config {
             if let Some(ic) = c.get("interconnect") {
                 cfg.cluster.interconnect = Some(InterconnectConfig::from_json(ic));
             }
+            if let Some(pc) = c.get("prefix_cache") {
+                cfg.cluster.prefix_cache = Some(PrefixCacheConfig::from_json(pc)?);
+            }
             if let Some(par) = c.get("parallel") {
                 cfg.cluster.parallel = Some(ParallelConfig::from_json(par)?);
             }
@@ -810,6 +935,12 @@ impl Config {
                 if let Some(p) = ctl.get("admission").and_then(|v| v.as_str()) {
                     k.admission = crate::simulator::dispatch::AdmissionPolicy::parse(p)?;
                 }
+            }
+        }
+
+        if let Some(w) = j.get("workload") {
+            if let Some(s) = w.get("session") {
+                cfg.session = Some(SessionConfig::from_json(s)?);
             }
         }
 
@@ -855,6 +986,12 @@ impl Config {
         }
         if let Some(ic) = &self.cluster.interconnect {
             ic.validate("cluster.interconnect")?;
+        }
+        if let Some(pc) = &self.cluster.prefix_cache {
+            pc.validate("cluster.prefix_cache")?;
+        }
+        if let Some(s) = &self.session {
+            s.validate("workload.session")?;
         }
         if let Some(par) = &self.cluster.parallel {
             par.validate()?;
@@ -1340,6 +1477,7 @@ mod tests {
             "qwen_tp2.json",
             "hetero_pools.json",
             "live_migration.json",
+            "sessions.json",
         ] {
             let path = dir.join(name);
             let cfg = Config::from_file(path.to_str().unwrap())
@@ -1359,6 +1497,13 @@ mod tests {
         let mig = Config::from_file(dir.join("live_migration.json").to_str().unwrap()).unwrap();
         let ic = mig.cluster.interconnect.expect("interconnect configured");
         assert!(ic.bandwidth_gbytes_per_s > 0.0);
+        let sess = Config::from_file(dir.join("sessions.json").to_str().unwrap()).unwrap();
+        assert_eq!(sess.cluster.dispatch.policy, DispatchPolicy::CacheAffinity);
+        let pc = sess.cluster.prefix_cache.expect("prefix cache configured");
+        assert_eq!((pc.capacity_frac, pc.block_tokens), (0.2, 64));
+        let sc = sess.session.expect("session workload configured");
+        assert_eq!(sc.mean_turns, 5.0);
+        assert_eq!(sc.flash_frac, 0.3);
     }
 
     #[test]

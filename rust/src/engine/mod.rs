@@ -24,6 +24,7 @@
 //! bound.
 
 use crate::config::Config;
+use crate::kv::PrefixCache;
 use crate::metrics::{summarize, RollingLatency, Summary};
 use crate::predictor::LatencyPredictor;
 use crate::request::{Phase, RequestId, RequestSpec, RequestStore};
@@ -178,12 +179,31 @@ pub struct LoadSnapshot {
     /// the cluster from the replica's pool spec; the engine itself is
     /// affinity-oblivious.
     pub tier_affinity_mask: u32,
+    /// Retained session prefixes in this replica's prefix cache:
+    /// `(session_id, retained_tokens)`, sorted by session id; empty when
+    /// the cache is disabled. Cache-affinity dispatch scores routing a
+    /// session's next turn against these summaries.
+    pub cache_sessions: Vec<(u64, u32)>,
+    /// KV tokens the prefix cache currently occupies (block-rounded).
+    /// *Not* part of `kv_used`: retained prefixes are evicted on demand
+    /// whenever live work needs the pages, so they never block
+    /// feasibility — this field is informational (and a scoring signal).
+    pub cache_resident_tokens: u64,
 }
 
 impl LoadSnapshot {
     /// KV occupancy as a fraction of capacity.
     pub fn kv_utilization(&self) -> f64 {
         self.kv_used as f64 / self.kv_capacity.max(1) as f64
+    }
+
+    /// Retained prefix tokens this replica's cache holds for `session`
+    /// (0 when unknown). Binary search over the sorted summary.
+    pub fn cached_prefix(&self, session: u64) -> u32 {
+        match self.cache_sessions.binary_search_by_key(&session, |&(s, _)| s) {
+            Ok(i) => self.cache_sessions[i].1,
+            Err(_) => 0,
+        }
     }
 
     /// KV tokens still free on this replica, net of commitments to
@@ -308,6 +328,12 @@ pub struct Engine<B: ExecutionBackend> {
     /// but the scheduler is only told about it once the copy completes,
     /// so it cannot emit tokens mid-transfer (stop-and-copy).
     held: Vec<(f64, RequestId)>,
+    /// Retained session-prefix KV (`None` when `cluster.prefix_cache`
+    /// is absent — the feature-off path must stay bit-for-bit legacy).
+    /// Strictly shard-local state: turns only hit the cache of the
+    /// replica they were dispatched to, which is what keeps `workers`
+    /// 1/2/8 byte-identical.
+    prefix_cache: Option<PrefixCache>,
 }
 
 /// Build the configured scheduler over a latency model.
@@ -386,6 +412,11 @@ impl<B: ExecutionBackend> Engine<B> {
             kv_bytes_per_token: cfg.hardware.kv_bytes_per_token,
             outbound: Vec::new(),
             held: Vec::new(),
+            prefix_cache: cfg.cluster.prefix_cache.as_ref().map(|pc| {
+                let budget =
+                    (cfg.hardware.kv_capacity_tokens() as f64 * pc.capacity_frac) as u64;
+                PrefixCache::new(budget, pc.block_tokens)
+            }),
         }
     }
 
@@ -439,6 +470,23 @@ impl<B: ExecutionBackend> Engine<B> {
     fn admit(&mut self, spec: RequestSpec) -> RequestId {
         let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
         let id = self.store.insert(spec, slo);
+        // Prefix-cache hit: the block-aligned part of the session prefix
+        // is already resident here, so the request starts partially
+        // prefilled — the scheduler, the cost model and `BatchStats` all
+        // see the shrunken effective prefill through `prefilled` /
+        // `kv_tokens()`. Capped at prompt−1 so the final prefill chunk
+        // still runs and emits the first token (Sarathi semantics).
+        if let Some(cache) = self.prefix_cache.as_mut() {
+            let r = self.store.get_mut(id);
+            if let Some(sid) = r.spec.session_id {
+                let wanted =
+                    r.spec.prefix_tokens.min(r.spec.prompt_tokens.saturating_sub(1));
+                let hit = cache.lookup(sid, wanted);
+                if hit > 0 {
+                    r.prefilled = hit;
+                }
+            }
+        }
         self.live.insert(id);
         self.scheduler.on_arrival(id, &self.store);
         id
@@ -501,12 +549,22 @@ impl<B: ExecutionBackend> Engine<B> {
         self.settle_transfers();
         self.admit_due();
 
+        let live_kv = self.store.total_kv_tokens() + self.reserved_outbound_kv();
+        // Retained prefixes always yield to live work: shrink the cache
+        // to whatever headroom live KV leaves before planning. The cache
+        // is invisible to the scheduler's `kv_used` (it is evictable on
+        // demand, so counting it would wedge the planner once live work
+        // approaches capacity − budget); any overshoot is bounded by one
+        // batch's KV growth and corrected at the next step.
+        if let Some(cache) = self.prefix_cache.as_mut() {
+            cache.evict_to(self.kv_capacity.saturating_sub(live_kv));
+        }
         let ctx = PlanContext {
             now: self.now,
             kv_capacity: self.kv_capacity,
             // Outbound live-KV reservations occupy real pages until the
             // copy completes, so the scheduler's headroom must see them.
-            kv_used: self.store.total_kv_tokens() + self.reserved_outbound_kv(),
+            kv_used: live_kv,
         };
         let batch = self.scheduler.plan(ctx, &mut self.store);
 
@@ -594,6 +652,14 @@ impl<B: ExecutionBackend> Engine<B> {
         self.live.remove(&id);
         self.scheduler.on_finished(id, &self.store);
         self.rolling.record(self.store.get(id));
+        // Retain the finished turn's KV (prompt + generated tokens) as
+        // the session's grown prefix; the next turn re-sends it and hits.
+        if let Some(cache) = self.prefix_cache.as_mut() {
+            let r = self.store.get(id);
+            if let Some(sid) = r.spec.session_id {
+                cache.insert(sid, r.spec.prompt_tokens.saturating_add(r.spec.decode_tokens));
+            }
+        }
         self.backend.release(id);
     }
 
@@ -712,6 +778,11 @@ impl<B: ExecutionBackend> Engine<B> {
             chunk_size: self.chunk_size,
             max_batch_decodes: self.max_batch_decodes,
             tier_affinity_mask: 0,
+            cache_sessions: self.prefix_cache.as_ref().map_or_else(Vec::new, |c| c.sessions()),
+            cache_resident_tokens: self
+                .prefix_cache
+                .as_ref()
+                .map_or(0, |c| c.resident_tokens()),
         };
         // Outbound live-KV reservations are occupied pages: the request
         // left the store, its KV has not left the cache yet.
@@ -1022,6 +1093,13 @@ impl<B: ExecutionBackend> Engine<B> {
         self.scheduler.backlog()
     }
 
+    /// This replica's prefix cache, if enabled — the cluster aggregates
+    /// its hit counters into `ClusterStats`/`Summary`, and the retention
+    /// conservation test audits its residency against the budget.
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix_cache.as_ref()
+    }
+
     /// Monotone relegation count from the scheduler (cluster handoff
     /// uses it as a change signal to avoid per-iteration scans).
     pub fn relegated_total(&self) -> usize {
@@ -1043,6 +1121,8 @@ mod tests {
             tier,
             app_id: tier as u32,
             importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
         }
     }
 

@@ -28,7 +28,9 @@ impl BlockLedger {
     }
 
     fn blocks_for(&self, tokens: u32) -> u64 {
-        ((tokens + self.block_tokens - 1) / self.block_tokens) as u64
+        // Round up in u64: `tokens + block_tokens - 1` wraps in u32 for
+        // prompts near u32::MAX.
+        (tokens as u64 + self.block_tokens as u64 - 1) / self.block_tokens as u64
     }
 
     /// Ensure `id` holds enough blocks for `tokens`; allocates the delta.
@@ -65,6 +67,178 @@ impl BlockLedger {
 
     pub fn holders(&self) -> usize {
         self.held.len()
+    }
+}
+
+/// Stable key of a multi-turn session (`RequestSpec::session_id`).
+pub type SessionId = u64;
+
+/// Per-replica cache of retained session-prefix KV.
+///
+/// After a turn finishes, its full KV (prompt + generated tokens) may be
+/// retained so the session's next turn skips re-prefilling the shared
+/// prefix. Residency is charged block-granular through an embedded
+/// [`BlockLedger`] — the same accounting currency as live requests — and
+/// the engine shrinks the cache on demand (`evict_to`) whenever live
+/// work needs the headroom, so retained prefixes always lose to live
+/// requests. Eviction is LRU over whole sessions, ordered by a
+/// monotonic touch tick (deterministic: no wall clock, no hash-map
+/// iteration order).
+#[derive(Debug)]
+pub struct PrefixCache {
+    ledger: BlockLedger,
+    block_tokens: u32,
+    budget_tokens: u64,
+    /// session → (retained prefix tokens, ledger handle, last-touch tick)
+    entries: HashMap<SessionId, (u32, RequestId, u64)>,
+    next_handle: RequestId,
+    tick: u64,
+    /// Admission-time lookups (one per session-tagged arrival).
+    pub lookups: u64,
+    /// Lookups that matched a non-empty block-aligned prefix.
+    pub hits: u64,
+    /// Prefill tokens skipped across all hits.
+    pub tokens_saved: u64,
+}
+
+impl PrefixCache {
+    pub fn new(budget_tokens: u64, block_tokens: u32) -> Self {
+        assert!(block_tokens > 0);
+        PrefixCache {
+            ledger: BlockLedger::new(budget_tokens, block_tokens),
+            block_tokens,
+            budget_tokens,
+            entries: HashMap::new(),
+            next_handle: 0,
+            tick: 0,
+            lookups: 0,
+            hits: 0,
+            tokens_saved: 0,
+        }
+    }
+
+    pub fn budget_tokens(&self) -> u64 {
+        self.budget_tokens
+    }
+
+    /// KV tokens the cache currently occupies (block-rounded).
+    pub fn resident_tokens(&self) -> u64 {
+        self.ledger.used_tokens()
+    }
+
+    /// Retained sessions, sorted by session id — the per-replica cache
+    /// summary published in `LoadSnapshot`.
+    pub fn sessions(&self) -> Vec<(SessionId, u32)> {
+        let mut v: Vec<(SessionId, u32)> =
+            self.entries.iter().map(|(&s, &(tok, _, _))| (s, tok)).collect();
+        v.sort_unstable_by_key(|&(s, _)| s);
+        v
+    }
+
+    /// Non-mutating peek at a session's retained prefix length (tokens,
+    /// not block-floored). Returns 0 for unknown sessions.
+    pub fn cached_prefix(&self, session: SessionId) -> u32 {
+        self.entries.get(&session).map_or(0, |&(tok, _, _)| tok)
+    }
+
+    /// Usable hit length: the block-aligned part of the retained prefix,
+    /// capped at `wanted` (the arriving turn's shared-prefix tokens).
+    fn usable(&self, cached: u32, wanted: u32) -> u32 {
+        let m = cached.min(wanted);
+        m - m % self.block_tokens
+    }
+
+    /// Longest-prefix match for an arriving turn: returns how many of its
+    /// first `wanted` prompt tokens are already resident (block-aligned),
+    /// touches the entry for LRU, and bumps the hit counters.
+    pub fn lookup(&mut self, session: SessionId, wanted: u32) -> u32 {
+        self.lookups += 1;
+        self.tick += 1;
+        let tick = self.tick;
+        let hit = match self.entries.get_mut(&session) {
+            Some(e) => {
+                e.2 = tick;
+                let cached = e.0;
+                self.usable(cached, wanted)
+            }
+            None => 0,
+        };
+        if hit > 0 {
+            self.hits += 1;
+            self.tokens_saved += hit as u64;
+        }
+        hit
+    }
+
+    /// Retain a finished turn's KV: the session's prefix grows to
+    /// `tokens` (never shrinks on insert). Evicts least-recently-used
+    /// *other* sessions until the block-rounded residency fits the
+    /// budget; a prefix larger than the whole budget is truncated to it.
+    pub fn insert(&mut self, session: SessionId, tokens: u32) {
+        self.tick += 1;
+        let tick = self.tick;
+        let cap = (self.budget_tokens / self.block_tokens as u64) * self.block_tokens as u64;
+        let tokens = (tokens as u64).min(cap).min(u32::MAX as u64) as u32;
+        if tokens == 0 {
+            return;
+        }
+        let handle = match self.entries.get_mut(&session) {
+            Some(e) => {
+                e.2 = tick;
+                if tokens <= e.0 {
+                    return;
+                }
+                e.0 = tokens;
+                e.1
+            }
+            None => {
+                let h = self.next_handle;
+                self.next_handle = self.next_handle.wrapping_add(1);
+                self.entries.insert(session, (tokens, h, tick));
+                h
+            }
+        };
+        while !self.ledger.reserve(handle, tokens) {
+            if !self.evict_lru(Some(session)) {
+                // Nothing else to evict and it still does not fit: drop
+                // the entry rather than retain a lie.
+                if let Some((_, h, _)) = self.entries.remove(&session) {
+                    self.ledger.release(h);
+                }
+                return;
+            }
+        }
+    }
+
+    /// Shrink residency to at most `limit` tokens, evicting whole LRU
+    /// sessions. The engine calls this with the KV headroom left after
+    /// live requests, so cache residency always yields to live work.
+    pub fn evict_to(&mut self, limit: u64) {
+        while self.resident_tokens() > limit {
+            if !self.evict_lru(None) {
+                break;
+            }
+        }
+    }
+
+    /// Evict the least-recently-touched session (skipping `keep`).
+    /// Returns false when there was nothing to evict.
+    fn evict_lru(&mut self, keep: Option<SessionId>) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(&s, _)| Some(s) != keep)
+            .min_by_key(|(_, &(_, _, tick))| tick)
+            .map(|(&s, _)| s);
+        match victim {
+            Some(s) => {
+                if let Some((_, h, _)) = self.entries.remove(&s) {
+                    self.ledger.release(h);
+                }
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -108,9 +282,21 @@ impl KvStore {
     /// Panics if an id is missing or duplicated.
     pub fn get_many_mut(&mut self, ids: &[RequestId]) -> Vec<&mut [f32]> {
         // Safety dance via raw pointers: ids are checked for uniqueness.
-        for (i, a) in ids.iter().enumerate() {
-            for b in &ids[i + 1..] {
-                assert_ne!(a, b, "duplicate request id in decode batch");
+        // Small batches keep the branch-free pairwise scan; past the
+        // threshold a sort of a scratch copy is O(n log n) instead of the
+        // ~32k comparisons a 256-wide decode batch used to pay.
+        const PAIRWISE_MAX: usize = 16;
+        if ids.len() <= PAIRWISE_MAX {
+            for (i, a) in ids.iter().enumerate() {
+                for b in &ids[i + 1..] {
+                    assert_ne!(a, b, "duplicate request id in decode batch");
+                }
+            }
+        } else {
+            let mut sorted = ids.to_vec();
+            sorted.sort_unstable();
+            for w in sorted.windows(2) {
+                assert_ne!(w[0], w[1], "duplicate request id in decode batch");
             }
         }
         let mut out = Vec::with_capacity(ids.len());
@@ -195,5 +381,108 @@ mod tests {
         let mut s = KvStore::new(4);
         s.entry(1);
         let _ = s.get_many_mut(&[1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn kvstore_rejects_duplicates_in_large_batches() {
+        // Past the pairwise threshold the sort-based check must still
+        // catch a duplicate.
+        let mut s = KvStore::new(4);
+        let mut ids: Vec<RequestId> = (0..32).collect();
+        for &id in &ids {
+            s.entry(id);
+        }
+        ids.push(7);
+        let _ = s.get_many_mut(&ids);
+    }
+
+    #[test]
+    fn kvstore_get_many_mut_large_unique_batch() {
+        let mut s = KvStore::new(4);
+        let ids: Vec<RequestId> = (0..64).collect();
+        for &id in &ids {
+            s.entry(id)[0] = id as f32;
+        }
+        let bufs = s.get_many_mut(&ids);
+        assert_eq!(bufs.len(), 64);
+        assert_eq!(bufs[63][0], 63.0);
+    }
+
+    #[test]
+    fn ledger_blocks_for_no_u32_overflow() {
+        let mut l = BlockLedger::new(u32::MAX as u64 + 1024, 16);
+        assert!(l.reserve(1, u32::MAX), "near-u32::MAX prompt must not wrap");
+        assert!(l.used_tokens() >= u32::MAX as u64);
+    }
+
+    #[test]
+    fn prefix_cache_block_aligned_hits() {
+        let mut c = PrefixCache::new(10_000, 16);
+        assert_eq!(c.lookup(1, 500), 0, "cold miss");
+        c.insert(1, 100);
+        // Retained 100 tokens; an arrival sharing 90 hits the aligned 80.
+        assert_eq!(c.lookup(1, 90), 80);
+        // Sharing more than retained: floor of the retained length.
+        assert_eq!(c.lookup(1, 500), 96);
+        assert_eq!(c.lookups, 3);
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.tokens_saved, 80 + 96);
+    }
+
+    #[test]
+    fn prefix_cache_insert_grows_never_shrinks() {
+        let mut c = PrefixCache::new(10_000, 16);
+        c.insert(1, 100);
+        c.insert(1, 50);
+        assert_eq!(c.cached_prefix(1), 100);
+        c.insert(1, 160);
+        assert_eq!(c.cached_prefix(1), 160);
+        assert_eq!(c.resident_tokens(), 160);
+    }
+
+    #[test]
+    fn prefix_cache_lru_eviction_on_budget() {
+        // Budget = 4 blocks of 16 = 64 tokens.
+        let mut c = PrefixCache::new(64, 16);
+        c.insert(1, 32);
+        c.insert(2, 32);
+        c.lookup(1, 32); // touch 1: session 2 is now LRU
+        c.insert(3, 32); // evicts 2
+        assert_eq!(c.cached_prefix(2), 0);
+        assert_eq!(c.cached_prefix(1), 32);
+        assert_eq!(c.cached_prefix(3), 32);
+        assert!(c.resident_tokens() <= 64);
+    }
+
+    #[test]
+    fn prefix_cache_oversized_insert_truncates_to_budget() {
+        let mut c = PrefixCache::new(64, 16);
+        c.insert(1, 1000);
+        assert_eq!(c.cached_prefix(1), 64);
+        assert_eq!(c.resident_tokens(), 64);
+    }
+
+    #[test]
+    fn prefix_cache_evict_to_yields_to_live_kv() {
+        let mut c = PrefixCache::new(1000, 16);
+        c.insert(1, 160);
+        c.insert(2, 160);
+        c.insert(3, 160);
+        c.evict_to(200);
+        assert!(c.resident_tokens() <= 200);
+        // LRU order: 1 then 2 were evicted, 3 survives.
+        assert_eq!(c.cached_prefix(3), 160);
+        c.evict_to(0);
+        assert_eq!(c.resident_tokens(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_sessions_summary_sorted() {
+        let mut c = PrefixCache::new(1000, 16);
+        c.insert(9, 32);
+        c.insert(2, 16);
+        c.insert(5, 48);
+        assert_eq!(c.sessions(), vec![(2, 16), (5, 48), (9, 32)]);
     }
 }

@@ -211,7 +211,7 @@ fn usage() -> &'static str {
      \n\
      serve     --artifacts DIR --addr HOST:PORT [--policy P]\n\
      simulate  --policy P --dataset D --qps N --duration S [--config FILE]\n\
-     repro     --id <fig1|fig2|fig4|fig5|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|tab1|tab3|dispatch|autoscale|hetero|migration|all>\n\
+     repro     --id <fig1|fig2|fig4|fig5|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|tab1|tab3|dispatch|autoscale|hetero|migration|sessions|all>\n\
                [--quick|--full]   (or: repro --list)\n\
      calibrate\n\
      \n\

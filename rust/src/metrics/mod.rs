@@ -74,6 +74,15 @@ pub struct Summary {
     pub kv_bytes_migrated: f64,
     /// Virtual seconds spent inside live-migration transfer windows.
     pub migration_transfer_s: f64,
+    /// Prefix-cache lookups at admission (session arrivals reaching a
+    /// cache-enabled replica). Filled by `Cluster::summary`; zero for
+    /// single-engine summaries and whenever the cache is disabled.
+    pub prefix_cache_lookups: u64,
+    /// Lookups that matched a non-empty cached prefix.
+    pub prefix_cache_hits: u64,
+    /// Prefill tokens skipped by cache hits — prompt work the cluster
+    /// never had to recompute.
+    pub prefill_tokens_saved: u64,
 }
 
 /// Compute the summary at horizon `horizon_s` (typically the workload end
@@ -180,6 +189,9 @@ pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: 
         migrated_live_per_tier: Vec::new(),
         kv_bytes_migrated: 0.0,
         migration_transfer_s: 0.0,
+        prefix_cache_lookups: 0,
+        prefix_cache_hits: 0,
+        prefill_tokens_saved: 0,
     }
 }
 
@@ -232,6 +244,11 @@ impl Summary {
             self.per_tier, self.rejected_per_tier, self.degraded_per_tier,
             self.migrated_live_per_tier,
         );
+        let _ = write!(
+            out,
+            "cache={}/{}/{};",
+            self.prefix_cache_lookups, self.prefix_cache_hits, self.prefill_tokens_saved,
+        );
         for (t, n) in &self.replica_timeline {
             let _ = write!(out, "edge={:016x}@{n};", b(*t));
         }
@@ -260,6 +277,16 @@ impl Summary {
     /// Total mid-flight requests moved by live KV migration.
     pub fn migrated_live_total(&self) -> usize {
         self.migrated_live_per_tier.iter().sum()
+    }
+
+    /// Prefix-cache hit rate over all admission lookups, in [0, 1].
+    /// Zero when the cache is disabled (no lookups ever happen).
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.prefix_cache_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_cache_hits as f64 / self.prefix_cache_lookups as f64
+        }
     }
 
     /// Rejections as a percentage of everything submitted (admitted +
@@ -330,6 +357,8 @@ mod tests {
                 tier,
                 app_id: tier as u32,
                 importance: Importance::High,
+                session_id: None,
+                prefix_tokens: 0,
             },
             slo,
         )
@@ -420,6 +449,8 @@ mod tests {
                 tier: 0,
                 app_id: 0,
                 importance: Importance::Low,
+                session_id: None,
+                prefix_tokens: 0,
             },
             INT,
         );

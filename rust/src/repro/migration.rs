@@ -51,6 +51,8 @@ fn spec(arrival_s: f64, prompt: u32, decode: u32, tier: usize) -> RequestSpec {
         tier,
         app_id: tier as u32,
         importance: Importance::High,
+        session_id: None,
+        prefix_tokens: 0,
     }
 }
 

@@ -16,6 +16,7 @@ pub mod load;
 pub mod micro;
 pub mod migration;
 pub mod overload;
+pub mod sessions;
 
 use crate::config::{Config, Policy, SchedulerConfig};
 use crate::engine::Engine;
@@ -152,6 +153,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
         "autoscale" => autoscale::autoscale(scale),
         "hetero" => hetero::hetero(scale),
         "migration" => migration::migration(scale),
+        "sessions" => sessions::sessions(scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n=== {id} ===");
@@ -165,7 +167,7 @@ pub fn run(id: &str, scale: Scale) -> Result<()> {
 
 pub const ALL_IDS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11",
-    "fig12", "tab1", "tab3", "dispatch", "autoscale", "hetero", "migration",
+    "fig12", "tab1", "tab3", "dispatch", "autoscale", "hetero", "migration", "sessions",
 ];
 
 #[cfg(test)]

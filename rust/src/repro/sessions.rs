@@ -1,0 +1,234 @@
+//! Session-workload experiment (`repro --id sessions`): what per-replica
+//! prefix caching buys, and how much of it routing has to protect.
+//!
+//! The workload is multi-turn conversations over the ShareGPT length
+//! statistics with a 30% flash crowd sharing one 1024-token hot system
+//! prompt (see [`crate::workload::SessionSpec`]). Every turn re-submits
+//! the session's whole history, so without a cache the cluster
+//! re-prefills the same tokens over and over; with a cache the replica
+//! that served the previous turn can skip them — but only if the
+//! dispatcher sends the turn back there.
+//!
+//! Three deployments on the same 4-replica cluster (equal GPU-seconds):
+//!
+//! 1. **no-cache** — least-loaded routing, `cluster.prefix_cache` unset:
+//!    the pre-PR-7 system, bit-for-bit.
+//! 2. **cache-blind** — the cache is on, but routing stays least-loaded:
+//!    hits happen only when load happens to bounce a turn back to its
+//!    old replica (or the flash crowd warms everyone).
+//! 3. **cache-affinity** — the cache is on and the dispatcher prices the
+//!    hit: queue wait plus the cheapest prefix acquisition.
+//!
+//! For each we bisect the highest session arrival rate whose tier-0
+//! violation stays under 1%, then report the sustained turn throughput
+//! per GPU at that capacity point — the headline is effective QPS per
+//! GPU, cache-affinity vs cache-blind, at equal GPU-seconds and the
+//! same violation ceiling. Written to `results/sessions.csv` and
+//! `results/sessions.json`.
+
+use super::{drain_budget, f, Scale, CsvOut};
+use crate::config::{Config, DispatchPolicy, PrefixCacheConfig};
+use crate::metrics::Summary;
+use crate::simulator::cluster::{max_qps, Cluster};
+use crate::util::Rng;
+use crate::workload::datasets::Dataset;
+use crate::workload::SessionSpec;
+use anyhow::Result;
+use std::io::Write;
+
+const REPLICAS: usize = 4;
+const TIER0_CAP_PCT: f64 = 1.0;
+
+/// One deployment variant of the comparison.
+#[derive(Clone, Copy)]
+pub struct Variant {
+    pub name: &'static str,
+    pub policy: DispatchPolicy,
+    pub cache: bool,
+}
+
+pub const VARIANTS: [Variant; 3] = [
+    Variant { name: "no-cache", policy: DispatchPolicy::LeastLoaded, cache: false },
+    Variant { name: "cache-blind", policy: DispatchPolicy::LeastLoaded, cache: true },
+    Variant { name: "cache-affinity", policy: DispatchPolicy::CacheAffinity, cache: true },
+];
+
+fn config_for(v: Variant) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = v.policy;
+    if v.cache {
+        cfg.cluster.prefix_cache = Some(PrefixCacheConfig::default());
+    }
+    cfg
+}
+
+/// The conversation workload both headline runs share: ~5 turns per
+/// session, 8 s of think time between turns, and a 30% flash crowd on a
+/// shared 1024-token hot prompt.
+pub fn session_workload(sessions_per_s: f64, duration_s: f64) -> SessionSpec {
+    let mut spec = SessionSpec::conversational(Dataset::sharegpt(), sessions_per_s, duration_s);
+    spec.mean_turns = 5.0;
+    spec.mean_think_s = 8.0;
+    spec.flash_frac = 0.3;
+    spec.hot_prompt_tokens = 1024;
+    spec
+}
+
+/// Run one variant at one session rate on the 4-replica cluster.
+pub fn run_sessions(v: Variant, sessions_per_s: f64, duration_s: f64, seed: u64) -> Summary {
+    let cfg = config_for(v);
+    let trace = session_workload(sessions_per_s, duration_s).generate(&mut Rng::new(seed));
+    let mut cluster = Cluster::new(&cfg, REPLICAS);
+    cluster.submit_trace(trace);
+    cluster.run(duration_s + drain_budget(&cfg));
+    cluster.summary(Dataset::sharegpt().long_prompt_threshold())
+}
+
+/// Capacity point of a variant: the highest session rate whose tier-0
+/// violation stays under the ceiling, plus the summary measured there.
+fn capacity(v: Variant, scale: Scale, duration_s: f64) -> (f64, Summary) {
+    let probe =
+        |rate: f64| run_sessions(v, rate, duration_s, scale.seed).tier_violation_pct(0);
+    let rate = max_qps(probe, 0.05, 4.0, TIER0_CAP_PCT, scale.search_iters);
+    let s = run_sessions(v, rate, duration_s, scale.seed);
+    (rate, s)
+}
+
+/// The experiment: `niyama repro --id sessions`.
+pub fn sessions(scale: Scale) -> Result<()> {
+    let wall_t0 = std::time::Instant::now();
+    let duration = scale.duration_s.min(600.0);
+    let gpus = REPLICAS as f64 * Config::default().hardware.tp_degree as f64;
+
+    println!(
+        "Session serving on {REPLICAS} replicas ({gpus} GPUs), tier-0 ceiling \
+         {TIER0_CAP_PCT}%, {duration}s traces:"
+    );
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>9} {:>9} {:>12}",
+        "scheme", "sess/s", "turn-qps", "qps/gpu", "tier0%", "hit%", "saved-Mtok"
+    );
+    let mut csv = CsvOut::create(
+        "sessions",
+        "scheme,sessions_per_s,turn_qps,qps_per_gpu,tier0_violation_pct,hit_rate_pct,\
+         prefill_tokens_saved",
+    )?;
+
+    let mut rows: Vec<(Variant, f64, f64, Summary)> = Vec::new();
+    for v in VARIANTS {
+        let (rate, s) = capacity(v, scale, duration);
+        let turn_qps = s.total as f64 / duration;
+        println!(
+            "{:<16} {:>10} {:>10} {:>10} {:>9} {:>9} {:>12}",
+            v.name,
+            f(rate),
+            f(turn_qps),
+            f(turn_qps / gpus),
+            f(s.tier_violation_pct(0)),
+            f(100.0 * s.cache_hit_rate()),
+            f(s.prefill_tokens_saved as f64 / 1e6),
+        );
+        csv.row(&[
+            v.name.to_string(),
+            f(rate),
+            f(turn_qps),
+            f(turn_qps / gpus),
+            f(s.tier_violation_pct(0)),
+            f(100.0 * s.cache_hit_rate()),
+            s.prefill_tokens_saved.to_string(),
+        ])?;
+        rows.push((v, rate, turn_qps, s));
+    }
+
+    let blind = &rows[1];
+    let affinity = &rows[2];
+    let gain = affinity.2 / blind.2.max(1e-9);
+    println!(
+        "headline: cache-affinity serves {:.2}x the turn QPS per GPU of cache-blind \
+         ({} vs {} qps/gpu) at equal GPU-seconds and <= {TIER0_CAP_PCT}% tier-0 violations \
+         (hit rate {:.0}% vs {:.0}%)",
+        gain,
+        f(affinity.2 / gpus),
+        f(blind.2 / gpus),
+        100.0 * affinity.3.cache_hit_rate(),
+        100.0 * blind.3.cache_hit_rate(),
+    );
+
+    std::fs::create_dir_all("results")?;
+    let json_path = "results/sessions.json";
+    let mut out = std::fs::File::create(json_path)?;
+    writeln!(out, "{{")?;
+    writeln!(out, "  \"experiment\": \"sessions\",")?;
+    writeln!(out, "  \"wall_clock_s\": {:.3},", wall_t0.elapsed().as_secs_f64())?;
+    writeln!(out, "  \"replicas\": {REPLICAS},")?;
+    writeln!(out, "  \"gpus\": {gpus},")?;
+    writeln!(out, "  \"duration_s\": {duration},")?;
+    writeln!(out, "  \"tier0_ceiling_pct\": {TIER0_CAP_PCT},")?;
+    writeln!(out, "  \"variants\": {{")?;
+    for (i, (v, rate, turn_qps, s)) in rows.iter().enumerate() {
+        writeln!(out, "    \"{}\": {{", v.name)?;
+        writeln!(out, "      \"sessions_per_s\": {rate:.4},")?;
+        writeln!(out, "      \"turn_qps\": {turn_qps:.4},")?;
+        writeln!(out, "      \"qps_per_gpu\": {:.4},", turn_qps / gpus)?;
+        writeln!(out, "      \"tier0_violation_pct\": {:.4},", s.tier_violation_pct(0))?;
+        writeln!(out, "      \"hit_rate\": {:.4},", s.cache_hit_rate())?;
+        writeln!(out, "      \"prefill_tokens_saved\": {}", s.prefill_tokens_saved)?;
+        writeln!(out, "    }}{}", if i + 1 < rows.len() { "," } else { "" })?;
+    }
+    writeln!(out, "  }},")?;
+    writeln!(out, "  \"headline_qps_per_gpu_gain_vs_cache_blind\": {gain:.4}")?;
+    writeln!(out, "}}")?;
+    println!("wrote {} and {json_path}", csv.path);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const QUICK_RATE: f64 = 0.4;
+    const QUICK_DUR: f64 = 120.0;
+
+    #[test]
+    fn no_cache_variant_never_touches_the_cache() {
+        let s = run_sessions(VARIANTS[0], QUICK_RATE, QUICK_DUR, 7);
+        assert!(s.total > 20);
+        assert_eq!(s.prefix_cache_lookups, 0);
+        assert_eq!(s.prefix_cache_hits, 0);
+        assert_eq!(s.prefill_tokens_saved, 0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn cache_blind_still_scores_some_hits() {
+        // Flash-crowd turns warm every replica, and least-loaded routing
+        // bounces some turns back home by chance — the cache works even
+        // without affinity routing, just worse.
+        let s = run_sessions(VARIANTS[1], QUICK_RATE, QUICK_DUR, 7);
+        assert!(s.prefix_cache_lookups > 0);
+        assert!(s.prefix_cache_hits > 0, "flash sessions alone must produce hits");
+        assert!(s.prefill_tokens_saved > 0);
+    }
+
+    #[test]
+    fn affinity_routing_beats_blind_routing_on_hits() {
+        // The routing claim at a fixed, moderate load: sending turns
+        // back to their session's replica must recover more prefix than
+        // load-only routing — strictly more tokens saved and a higher
+        // hit rate.
+        let blind = run_sessions(VARIANTS[1], QUICK_RATE, QUICK_DUR, 7);
+        let affine = run_sessions(VARIANTS[2], QUICK_RATE, QUICK_DUR, 7);
+        assert!(
+            affine.prefill_tokens_saved > blind.prefill_tokens_saved,
+            "affinity {} must out-save blind {}",
+            affine.prefill_tokens_saved,
+            blind.prefill_tokens_saved
+        );
+        assert!(
+            affine.cache_hit_rate() > blind.cache_hit_rate(),
+            "affinity hit rate {:.3} must beat blind {:.3}",
+            affine.cache_hit_rate(),
+            blind.cache_hit_rate()
+        );
+    }
+}

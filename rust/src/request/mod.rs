@@ -44,6 +44,16 @@ pub struct RequestSpec {
     pub app_id: u32,
     /// Free-vs-paid style relegation hint (paper §3.4).
     pub importance: Importance,
+    /// Multi-turn session this request is a turn of (`None` for
+    /// single-shot traffic). The per-replica prefix cache keys retained
+    /// KV by session, and cache-affinity dispatch routes on it.
+    pub session_id: Option<u64>,
+    /// How many leading prompt tokens are shared with the session's
+    /// previous turns (the conversation history re-sent each turn). A
+    /// replica holding that prefix in its cache can skip prefilling the
+    /// cached part; `0` for single-shot traffic or a session's first
+    /// turn.
+    pub prefix_tokens: u32,
 }
 
 /// Live request state.
@@ -245,6 +255,8 @@ mod tests {
             tier: 0,
             app_id: 0,
             importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
         }
     }
 

@@ -299,6 +299,8 @@ mod tests {
                 tier: 0,
                 app_id: 0,
                 importance: Importance::High,
+                session_id: None,
+                prefix_tokens: 0,
             },
             Slo::NonInteractive { ttlt_s: 600.0 },
         );

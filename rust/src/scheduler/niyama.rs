@@ -750,6 +750,8 @@ mod tests {
                 tier,
                 app_id: tier as u32,
                 importance,
+                session_id: None,
+                prefix_tokens: 0,
             },
             slo,
         );
@@ -940,6 +942,8 @@ mod tests {
                 tier: 0,
                 app_id: 0,
                 importance: Importance::High,
+                session_id: None,
+                prefix_tokens: 0,
             },
             INT,
         );

@@ -172,6 +172,8 @@ mod tests {
                 tier: 0,
                 app_id: 0,
                 importance: Importance::High,
+                session_id: None,
+                prefix_tokens: 0,
             },
             slo,
         );
@@ -240,6 +242,8 @@ mod tests {
                 tier: 1,
                 app_id: 1,
                 importance: Importance::High,
+                session_id: None,
+                prefix_tokens: 0,
             },
             Q2,
         );

@@ -133,6 +133,8 @@ impl Server {
                                 tier: sub.req.tier,
                                 app_id: sub.req.tier as u32,
                                 importance: sub.req.importance,
+                                session_id: None,
+                                prefix_tokens: 0,
                             };
                             let id = engine.submit_now(spec);
                             match sub.req.prompt {

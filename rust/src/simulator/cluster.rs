@@ -167,6 +167,14 @@ pub struct ClusterStats {
     /// Virtual seconds spent in live-migration transfer windows (sum
     /// over moves; windows on different replica pairs may overlap).
     pub migration_transfer_s: f64,
+    /// Prefix-cache lookups performed at admission (session arrivals on
+    /// cache-enabled replicas), summed over engines at summary time.
+    pub prefix_cache_lookups: u64,
+    /// Lookups that matched a non-empty cached prefix.
+    pub prefix_cache_hits: u64,
+    /// Prefill tokens skipped thanks to cache hits (the effective-QPS
+    /// headline numerator).
+    pub prefill_tokens_saved: u64,
 }
 
 /// Per-pool runtime state: the engine config one replica of this pool is
@@ -302,6 +310,7 @@ impl Cluster {
                 &cfg.cluster.dispatch,
                 &reference.hardware,
                 reference.scheduler.chunk_size,
+                cfg.cluster.interconnect.as_ref(),
             ),
             cfg.cluster.dispatch.relegation_handoff,
         )
@@ -488,7 +497,21 @@ impl Cluster {
         s.migrated_live_per_tier = self.stats.migrated_live_per_tier.clone();
         s.kv_bytes_migrated = self.stats.kv_bytes_migrated;
         s.migration_transfer_s = self.stats.migration_transfer_s;
+        let (lookups, hits, saved) = self.cache_counters();
+        s.prefix_cache_lookups = lookups;
+        s.prefix_cache_hits = hits;
+        s.prefill_tokens_saved = saved;
         s
+    }
+
+    /// Prefix-cache counters summed over every replica ever provisioned
+    /// (lookups, hits, prefill tokens saved). All zero when
+    /// `cluster.prefix_cache` is unset.
+    fn cache_counters(&self) -> (u64, u64, u64) {
+        self.engines.iter().filter_map(|e| e.prefix_cache()).fold(
+            (0, 0, 0),
+            |(l, h, s), c| (l + c.lookups, h + c.hits, s + c.tokens_saved),
+        )
     }
 
     /// Whether replica `i`'s pool serves `tier` (affinity mask 0 = all).
@@ -1277,6 +1300,12 @@ impl Cluster {
         } else {
             self.run_sequential(horizon_s);
         }
+        // Mirror the engines' prefix-cache counters into the run stats
+        // so `cluster.stats` is inspectable without a summary pass.
+        let (lookups, hits, saved) = self.cache_counters();
+        self.stats.prefix_cache_lookups = lookups;
+        self.stats.prefix_cache_hits = hits;
+        self.stats.prefill_tokens_saved = saved;
     }
 
     /// The sequential event loop: one shared clock, earliest event first
@@ -1794,6 +1823,8 @@ mod tests {
                 tier: if i % 2 == 0 { 0 } else { 1 },
                 app_id: 0,
                 importance: Importance::High,
+                session_id: None,
+                prefix_tokens: 0,
             })
             .collect();
         let n = t.len();
@@ -1992,6 +2023,8 @@ mod tests {
                 tier: 1,
                 app_id: 0,
                 importance: Importance::High,
+                session_id: None,
+                prefix_tokens: 0,
             })
             .collect();
         cluster.submit_trace(t.clone());

@@ -520,6 +520,8 @@ mod tests {
             chunk_size: 256,
             max_batch_decodes: 256,
             tier_affinity_mask: 0,
+            cache_sessions: Vec::new(),
+            cache_resident_tokens: 0,
         }
     }
 

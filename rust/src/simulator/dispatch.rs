@@ -24,7 +24,13 @@
 //!   the linear token rate cannot see;
 //! - [`TierAffinity`]: per-tier round-robin over the replicas whose
 //!   affinity claims the arrival's tier — a siloed deployment expressed
-//!   as a dispatch policy over affinity-tagged pools.
+//!   as a dispatch policy over affinity-tagged pools;
+//! - [`CacheAffinity`]: prefix-cache-aware routing for session traffic —
+//!   scores each candidate's queue pressure plus the cheapest way to
+//!   acquire the turn's session prefix there (local cache hit,
+//!   re-prefill, or shipping the best cached prefix over the configured
+//!   interconnect), the same locality-vs-load pricing live migration
+//!   uses, applied at dispatch time.
 //!
 //! Replicas may be **heterogeneous** (per-pool hardware and chunk
 //! configs): every [`LoadSnapshot`] carries its own replica's reference
@@ -46,12 +52,13 @@
 //! [`Rng`] and ties break toward the lowest replica index, so a fixed
 //! seed reproduces a run bit-for-bit.
 
-use crate::config::{DispatchConfig, DispatchPolicy, HardwareModel};
+use crate::config::{DispatchConfig, DispatchPolicy, HardwareModel, InterconnectConfig};
 use crate::engine::LoadSnapshot;
 use crate::predictor::LatencyPredictor;
 use crate::qos::{slo_for_tier, QosTier, Slo};
 use crate::request::RequestSpec;
 use crate::simulator::cost_model::{BatchStats, CostModel, PrefillSegment};
+use crate::simulator::migration::InterconnectModel;
 use crate::util::Rng;
 use anyhow::{bail, Result};
 
@@ -88,18 +95,21 @@ pub trait Dispatcher: Send {
 /// Build the configured dispatcher against the default (paper) hardware.
 /// Prefer [`build_dispatcher_for`] when the deployment's hardware model
 /// is known — `PredictedTtft` calibrates its latency predictor against
-/// it.
+/// it, and `CacheAffinity` prices prefix shipping over the deployment's
+/// interconnect (here: none, so misses always re-prefill).
 pub fn build_dispatcher(cfg: &DispatchConfig) -> Box<dyn Dispatcher> {
-    build_dispatcher_for(cfg, &HardwareModel::llama3_8b_a100(), 256)
+    build_dispatcher_for(cfg, &HardwareModel::llama3_8b_a100(), 256, None)
 }
 
 /// Build the configured dispatcher for a specific deployment: `hardware`
 /// and `chunk` parameterize the latency predictor behind
-/// [`PredictedTtft`]; the other policies ignore them.
+/// [`PredictedTtft`], `interconnect` prices cross-replica prefix
+/// shipping for [`CacheAffinity`]; the other policies ignore them.
 pub fn build_dispatcher_for(
     cfg: &DispatchConfig,
     hardware: &HardwareModel,
     chunk: u32,
+    interconnect: Option<&InterconnectConfig>,
 ) -> Box<dyn Dispatcher> {
     match cfg.policy {
         DispatchPolicy::RoundRobin => Box::new(RoundRobin::new()),
@@ -112,6 +122,9 @@ pub fn build_dispatcher_for(
             Box::new(PredictedTtft::new(predictor, chunk, cfg.seed))
         }
         DispatchPolicy::TierAffinity => Box::new(TierAffinity::new()),
+        DispatchPolicy::CacheAffinity => {
+            Box::new(CacheAffinity::new(InterconnectModel::from_config(interconnect)))
+        }
     }
 }
 
@@ -436,6 +449,101 @@ impl Dispatcher for TierAffinity {
     }
 }
 
+/// Prefix-cache-aware routing for session workloads.
+///
+/// A session's turns share a growing prefix; the replica that served the
+/// previous turn retains its KV and can skip that much prefill. Routing
+/// blindly by load forfeits the hit; routing blindly by affinity piles a
+/// flash crowd onto one replica. This policy prices both sides in
+/// seconds, per candidate `i`:
+///
+/// ```text
+/// reprefill_i = price_prefill(prompt − hit_i)          // serve the miss locally
+/// ship_i      = transfer(best_hit − hit_i) + price_prefill(prompt − best_hit)
+/// score_i     = LeastLoaded::score(i) + min(reprefill_i, ship_i)
+/// ```
+///
+/// where `hit_i` is the prefix candidate `i`'s cache retains for this
+/// session (from the snapshot's cache summary), `best_hit` the best
+/// retained prefix anywhere, and `transfer` the PR 5 interconnect price
+/// of moving the missing prefix KV (only when an interconnect is
+/// configured — shipping is a *pricing* alternative that tempers the
+/// affinity pull when links are fast; the engine still re-prefills on a
+/// miss). Replicas that can meet the arrival's deadline — with the
+/// acquisition cost as the effective prefill — are strictly preferred,
+/// then lowest score, ties toward the lowest index. Sessionless arrivals
+/// degrade to exactly `LeastLoaded` behavior.
+pub struct CacheAffinity {
+    link: Option<InterconnectModel>,
+}
+
+impl CacheAffinity {
+    pub fn new(link: Option<InterconnectModel>) -> Self {
+        CacheAffinity { link }
+    }
+
+    /// Seconds to get this arrival's prompt KV resident on the replica
+    /// behind `snap`: local hit + re-prefill of the miss, or shipping
+    /// the best cached prefix and re-prefilling only what nobody holds.
+    fn acquisition_s(&self, snap: &LoadSnapshot, prompt: u32, hit: u32, best_hit: u32) -> f64 {
+        let reprefill = snap.price_prefill_s(prompt - hit);
+        if best_hit > hit {
+            if let Some(link) = &self.link {
+                let ship = link.transfer_s((best_hit - hit) as f64 * snap.kv_bytes_per_token)
+                    + snap.price_prefill_s(prompt - best_hit);
+                return reprefill.min(ship);
+            }
+        }
+        reprefill
+    }
+}
+
+impl Dispatcher for CacheAffinity {
+    fn name(&self) -> &'static str {
+        "cache-affinity"
+    }
+
+    fn dispatch(&mut self, spec: &RequestSpec, slo: Slo, snaps: &[LoadSnapshot]) -> usize {
+        // Usable shared prefix: capped at prompt−1, mirroring the
+        // engine's admission cap (the final chunk must still run). Block
+        // flooring is the engine's business; for scoring, token
+        // granularity is accurate enough.
+        let wanted = spec.prefix_tokens.min(spec.prompt_tokens.saturating_sub(1));
+        let hits: Vec<u32> = match spec.session_id {
+            Some(sid) if wanted > 0 => {
+                snaps.iter().map(|s| s.cached_prefix(sid).min(wanted)).collect()
+            }
+            _ => vec![0; snaps.len()],
+        };
+        let best_hit = hits.iter().copied().max().unwrap_or(0);
+        let (slack_budget, _) = slo.deadline_budget();
+        let deadline = spec.arrival_s + slack_budget;
+        let mut best = 0usize;
+        let mut best_feasible = false;
+        let mut best_score = f64::INFINITY;
+        for (i, s) in snaps.iter().enumerate() {
+            let acquisition = self.acquisition_s(s, spec.prompt_tokens, hits[i], best_hit);
+            let start = spec.arrival_s.max(s.now);
+            let feasible = s.feasible_for(
+                spec.prompt_tokens,
+                spec.decode_tokens,
+                start,
+                acquisition,
+                s.price_decode_tail_s(slo, spec.decode_tokens),
+                deadline,
+            );
+            let score = LeastLoaded::score(s) + acquisition;
+            let better = if feasible != best_feasible { feasible } else { score < best_score };
+            if better {
+                best = i;
+                best_feasible = feasible;
+                best_score = score;
+            }
+        }
+        best
+    }
+}
+
 /// Global admission policy applied to every arrival before routing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmissionPolicy {
@@ -601,6 +709,8 @@ mod tests {
             chunk_size: 256,
             max_batch_decodes: 256,
             tier_affinity_mask: 0,
+            cache_sessions: Vec::new(),
+            cache_resident_tokens: 0,
         }
     }
 
@@ -612,6 +722,8 @@ mod tests {
             tier: 0,
             app_id: 0,
             importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
         }
     }
 
@@ -718,6 +830,7 @@ mod tests {
             DispatchPolicy::PowerOfTwoChoices,
             DispatchPolicy::PredictedTtft,
             DispatchPolicy::TierAffinity,
+            DispatchPolicy::CacheAffinity,
         ] {
             let d = build_dispatcher(&DispatchConfig {
                 policy: p,
@@ -941,5 +1054,114 @@ mod tests {
         }
         let hit = seen.iter().filter(|&&s| s).count();
         assert!(hit >= 7, "p2c sampling too narrow: {hit}/8 replicas picked");
+    }
+
+    /// A turn-2 arrival: 5000-token prompt of which the first 4096 are
+    /// the session prefix some replica may still hold.
+    fn session_spec() -> RequestSpec {
+        let mut s = spec();
+        s.prompt_tokens = 5000;
+        s.session_id = Some(7);
+        s.prefix_tokens = 4096;
+        s
+    }
+
+    fn with_cache(mut s: LoadSnapshot, sid: u64, tokens: u32) -> LoadSnapshot {
+        s.cache_sessions = vec![(sid, tokens)];
+        s.cache_resident_tokens = tokens as u64;
+        s
+    }
+
+    /// NVLink-class interconnect: 4096 tokens of KV (~537 MB at the
+    /// snapshot's 128 KiB/token) ship in ~3 ms.
+    fn fast_link() -> InterconnectModel {
+        InterconnectModel::from_config(Some(&crate::config::InterconnectConfig {
+            bandwidth_gbytes_per_s: 200.0,
+            latency_s: 1e-5,
+        }))
+        .unwrap()
+    }
+
+    #[test]
+    fn cache_affinity_prefers_the_session_holder_at_equal_load() {
+        let mut d = CacheAffinity::new(None);
+        // Identical load; replica 1 holds the session's 4096-token
+        // prefix. Re-prefilling 904 tokens beats re-prefilling 5000.
+        let snaps = vec![snap(2, 1000, 0.8), with_cache(snap(2, 1000, 0.8), 7, 4096)];
+        assert_eq!(d.dispatch(&session_spec(), INT, &snaps), 1);
+        // A different session sees no affinity anywhere: lowest index.
+        let mut other = session_spec();
+        other.session_id = Some(99);
+        assert_eq!(d.dispatch(&other, INT, &snaps), 0);
+    }
+
+    #[test]
+    fn cache_affinity_yields_when_the_holder_is_drowned() {
+        let mut d = CacheAffinity::new(None);
+        // The holder's queue is 5 s deeper than the ~1.2 s of prefill
+        // the hit saves: affinity must not pile on.
+        let holder = with_cache(snap(10, 17_000, 5.0), 7, 4096);
+        let idle = snap(0, 0, 0.0);
+        assert_eq!(d.dispatch(&session_spec(), INT, &[holder, idle]), 1);
+    }
+
+    #[test]
+    fn cache_affinity_ships_over_a_fast_link() {
+        // Holder has 1 s of queue, the idle replica none. Without a
+        // link the idle replica must pay the full 1.5 s re-prefill, so
+        // the holder (1.0 + 0.27) still wins…
+        let holder = with_cache(snap(2, 3300, 1.0), 7, 4096);
+        let idle = snap(0, 0, 0.0);
+        let mut blind = CacheAffinity::new(None);
+        assert_eq!(blind.dispatch(&session_spec(), INT, &[holder.clone(), idle.clone()]), 0);
+        // …but a fast link prices shipping the holder's prefix at ~3 ms
+        // + the same 0.27 s residual prefill, so the idle replica's
+        // empty queue wins.
+        let mut linked = CacheAffinity::new(Some(fast_link()));
+        assert_eq!(linked.dispatch(&session_spec(), INT, &[holder, idle]), 1);
+    }
+
+    #[test]
+    fn cache_affinity_sessionless_matches_least_loaded() {
+        let mut ca = CacheAffinity::new(Some(fast_link()));
+        let mut ll = LeastLoaded;
+        let sets = [
+            vec![snap(3, 3000, 2.0), snap(1, 500, 0.4), snap(5, 8000, 5.0)],
+            vec![snap(2, 9000, 6.5), snap(4, 4000, 5.0)],
+            vec![snap(2, 100, 1.0), snap(2, 100, 1.0)],
+        ];
+        for snaps in sets {
+            // No session id: the acquisition term is a constant
+            // (full-prompt prefill) shifted across replicas with equal
+            // rates — the ranking must match LeastLoaded's.
+            assert_eq!(
+                ca.dispatch(&spec(), INT, &snaps),
+                ll.dispatch(&spec(), INT, &snaps)
+            );
+        }
+    }
+
+    #[test]
+    fn cache_affinity_prefers_feasible_over_affinity() {
+        let mut d = CacheAffinity::new(None);
+        // The holder cannot meet the 6 s TTFT budget even with the hit;
+        // the cold replica can — feasibility is strictly preferred.
+        let holder = with_cache(snap(12, 25_000, 7.0), 7, 4096);
+        let cold = snap(3, 3000, 2.0);
+        assert_eq!(d.dispatch(&session_spec(), INT, &[holder, cold]), 1);
+    }
+
+    #[test]
+    fn cache_affinity_caps_the_hit_below_the_prompt() {
+        let mut d = CacheAffinity::new(None);
+        // Cache claims more than the prompt (session grew elsewhere):
+        // the usable hit is prompt − 1, never the full prompt, so the
+        // acquisition term stays positive and finite everywhere.
+        let mut s = session_spec();
+        s.prompt_tokens = 2000;
+        s.prefix_tokens = 8000;
+        let holder = with_cache(snap(1, 500, 0.3), 7, 8000);
+        let idle = snap(0, 0, 0.0);
+        assert_eq!(d.dispatch(&s, INT, &[holder, idle]), 0);
     }
 }

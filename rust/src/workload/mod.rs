@@ -146,8 +146,172 @@ impl WorkloadSpec {
                 tier,
                 app_id: tier as u32,
                 importance,
+                session_id: None,
+                prefix_tokens: 0,
             });
         }
+        out
+    }
+}
+
+/// Multi-turn session workload (chat/agent traffic). Each session is a
+/// conversation: turn `k`'s prompt is the whole history so far (the
+/// session prefix) plus the user's new message, so consecutive turns
+/// re-submit an ever-growing shared prefix. The generator records that
+/// overlap in [`RequestSpec::session_id`]/[`RequestSpec::prefix_tokens`]
+/// so prefix-cache-aware serving can skip recomputing it; engines
+/// without a cache simply re-prefill everything, which is the baseline.
+///
+/// Flash-crowd mode (`flash_frac` > 0) routes that fraction of sessions
+/// through one shared "hot" system prompt (session id 0): their first
+/// turns already share `hot_prompt_tokens` with each other, modelling a
+/// popular assistant persona or a viral app template.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    pub dataset: Dataset,
+    /// Session start times (the arrival process counts sessions, not
+    /// turns; at `mean_turns` turns each, turn QPS is that much higher).
+    pub arrivals: ArrivalProcess,
+    pub duration_s: f64,
+    /// Mean turns per session; turn counts are geometric with support
+    /// ≥ 1, matching the heavy tail of real conversation lengths.
+    pub mean_turns: f64,
+    /// Mean think time between a turn's last token and the next turn's
+    /// arrival (exponential; 0 = immediate).
+    pub mean_think_s: f64,
+    /// Per-session QoS tier shares (a session keeps one tier for life).
+    pub tier_shares: Vec<f64>,
+    /// Fraction of sessions flagged low-importance.
+    pub low_importance_frac: f64,
+    /// Fraction of sessions in the flash crowd (shared session id 0).
+    pub flash_frac: f64,
+    /// Tokens of the shared hot system prompt flash sessions open with.
+    pub hot_prompt_tokens: u32,
+    pub max_prompt: Option<u32>,
+    pub max_decode: Option<u32>,
+}
+
+/// Hard cap on turns per session: keeps a pathological geometric draw
+/// from generating an unbounded conversation.
+const MAX_TURNS: u32 = 64;
+
+impl SessionSpec {
+    /// Conversational defaults over the given dataset: session-level
+    /// Poisson arrivals, equal tier thirds, no flash crowd.
+    pub fn conversational(dataset: Dataset, sessions_per_s: f64, duration_s: f64) -> Self {
+        SessionSpec {
+            dataset,
+            arrivals: ArrivalProcess::Poisson { qps: sessions_per_s },
+            duration_s,
+            mean_turns: 4.0,
+            mean_think_s: 10.0,
+            tier_shares: vec![1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0],
+            low_importance_frac: 0.0,
+            flash_frac: 0.0,
+            hot_prompt_tokens: 1024,
+            max_prompt: None,
+            max_decode: None,
+        }
+    }
+
+    /// Apply the `workload.session` config block on top of the
+    /// conversational defaults.
+    pub fn from_config(
+        dataset: Dataset,
+        sessions_per_s: f64,
+        duration_s: f64,
+        sc: &crate::config::SessionConfig,
+    ) -> Self {
+        let mut s = Self::conversational(dataset, sessions_per_s, duration_s);
+        s.mean_turns = sc.mean_turns;
+        s.mean_think_s = sc.mean_think_s;
+        s.flash_frac = sc.flash_frac;
+        s.hot_prompt_tokens = sc.hot_prompt_tokens;
+        s
+    }
+
+    /// Generate the turn trace, sorted by arrival time. Turns arriving
+    /// after `duration_s` are dropped (the workload window closes), so
+    /// late-starting sessions may be truncated mid-conversation.
+    pub fn generate(&self, rng: &mut Rng) -> Vec<RequestSpec> {
+        assert!(!self.tier_shares.is_empty());
+        assert!(self.mean_turns >= 1.0, "a session has at least one turn");
+        let norm: f64 = self.tier_shares.iter().sum();
+        // Geometric continuation: P(another turn) = 1 − 1/mean_turns
+        // gives E[turns] = mean_turns with support ≥ 1.
+        let cont_p = 1.0 - 1.0 / self.mean_turns;
+        let starts = self.arrivals.sample(self.duration_s, rng);
+        let mut out = Vec::with_capacity(starts.len() * self.mean_turns.ceil() as usize);
+        let mut next_sid: u64 = 1;
+        for start in starts {
+            let flash = rng.chance(self.flash_frac);
+            let sid = if flash {
+                0
+            } else {
+                let s = next_sid;
+                next_sid += 1;
+                s
+            };
+            let mut u = rng.next_f64() * norm;
+            let mut tier = self.tier_shares.len() - 1;
+            for (i, &share) in self.tier_shares.iter().enumerate() {
+                if u < share {
+                    tier = i;
+                    break;
+                }
+                u -= share;
+            }
+            let importance = if rng.chance(self.low_importance_frac) {
+                Importance::Low
+            } else {
+                Importance::High
+            };
+            // The session's accumulated history: what the next turn
+            // re-submits verbatim ahead of the new user message. Flash
+            // sessions open on the shared hot prompt.
+            let mut prefix: u32 = if flash { self.hot_prompt_tokens } else { 0 };
+            let mut t = start;
+            let mut turns = 1u32;
+            loop {
+                let (new_prompt, mut decode) = self.dataset.sample(rng);
+                if let Some(cap) = self.max_decode {
+                    decode = decode.min(cap);
+                }
+                let mut prompt = prefix.saturating_add(new_prompt).max(1);
+                if let Some(cap) = self.max_prompt {
+                    prompt = prompt.min(cap);
+                }
+                // The claim must leave at least one token of fresh
+                // prefill (the engine caps hits the same way).
+                let claim = prefix.min(prompt.saturating_sub(1));
+                out.push(RequestSpec {
+                    arrival_s: t,
+                    prompt_tokens: prompt,
+                    decode_tokens: decode,
+                    tier,
+                    app_id: tier as u32,
+                    importance,
+                    session_id: Some(sid),
+                    prefix_tokens: claim,
+                });
+                if turns >= MAX_TURNS || !rng.chance(cont_p) {
+                    break;
+                }
+                turns += 1;
+                // Next turn re-submits everything said so far.
+                prefix = prompt.saturating_add(decode);
+                let think = if self.mean_think_s > 0.0 {
+                    rng.exponential(1.0 / self.mean_think_s)
+                } else {
+                    0.0
+                };
+                t += think;
+                if t >= self.duration_s {
+                    break;
+                }
+            }
+        }
+        out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         out
     }
 }
@@ -246,6 +410,102 @@ mod tests {
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+    }
+
+    fn turns_of(trace: &[RequestSpec], sid: u64) -> Vec<&RequestSpec> {
+        trace.iter().filter(|r| r.session_id == Some(sid)).collect()
+    }
+
+    #[test]
+    fn session_turns_extend_the_prefix() {
+        let mut rng = Rng::new(11);
+        let spec = SessionSpec::conversational(Dataset::sharegpt(), 0.5, 600.0);
+        let trace = spec.generate(&mut rng);
+        assert!(!trace.is_empty());
+        let max_sid = trace.iter().filter_map(|r| r.session_id).max().unwrap();
+        let mut multi = 0;
+        for sid in 1..=max_sid {
+            let turns = turns_of(&trace, sid);
+            // Unique sessions start cold…
+            assert_eq!(turns[0].prefix_tokens, 0, "session {sid} turn 0 must be cold");
+            // …and each later turn re-submits at least the whole
+            // previous turn (prompt + its decode) as prefix.
+            for w in turns.windows(2) {
+                assert!(w[0].arrival_s <= w[1].arrival_s);
+                let grown = w[0].prompt_tokens + w[0].decode_tokens;
+                assert_eq!(
+                    w[1].prefix_tokens,
+                    grown.min(w[1].prompt_tokens - 1),
+                    "session {sid}: turn prefix must be the prior history"
+                );
+                assert!(w[1].prompt_tokens > w[1].prefix_tokens);
+            }
+            if turns.len() > 1 {
+                multi += 1;
+            }
+            // One tier, one importance per session.
+            assert!(turns.iter().all(|r| r.tier == turns[0].tier));
+            assert!(turns.iter().all(|r| r.importance == turns[0].importance));
+        }
+        assert!(multi > 0, "mean_turns 4 must yield multi-turn sessions");
+    }
+
+    #[test]
+    fn session_trace_is_sorted_and_bounded() {
+        let mut rng = Rng::new(12);
+        let spec = SessionSpec::conversational(Dataset::azure_conv(), 1.0, 300.0);
+        let trace = spec.generate(&mut rng);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        assert!(trace.iter().all(|r| (0.0..300.0).contains(&r.arrival_s)));
+        assert!(trace.iter().all(|r| r.prefix_tokens < r.prompt_tokens));
+    }
+
+    #[test]
+    fn flash_sessions_share_the_hot_prompt() {
+        let mut rng = Rng::new(13);
+        let mut spec = SessionSpec::conversational(Dataset::sharegpt(), 1.0, 400.0);
+        spec.flash_frac = 0.5;
+        spec.hot_prompt_tokens = 1024;
+        let trace = spec.generate(&mut rng);
+        let flash = turns_of(&trace, 0);
+        assert!(!flash.is_empty(), "half the sessions must be flash");
+        // Every flash turn claims at least the hot prompt as prefix and
+        // carries it in the prompt itself.
+        assert!(flash.iter().all(|r| r.prefix_tokens >= 1024.min(r.prompt_tokens - 1)));
+        assert!(flash.iter().all(|r| r.prompt_tokens > 1024));
+        // Non-flash traffic still exists and stays cold on turn 0.
+        let max_sid = trace.iter().filter_map(|r| r.session_id).max().unwrap();
+        assert!(max_sid >= 1, "non-flash sessions must keep unique ids");
+    }
+
+    #[test]
+    fn mean_turns_one_yields_single_turn_sessions() {
+        let mut rng = Rng::new(14);
+        let mut spec = SessionSpec::conversational(Dataset::azure_code(), 2.0, 200.0);
+        spec.mean_turns = 1.0;
+        let trace = spec.generate(&mut rng);
+        let max_sid = trace.iter().filter_map(|r| r.session_id).max().unwrap();
+        for sid in 1..=max_sid {
+            assert_eq!(turns_of(&trace, sid).len(), 1);
+        }
+        assert!(trace.iter().all(|r| r.prefix_tokens == 0));
+    }
+
+    #[test]
+    fn session_generation_is_deterministic() {
+        let mut spec = SessionSpec::conversational(Dataset::sharegpt(), 1.5, 300.0);
+        spec.flash_frac = 0.3;
+        let a = spec.generate(&mut Rng::new(99));
+        let b = spec.generate(&mut Rng::new(99));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.session_id, y.session_id);
+            assert_eq!(x.prefix_tokens, y.prefix_tokens);
             assert_eq!(x.prompt_tokens, y.prompt_tokens);
         }
     }

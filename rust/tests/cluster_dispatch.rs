@@ -40,6 +40,8 @@ fn skewed_trace(n: usize) -> Vec<RequestSpec> {
             tier: i % 3,
             app_id: (i % 3) as u32,
             importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
         })
         .collect()
 }

@@ -159,6 +159,8 @@ fn overload_trace() -> Vec<RequestSpec> {
             tier: if i % 2 == 0 { 0 } else { 1 },
             app_id: 0,
             importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
         })
         .collect()
 }
@@ -272,6 +274,8 @@ fn degraded_arrivals_are_judged_and_routed_against_the_degraded_tiers_pool() {
             tier: 0,
             app_id: 0,
             importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
         })
         .collect();
     let n = trace.len();

@@ -45,6 +45,8 @@ fn populate(
                 tier: i % 3,
                 app_id: (i % 3) as u32,
                 importance: if i % 5 == 0 { Importance::Low } else { Importance::High },
+                session_id: None,
+                prefix_tokens: 0,
             },
             slo,
         );

@@ -161,6 +161,8 @@ fn full_engine_serves_real_model() {
             tier,
             app_id: tier as u32,
             importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
         });
         engine.backend_mut().synth_prompt(id, prompt, 1000 + i as u64);
         ids.push(id);
