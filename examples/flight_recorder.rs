@@ -1,0 +1,62 @@
+//! The flight recorder in action: record a tier-0 surge run, export the
+//! Perfetto trace and the per-tick time series, and autopsy every SLO
+//! violation into attributable causes.
+//!
+//! The workload is the live-migration experiment's surge scenario: a
+//! stream of long-decode interactive requests pinned on one replica
+//! until its decode set outgrows the batch cap, with the proactive
+//! rebalancer migrating decoders to the idle peer. With
+//! `cluster.observability` set, every lifecycle event (arrival,
+//! dispatch, admit, prefill chunks, first token, migration windows,
+//! finish) is recorded on the virtual clock; without it the run is
+//! bit-for-bit identical and pays nothing.
+//!
+//!     cargo run --release --example flight_recorder
+//!
+//! Open `results/flight_recorder_trace.json` at <https://ui.perfetto.dev>
+//! (replicas render as tracks, requests as async spans).
+
+use niyama::config::ObservabilityConfig;
+use niyama::obs::Event;
+use niyama::repro::migration::surge_cluster;
+
+fn main() -> anyhow::Result<()> {
+    let duration = 240.0;
+    println!("== Recording the tier-0 surge ({duration}s, live migration on)\n");
+    let obs = ObservabilityConfig { trace: true, series: true };
+    let cluster = surge_cluster(duration, true, Some(obs));
+    let s = cluster.summary(6251);
+
+    std::fs::create_dir_all("results")?;
+    let trace_path = "results/flight_recorder_trace.json";
+    let series_path = "results/flight_recorder_series.jsonl";
+    let trace = cluster.trace_json().expect("tracing was enabled");
+    let series = cluster.series_jsonl().expect("sampling was enabled");
+    std::fs::write(trace_path, &trace)?;
+    std::fs::write(series_path, &series)?;
+
+    let coord = cluster.coordinator_trace().expect("tracing was enabled");
+    let migrations = coord
+        .events()
+        .iter()
+        .filter(|e| matches!(e.event, Event::MigrationWindow { .. }))
+        .count();
+    println!("   coordinator events {:>6}   migration windows {migrations}", coord.len());
+    println!("   trace  -> {trace_path} ({} bytes, open in ui.perfetto.dev)", trace.len());
+    println!("   series -> {series_path} ({} samples)", series.lines().count());
+
+    println!("\n== Violation autopsy (per tier, shares of total lateness)\n");
+    for (tier, a) in s.autopsy.iter().enumerate() {
+        println!(
+            "   tier {tier}: {:>4} violations, {:>10.1}s total lateness — {}",
+            a.violations,
+            a.lateness_s,
+            a.breakdown()
+        );
+    }
+
+    println!("\nThe recorder stamps every event with virtual time and source");
+    println!("replica and merges buffers in canonical superstep order, so the");
+    println!("same run traced under 1, 2 or 8 workers writes identical bytes.");
+    Ok(())
+}

@@ -371,6 +371,43 @@ fn main() {
         }
     }
 
+    println!("\n== flight recorder: traced cluster loop ==");
+    {
+        use niyama::config::{DispatchPolicy, ObservabilityConfig, ParallelConfig};
+        use niyama::simulator::cluster::Cluster;
+        // The `cluster.r*.w*` rows above ARE the recorder-off baseline:
+        // with `observability` unset every hook is a null-pointer check,
+        // so any drift in those rows across PRs is the zero-cost-when-off
+        // regression guard. These rows price the recorder when it is ON
+        // (trace + series both recording) on the same workload.
+        let cluster_duration = if iter_cap() < 300 { 10.0 } else { 120.0 };
+        let replicas = 8usize;
+        let spec =
+            WorkloadSpec::uniform(Dataset::azure_code(), replicas as f64 * 2.0, cluster_duration);
+        let trace = spec.generate(&mut Rng::new(11));
+        let n = trace.len();
+        for workers in [1usize, 8] {
+            let mut c = Config::default();
+            c.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+            c.cluster.parallel = Some(ParallelConfig { workers });
+            c.cluster.observability = Some(ObservabilityConfig { trace: true, series: true });
+            let t0 = Instant::now();
+            let mut cl = Cluster::new(&c, replicas);
+            cl.submit_trace(trace.clone());
+            cl.run(4000.0);
+            let wall = t0.elapsed().as_secs_f64();
+            let events = cl.stats.events;
+            let recorded: usize = cl.coordinator_trace().map_or(0, |b| b.len())
+                + cl.engines().iter().filter_map(|e| e.trace()).map(|b| b.len()).sum::<usize>();
+            println!(
+                "cluster r={replicas:<4} w={workers} {n} reqs, {events} events, {recorded} \
+                 recorded in {wall:.3}s ({:.0} events/s)",
+                events as f64 / wall
+            );
+            sims.push((format!("cluster.r{replicas}.w{workers}.recorded"), n, events, wall));
+        }
+    }
+
     println!("\n== session serving: prefix-cache hit rates ==");
     let mut sessions: Vec<(String, f64, u64, f64)> = Vec::new();
     {

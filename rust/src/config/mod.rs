@@ -676,6 +676,46 @@ impl ParallelConfig {
     }
 }
 
+/// Flight-recorder knobs (see [`crate::obs`]). Configured under
+/// `cluster.observability`; when the block is absent no trace buffers
+/// exist, every hook is a null-pointer check, and the simulation output
+/// is bit-for-bit the unobserved system. The SLO autopsy in `Summary`
+/// is always computed — it is summary-time reporting, not simulation
+/// state — so this block only governs event tracing and the time-series
+/// sampler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObservabilityConfig {
+    /// Record per-request lifecycle events for Chrome-trace/Perfetto
+    /// export.
+    pub trace: bool,
+    /// Sample per-control-tick cluster gauges for JSONL export.
+    pub series: bool,
+}
+
+impl Default for ObservabilityConfig {
+    fn default() -> Self {
+        ObservabilityConfig { trace: true, series: true }
+    }
+}
+
+impl ObservabilityConfig {
+    /// Parse a JSON `observability` object: both recorders default on
+    /// when the block is present, overridden per key.
+    fn from_json(j: &Json) -> Result<ObservabilityConfig> {
+        let mut k = ObservabilityConfig::default();
+        override_bool(j, "trace", &mut k.trace);
+        override_bool(j, "series", &mut k.series);
+        Ok(k)
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        if !self.trace && !self.series {
+            bail!("{what} enables neither trace nor series — drop the block instead");
+        }
+        Ok(())
+    }
+}
+
 /// Elastic control-plane policy selector (see `simulator::control`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AutoscalePolicy {
@@ -771,6 +811,10 @@ pub struct ClusterConfig {
     /// Sharded cluster-loop execution (`None` = the `NIYAMA_WORKERS`
     /// env default, falling back to the sequential loop).
     pub parallel: Option<ParallelConfig>,
+    /// Flight recorder: lifecycle tracing + time-series sampling
+    /// (`None` — the default — records nothing and keeps the hot path
+    /// untouched).
+    pub observability: Option<ObservabilityConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -783,6 +827,7 @@ impl Default for ClusterConfig {
             interconnect: None,
             prefix_cache: None,
             parallel: None,
+            observability: None,
         }
     }
 }
@@ -903,6 +948,9 @@ impl Config {
             if let Some(par) = c.get("parallel") {
                 cfg.cluster.parallel = Some(ParallelConfig::from_json(par)?);
             }
+            if let Some(o) = c.get("observability") {
+                cfg.cluster.observability = Some(ObservabilityConfig::from_json(o)?);
+            }
             if let Some(ctl) = c.get("control") {
                 // With pools configured, autoscale bounds live on the
                 // pools (the control-level ones only seed the one-pool
@@ -995,6 +1043,9 @@ impl Config {
         }
         if let Some(par) = &self.cluster.parallel {
             par.validate()?;
+        }
+        if let Some(o) = &self.cluster.observability {
+            o.validate("cluster.observability")?;
         }
         if !self.cluster.pools.is_empty() {
             self.cluster_spec().validate(self.tiers.len())?;

@@ -26,6 +26,7 @@
 use crate::config::Config;
 use crate::kv::PrefixCache;
 use crate::metrics::{summarize, RollingLatency, Summary};
+use crate::obs::{Event, TraceBuf};
 use crate::predictor::LatencyPredictor;
 use crate::request::{Phase, RequestId, RequestSpec, RequestStore};
 use crate::scheduler::{
@@ -191,6 +192,22 @@ pub struct LoadSnapshot {
     pub cache_resident_tokens: u64,
 }
 
+/// Attribution hints the cluster stamps on a dispatched arrival —
+/// carried through the pending queue and copied onto the request at
+/// admission. Both fields feed the SLO-violation autopsy only
+/// ([`crate::obs::autopsy`]); they never influence scheduling.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdmitTag {
+    /// Seconds until the soonest warming replica able to serve this
+    /// arrival's tier was due to become Active at dispatch time (0 when
+    /// nothing relevant was warming): the capacity shortfall the arrival
+    /// queued under.
+    pub warmup_hold_s: f64,
+    /// SLO slack tightening from an admission-control tier change, >= 0
+    /// (0 when the degrade loosened the deadline — the usual case).
+    pub degrade_tighten_s: f64,
+}
+
 impl LoadSnapshot {
     /// KV occupancy as a fraction of capacity.
     pub fn kv_utilization(&self) -> f64 {
@@ -286,8 +303,9 @@ pub struct Engine<B: ExecutionBackend> {
     backend: B,
     kv_capacity: u64,
     now: f64,
-    /// Future arrivals, sorted by arrival time from `next_pending` on.
-    pending: Vec<(f64, RequestSpec)>,
+    /// Future arrivals, sorted by arrival time from `next_pending` on,
+    /// each carrying the cluster's autopsy-attribution tag.
+    pending: Vec<(f64, RequestSpec, AdmitTag)>,
     next_pending: usize,
     pub stats: RunStats,
     pub rolling: RollingLatency,
@@ -334,6 +352,11 @@ pub struct Engine<B: ExecutionBackend> {
     /// replica they were dispatched to, which is what keeps `workers`
     /// 1/2/8 byte-identical.
     prefix_cache: Option<PrefixCache>,
+    /// Request-lifecycle event buffer (`None` when
+    /// `cluster.observability.trace` is off — every recording hook is
+    /// then a single null-pointer branch, keeping the feature-off hot
+    /// path bit-for-bit identical and cost-free).
+    trace: Option<Box<TraceBuf>>,
 }
 
 /// Build the configured scheduler over a latency model.
@@ -417,6 +440,11 @@ impl<B: ExecutionBackend> Engine<B> {
                     (cfg.hardware.kv_capacity_tokens() as f64 * pc.capacity_frac) as u64;
                 PrefixCache::new(budget, pc.block_tokens)
             }),
+            trace: cfg
+                .cluster
+                .observability
+                .filter(|o| o.trace)
+                .map(|_| Box::new(TraceBuf::new())),
         }
     }
 
@@ -458,7 +486,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// called before `run`; arrivals need not be sorted.
     pub fn submit_trace(&mut self, trace: Vec<RequestSpec>) {
         for spec in trace {
-            self.pending.push((spec.arrival_s, spec));
+            self.pending.push((spec.arrival_s, spec, AdmitTag::default()));
         }
         self.pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     }
@@ -468,6 +496,12 @@ impl<B: ExecutionBackend> Engine<B> {
     /// enters service funnels through here so the store, live set and
     /// scheduler view can never drift apart.
     fn admit(&mut self, spec: RequestSpec) -> RequestId {
+        self.admit_tagged(spec, AdmitTag::default())
+    }
+
+    /// [`Engine::admit`] with the cluster's autopsy-attribution tag
+    /// (warm-up hold, degrade tightening) copied onto the new request.
+    fn admit_tagged(&mut self, spec: RequestSpec, tag: AdmitTag) -> RequestId {
         let slo = crate::qos::slo_for_tier(&self.tiers, spec.tier);
         let id = self.store.insert(spec, slo);
         // Prefix-cache hit: the block-aligned part of the session prefix
@@ -476,6 +510,7 @@ impl<B: ExecutionBackend> Engine<B> {
         // see the shrunken effective prefill through `prefilled` /
         // `kv_tokens()`. Capped at prompt−1 so the final prefill chunk
         // still runs and emits the first token (Sarathi semantics).
+        let mut cache_hit = 0u32;
         if let Some(cache) = self.prefix_cache.as_mut() {
             let r = self.store.get_mut(id);
             if let Some(sid) = r.spec.session_id {
@@ -484,8 +519,18 @@ impl<B: ExecutionBackend> Engine<B> {
                 let hit = cache.lookup(sid, wanted);
                 if hit > 0 {
                     r.prefilled = hit;
+                    cache_hit = hit;
                 }
             }
+        }
+        {
+            let r = self.store.get_mut(id);
+            r.warmup_hold_s = tag.warmup_hold_s;
+            r.degrade_tighten_s = tag.degrade_tighten_s;
+        }
+        if let Some(buf) = self.trace.as_mut() {
+            let tier = self.store.get(id).spec.tier;
+            buf.push(self.now, Event::Admit { id, tier, cache_hit_tokens: cache_hit });
         }
         self.live.insert(id);
         self.scheduler.on_arrival(id, &self.store);
@@ -503,11 +548,17 @@ impl<B: ExecutionBackend> Engine<B> {
     /// admitted once the replica clock reaches its arrival time, exactly
     /// like a trace entry.
     pub fn enqueue(&mut self, spec: RequestSpec) {
+        self.enqueue_tagged(spec, AdmitTag::default());
+    }
+
+    /// [`Engine::enqueue`] with the cluster's autopsy-attribution tag,
+    /// applied to the request when it is admitted.
+    pub fn enqueue_tagged(&mut self, spec: RequestSpec, tag: AdmitTag) {
         let mut i = self.pending.len();
         while i > self.next_pending && self.pending[i - 1].0 > spec.arrival_s {
             i -= 1;
         }
-        self.pending.insert(i, (spec.arrival_s, spec));
+        self.pending.insert(i, (spec.arrival_s, spec, tag));
     }
 
     /// Admit a handed-off request immediately. Its original arrival time
@@ -533,7 +584,8 @@ impl<B: ExecutionBackend> Engine<B> {
         while self.next_pending < self.pending.len() && self.pending[self.next_pending].0 <= self.now
         {
             let spec = self.pending[self.next_pending].1.clone();
-            self.admit(spec);
+            let tag = self.pending[self.next_pending].2;
+            self.admit_tagged(spec, tag);
             self.next_pending += 1;
         }
     }
@@ -574,7 +626,7 @@ impl<B: ExecutionBackend> Engine<B> {
             // release — or stop when none exists. `settle_transfers`
             // already cleared everything due, so each wake-up is
             // strictly in the future and the loop always progresses.
-            let mut wake = self.pending.get(self.next_pending).map(|&(t, _)| t);
+            let mut wake = self.pending.get(self.next_pending).map(|&(t, ..)| t);
             if let Some(&(t, _)) = self.held.first() {
                 wake = Some(wake.map_or(t, |w| w.min(t)));
             }
@@ -609,18 +661,50 @@ impl<B: ExecutionBackend> Engine<B> {
                 let r = self.store.get_mut(w.id);
                 debug_assert!(r.prefill_remaining() >= w.tokens);
                 was_relegated = r.phase == Phase::Relegated;
+                if r.prefill_started_at.is_none() {
+                    // Stamped with the batch *start* (`self.now`, not
+                    // `t`): the queueing wait ends when the first chunk
+                    // begins executing.
+                    r.prefill_started_at = Some(self.now);
+                }
                 r.prefilled += w.tokens;
             }
             let done = {
                 let r = self.store.get(w.id);
                 r.prefill_remaining() == 0
             };
+            if let Some(buf) = self.trace.as_mut() {
+                let r = self.store.get(w.id);
+                let ev = Event::PrefillChunk {
+                    id: w.id,
+                    tokens: w.tokens,
+                    done: r.prefilled,
+                    total: r.spec.prompt_tokens,
+                };
+                buf.push(t, ev);
+            }
             if done {
+                {
+                    // Chunk inflation for the autopsy: prefill span beyond
+                    // the replica's reference rate for the whole prompt
+                    // (conservative under cache hits, which shrink the
+                    // span but not the reference).
+                    let reference = self.sec_per_prefill_token;
+                    let r = self.store.get_mut(w.id);
+                    if let Some(started) = r.prefill_started_at {
+                        let ideal = r.spec.prompt_tokens as f64 * reference;
+                        r.chunk_excess_s = ((t - started) - ideal).max(0.0);
+                    }
+                }
                 let finished = {
                     let r = self.store.get_mut(w.id);
                     r.emit_token(t)
                 };
                 self.stats.scheduled_decode_tokens += 1;
+                if let Some(buf) = self.trace.as_mut() {
+                    // The finishing chunk's logits sample token 1.
+                    buf.push(t, Event::FirstToken { id: w.id });
+                }
                 if finished {
                     self.finish(w.id);
                 } else {
@@ -649,6 +733,11 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     fn finish(&mut self, id: RequestId) {
+        if let Some(buf) = self.trace.as_mut() {
+            let r = self.store.get(id);
+            let t = r.finished_at.unwrap_or(self.now);
+            buf.push(t, Event::Finish { id, lateness_s: crate::obs::lateness(r) });
+        }
         self.live.remove(&id);
         self.scheduler.on_finished(id, &self.store);
         self.rolling.record(self.store.get(id));
@@ -695,7 +784,7 @@ impl<B: ExecutionBackend> Engine<B> {
         if self.live.len() > self.held.len() {
             return Some(self.now);
         }
-        let mut next = self.pending.get(self.next_pending).map(|&(t, _)| t);
+        let mut next = self.pending.get(self.next_pending).map(|&(t, ..)| t);
         if let Some(&(t, _)) = self.held.first() {
             next = Some(next.map_or(t, |n| n.min(t)));
         }
@@ -820,7 +909,7 @@ impl<B: ExecutionBackend> Engine<B> {
             }
         }
         // Dispatched-but-not-admitted arrivals are committed load too.
-        for (arrival_s, spec) in &self.pending[self.next_pending..] {
+        for (arrival_s, spec, _) in &self.pending[self.next_pending..] {
             snap.backlog += 1;
             snap.queued_prefill_tokens += spec.prompt_tokens as u64;
             snap.kv_committed += spec.prompt_tokens as u64 + spec.decode_tokens as u64;
@@ -874,6 +963,9 @@ impl<B: ExecutionBackend> Engine<B> {
         };
         self.live.remove(&id);
         self.backend.release(id);
+        if let Some(buf) = self.trace.as_mut() {
+            buf.push(self.now, Event::MigrateOut { id, live: false });
+        }
         spec
     }
 
@@ -900,7 +992,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// (the pending tail) so a draining replica's future work can be
     /// re-dispatched; the specs keep their arrival times.
     pub fn take_pending(&mut self) -> Vec<RequestSpec> {
-        self.pending.split_off(self.next_pending).into_iter().map(|(_, s)| s).collect()
+        self.pending.split_off(self.next_pending).into_iter().map(|(_, s, _)| s).collect()
     }
 
     // ---- live KV migration (see `simulator::migration`) -----------------
@@ -964,6 +1056,11 @@ impl<B: ExecutionBackend> Engine<B> {
                 max_tbt: r.max_tbt,
                 max_lateness: r.max_lateness,
                 was_relegated: r.was_relegated,
+                prefill_started_at: r.prefill_started_at,
+                warmup_hold_s: r.warmup_hold_s,
+                chunk_excess_s: r.chunk_excess_s,
+                migration_pause_s: r.migration_pause_s,
+                degrade_tighten_s: r.degrade_tighten_s,
             };
             r.phase = Phase::Migrated;
             m
@@ -974,6 +1071,9 @@ impl<B: ExecutionBackend> Engine<B> {
         self.backend.release(id);
         if m.kv_tokens() > 0 && release_at > self.now {
             self.outbound.push((release_at, m.kv_tokens() as u64));
+        }
+        if let Some(buf) = self.trace.as_mut() {
+            buf.push(self.now, Event::MigrateOut { id, live: true });
         }
         m
     }
@@ -991,6 +1091,7 @@ impl<B: ExecutionBackend> Engine<B> {
             "live migration must not admit requests from the future"
         );
         let slo = crate::qos::slo_for_tier(&self.tiers, m.spec.tier);
+        let pause_s = (resume_at - self.now).max(0.0);
         let id = self.store.insert(m.spec, slo);
         {
             let r = self.store.get_mut(id);
@@ -1002,9 +1103,19 @@ impl<B: ExecutionBackend> Engine<B> {
             r.max_lateness = m.max_lateness;
             r.was_relegated = m.was_relegated;
             r.was_migrated_live = true;
+            r.prefill_started_at = m.prefill_started_at;
+            r.warmup_hold_s = m.warmup_hold_s;
+            r.chunk_excess_s = m.chunk_excess_s;
+            r.degrade_tighten_s = m.degrade_tighten_s;
+            // The stop-and-copy window pauses this request for the whole
+            // transfer; accumulate it on top of any earlier moves.
+            r.migration_pause_s = m.migration_pause_s + pause_s;
             r.phase = if r.prefill_remaining() == 0 { Phase::Decode } else { Phase::Prefill };
         }
         self.live.insert(id);
+        if let Some(buf) = self.trace.as_mut() {
+            buf.push(self.now, Event::MigrateIn { id, pause_s });
+        }
         if resume_at <= self.now {
             self.release_hold(id);
         } else {
@@ -1104,6 +1215,31 @@ impl<B: ExecutionBackend> Engine<B> {
     /// uses it as a change signal to avoid per-iteration scans).
     pub fn relegated_total(&self) -> usize {
         self.scheduler.relegated_total()
+    }
+
+    /// This replica's recorded lifecycle events (`None` when tracing is
+    /// off). Its source rank in the canonical trace merge is
+    /// `replica + 1` (rank 0 is the cluster coordinator).
+    pub fn trace(&self) -> Option<&TraceBuf> {
+        self.trace.as_deref()
+    }
+
+    /// Serviceable requests still owing prefill work, per QoS tier
+    /// (admitted + dispatched-pending; relegated excluded, mirroring
+    /// [`LoadSnapshot::backlog`]) — the time-series sampler's per-tier
+    /// queue-depth gauge. O(live); called only on sampling ticks.
+    pub fn backlog_per_tier(&self) -> Vec<usize> {
+        let mut depth = vec![0usize; self.n_tiers];
+        for &id in &self.live {
+            let r = self.store.get(id);
+            if r.phase != Phase::Relegated && r.prefill_remaining() > 0 {
+                depth[r.spec.tier.min(self.n_tiers - 1)] += 1;
+            }
+        }
+        for (_, spec, _) in &self.pending[self.next_pending..] {
+            depth[spec.tier.min(self.n_tiers - 1)] += 1;
+        }
+        depth
     }
 }
 

@@ -26,6 +26,7 @@ pub mod config;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
+pub mod obs;
 pub mod predictor;
 pub mod qos;
 pub mod request;

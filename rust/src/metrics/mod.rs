@@ -5,6 +5,7 @@
 //! violation percentages overall / per QoS bucket / by request length
 //! (Fig. 9), goodput (Fig. 7b) and capacity search support (Fig. 7a).
 
+use crate::obs::TierAutopsy;
 use crate::qos::Slo;
 use crate::request::{Phase, Request, RequestStore};
 use crate::util::{Quantiles, RollingQuantile};
@@ -83,6 +84,12 @@ pub struct Summary {
     /// Prefill tokens skipped by cache hits — prompt work the cluster
     /// never had to recompute.
     pub prefill_tokens_saved: u64,
+    /// Per-tier SLO-violation autopsy: each finished violator's lateness
+    /// decomposed into attributable causes (see [`crate::obs::autopsy`])
+    /// and summed per tier. Derived reporting — deliberately *not* part
+    /// of [`Summary::fingerprint`], whose identity the pre-observability
+    /// invariance tests pin.
+    pub autopsy: Vec<TierAutopsy>,
 }
 
 /// Compute the summary at horizon `horizon_s` (typically the workload end
@@ -101,6 +108,7 @@ pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: 
     let (mut long_total, mut long_viol, mut short_total, mut short_viol) = (0, 0, 0, 0);
     let (mut imp_total, mut imp_viol) = (0usize, 0usize);
     let mut relegated = 0usize;
+    let mut autopsy = vec![TierAutopsy::default(); n_tiers];
 
     for req in stores.iter().flat_map(|s| s.iter()) {
         // A migrated request is owned (and counted) by the replica it was
@@ -126,6 +134,9 @@ pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: 
             per_tier[req.spec.tier].1 += 1;
             if v {
                 per_tier[req.spec.tier].0 += 1;
+            }
+            if let Some(a) = crate::obs::autopsy(req) {
+                autopsy[req.spec.tier].add(&a);
             }
         }
         if req.spec.prompt_tokens >= long_threshold {
@@ -192,6 +203,7 @@ pub fn summarize_many(stores: &[&RequestStore], horizon_s: f64, long_threshold: 
         prefix_cache_lookups: 0,
         prefix_cache_hits: 0,
         prefill_tokens_saved: 0,
+        autopsy,
     }
 }
 
@@ -330,8 +342,11 @@ impl RollingLatency {
         }
     }
 
+    /// Windowed quantile series for `tier`. An out-of-range tier has
+    /// recorded nothing (see [`RollingLatency::record`]'s bound check),
+    /// so it yields an empty series rather than a panic.
     pub fn series(&self, tier: usize, q: f64) -> Vec<(f64, f64)> {
-        self.per_tier[tier].series(q)
+        self.per_tier.get(tier).map_or_else(Vec::new, |r| r.series(q))
     }
 }
 
@@ -548,5 +563,42 @@ mod tests {
         for (_, v) in series {
             assert!((v - 2.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn rolling_latency_series_out_of_range_tier_is_empty() {
+        let mut store = RequestStore::new();
+        let mut roll = RollingLatency::new(1, 10.0);
+        let id = add_request(&mut store, 0.0, 10, 1, 0, INT);
+        finish(&mut store, id, &[2.0]);
+        roll.record(store.get(id));
+        // A tier index beyond the recorder's table recorded nothing:
+        // empty series, no panic.
+        assert!(roll.series(7, 0.99).is_empty());
+        assert!(!roll.series(0, 0.99).is_empty());
+    }
+
+    #[test]
+    fn summary_carries_per_tier_autopsy() {
+        let mut store = RequestStore::new();
+        let bad = add_request(&mut store, 0.0, 100, 1, 0, INT);
+        {
+            let r = store.get_mut(bad);
+            r.prefill_started_at = Some(4.0); // queued 4 s before prefill
+        }
+        finish(&mut store, bad, &[10.0]); // TTFT 10 > 6: 4 s late
+        let ok = add_request(&mut store, 0.0, 100, 1, 1, BATCH);
+        finish(&mut store, ok, &[1.0]);
+        let s = summarize(&store, 100.0, 1000, 3);
+        assert_eq!(s.autopsy.len(), 3);
+        assert_eq!(s.autopsy[0].violations, 1);
+        assert!((s.autopsy[0].lateness_s - 4.0).abs() < 1e-9);
+        assert!((s.autopsy[0].queueing_s - 4.0).abs() < 1e-9);
+        assert_eq!(s.autopsy[1].violations, 0);
+        // The autopsy is derived reporting: it must not alter the
+        // fingerprint identity the invariance tests pin.
+        let mut t = s.clone();
+        t.autopsy[0].queueing_s += 1.0;
+        assert_eq!(s.fingerprint(), t.fingerprint());
     }
 }

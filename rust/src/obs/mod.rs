@@ -1,0 +1,675 @@
+//! Flight recorder: structured request-lifecycle tracing, per-tick
+//! time-series sampling, Chrome-trace/Perfetto export and SLO-violation
+//! autopsy.
+//!
+//! Design constraints (PR 8):
+//!
+//! - **Zero cost when off.** The engine and cluster hold an
+//!   `Option<Box<TraceBuf>>`; with the `observability` config block
+//!   absent every hook is a null-pointer check and the simulation output
+//!   is bit-for-bit the untraced system.
+//! - **Deterministic and worker-count-invariant.** Events are stamped
+//!   with virtual time and recorded into per-source buffers (source 0 is
+//!   the cluster coordinator, source `i + 1` is engine `i`), each with an
+//!   implicit per-source sequence number (its buffer index). The export
+//!   merges buffers by `(virtual time, source rank, sequence)` — the
+//!   same canonical order the superstep barrier defines — so `workers`
+//!   1/2/8 produce byte-identical trace files.
+//! - **Attribution, not just aggregates.** [`autopsy`] decomposes each
+//!   violating request's lateness into causes (warm-up hold, queueing
+//!   wait, migration pause, chunk inflation, degrade-induced slack
+//!   tightening, residual) that sum exactly to its lateness, and
+//!   [`TierAutopsy`] aggregates them per QoS tier into `Summary`.
+
+use crate::qos::Slo;
+use crate::request::{Phase, Request, RequestId};
+use std::fmt::Write as _;
+
+// ---------------------------------------------------------------------------
+// Event vocabulary
+// ---------------------------------------------------------------------------
+
+/// One structured lifecycle event. Coordinator events are recorded by
+/// the cluster (source 0), engine events by the owning replica (source
+/// `replica + 1`); request ids are store-local to the recording replica.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    // -- coordinator (source 0) --------------------------------------------
+    /// A request was popped off the arrival trace.
+    Arrival { tier: usize, prompt: u32, decode: u32 },
+    /// Admission control turned the request away.
+    Reject { tier: usize },
+    /// Admission control degraded the request to a looser tier.
+    Degrade { from_tier: usize, to_tier: usize },
+    /// The dispatcher placed a request on `replica` (the chosen
+    /// replica's load score at decision time, lower = less loaded). No
+    /// request id yet: the store-local id is assigned — and traced via
+    /// [`Event::Admit`] — when the replica admits it.
+    Dispatch { replica: usize, tier: usize, score: f64 },
+    /// Relegation handoff moved a queued request between replicas.
+    Handoff { origin: usize, target: usize, origin_id: RequestId, target_id: RequestId },
+    /// A drain evacuated a not-yet-started request to a peer.
+    DrainMove { origin: usize, target: usize, origin_id: RequestId, target_id: RequestId },
+    /// A live KV migration transfer window opened: `origin_id`'s KV
+    /// streams from `origin` to `target`, resuming there at `resume_at`.
+    MigrationWindow {
+        origin: usize,
+        target: usize,
+        origin_id: RequestId,
+        kv_bytes: f64,
+        transfer_s: f64,
+        resume_at: f64,
+    },
+    /// A replica changed lifecycle state (provisioned / active /
+    /// draining / retired).
+    Lifecycle { replica: usize, state: &'static str },
+    /// The autoscaler/control loop ran.
+    ControlTick { tick: u64 },
+    // -- engine (source = replica + 1) -------------------------------------
+    /// The replica admitted a fresh request. `cache_hit_tokens` is the
+    /// prefix-cache hit length (0 = miss or no cache).
+    Admit { id: RequestId, tier: usize, cache_hit_tokens: u32 },
+    /// A prefill chunk of `tokens` tokens executed (`done`/`total`
+    /// prompt progress after it).
+    PrefillChunk { id: RequestId, tokens: u32, done: u32, total: u32 },
+    /// First output token emitted.
+    FirstToken { id: RequestId },
+    /// Final token emitted. `lateness_s` is the worst deadline overrun
+    /// (<= 0 means the SLO held).
+    Finish { id: RequestId, lateness_s: f64 },
+    /// The request left this replica (handoff or live migration).
+    MigrateOut { id: RequestId, live: bool },
+    /// The request arrived from a peer replica. `pause_s` is the decode
+    /// pause a live migration imposed (0 for queued handoffs).
+    MigrateIn { id: RequestId, pause_s: f64 },
+}
+
+/// A timestamped event in one source's buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual time, seconds.
+    pub t: f64,
+    pub event: Event,
+}
+
+/// Append-only per-source event buffer. The buffer index is the
+/// per-source sequence number the canonical merge sorts on.
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceBuf {
+    /// An empty buffer, usable as a merge placeholder for sources that
+    /// recorded nothing (e.g. engines while tracing is off).
+    pub const EMPTY: TraceBuf = TraceBuf { events: Vec::new() };
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, t: f64, event: Event) {
+        self.events.push(TraceEvent { t, event });
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canonical merge + Chrome-trace export
+// ---------------------------------------------------------------------------
+
+/// Merge per-source buffers into the canonical order `(virtual time,
+/// source rank, per-source sequence)`. Each source's own sequence is
+/// identical for any worker count, so the merged order — and any export
+/// derived from it — is worker-count-invariant.
+pub fn merge<'a>(bufs: &[&'a TraceBuf]) -> Vec<(f64, usize, usize, &'a Event)> {
+    let mut all: Vec<(f64, usize, usize, &'a Event)> =
+        Vec::with_capacity(bufs.iter().map(|b| b.len()).sum());
+    for (src, buf) in bufs.iter().enumerate() {
+        for (seq, e) in buf.events().iter().enumerate() {
+            all.push((e.t, src, seq, &e.event));
+        }
+    }
+    all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+    all
+}
+
+/// Async-span id: unique per (source, store-local request id). A request
+/// that moves between replicas closes its span on the origin and opens a
+/// fresh one on the target; the coordinator's handoff/migration events
+/// carry both ids to link them.
+fn span_id(src: usize, id: RequestId) -> u64 {
+    ((src as u64) << 32) | id as u64
+}
+
+/// Render merged buffers as Chrome trace event JSON (loadable in the
+/// Perfetto UI): one process track per source (coordinator + each
+/// replica), requests as async `b`/`e` spans on their replica's track,
+/// everything else as instant events; live-KV transfer windows render as
+/// complete (`X`) slices on the origin replica's track.
+pub fn chrome_trace(bufs: &[&TraceBuf]) -> String {
+    let merged = merge(bufs);
+    let mut out = String::with_capacity(128 * merged.len() + 256);
+    out.push_str("{\"traceEvents\":[");
+    for src in 0..bufs.len() {
+        if src > 0 {
+            out.push(',');
+        }
+        out.push('\n');
+        let _ = write!(
+            out,
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{src},\"tid\":0,\"args\":{{\"name\":\""
+        );
+        if src == 0 {
+            out.push_str("coordinator");
+        } else {
+            let _ = write!(out, "replica {}", src - 1);
+        }
+        out.push_str("\"}}");
+    }
+    for &(t, src, _seq, ev) in &merged {
+        out.push_str(",\n");
+        write_chrome_event(&mut out, t, src, ev);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+fn write_chrome_event(out: &mut String, t: f64, src: usize, ev: &Event) {
+    // Chrome trace timestamps are microseconds.
+    let ts = t * 1e6;
+    let instant = |out: &mut String, pid: usize, name: &str, args: String| {
+        let _ = write!(
+            out,
+            "{{\"name\":\"{name}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":0,\
+             \"ts\":{ts:.3},\"args\":{{{args}}}}}"
+        );
+    };
+    let span = |out: &mut String, ph: char, pid: usize, id: RequestId, args: String| {
+        let _ = write!(
+            out,
+            "{{\"name\":\"request\",\"cat\":\"request\",\"ph\":\"{ph}\",\"id\":{},\
+             \"pid\":{pid},\"tid\":0,\"ts\":{ts:.3},\"args\":{{{args}}}}}",
+            span_id(pid, id)
+        );
+    };
+    match ev {
+        Event::Arrival { tier, prompt, decode } => instant(
+            out,
+            0,
+            "arrival",
+            format!("\"tier\":{tier},\"prompt\":{prompt},\"decode\":{decode}"),
+        ),
+        Event::Reject { tier } => instant(out, 0, "reject", format!("\"tier\":{tier}")),
+        Event::Degrade { from_tier, to_tier } => instant(
+            out,
+            0,
+            "degrade",
+            format!("\"from_tier\":{from_tier},\"to_tier\":{to_tier}"),
+        ),
+        Event::Dispatch { replica, tier, score } => instant(
+            out,
+            0,
+            "dispatch",
+            format!("\"replica\":{replica},\"tier\":{tier},\"score\":{score}"),
+        ),
+        Event::Handoff { origin, target, origin_id, target_id } => instant(
+            out,
+            0,
+            "handoff",
+            format!(
+                "\"origin\":{origin},\"target\":{target},\"origin_rid\":{origin_id},\
+                 \"target_rid\":{target_id}"
+            ),
+        ),
+        Event::DrainMove { origin, target, origin_id, target_id } => instant(
+            out,
+            0,
+            "drain_move",
+            format!(
+                "\"origin\":{origin},\"target\":{target},\"origin_rid\":{origin_id},\
+                 \"target_rid\":{target_id}"
+            ),
+        ),
+        Event::MigrationWindow { origin, target, origin_id, kv_bytes, transfer_s, resume_at } => {
+            // A complete slice on the origin replica's track spanning the
+            // transfer window.
+            let _ = write!(
+                out,
+                "{{\"name\":\"kv_transfer\",\"ph\":\"X\",\"pid\":{},\"tid\":0,\"ts\":{ts:.3},\
+                 \"dur\":{:.3},\"args\":{{\"target\":{target},\"rid\":{origin_id},\
+                 \"kv_bytes\":{kv_bytes},\"resume_at\":{resume_at}}}}}",
+                origin + 1,
+                transfer_s * 1e6
+            );
+        }
+        Event::Lifecycle { replica, state } => instant(
+            out,
+            replica + 1,
+            "lifecycle",
+            format!("\"replica\":{replica},\"state\":\"{state}\""),
+        ),
+        Event::ControlTick { tick } => instant(out, 0, "control_tick", format!("\"tick\":{tick}")),
+        Event::Admit { id, tier, cache_hit_tokens } => span(
+            out,
+            'b',
+            src,
+            *id,
+            format!("\"rid\":{id},\"tier\":{tier},\"cache_hit_tokens\":{cache_hit_tokens}"),
+        ),
+        Event::PrefillChunk { id, tokens, done, total } => instant(
+            out,
+            src,
+            "prefill_chunk",
+            format!("\"rid\":{id},\"tokens\":{tokens},\"done\":{done},\"total\":{total}"),
+        ),
+        Event::FirstToken { id } => instant(out, src, "first_token", format!("\"rid\":{id}")),
+        Event::Finish { id, lateness_s } => span(
+            out,
+            'e',
+            src,
+            *id,
+            format!("\"rid\":{id},\"lateness_s\":{lateness_s}"),
+        ),
+        Event::MigrateOut { id, live } => span(
+            out,
+            'e',
+            src,
+            *id,
+            format!("\"rid\":{id},\"migrated_out\":true,\"live\":{live}"),
+        ),
+        Event::MigrateIn { id, pause_s } => span(
+            out,
+            'b',
+            src,
+            *id,
+            format!("\"rid\":{id},\"migrated_in\":true,\"pause_s\":{pause_s}"),
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Time-series sampler rows
+// ---------------------------------------------------------------------------
+
+/// One per-control-tick sample of cluster gauges, serialised to JSONL.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SeriesRow {
+    /// Virtual time of the sample, seconds.
+    pub t: f64,
+    /// Control-tick ordinal (the final end-of-run sample reuses the last
+    /// ordinal + 1).
+    pub tick: u64,
+    /// Serviceable requests still owing prefill work, per QoS tier.
+    pub queue_depth_per_tier: Vec<usize>,
+    /// Queued prefill seconds per QoS tier (the dispatcher's wait
+    /// estimate, summed over replicas).
+    pub queued_s_per_tier: Vec<f64>,
+    /// KV tokens occupied / capacity, summed over live replicas.
+    pub kv_used: u64,
+    pub kv_capacity: u64,
+    /// Prefix-cache resident tokens, summed over live replicas.
+    pub cache_resident_tokens: u64,
+    /// Admitted unfinished requests.
+    pub active: usize,
+    /// Batch composition: requests owing prefill vs decoding.
+    pub prefills: usize,
+    pub decodes: usize,
+    /// Replica lifecycle counts.
+    pub replicas_warming: usize,
+    pub replicas_active: usize,
+    pub replicas_draining: usize,
+    pub replicas_retired: usize,
+    /// Cumulative provisioned GPU-seconds at sample time.
+    pub gpu_seconds: f64,
+}
+
+impl SeriesRow {
+    /// Render as one JSONL line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(256);
+        let _ = write!(s, "{{\"t\":{:.6},\"tick\":{},", self.t, self.tick);
+        let _ = write!(s, "\"queue_depth_per_tier\":{:?},", self.queue_depth_per_tier);
+        s.push_str("\"queued_s_per_tier\":[");
+        for (i, v) in self.queued_s_per_tier.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{v:.6}");
+        }
+        s.push_str("],");
+        let _ = write!(
+            s,
+            "\"kv_used\":{},\"kv_capacity\":{},\"cache_resident_tokens\":{},",
+            self.kv_used, self.kv_capacity, self.cache_resident_tokens
+        );
+        let _ = write!(
+            s,
+            "\"active\":{},\"prefills\":{},\"decodes\":{},",
+            self.active, self.prefills, self.decodes
+        );
+        let _ = write!(
+            s,
+            "\"replicas_warming\":{},\"replicas_active\":{},\"replicas_draining\":{},\
+             \"replicas_retired\":{},",
+            self.replicas_warming, self.replicas_active, self.replicas_draining,
+            self.replicas_retired
+        );
+        let _ = write!(s, "\"gpu_seconds\":{:.6}}}", self.gpu_seconds);
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLO-violation autopsy
+// ---------------------------------------------------------------------------
+
+/// Decomposition of one violating request's lateness into attributable
+/// causes. Components are consumed greedily against the total lateness
+/// in a canonical order (warm-up, queueing, migration, chunk, degrade)
+/// with the residual in `other_s`, so they sum to `lateness_s` exactly
+/// by construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Autopsy {
+    /// Worst deadline overrun, seconds (> 0 for a violator).
+    pub lateness_s: f64,
+    /// Held while the dispatched replica was still warming up.
+    pub warmup_s: f64,
+    /// Queueing wait: arrival to first prefill chunk, net of warm-up.
+    pub queueing_s: f64,
+    /// Decode pauses imposed by live KV migration transfers.
+    pub migration_s: f64,
+    /// Chunk inflation: prefill service time beyond the replica's
+    /// reference rate for the admitted prompt.
+    pub chunk_s: f64,
+    /// Slack tightening from an admission-control tier change (0 when
+    /// degrade loosened the SLO, the usual case).
+    pub degrade_s: f64,
+    /// Residual lateness not explained by the above (e.g. decode-batch
+    /// contention).
+    pub other_s: f64,
+}
+
+/// Lateness of a finished request against its own SLO, > 0 iff it
+/// violated. Interactive tiers use the worst eq. (2) token overrun;
+/// non-interactive tiers the TTLT overrun.
+pub fn lateness(r: &Request) -> f64 {
+    match r.slo {
+        Slo::Interactive { .. } => r.max_lateness,
+        Slo::NonInteractive { ttlt_s } => r.ttlt().map_or(f64::NEG_INFINITY, |t| t - ttlt_s),
+    }
+}
+
+/// Decompose a violating request's lateness. Returns `None` for
+/// requests that finished within their SLO (or never finished).
+pub fn autopsy(r: &Request) -> Option<Autopsy> {
+    if r.phase != Phase::Finished || r.met_slo() {
+        return None;
+    }
+    let total = lateness(r);
+    if total <= 0.0 {
+        return None;
+    }
+    let wait = r.prefill_started_at.map_or(0.0, |t| (t - r.spec.arrival_s).max(0.0));
+    // The warm-up hint is a dispatch-time estimate; never attribute more
+    // of the wait to warm-up than the request actually waited.
+    let warmup = r.warmup_hold_s.max(0.0).min(wait);
+    let queue = wait - warmup;
+    let migration = r.migration_pause_s.max(0.0);
+    let chunk = r.chunk_excess_s.max(0.0);
+    let degrade = r.degrade_tighten_s.max(0.0);
+    let mut rem = total;
+    let warmup_s = warmup.min(rem);
+    rem -= warmup_s;
+    let queueing_s = queue.min(rem);
+    rem -= queueing_s;
+    let migration_s = migration.min(rem);
+    rem -= migration_s;
+    let chunk_s = chunk.min(rem);
+    rem -= chunk_s;
+    let degrade_s = degrade.min(rem);
+    rem -= degrade_s;
+    Some(Autopsy {
+        lateness_s: total,
+        warmup_s,
+        queueing_s,
+        migration_s,
+        chunk_s,
+        degrade_s,
+        other_s: rem,
+    })
+}
+
+/// Per-tier aggregate of request autopsies: sums over the tier's
+/// violating requests. Lives in `Summary` (excluded from its
+/// fingerprint — the autopsy is additive reporting, not simulation
+/// state).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TierAutopsy {
+    pub violations: usize,
+    pub lateness_s: f64,
+    pub warmup_s: f64,
+    pub queueing_s: f64,
+    pub migration_s: f64,
+    pub chunk_s: f64,
+    pub degrade_s: f64,
+    pub other_s: f64,
+}
+
+impl TierAutopsy {
+    pub fn add(&mut self, a: &Autopsy) {
+        self.violations += 1;
+        self.lateness_s += a.lateness_s;
+        self.warmup_s += a.warmup_s;
+        self.queueing_s += a.queueing_s;
+        self.migration_s += a.migration_s;
+        self.chunk_s += a.chunk_s;
+        self.degrade_s += a.degrade_s;
+        self.other_s += a.other_s;
+    }
+
+    pub fn merge(&mut self, o: &TierAutopsy) {
+        self.violations += o.violations;
+        self.lateness_s += o.lateness_s;
+        self.warmup_s += o.warmup_s;
+        self.queueing_s += o.queueing_s;
+        self.migration_s += o.migration_s;
+        self.chunk_s += o.chunk_s;
+        self.degrade_s += o.degrade_s;
+        self.other_s += o.other_s;
+    }
+
+    /// `(cause, share_of_lateness)` pairs in canonical order, for
+    /// reporting. Shares sum to 1 when there are violations.
+    pub fn shares(&self) -> [(&'static str, f64); 6] {
+        let d = if self.lateness_s > 0.0 { self.lateness_s } else { 1.0 };
+        [
+            ("warmup", self.warmup_s / d),
+            ("queueing", self.queueing_s / d),
+            ("migration", self.migration_s / d),
+            ("chunk", self.chunk_s / d),
+            ("degrade", self.degrade_s / d),
+            ("other", self.other_s / d),
+        ]
+    }
+
+    /// Human-readable cause breakdown, e.g. `"queueing 71%, chunk 21%,
+    /// other 8%"`; `"none"` when the tier has no violations.
+    pub fn breakdown(&self) -> String {
+        if self.violations == 0 || self.lateness_s <= 0.0 {
+            return "none".to_string();
+        }
+        let parts: Vec<String> = self
+            .shares()
+            .iter()
+            .filter(|(_, share)| *share > 0.0005)
+            .map(|(name, share)| format!("{name} {:.0}%", share * 100.0))
+            .collect();
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(", ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::Importance;
+    use crate::request::RequestSpec;
+
+    fn spec(arrival: f64, prompt: u32, decode: u32) -> RequestSpec {
+        RequestSpec {
+            arrival_s: arrival,
+            prompt_tokens: prompt,
+            decode_tokens: decode,
+            tier: 0,
+            app_id: 0,
+            importance: Importance::High,
+            session_id: None,
+            prefix_tokens: 0,
+        }
+    }
+
+    const INTERACTIVE: Slo = Slo::Interactive { ttft_s: 6.0, tbt_s: 0.05 };
+
+    fn violator() -> Request {
+        let mut r = Request::new(0, spec(0.0, 5, 1), INTERACTIVE);
+        r.prefill_started_at = Some(4.0);
+        r.chunk_excess_s = 1.5;
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        r.emit_token(9.0); // 3 s past the 6 s TTFT deadline
+        r
+    }
+
+    #[test]
+    fn autopsy_components_sum_to_lateness() {
+        let r = violator();
+        let a = autopsy(&r).expect("violator must have an autopsy");
+        assert!((a.lateness_s - 3.0).abs() < 1e-9);
+        let sum = a.warmup_s + a.queueing_s + a.migration_s + a.chunk_s + a.degrade_s + a.other_s;
+        assert!((sum - a.lateness_s).abs() < 1e-9, "sum {sum} vs {}", a.lateness_s);
+        // 4 s queue wait capped at the 3 s lateness; nothing left over.
+        assert!((a.queueing_s - 3.0).abs() < 1e-9);
+        assert_eq!(a.chunk_s, 0.0);
+        assert_eq!(a.other_s, 0.0);
+    }
+
+    #[test]
+    fn autopsy_attributes_in_canonical_order() {
+        let mut r = violator();
+        r.warmup_hold_s = 1.0;
+        r.migration_pause_s = 10.0;
+        let a = autopsy(&r).unwrap();
+        // warmup (1.0) then queueing (4.0 - 1.0 warmup = 3.0, capped at
+        // the 2.0 remaining) exhaust the 3 s lateness before migration.
+        assert!((a.warmup_s - 1.0).abs() < 1e-9);
+        assert!((a.queueing_s - 2.0).abs() < 1e-9);
+        assert_eq!(a.migration_s, 0.0);
+    }
+
+    #[test]
+    fn autopsy_none_for_compliant_requests() {
+        let mut r = Request::new(0, spec(0.0, 5, 1), INTERACTIVE);
+        r.prefilled = 5;
+        r.phase = Phase::Decode;
+        r.emit_token(1.0);
+        assert!(r.met_slo());
+        assert!(autopsy(&r).is_none());
+        // Unfinished requests have no autopsy either.
+        let pending = Request::new(1, spec(0.0, 5, 1), INTERACTIVE);
+        assert!(autopsy(&pending).is_none());
+    }
+
+    #[test]
+    fn tier_autopsy_aggregates_and_reports() {
+        let mut agg = TierAutopsy::default();
+        let r = violator();
+        agg.add(&autopsy(&r).unwrap());
+        agg.add(&autopsy(&r).unwrap());
+        assert_eq!(agg.violations, 2);
+        assert!((agg.lateness_s - 6.0).abs() < 1e-9);
+        let text = agg.breakdown();
+        assert!(text.contains("queueing 100%"), "breakdown: {text}");
+        let mut merged = TierAutopsy::default();
+        merged.merge(&agg);
+        assert_eq!(merged.violations, 2);
+    }
+
+    #[test]
+    fn merge_orders_by_time_then_source_then_seq() {
+        let mut a = TraceBuf::new();
+        let mut b = TraceBuf::new();
+        a.push(1.0, Event::ControlTick { tick: 0 });
+        a.push(1.0, Event::ControlTick { tick: 1 });
+        b.push(0.5, Event::FirstToken { id: 3 });
+        b.push(1.0, Event::FirstToken { id: 4 });
+        let merged = merge(&[&a, &b]);
+        let order: Vec<(f64, usize, usize)> =
+            merged.iter().map(|(t, s, q, _)| (*t, *s, *q)).collect();
+        assert_eq!(order, vec![(0.5, 1, 0), (1.0, 0, 0), (1.0, 0, 1), (1.0, 1, 1)]);
+    }
+
+    #[test]
+    fn chrome_trace_is_balanced_json() {
+        let mut coord = TraceBuf::new();
+        let mut eng = TraceBuf::new();
+        coord.push(0.0, Event::Arrival { tier: 0, prompt: 8, decode: 2 });
+        coord.push(0.0, Event::Dispatch { replica: 0, tier: 0, score: 0.25 });
+        eng.push(0.0, Event::Admit { id: 0, tier: 0, cache_hit_tokens: 0 });
+        eng.push(0.4, Event::PrefillChunk { id: 0, tokens: 8, done: 8, total: 8 });
+        eng.push(0.5, Event::FirstToken { id: 0 });
+        eng.push(0.6, Event::Finish { id: 0, lateness_s: -5.4 });
+        let json = chrome_trace(&[&coord, &eng]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}\n"));
+        assert_eq!(json.matches("\"ph\":\"b\"").count(), json.matches("\"ph\":\"e\"").count());
+        assert!(json.contains("\"name\":\"coordinator\""));
+        assert!(json.contains("\"name\":\"replica 0\""));
+        // Braces balance — a cheap structural parse.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn series_row_renders_jsonl() {
+        let row = SeriesRow {
+            t: 2.5,
+            tick: 1,
+            queue_depth_per_tier: vec![3, 0, 1],
+            queued_s_per_tier: vec![1.25, 0.0, 0.5],
+            kv_used: 100,
+            kv_capacity: 1000,
+            cache_resident_tokens: 42,
+            active: 4,
+            prefills: 3,
+            decodes: 1,
+            replicas_warming: 0,
+            replicas_active: 2,
+            replicas_draining: 0,
+            replicas_retired: 0,
+            gpu_seconds: 5.0,
+        };
+        let line = row.to_json_line();
+        assert!(line.starts_with("{\"t\":2.500000,"));
+        assert!(line.contains("\"queue_depth_per_tier\":[3, 0, 1]"));
+        assert!(line.contains("\"kv_used\":100"));
+        assert!(line.ends_with("\"gpu_seconds\":5.000000}"));
+        assert_eq!(line.matches('{').count(), line.matches('}').count());
+    }
+}

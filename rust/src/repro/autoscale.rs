@@ -306,6 +306,7 @@ pub fn autoscale(scale: Scale) -> Result<()> {
         )?;
     }
     writeln!(out, "  ],")?;
+    writeln!(out, "  \"autopsy\": {},", super::autopsy_json(&auto_admit.summary))?;
     writeln!(out, "  \"headline\": {{")?;
     writeln!(out, "    \"gpu_savings_pct_vs_static_peak\": {gpu_savings_pct:.2},")?;
     writeln!(

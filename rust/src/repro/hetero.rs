@@ -257,6 +257,7 @@ pub fn hetero(scale: Scale) -> Result<()> {
         )?;
     }
     writeln!(out, "  ],")?;
+    writeln!(out, "  \"autopsy\": {},", super::autopsy_json(&hetero.summary))?;
     writeln!(out, "  \"headline\": {{")?;
     writeln!(out, "    \"tier0_within_silo\": {tier0_ok},")?;
     writeln!(out, "    \"goodput_ratio_vs_silo\": {thru_ratio:.3}")?;

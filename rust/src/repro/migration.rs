@@ -28,7 +28,7 @@
 //! the CSV.
 
 use super::{drain_budget, f, CsvOut, Scale};
-use crate::config::{Config, DispatchPolicy, InterconnectConfig};
+use crate::config::{Config, DispatchPolicy, InterconnectConfig, ObservabilityConfig};
 use crate::metrics::Summary;
 use crate::qos::Importance;
 use crate::request::RequestSpec;
@@ -118,23 +118,36 @@ pub fn surge_trace(duration_s: f64) -> Vec<RequestSpec> {
     trace
 }
 
-/// Run the surge scenario and return its merged summary. Shared by the
-/// experiment and the regression tests.
-pub fn run_surge(duration_s: f64, live_migration: bool) -> Summary {
+/// Build and run the surge cluster, optionally with the flight recorder
+/// on, and return it for inspection (summary, trace, series). Shared by
+/// [`run_surge`], the experiment's traced export and the
+/// `flight_recorder` example.
+pub fn surge_cluster(
+    duration_s: f64,
+    live_migration: bool,
+    obs: Option<ObservabilityConfig>,
+) -> Cluster {
     let mut cfg = Config::default();
     cfg.cluster.dispatch.policy = DispatchPolicy::RoundRobin;
     // The handoff-only baseline keeps its full machinery: the point is
     // what live migration adds on top of it.
     cfg.cluster.dispatch.relegation_handoff = true;
     cfg.cluster.control.control_interval_s = 2.5;
+    cfg.cluster.observability = obs;
     if live_migration {
         cfg.cluster.interconnect = Some(interconnect());
     }
-    let trace = surge_trace(duration_s);
-    let n = trace.len();
     let mut cluster = Cluster::new(&cfg, 2);
-    cluster.submit_trace(trace);
+    cluster.submit_trace(surge_trace(duration_s));
     cluster.run(duration_s + drain_budget(&cfg));
+    cluster
+}
+
+/// Run the surge scenario and return its merged summary. Shared by the
+/// experiment and the regression tests.
+pub fn run_surge(duration_s: f64, live_migration: bool) -> Summary {
+    let n = surge_trace(duration_s).len();
+    let cluster = surge_cluster(duration_s, live_migration, None);
     let summary = cluster.summary(6251);
     assert_eq!(summary.total, n, "surge run must conserve requests");
     summary
@@ -205,6 +218,29 @@ pub fn migration(scale: Scale) -> Result<()> {
         live_t0,
         live_s.migrated_live_total()
     );
+    for (t, a) in live_s.autopsy.iter().enumerate() {
+        if a.violations > 0 {
+            println!("  tier {t} lateness autopsy: {}", a.breakdown());
+        }
+    }
+
+    // ---- optional flight-recorder export ---------------------------------
+    // `--trace` / `--series` re-run the live surge with the recorder on
+    // (the headline numbers above stay from the recorder-off runs).
+    let paths = super::obs_paths();
+    if paths.trace.is_some() || paths.series.is_some() {
+        let obs =
+            ObservabilityConfig { trace: paths.trace.is_some(), series: paths.series.is_some() };
+        let cluster = surge_cluster(duration, true, Some(obs));
+        if let (Some(path), Some(json)) = (&paths.trace, cluster.trace_json()) {
+            std::fs::write(path, json)?;
+            println!("wrote Perfetto trace to {path}");
+        }
+        if let (Some(path), Some(jsonl)) = (&paths.series, cluster.series_jsonl()) {
+            std::fs::write(path, jsonl)?;
+            println!("wrote time series to {path}");
+        }
+    }
 
     // ---- JSON ------------------------------------------------------------
     std::fs::create_dir_all("results")?;
@@ -231,7 +267,8 @@ pub fn migration(scale: Scale) -> Result<()> {
     )?;
     writeln!(out, "    \"migrated_live\": {},", live_s.migrated_live_total())?;
     writeln!(out, "    \"kv_gb_moved\": {:.4},", live_s.kv_bytes_migrated / 1e9)?;
-    writeln!(out, "    \"transfer_s\": {:.4}", live_s.migration_transfer_s)?;
+    writeln!(out, "    \"transfer_s\": {:.4},", live_s.migration_transfer_s)?;
+    writeln!(out, "    \"autopsy\": {}", super::autopsy_json(&live_s))?;
     writeln!(out, "  }}")?;
     writeln!(out, "}}")?;
     println!("wrote {} and {json_path}", csv.path);

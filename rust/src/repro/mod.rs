@@ -26,6 +26,7 @@ use crate::workload::datasets::Dataset;
 use crate::workload::WorkloadSpec;
 use anyhow::{bail, Result};
 use std::io::Write;
+use std::sync::OnceLock;
 
 /// Experiment scale knobs.
 #[derive(Debug, Clone, Copy)]
@@ -56,6 +57,56 @@ impl Scale {
     pub fn full() -> Self {
         Scale { duration_s: 3600.0, diurnal_s: 14400.0, search_iters: 9, seed: 7 }
     }
+}
+
+/// Flight-recorder export paths requested on the CLI (`--trace PATH`,
+/// `--series PATH`). Set once before [`run`]; experiments that drive a
+/// traced run (the migration surge) consult them and write the merged
+/// Perfetto trace / series JSONL there.
+#[derive(Debug, Clone, Default)]
+pub struct ObsPaths {
+    pub trace: Option<String>,
+    pub series: Option<String>,
+}
+
+static OBS_PATHS: OnceLock<ObsPaths> = OnceLock::new();
+
+/// Install the CLI's export paths. First call wins; later calls are
+/// ignored (the CLI sets this exactly once before dispatching).
+pub fn set_obs_paths(paths: ObsPaths) {
+    let _ = OBS_PATHS.set(paths);
+}
+
+/// The installed export paths (default: none requested).
+pub fn obs_paths() -> ObsPaths {
+    OBS_PATHS.get().cloned().unwrap_or_default()
+}
+
+/// A summary's per-tier SLO-violation autopsy as one JSON array value —
+/// appended under an `"autopsy"` key to every repro JSON artifact.
+pub fn autopsy_json(s: &Summary) -> String {
+    let mut out = String::from("[");
+    for (tier, a) in s.autopsy.iter().enumerate() {
+        if tier > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"tier\":{tier},\"violations\":{},\"lateness_s\":{:.4},\"warmup_s\":{:.4},\
+             \"queueing_s\":{:.4},\"migration_s\":{:.4},\"chunk_s\":{:.4},\"degrade_s\":{:.4},\
+             \"other_s\":{:.4},\"breakdown\":\"{}\"}}",
+            a.violations,
+            a.lateness_s,
+            a.warmup_s,
+            a.queueing_s,
+            a.migration_s,
+            a.chunk_s,
+            a.degrade_s,
+            a.other_s,
+            a.breakdown(),
+        ));
+    }
+    out.push(']');
+    out
 }
 
 /// The shared-cluster policy configurations compared throughout §4.

@@ -176,6 +176,7 @@ pub fn sessions(scale: Scale) -> Result<()> {
         writeln!(out, "    }}{}", if i + 1 < rows.len() { "," } else { "" })?;
     }
     writeln!(out, "  }},")?;
+    writeln!(out, "  \"autopsy\": {},", super::autopsy_json(&affinity.3))?;
     writeln!(out, "  \"headline_qps_per_gpu_gain_vs_cache_blind\": {gain:.4}")?;
     writeln!(out, "}}")?;
     println!("wrote {} and {json_path}", csv.path);

@@ -90,6 +90,23 @@ pub struct Request {
     /// (Fig. 6), so gaps larger than SLO_TBT are fine while the absolute
     /// schedule holds.
     pub max_lateness: f64,
+    /// Time the first prefill chunk started executing (carried across
+    /// migrations). `arrival → prefill_started_at` is the queueing wait
+    /// the SLO autopsy attributes lateness to.
+    pub prefill_started_at: Option<f64>,
+    /// Seconds the dispatched replica held this request while still
+    /// warming up (autopsy: warm-up unavailability).
+    pub warmup_hold_s: f64,
+    /// Prefill service time beyond the replica's reference rate for the
+    /// admitted prompt, set when prefill completes (autopsy: chunk
+    /// inflation).
+    pub chunk_excess_s: f64,
+    /// Decode pauses imposed by live KV migration transfer windows,
+    /// accumulated on the receiving replica (autopsy: migration pause).
+    pub migration_pause_s: f64,
+    /// SLO slack tightening from an admission-control tier change, >= 0
+    /// (0 when degrade loosened the deadline — the usual case).
+    pub degrade_tighten_s: f64,
 }
 
 impl Request {
@@ -108,6 +125,11 @@ impl Request {
             last_token_at: None,
             max_tbt: 0.0,
             max_lateness: f64::NEG_INFINITY,
+            prefill_started_at: None,
+            warmup_hold_s: 0.0,
+            chunk_excess_s: 0.0,
+            migration_pause_s: 0.0,
+            degrade_tighten_s: 0.0,
         }
     }
 

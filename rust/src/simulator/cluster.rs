@@ -98,8 +98,9 @@ use crate::config::{
     ClusterSpec, Config, ControlConfig, DispatchConfig, DispatchPolicy, Policy, ReplicaSpec,
     SchedulerConfig,
 };
-use crate::engine::{Engine, LoadSnapshot, SimBackend};
+use crate::engine::{AdmitTag, Engine, LoadSnapshot, SimBackend};
 use crate::metrics::{summarize_many, Summary};
+use crate::obs::{Event, SeriesRow, TraceBuf};
 use crate::request::{RequestSpec, RequestStore};
 use crate::simulator::control::{
     build_controller, ControlView, ReplicaState, ScalingController, ScalingDecision,
@@ -269,6 +270,21 @@ pub struct Cluster {
     /// (`cluster.parallel.workers`, or the `NIYAMA_WORKERS` env default).
     /// 1 selects the sequential loop — the bit-for-bit oracle.
     workers: usize,
+    /// Coordinator-side lifecycle event buffer (source 0 of the canonical
+    /// trace merge; `None` when `cluster.observability.trace` is off).
+    /// Every coordinator action — arrival, admission verdict, dispatch,
+    /// handoff, drain move, migration window, lifecycle edge, control
+    /// tick — runs on this thread at a deterministic clock in both event
+    /// loops, which is what makes traces worker-count-invariant.
+    obs_trace: Option<Box<TraceBuf>>,
+    /// Per-control-tick gauge samples (`None` when
+    /// `cluster.observability.series` is off).
+    series: Option<Vec<SeriesRow>>,
+    /// Autopsy-attribution scratch for the arrival currently being
+    /// dispatched: admission fills the degrade component, `place`
+    /// consumes it. Always maintained (two f64 writes per arrival) so the
+    /// autopsy in `Summary` never depends on the observability block.
+    pending_tag: AdmitTag,
     pub stats: ClusterStats,
 }
 
@@ -394,6 +410,13 @@ impl Cluster {
             control_active,
             timeline: vec![(0.0, replicas)],
             workers: cfg.cluster.effective_workers(),
+            obs_trace: cfg
+                .cluster
+                .observability
+                .filter(|o| o.trace)
+                .map(|_| Box::new(TraceBuf::new())),
+            series: cfg.cluster.observability.filter(|o| o.series).map(|_| Vec::new()),
+            pending_tag: AdmitTag::default(),
             stats: ClusterStats {
                 dispatched: vec![0; replicas],
                 rejected: vec![0; n_tiers],
@@ -514,6 +537,85 @@ impl Cluster {
         )
     }
 
+    // ---- observability ----------------------------------------------------
+
+    /// Record one time-series sample of cluster gauges at virtual time
+    /// `t`. Retired slots contribute only to the lifecycle counts.
+    fn sample_series(&mut self, t: f64, tick: u64) {
+        self.refresh_snapshots();
+        let n_tiers = self.tiers.len();
+        let mut row = SeriesRow {
+            t,
+            tick,
+            queue_depth_per_tier: vec![0; n_tiers],
+            queued_s_per_tier: vec![0.0; n_tiers],
+            gpu_seconds: self.gpu_seconds(),
+            ..SeriesRow::default()
+        };
+        for (i, s) in self.snaps.iter().enumerate() {
+            match self.states[i] {
+                ReplicaState::Warming { .. } => row.replicas_warming += 1,
+                ReplicaState::Active => row.replicas_active += 1,
+                ReplicaState::Draining { .. } => row.replicas_draining += 1,
+                ReplicaState::Retired => {
+                    row.replicas_retired += 1;
+                    continue;
+                }
+            }
+            row.kv_used += s.kv_used;
+            row.kv_capacity += s.kv_capacity;
+            row.cache_resident_tokens += s.cache_resident_tokens;
+            row.active += s.active;
+            row.prefills += s.backlog;
+            row.decodes += s.decodes;
+            for (tier, &q) in s.queued_prefill_s_per_tier.iter().enumerate() {
+                row.queued_s_per_tier[tier.min(n_tiers - 1)] += q;
+            }
+            for (tier, d) in self.engines[i].backlog_per_tier().into_iter().enumerate() {
+                row.queue_depth_per_tier[tier.min(n_tiers - 1)] += d;
+            }
+        }
+        self.series.as_mut().expect("caller checked the sampler is on").push(row);
+    }
+
+    /// The coordinator-side trace buffer (`None` when tracing is off).
+    /// Engine-side buffers hang off [`Engine::trace`]; [`Cluster::trace_json`]
+    /// merges all of them canonically.
+    pub fn coordinator_trace(&self) -> Option<&TraceBuf> {
+        self.obs_trace.as_deref()
+    }
+
+    /// Every trace source (coordinator + one per replica) merged in
+    /// canonical order and rendered as Chrome-trace / Perfetto JSON.
+    /// `None` when tracing is off.
+    pub fn trace_json(&self) -> Option<String> {
+        let coord = self.obs_trace.as_deref()?;
+        let empty = TraceBuf::EMPTY;
+        let mut bufs: Vec<&TraceBuf> = Vec::with_capacity(self.engines.len() + 1);
+        bufs.push(coord);
+        for e in &self.engines {
+            bufs.push(e.trace().unwrap_or(&empty));
+        }
+        Some(crate::obs::chrome_trace(&bufs))
+    }
+
+    /// Recorded time-series rows (`None` when the sampler is off).
+    pub fn series_rows(&self) -> Option<&[SeriesRow]> {
+        self.series.as_deref()
+    }
+
+    /// Time-series rows rendered as JSONL, one row per line. `None` when
+    /// the sampler is off.
+    pub fn series_jsonl(&self) -> Option<String> {
+        let rows = self.series.as_ref()?;
+        let mut out = String::with_capacity(256 * rows.len());
+        for r in rows {
+            out.push_str(&r.to_json_line());
+            out.push('\n');
+        }
+        Some(out)
+    }
+
     /// Whether replica `i`'s pool serves `tier` (affinity mask 0 = all).
     /// Delegates to the cached snapshot's mask — stamped at
     /// construction, refresh and provision, and immutable for a live
@@ -588,10 +690,23 @@ impl Cluster {
         match decision {
             AdmissionDecision::Reject => {
                 self.stats.rejected[spec.tier.min(n_tiers - 1)] += 1;
+                if let Some(buf) = self.obs_trace.as_mut() {
+                    buf.push(self.clock, Event::Reject { tier: spec.tier });
+                }
                 false
             }
             AdmissionDecision::Degrade { to_tier } => {
                 self.stats.degraded[spec.tier.min(n_tiers - 1)] += 1;
+                if let Some(buf) = self.obs_trace.as_mut() {
+                    buf.push(self.clock, Event::Degrade { from_tier: spec.tier, to_tier });
+                }
+                // Autopsy attribution: deadline-budget tightening from
+                // the tier change, >= 0. Degrades loosen the SLO by
+                // design, so this is 0 under every shipped policy — the
+                // cause stays in the taxonomy for tightening policies.
+                let from = crate::qos::slo_for_tier(&self.tiers, spec.tier).deadline_budget().0;
+                let to = crate::qos::slo_for_tier(&self.tiers, to_tier).deadline_budget().0;
+                self.pending_tag.degrade_tighten_s = (from - to).max(0.0);
                 spec.tier = to_tier;
                 true
             }
@@ -599,10 +714,38 @@ impl Cluster {
         }
     }
 
+    /// Seconds until the soonest warming replica able to serve `tier`
+    /// becomes Active (0 when nothing relevant is warming) — the
+    /// autopsy's warm-up-unavailability hint stamped on dispatched
+    /// arrivals. Only called while something is warming.
+    fn warmup_hint(&self, tier: usize) -> f64 {
+        let mut hint = f64::INFINITY;
+        for (i, st) in self.states.iter().enumerate() {
+            if let ReplicaState::Warming { ready_at } = *st {
+                if self.snaps[i].serves_tier(tier) {
+                    hint = hint.min(ready_at - self.clock);
+                }
+            }
+        }
+        if hint.is_finite() {
+            hint.max(0.0)
+        } else {
+            0.0
+        }
+    }
+
     /// Hand an admitted arrival to replica `r` and update every
     /// dispatch-side structure.
     fn place(&mut self, r: usize, spec: RequestSpec) {
-        self.engines[r].enqueue(spec);
+        let mut tag = std::mem::take(&mut self.pending_tag);
+        if self.warming_count > 0 {
+            tag.warmup_hold_s = self.warmup_hint(spec.tier);
+        }
+        if let Some(buf) = self.obs_trace.as_mut() {
+            let score = LeastLoaded::score(&self.snaps[r]);
+            buf.push(self.clock, Event::Dispatch { replica: r, tier: spec.tier, score });
+        }
+        self.engines[r].enqueue_tagged(spec, tag);
         self.stats.dispatched[r] += 1;
         self.snap_dirty[r] = true;
         self.wedged[r] = false;
@@ -611,6 +754,15 @@ impl Cluster {
 
     /// Route one arrival using live snapshots of true cluster state.
     fn dispatch_arrival(&mut self, spec: RequestSpec) {
+        self.pending_tag = AdmitTag::default();
+        if let Some(buf) = self.obs_trace.as_mut() {
+            let ev = Event::Arrival {
+                tier: spec.tier,
+                prompt: spec.prompt_tokens,
+                decode: spec.decode_tokens,
+            };
+            buf.push(self.clock, ev);
+        }
         // Static admit-all clusters take the zero-copy path — including
         // affinity clusters whose dispatcher enforces affinity itself
         // (tier-affinity round-robin, i.e. `run_silo`), which keeps the
@@ -818,10 +970,16 @@ impl Cluster {
         if warmup > 0.0 {
             self.states.push(ReplicaState::Warming { ready_at: now + warmup });
             self.warming_count += 1;
+            if let Some(buf) = self.obs_trace.as_mut() {
+                buf.push(now, Event::Lifecycle { replica: i, state: "warming" });
+            }
         } else {
             self.states.push(ReplicaState::Active);
             // Ready immediately: align its clock with the cluster.
             self.engines[i].advance_to(now);
+            if let Some(buf) = self.obs_trace.as_mut() {
+                buf.push(now, Event::Lifecycle { replica: i, state: "active" });
+            }
         }
         self.control_active = true;
         self.timeline.push((now, self.billed_replicas()));
@@ -865,6 +1023,9 @@ impl Cluster {
                     self.engines[i].advance_to(self.clock.max(ready_at));
                     self.snap_dirty[i] = true;
                     self.reheap(i);
+                    if let Some(buf) = self.obs_trace.as_mut() {
+                        buf.push(self.clock, Event::Lifecycle { replica: i, state: "active" });
+                    }
                 }
             }
         }
@@ -883,6 +1044,9 @@ impl Cluster {
         self.states[i] = ReplicaState::Draining { since: self.clock };
         self.control_active = true;
         self.stats.scale_downs += 1;
+        if let Some(buf) = self.obs_trace.as_mut() {
+            buf.push(self.clock, Event::Lifecycle { replica: i, state: "draining" });
+        }
         self.try_drain_moves(i);
         self.maybe_retire(i);
     }
@@ -930,7 +1094,11 @@ impl Cluster {
             let t = self.best_drain_target(origin, tier);
             let spec = self.engines[origin].migrate_out(id);
             self.engines[t].advance_to(self.clock);
-            self.engines[t].admit_migrated(spec, was_relegated);
+            let tid = self.engines[t].admit_migrated(spec, was_relegated);
+            if let Some(buf) = self.obs_trace.as_mut() {
+                let ev = Event::DrainMove { origin, target: t, origin_id: id, target_id: tid };
+                buf.push(self.clock, ev);
+            }
             self.stats.drain_redispatched += 1;
             self.snap_dirty[origin] = true;
             self.snap_dirty[t] = true;
@@ -1009,6 +1177,17 @@ impl Cluster {
     /// engine's `next_event_time`, so the lazy-deletion heap wakes both
     /// ends exactly when the window closes.
     fn execute_live_migration(&mut self, mv: &MigrationMove) {
+        if let Some(buf) = self.obs_trace.as_mut() {
+            let ev = Event::MigrationWindow {
+                origin: mv.origin,
+                target: mv.target,
+                origin_id: mv.id,
+                kv_bytes: mv.kv_bytes,
+                transfer_s: mv.transfer_s,
+                resume_at: mv.resume_at,
+            };
+            buf.push(self.clock, ev);
+        }
         let m = self.engines[mv.origin].migrate_out_live(mv.id, mv.resume_at);
         let tier = m.spec.tier.min(self.tiers.len() - 1);
         self.engines[mv.target].advance_to(self.clock);
@@ -1086,6 +1265,9 @@ impl Cluster {
             self.retired_at[i] = Some(self.clock.max(self.engines[i].now()));
             self.stats.retired += 1;
             self.timeline.push((self.clock, self.billed_replicas()));
+            if let Some(buf) = self.obs_trace.as_mut() {
+                buf.push(self.clock, Event::Lifecycle { replica: i, state: "retired" });
+            }
         }
     }
 
@@ -1098,6 +1280,16 @@ impl Cluster {
     /// floor-enforcement and scaling logic below stay tied to the
     /// controller, exactly as before.
     fn control_tick(&mut self) {
+        // Sample the series *before* the tick's actions so the row shows
+        // the state the controller decided on, then stamp the tick event
+        // with the same pre-increment ordinal the row carries.
+        let tick = self.stats.control_ticks;
+        if self.series.is_some() {
+            self.sample_series(self.clock, tick);
+        }
+        if let Some(buf) = self.obs_trace.as_mut() {
+            buf.push(self.clock, Event::ControlTick { tick });
+        }
         self.stats.control_ticks += 1;
         self.promote_warming();
         self.refresh_snapshots();
@@ -1271,7 +1463,11 @@ impl Cluster {
             // directly (keeping the relegation history) so a binding
             // horizon can never strand the copy unadmitted/uncounted.
             self.engines[t].advance_to(self.clock);
-            self.engines[t].admit_migrated(spec, true);
+            let tid = self.engines[t].admit_migrated(spec, true);
+            if let Some(buf) = self.obs_trace.as_mut() {
+                let ev = Event::Handoff { origin, target: t, origin_id: id, target_id: tid };
+                buf.push(self.clock, ev);
+            }
             self.stats.handoffs += 1;
             self.snap_dirty[origin] = true;
             self.snap_dirty[t] = true;
@@ -1306,6 +1502,12 @@ impl Cluster {
         self.stats.prefix_cache_lookups = lookups;
         self.stats.prefix_cache_hits = hits;
         self.stats.prefill_tokens_saved = saved;
+        // One closing sample so short runs (or runs without control
+        // ticks) still record their final state.
+        if self.series.is_some() {
+            let (t, tick) = (self.eval_time(), self.stats.control_ticks);
+            self.sample_series(t, tick);
+        }
     }
 
     /// The sequential event loop: one shared clock, earliest event first
@@ -1321,7 +1523,7 @@ impl Cluster {
             if arrival_t.is_none() && engine_ev.is_none() {
                 break;
             }
-            if self.controller.is_some() || self.migration.is_some() {
+            if self.controller.is_some() || self.migration.is_some() || self.series.is_some() {
                 let next_work = arrival_t
                     .unwrap_or(f64::INFINITY)
                     .min(engine_ev.map_or(f64::INFINITY, |(t, _)| t));
@@ -1452,7 +1654,8 @@ impl Cluster {
             if arrival_t.is_none() && engine_ev.is_none() {
                 break;
             }
-            let control_on = self.controller.is_some() || self.migration.is_some();
+            let control_on =
+                self.controller.is_some() || self.migration.is_some() || self.series.is_some();
             let a = arrival_t.unwrap_or(f64::INFINITY);
             let c = if control_on { self.next_control_t } else { f64::INFINITY };
             let safe_h = a.min(c).min(horizon_s);

@@ -117,6 +117,15 @@ pub struct LiveMigration {
     pub max_tbt: f64,
     pub max_lateness: f64,
     pub was_relegated: bool,
+    /// SLO-autopsy bookkeeping carried across the move (see
+    /// [`crate::obs`]): prefill timing, accumulated pauses and slack
+    /// adjustments must survive so the receiving replica's copy still
+    /// explains the request's full history.
+    pub prefill_started_at: Option<f64>,
+    pub warmup_hold_s: f64,
+    pub chunk_excess_s: f64,
+    pub migration_pause_s: f64,
+    pub degrade_tighten_s: f64,
 }
 
 impl LiveMigration {

@@ -1,0 +1,208 @@
+//! Flight-recorder acceptance (ISSUE 8):
+//!
+//! 1. the recorder is zero-cost-when-off AND non-perturbing when on —
+//!    `cluster.observability` absent vs present produces bit-identical
+//!    `Summary` fingerprints, horizons and timelines on the parallel-core
+//!    scenario (dispatch + autoscale + drain + live migration together);
+//! 2. trace and series exports are deterministic and worker-count
+//!    invariant: `workers` 1/2/8 write byte-identical files (events are
+//!    stamped with virtual time + source rank and merged canonically);
+//! 3. the SLO-violation autopsy is exact: every violator's cause
+//!    components sum to its lateness, and the per-tier `Summary`
+//!    aggregation counts each violator once;
+//! 4. time-series sampling on a cluster with no control plane fires
+//!    control ticks that were previously absent — and must still be
+//!    `Summary`-neutral.
+
+use niyama::config::{
+    AutoscalePolicy, Config, DispatchPolicy, InterconnectConfig, ObservabilityConfig,
+    ParallelConfig,
+};
+use niyama::obs;
+use niyama::request::RequestSpec;
+use niyama::simulator::cluster::Cluster;
+use niyama::simulator::ReplicaState;
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::{ArrivalProcess, WorkloadSpec};
+
+const LT: u32 = 6251;
+const FULL: ObservabilityConfig = ObservabilityConfig { trace: true, series: true };
+
+/// The parallel-core surge workload: quiet base load plus a 20 QPS step
+/// surge — enough to trigger predictive scale-ups (warming replicas), a
+/// post-surge drain back down, and decode backlogs deep enough for live
+/// KV migration during the mid-run forced drain.
+fn surge_trace() -> Vec<RequestSpec> {
+    let mut base = WorkloadSpec::uniform(Dataset::azure_code(), 0.5, 1000.0);
+    base.arrivals = ArrivalProcess::Poisson { qps: 0.5 };
+    let mut trace = base.generate(&mut Rng::new(3));
+    let mut surge = WorkloadSpec::uniform(Dataset::azure_code(), 1.0, 1000.0);
+    surge.arrivals = ArrivalProcess::Burst {
+        base_qps: 0.0,
+        burst_qps: 20.0,
+        burst_start_s: 400.0,
+        burst_end_s: 550.0,
+    };
+    surge.tier_shares = vec![0.6, 0.2, 0.2];
+    trace.extend(surge.generate(&mut Rng::new(4)));
+    trace
+}
+
+fn scenario_cfg(workers: usize, observability: Option<ObservabilityConfig>) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+    cfg.cluster.control.autoscale = AutoscalePolicy::Predictive;
+    cfg.cluster.control.min_replicas = 1;
+    cfg.cluster.control.max_replicas = 4;
+    cfg.cluster.control.warmup_s = 10.0;
+    cfg.cluster.control.control_interval_s = 2.5;
+    cfg.cluster.control.hold_s = 5.0;
+    cfg.cluster.interconnect = Some(InterconnectConfig::default());
+    cfg.cluster.parallel = Some(ParallelConfig { workers });
+    cfg.cluster.observability = observability;
+    cfg
+}
+
+/// Run the full scenario exactly as `parallel_core.rs` does: surge to
+/// mid-burst, force-drain one active replica while decodes are in flight
+/// (pinning the drain + live-migration path deterministically), then run
+/// to completion.
+fn run_scenario(workers: usize, observability: Option<ObservabilityConfig>) -> Cluster {
+    let cfg = scenario_cfg(workers, observability);
+    let mut cluster = Cluster::new(&cfg, 1);
+    cluster.submit_trace(surge_trace());
+    cluster.run(470.0);
+    let active: Vec<usize> = cluster
+        .replica_states()
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| matches!(s, ReplicaState::Active))
+        .map(|(i, _)| i)
+        .collect();
+    if active.len() >= 2 {
+        cluster.drain_replica(active[0]);
+    }
+    cluster.run(4000.0);
+    cluster
+}
+
+#[test]
+fn recorder_on_does_not_perturb_the_run() {
+    let off = run_scenario(1, None);
+    let on = run_scenario(1, Some(FULL));
+    assert!(off.coordinator_trace().is_none(), "recorder off must allocate nothing");
+    assert_eq!(
+        off.summary(LT).fingerprint(),
+        on.summary(LT).fingerprint(),
+        "tracing must not alter the Summary"
+    );
+    assert_eq!(off.eval_time().to_bits(), on.eval_time().to_bits(), "horizon");
+    assert_eq!(off.replica_timeline(), on.replica_timeline(), "timeline");
+    assert_eq!(off.stats.dispatched, on.stats.dispatched, "per-replica dispatch");
+    assert_eq!(off.stats.control_ticks, on.stats.control_ticks, "control ticks");
+    // Premises: the scenario exercises the subsystems whose events the
+    // invariance is supposed to cover.
+    assert!(on.stats.scale_ups > 0, "premise: the surge must trigger scale-ups");
+    assert!(on.stats.retired > 0, "premise: capacity must drain back down");
+    assert!(on.summary(LT).migrated_live_total() > 0, "premise: live migration must fire");
+}
+
+#[test]
+fn trace_and_series_are_worker_count_invariant() {
+    let one = run_scenario(1, Some(FULL));
+    let trace = one.trace_json().expect("tracing on");
+    let series = one.series_jsonl().expect("sampling on");
+    // Shape premises: a parseable Chrome trace with real content, and a
+    // non-trivial series.
+    assert!(trace.starts_with("{\"traceEvents\":["));
+    assert!(trace.ends_with("\n]}\n"));
+    assert!(trace.contains("\"name\":\"dispatch\""), "dispatch events recorded");
+    assert!(trace.contains("\"name\":\"lifecycle\""), "lifecycle events recorded");
+    assert!(trace.contains("\"name\":\"kv_transfer\""), "migration windows recorded");
+    assert!(trace.contains("\"migrated_in\""), "migration admissions recorded");
+    assert!(one.coordinator_trace().expect("tracing on").len() > 1000, "a real trace");
+    assert!(series.lines().count() > 100, "a real series");
+    for workers in [2usize, 8] {
+        let c = run_scenario(workers, Some(FULL));
+        assert_eq!(trace, c.trace_json().expect("tracing on"), "workers={workers} trace bytes");
+        assert_eq!(
+            series,
+            c.series_jsonl().expect("sampling on"),
+            "workers={workers} series bytes"
+        );
+    }
+}
+
+#[test]
+fn autopsy_components_sum_to_lateness() {
+    let cluster = run_scenario(1, None);
+    let summary = cluster.summary(LT);
+    let mut violators = 0usize;
+    for store in cluster.stores() {
+        for r in store.iter() {
+            let Some(a) = obs::autopsy(r) else { continue };
+            violators += 1;
+            assert!(a.lateness_s > 0.0, "autopsies exist only for violators");
+            assert!(
+                a.warmup_s >= 0.0
+                    && a.queueing_s >= 0.0
+                    && a.migration_s >= 0.0
+                    && a.chunk_s >= 0.0
+                    && a.degrade_s >= 0.0
+                    && a.other_s >= 0.0,
+                "components are non-negative"
+            );
+            let sum =
+                a.warmup_s + a.queueing_s + a.migration_s + a.chunk_s + a.degrade_s + a.other_s;
+            assert!(
+                (sum - a.lateness_s).abs() < 1e-9,
+                "components must sum to lateness: {sum} vs {}",
+                a.lateness_s
+            );
+        }
+    }
+    assert!(violators > 0, "premise: the surge must produce violations to autopsy");
+    let aggregated: usize = summary.autopsy.iter().map(|t| t.violations).sum();
+    assert_eq!(aggregated, violators, "Summary must aggregate each violator exactly once");
+    assert!(
+        summary.autopsy.iter().any(|t| t.queueing_s > 0.0),
+        "surge violations must show queueing lateness"
+    );
+}
+
+#[test]
+fn series_sampling_without_a_control_plane_is_summary_neutral() {
+    // A static cluster has no controller and no interconnect, so control
+    // ticks previously never fired; the sampler turns them on (gauges
+    // are captured per tick) and must not change the outcome.
+    let trace = surge_trace();
+    let run = |observability: Option<ObservabilityConfig>| {
+        let mut cfg = Config::default();
+        cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+        cfg.cluster.observability = observability;
+        let mut cluster = Cluster::new(&cfg, 2);
+        cluster.submit_trace(trace.clone());
+        cluster.run(4000.0);
+        cluster
+    };
+    let off = run(None);
+    let on = run(Some(ObservabilityConfig { trace: false, series: true }));
+    assert_eq!(off.stats.control_ticks, 0, "premise: no ticks without the sampler");
+    assert!(on.stats.control_ticks > 100, "premise: the sampler must drive ticks");
+    assert_eq!(off.summary(LT).fingerprint(), on.summary(LT).fingerprint(), "Summary");
+    assert_eq!(off.eval_time().to_bits(), on.eval_time().to_bits(), "horizon");
+    assert!(on.trace_json().is_none(), "trace off: no trace export");
+    let rows = on.series_rows().expect("sampling on");
+    assert!(rows.len() > 100);
+    // In-loop samples carry ticks 0..N-1 and the end-of-run sample
+    // reuses ordinal N, so ticks are strictly increasing and times
+    // monotone.
+    for w in rows.windows(2) {
+        assert!(w[0].t <= w[1].t, "sample times must be monotone");
+        assert!(w[0].tick < w[1].tick, "tick ordinals must be strictly increasing");
+    }
+    let last = &rows[rows.len() - 1];
+    assert_eq!(last.replicas_active, 2, "a static cluster never changes lifecycle");
+    assert_eq!(last.active, 0, "fully drained at the end");
+}
