@@ -1,0 +1,503 @@
+//! Runtime invariant auditor: machine-checked enforcement of the
+//! cluster's documented conservation and accounting invariants.
+//!
+//! Enabled by `cluster.audit {"enabled": true}` or the `NIYAMA_AUDIT=1`
+//! environment variable (see
+//! [`crate::config::ClusterConfig::effective_audit`]); off by default.
+//! When off, the cluster holds no auditor and every hook is a single
+//! `Option` branch — the same zero-cost discipline as the flight
+//! recorder — and runs are bit-for-bit identical with the auditor on:
+//! the auditor only *reads* coordinator state and panics on violation,
+//! it never feeds anything back (pinned by `tests/audit.rs`).
+//!
+//! At every coordinator barrier (control ticks in both event loops, the
+//! merge point of every parallel superstep window) the auditor checks:
+//!
+//! * **conservation** — every consumed arrival is accounted exactly
+//!   once: `Σ dispatched + rejected == arrivals consumed`, and
+//!   `Σ dispatched == Σ (engine-pending + non-tombstone store
+//!   entries)` (handoffs, drain moves and live migrations tombstone the
+//!   origin entry and re-create the request at the target, so the
+//!   cluster-wide count is invariant);
+//! * **kv-accounting** — each engine's own KV tally (live-set sum +
+//!   outbound transfer reservations) equals an independent sweep of its
+//!   request store, and a *fresh* load snapshot agrees with both;
+//!   prefix-cache residency stays within the ledger budget and is
+//!   excluded from `kv_used`;
+//! * **append-only slots** — replica slots are never removed and a
+//!   slot's pool (hence its immutable spec) never changes; every
+//!   per-replica vector stays index-aligned;
+//! * **clock-monotonicity** — no engine's virtual clock ever moves
+//!   backwards across barriers.
+//!
+//! At run end it additionally checks terminal states (a retired replica
+//! is fully drained; a drained engine holds no active request) and that
+//! every violating request's SLO-autopsy components sum to its lateness
+//! ([`crate::obs::autopsy`]).
+//!
+//! A violation panics with a structured report carrying the seed, the
+//! virtual time, the replica and the barrier ordinal — enough to replay
+//! the exact failing instant deterministically.
+
+use crate::obs::{autopsy, lateness, Autopsy};
+use crate::request::{Phase, RequestStore};
+
+/// One engine's own view of its accounting, produced by
+/// [`crate::engine::Engine::audit_probe`]. Deliberately computed from
+/// the engine's *internal* structures (live set, outbound reservations)
+/// so the auditor can cross-check it against an independent sweep of
+/// the public request store.
+#[derive(Debug, Clone, Default)]
+pub struct EngineAuditProbe {
+    /// Engine-local virtual clock.
+    pub now: f64,
+    /// Size of the live set (admitted, non-terminal requests).
+    pub live: usize,
+    /// Dispatched-but-not-yet-admitted arrivals still queued.
+    pub pending: usize,
+    /// KV tokens of the live set, summed over the live ids.
+    pub live_kv: u64,
+    /// KV tokens reserved by outbound live-migration transfers.
+    pub outbound_kv: u64,
+    /// Hardware KV capacity in tokens.
+    pub kv_capacity: u64,
+    /// Prefix-cache resident tokens (0 when the cache is off).
+    pub cache_resident: u64,
+    /// Prefix-cache ledger budget in tokens (0 when the cache is off).
+    pub cache_budget: u64,
+    /// Whether the engine reports itself fully drained.
+    pub drained: bool,
+}
+
+/// One replica slot as the auditor sees it at a barrier: the engine's
+/// probe plus the coordinator's independent accounting of the same
+/// quantities.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaAudit {
+    /// Pool index of this slot (immutable from provision to retirement).
+    pub pool: usize,
+    /// The engine's internal accounting.
+    pub probe: EngineAuditProbe,
+    /// Non-tombstone entries in the request store (coordinator sweep).
+    pub store_entries: usize,
+    /// Active (non-terminal) entries in the request store.
+    pub store_active: usize,
+    /// KV tokens summed over the store's active entries.
+    pub store_active_kv: u64,
+    /// Arrivals the dispatcher routed here (net of drain re-dispatch).
+    pub dispatched: usize,
+    /// `(kv_used, active)` from the cached load snapshot, present only
+    /// when the snapshot is *fresh* (not marked dirty) and must then
+    /// agree with the live engine state.
+    pub snapshot: Option<(u64, usize)>,
+    /// Whether the coordinator has stamped this slot retired.
+    pub retired: bool,
+}
+
+/// Everything the auditor inspects at one coordinator barrier.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterAuditView {
+    /// Shared cluster clock.
+    pub t: f64,
+    /// Control ticks executed so far (for the violation report).
+    pub tick: u64,
+    /// Trace arrivals consumed (dispatched or rejected) so far.
+    pub arrivals: usize,
+    /// Arrivals rejected by admission control, summed over tiers.
+    pub rejected: usize,
+    /// Per-replica slot audits, index-aligned with the engine vector.
+    pub replicas: Vec<ReplicaAudit>,
+    /// `(name, len)` of every per-replica coordinator vector; all must
+    /// equal `replicas.len()`.
+    pub aligned: Vec<(&'static str, usize)>,
+}
+
+/// The runtime invariant auditor. Owned by the cluster (boxed, behind
+/// an `Option` so the disabled path is one branch); carries the
+/// append-only history (slot count, slot→pool map, per-engine clock
+/// floor) that barrier checks are made against.
+#[derive(Debug)]
+pub struct Auditor {
+    seed: u64,
+    /// Barriers checked so far (the violation report's ordinal).
+    barriers: u64,
+    /// High-water slot count: the replica set must never shrink.
+    slots: usize,
+    /// Pool of each slot ever seen: the prefix must never change.
+    pool_of: Vec<usize>,
+    /// Per-engine clock floor from the previous barrier.
+    last_clock: Vec<f64>,
+}
+
+/// Relative tolerance for the autopsy-closure sum: the components are
+/// built by successive subtraction from the lateness, so they re-sum to
+/// it up to rounding of the same order as the values themselves.
+const AUTOPSY_REL_TOL: f64 = 1e-9;
+
+impl Auditor {
+    pub fn new(seed: u64) -> Auditor {
+        Auditor { seed, barriers: 0, slots: 0, pool_of: Vec::new(), last_clock: Vec::new() }
+    }
+
+    /// Barriers audited so far (tests use this to pin that the auditor
+    /// actually ran).
+    pub fn barriers(&self) -> u64 {
+        self.barriers
+    }
+
+    fn fail(&self, check: &str, detail: &str, t: f64, replica: Option<usize>, tick: u64) -> ! {
+        let replica = replica.map_or_else(|| "-".to_string(), |i| i.to_string());
+        panic!(
+            "NIYAMA_AUDIT violation: {check}: {detail} \
+             (seed={}, t={t:.6}, replica={replica}, control_tick={tick}, barrier={})",
+            self.seed,
+            self.barriers
+        );
+    }
+
+    /// Audit one coordinator barrier. Panics with a structured report on
+    /// the first violated invariant.
+    pub fn check_barrier(&mut self, v: &ClusterAuditView) {
+        self.barriers += 1;
+        let n = v.replicas.len();
+
+        // Slot alignment: every per-replica vector the coordinator keeps
+        // must have exactly one entry per slot.
+        for &(name, len) in &v.aligned {
+            if len != n {
+                let d = format!("per-replica vector '{name}' has {len} entries for {n} slots");
+                self.fail("slot-alignment", &d, v.t, None, v.tick);
+            }
+        }
+
+        // Append-only slots: the replica set never shrinks and a slot's
+        // pool never changes.
+        if n < self.slots {
+            let d = format!("replica set shrank from {} to {n} slots", self.slots);
+            self.fail("append-only-slots", &d, v.t, None, v.tick);
+        }
+        for (i, r) in v.replicas.iter().enumerate().take(self.slots) {
+            if r.pool != self.pool_of[i] {
+                let d = format!("slot pool changed from {} to {}", self.pool_of[i], r.pool);
+                self.fail("append-only-slots", &d, v.t, Some(i), v.tick);
+            }
+        }
+        for r in v.replicas.iter().skip(self.slots) {
+            self.pool_of.push(r.pool);
+            self.last_clock.push(f64::NEG_INFINITY);
+        }
+        self.slots = n;
+
+        // Per-engine clock monotonicity across barriers.
+        for (i, r) in v.replicas.iter().enumerate() {
+            if r.probe.now < self.last_clock[i] {
+                let d = format!(
+                    "engine clock moved backwards: {:.9} -> {:.9}",
+                    self.last_clock[i],
+                    r.probe.now
+                );
+                self.fail("clock-monotonicity", &d, v.t, Some(i), v.tick);
+            }
+            self.last_clock[i] = r.probe.now;
+        }
+
+        // KV accounting, engine by engine.
+        for (i, r) in v.replicas.iter().enumerate() {
+            let p = &r.probe;
+            if p.live != r.store_active {
+                let d = format!(
+                    "live set has {} ids but the store holds {} active requests",
+                    p.live,
+                    r.store_active
+                );
+                self.fail("kv-accounting", &d, v.t, Some(i), v.tick);
+            }
+            if p.live_kv != r.store_active_kv {
+                let d = format!(
+                    "live-set KV {} != store active KV {} (cache residency {} must stay excluded)",
+                    p.live_kv,
+                    r.store_active_kv,
+                    p.cache_resident
+                );
+                self.fail("kv-accounting", &d, v.t, Some(i), v.tick);
+            }
+            if let Some((snap_kv, snap_active)) = r.snapshot {
+                let used = p.live_kv + p.outbound_kv;
+                if snap_kv != used || snap_active != p.live {
+                    let d = format!(
+                        "fresh snapshot says kv_used={snap_kv} active={snap_active}, \
+                         engine says kv_used={used} (live {} + outbound {}) active={}",
+                        p.live_kv,
+                        p.outbound_kv,
+                        p.live
+                    );
+                    self.fail("kv-accounting", &d, v.t, Some(i), v.tick);
+                }
+            }
+            if p.cache_resident > p.cache_budget {
+                let d = format!(
+                    "prefix cache holds {} tokens over its {}-token ledger budget",
+                    p.cache_resident,
+                    p.cache_budget
+                );
+                self.fail("cache-residency", &d, v.t, Some(i), v.tick);
+            }
+        }
+
+        // Conservation: every consumed arrival is accounted exactly once.
+        let dispatched: usize = v.replicas.iter().map(|r| r.dispatched).sum();
+        if dispatched + v.rejected != v.arrivals {
+            let d = format!(
+                "dispatched {dispatched} + rejected {} != arrivals consumed {}",
+                v.rejected,
+                v.arrivals
+            );
+            self.fail("conservation", &d, v.t, None, v.tick);
+        }
+        let held: usize = v.replicas.iter().map(|r| r.probe.pending + r.store_entries).sum();
+        if held != dispatched {
+            let d = format!(
+                "engines hold {held} requests (pending + non-tombstone store entries) \
+                 but {dispatched} were dispatched"
+            );
+            self.fail("conservation", &d, v.t, None, v.tick);
+        }
+    }
+
+    /// Audit the end of a run: everything a barrier checks, plus
+    /// terminal-state conservation and the SLO-autopsy closure over
+    /// every violating finished request.
+    pub fn check_run_end(&mut self, v: &ClusterAuditView, stores: &[&RequestStore]) {
+        self.check_barrier(v);
+        for (i, r) in v.replicas.iter().enumerate() {
+            if r.retired && !r.probe.drained {
+                let d = "replica retired while not drained";
+                self.fail("terminal-states", d, v.t, Some(i), v.tick);
+            }
+            if r.probe.drained && r.store_active != 0 {
+                let d = format!("drained engine still holds {} active requests", r.store_active);
+                self.fail("terminal-states", &d, v.t, Some(i), v.tick);
+            }
+        }
+        for (i, store) in stores.iter().enumerate() {
+            for req in store.iter() {
+                if req.phase != Phase::Finished {
+                    continue;
+                }
+                if let Some(a) = autopsy(req) {
+                    if let Some(d) = autopsy_closure_violation(&a) {
+                        self.fail("autopsy-closure", &d, v.t, Some(i), v.tick);
+                    }
+                    let l = lateness(req);
+                    if (a.lateness_s - l).abs() > AUTOPSY_REL_TOL * l.abs().max(1.0) {
+                        let d = format!(
+                            "autopsy carries lateness {:.9} but the request's is {l:.9}",
+                            a.lateness_s
+                        );
+                        self.fail("autopsy-closure", &d, v.t, Some(i), v.tick);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Why `a`'s components fail to decompose its lateness, or `None` when
+/// the closure holds: every component non-negative, none exceeding the
+/// total, and the six summing back to it within rounding.
+fn autopsy_closure_violation(a: &Autopsy) -> Option<String> {
+    let parts = [
+        ("warmup", a.warmup_s),
+        ("queueing", a.queueing_s),
+        ("migration", a.migration_s),
+        ("chunk", a.chunk_s),
+        ("degrade", a.degrade_s),
+        ("other", a.other_s),
+    ];
+    for (name, x) in parts {
+        if x < 0.0 {
+            return Some(format!("component {name} is negative ({x:.9})"));
+        }
+    }
+    let sum: f64 = parts.iter().map(|(_, x)| x).sum();
+    let tol = AUTOPSY_REL_TOL * a.lateness_s.abs().max(1.0);
+    if (sum - a.lateness_s).abs() > tol {
+        return Some(format!("components sum to {sum:.9} but lateness is {:.9}", a.lateness_s));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A two-replica view whose numbers satisfy every invariant.
+    fn clean_view() -> ClusterAuditView {
+        let r0 = ReplicaAudit {
+            pool: 0,
+            probe: EngineAuditProbe {
+                now: 12.5,
+                live: 2,
+                pending: 1,
+                live_kv: 300,
+                outbound_kv: 50,
+                kv_capacity: 10_000,
+                cache_resident: 128,
+                cache_budget: 1024,
+                drained: false,
+            },
+            store_entries: 5, // 2 active + 3 finished
+            store_active: 2,
+            store_active_kv: 300,
+            dispatched: 6,
+            snapshot: Some((350, 2)),
+            retired: false,
+        };
+        let r1 = ReplicaAudit {
+            pool: 1,
+            probe: EngineAuditProbe { now: 11.0, live: 1, live_kv: 80, ..Default::default() },
+            store_entries: 4, // 1 active + 3 finished
+            store_active: 1,
+            store_active_kv: 80,
+            dispatched: 4,
+            snapshot: None, // dirty snapshot: exempt from the coherence check
+            retired: false,
+        };
+        ClusterAuditView {
+            t: 12.5,
+            tick: 3,
+            arrivals: 11,
+            rejected: 1, // 6 + 4 dispatched + 1 rejected = 11 consumed
+            replicas: vec![r0, r1],
+            aligned: vec![("states", 2), ("snaps", 2)],
+        }
+    }
+
+    #[test]
+    fn clean_barriers_pass_and_count() {
+        let mut a = Auditor::new(7);
+        a.check_barrier(&clean_view());
+        a.check_barrier(&clean_view());
+        assert_eq!(a.barriers(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: conservation")]
+    fn seeded_conservation_violation_fires() {
+        let mut v = clean_view();
+        v.replicas[0].dispatched += 1; // an arrival counted twice
+        Auditor::new(7).check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: conservation")]
+    fn seeded_lost_request_fires() {
+        let mut v = clean_view();
+        v.replicas[1].store_entries -= 1; // a request vanished
+        Auditor::new(7).check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: kv-accounting")]
+    fn seeded_kv_leak_fires() {
+        let mut v = clean_view();
+        v.replicas[0].probe.live_kv += 64; // engine tally drifted off the store
+        Auditor::new(7).check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: kv-accounting")]
+    fn seeded_stale_fresh_snapshot_fires() {
+        let mut v = clean_view();
+        v.replicas[0].snapshot = Some((351, 2)); // claims fresh, disagrees
+        Auditor::new(7).check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: cache-residency")]
+    fn seeded_cache_overrun_fires() {
+        let mut v = clean_view();
+        v.replicas[0].probe.cache_resident = v.replicas[0].probe.cache_budget + 1;
+        Auditor::new(7).check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: append-only-slots")]
+    fn seeded_slot_removal_fires() {
+        let mut a = Auditor::new(7);
+        a.check_barrier(&clean_view());
+        let mut v = clean_view();
+        v.replicas.pop();
+        v.aligned = vec![("states", 1), ("snaps", 1)];
+        a.check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: append-only-slots")]
+    fn seeded_pool_mutation_fires() {
+        let mut a = Auditor::new(7);
+        a.check_barrier(&clean_view());
+        let mut v = clean_view();
+        v.replicas[1].pool = 0; // a slot's immutable spec changed
+        a.check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: clock-monotonicity")]
+    fn seeded_clock_reversal_fires() {
+        let mut a = Auditor::new(7);
+        a.check_barrier(&clean_view());
+        let mut v = clean_view();
+        v.replicas[0].probe.now -= 1.0;
+        a.check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: slot-alignment")]
+    fn seeded_vector_misalignment_fires() {
+        let mut v = clean_view();
+        v.aligned.push(("retired_at", 3));
+        Auditor::new(7).check_barrier(&v);
+    }
+
+    #[test]
+    #[should_panic(expected = "NIYAMA_AUDIT violation: terminal-states")]
+    fn seeded_undrained_retirement_fires() {
+        let mut v = clean_view();
+        v.replicas[0].retired = true; // retired with live work
+        Auditor::new(7).check_run_end(&v, &[]);
+    }
+
+    #[test]
+    fn autopsy_closure_detects_bad_decompositions() {
+        let good = Autopsy {
+            lateness_s: 3.0,
+            warmup_s: 0.5,
+            queueing_s: 1.0,
+            migration_s: 0.0,
+            chunk_s: 0.25,
+            degrade_s: 0.0,
+            other_s: 1.25,
+        };
+        assert!(autopsy_closure_violation(&good).is_none());
+        let leaky = Autopsy { other_s: 0.25, ..good }; // sums to 2.0, not 3.0
+        let msg = autopsy_closure_violation(&leaky).expect("must flag a non-closing sum");
+        assert!(msg.contains("components sum"));
+        let negative = Autopsy { queueing_s: -1.0, ..good };
+        let msg = autopsy_closure_violation(&negative).expect("must flag a negative component");
+        assert!(msg.contains("negative"));
+    }
+
+    #[test]
+    fn violation_reports_carry_the_replay_coordinates() {
+        let mut v = clean_view();
+        v.replicas[0].probe.cache_resident = 9999;
+        let err = std::panic::catch_unwind(|| Auditor::new(42).check_barrier(&v))
+            .expect_err("must panic");
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("seed=42"), "report must carry the seed: {msg}");
+        assert!(msg.contains("t=12.5"), "report must carry the virtual time: {msg}");
+        assert!(msg.contains("replica=0"), "report must carry the replica: {msg}");
+        assert!(msg.contains("control_tick=3"), "report must carry the tick: {msg}");
+    }
+}

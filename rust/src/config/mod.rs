@@ -716,6 +716,34 @@ impl ObservabilityConfig {
     }
 }
 
+/// Runtime invariant auditor knob (see [`crate::audit`]). Configured
+/// under `cluster.audit`; when the block is absent the `NIYAMA_AUDIT`
+/// environment variable decides, and the default is off. The auditor
+/// only reads coordinator state and panics on violation, so an audited
+/// run's output is bit-for-bit the unaudited run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AuditConfig {
+    /// Check the cluster invariants at every coordinator barrier.
+    pub enabled: bool,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig { enabled: true }
+    }
+}
+
+impl AuditConfig {
+    /// Parse a JSON `audit` object: present means on, overridden per
+    /// key (`{"enabled": false}` pins the auditor off even under
+    /// `NIYAMA_AUDIT=1`).
+    fn from_json(j: &Json) -> Result<AuditConfig> {
+        let mut k = AuditConfig::default();
+        override_bool(j, "enabled", &mut k.enabled);
+        Ok(k)
+    }
+}
+
 /// Elastic control-plane policy selector (see `simulator::control`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AutoscalePolicy {
@@ -815,6 +843,9 @@ pub struct ClusterConfig {
     /// (`None` — the default — records nothing and keeps the hot path
     /// untouched).
     pub observability: Option<ObservabilityConfig>,
+    /// Runtime invariant auditor (`None` = the `NIYAMA_AUDIT` env
+    /// default, falling back to off).
+    pub audit: Option<AuditConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -828,6 +859,7 @@ impl Default for ClusterConfig {
             prefix_cache: None,
             parallel: None,
             observability: None,
+            audit: None,
         }
     }
 }
@@ -846,6 +878,19 @@ impl ClusterConfig {
             .ok()
             .and_then(|v| v.trim().parse::<usize>().ok())
             .map_or(1, |w| w.max(1))
+    }
+
+    /// Whether the runtime invariant auditor runs: the explicit `audit`
+    /// block when present (so a config can pin it on *or* off), else the
+    /// `NIYAMA_AUDIT` environment override (the CI matrix leg), else
+    /// off. Anything but `1`/`true` in the env counts as off.
+    pub fn effective_audit(&self) -> bool {
+        if let Some(a) = &self.audit {
+            return a.enabled;
+        }
+        std::env::var("NIYAMA_AUDIT")
+            .map(|v| matches!(v.trim(), "1" | "true"))
+            .unwrap_or(false)
     }
 }
 
@@ -950,6 +995,9 @@ impl Config {
             }
             if let Some(o) = c.get("observability") {
                 cfg.cluster.observability = Some(ObservabilityConfig::from_json(o)?);
+            }
+            if let Some(a) = c.get("audit") {
+                cfg.cluster.audit = Some(AuditConfig::from_json(a)?);
             }
             if let Some(ctl) = c.get("control") {
                 // With pools configured, autoscale bounds live on the
@@ -1470,6 +1518,20 @@ mod tests {
         assert_eq!(c.cluster.effective_workers(), 3);
         // Absent block: 1 or whatever NIYAMA_WORKERS says — both legal.
         assert!(Config::default().cluster.effective_workers() >= 1);
+    }
+
+    #[test]
+    fn audit_defaults_off_and_parses() {
+        assert!(Config::default().cluster.audit.is_none());
+        // An empty block means "audit on" — presence is the opt-in.
+        let c = Config::from_json_str(r#"{"cluster": {"audit": {}}}"#).unwrap();
+        assert_eq!(c.cluster.audit, Some(AuditConfig { enabled: true }));
+        assert!(c.cluster.effective_audit());
+        // An explicit `enabled: false` pins the auditor off even under
+        // NIYAMA_AUDIT=1 (the block beats the env var).
+        let c = Config::from_json_str(r#"{"cluster": {"audit": {"enabled": false}}}"#).unwrap();
+        assert_eq!(c.cluster.audit, Some(AuditConfig { enabled: false }));
+        assert!(!c.cluster.effective_audit());
     }
 
     #[test]

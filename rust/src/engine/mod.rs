@@ -1211,6 +1211,25 @@ impl<B: ExecutionBackend> Engine<B> {
         self.prefix_cache.as_ref()
     }
 
+    /// This engine's own accounting for the runtime invariant auditor
+    /// ([`crate::audit`]). Deliberately computed from the *internal*
+    /// structures — the live id set, the outbound transfer reservations,
+    /// the prefix-cache ledger — so the auditor can cross-check it
+    /// against an independent sweep of the public request store.
+    pub fn audit_probe(&self) -> crate::audit::EngineAuditProbe {
+        crate::audit::EngineAuditProbe {
+            now: self.now,
+            live: self.live.len(),
+            pending: self.pending.len().saturating_sub(self.next_pending),
+            live_kv: self.live.iter().map(|&id| self.store.get(id).kv_tokens() as u64).sum(),
+            outbound_kv: self.reserved_outbound_kv(),
+            kv_capacity: self.kv_capacity,
+            cache_resident: self.prefix_cache.as_ref().map_or(0, |c| c.resident_tokens()),
+            cache_budget: self.prefix_cache.as_ref().map_or(0, |c| c.budget_tokens()),
+            drained: self.is_drained(),
+        }
+    }
+
     /// Monotone relegation count from the scheduler (cluster handoff
     /// uses it as a change signal to avoid per-iteration scans).
     pub fn relegated_total(&self) -> usize {

@@ -7,6 +7,18 @@
 //! - [`KvStore`]: host-side cache storage for the real PJRT path — one
 //!   `(L,2,Hkv,S,D)` f32 buffer per in-flight request, recycled through a
 //!   free pool to keep the serving loop allocation-free in steady state.
+//!
+//! This is one of exactly two modules in the crate permitted to contain
+//! `unsafe` (the other is [`crate::simulator::stripes`]), kept on the
+//! allowlist for host-side buffer work: [`KvStore::get_many_mut`]'s
+//! batched disjoint borrows were the crate's original raw-pointer site
+//! until the audit rewrote them in safe code (see the provenance note
+//! there); the Miri CI leg keeps this module's tests aliasing-clean
+//! either way. `tools/conformance_lint` enforces the allowlist.
+
+#![allow(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 use crate::request::RequestId;
 use std::collections::HashMap;
@@ -280,12 +292,21 @@ impl KvStore {
 
     /// Mutable access to several caches at once (decode batch assembly).
     /// Panics if an id is missing or duplicated.
+    ///
+    /// Provenance note: per-id `get_mut` calls cannot hand out
+    /// simultaneously live `&mut`s — every call re-borrows the whole
+    /// map and, under the aliasing model Miri enforces, invalidates the
+    /// borrows already returned (the pre-audit version did exactly that
+    /// through raw pointers). One `iter_mut` traversal instead yields
+    /// disjoint borrows that are all live at once, in entirely safe
+    /// code; the batch is then emitted in `ids` order.
     pub fn get_many_mut(&mut self, ids: &[RequestId]) -> Vec<&mut [f32]> {
-        // Safety dance via raw pointers: ids are checked for uniqueness.
-        // Small batches keep the branch-free pairwise scan; past the
-        // threshold a sort of a scratch copy is O(n log n) instead of the
-        // ~32k comparisons a 256-wide decode batch used to pay.
+        // Small batches keep the branch-free pairwise duplicate scan;
+        // past the threshold a sort of a scratch copy is O(n log n)
+        // instead of the ~32k comparisons a 256-wide decode batch used
+        // to pay — and doubles as the membership index below.
         const PAIRWISE_MAX: usize = 16;
+        let mut sorted: Option<Vec<RequestId>> = None;
         if ids.len() <= PAIRWISE_MAX {
             for (i, a) in ids.iter().enumerate() {
                 for b in &ids[i + 1..] {
@@ -293,19 +314,24 @@ impl KvStore {
                 }
             }
         } else {
-            let mut sorted = ids.to_vec();
-            sorted.sort_unstable();
-            for w in sorted.windows(2) {
+            let mut s = ids.to_vec();
+            s.sort_unstable();
+            for w in s.windows(2) {
                 assert_ne!(w[0], w[1], "duplicate request id in decode batch");
             }
+            sorted = Some(s);
         }
-        let mut out = Vec::with_capacity(ids.len());
-        for &id in ids {
-            let buf = self.caches.get_mut(&id).expect("kv cache missing") as *mut Vec<f32>;
-            // SAFETY: uniqueness checked above; lifetimes tied to &mut self.
-            out.push(unsafe { (*buf).as_mut_slice() });
+        let wanted = |id: &RequestId| match &sorted {
+            Some(s) => s.binary_search(id).is_ok(),
+            None => ids.contains(id),
+        };
+        let mut grabbed: HashMap<RequestId, &mut [f32]> = HashMap::with_capacity(ids.len());
+        for (id, buf) in self.caches.iter_mut() {
+            if wanted(id) {
+                grabbed.insert(*id, buf.as_mut_slice());
+            }
         }
-        out
+        ids.iter().map(|id| grabbed.remove(id).expect("kv cache missing")).collect()
     }
 
     pub fn live(&self) -> usize {
@@ -395,6 +421,41 @@ mod tests {
         }
         ids.push(7);
         let _ = s.get_many_mut(&ids);
+    }
+
+    #[test]
+    fn kvstore_get_many_mut_borrows_are_disjoint_and_live_together() {
+        // The aliasing regression the audit rewrite guards against:
+        // every returned slice must stay writable while all the others
+        // are live (the old per-id raw-pointer dance invalidated earlier
+        // borrows on each lookup — Miri flags that pattern), writes must
+        // land in the right buffer, and order must follow `ids`, not map
+        // iteration order.
+        let mut s = KvStore::new(4);
+        for id in 0..20u32 {
+            s.entry(id)[0] = id as f32;
+        }
+        let ids: Vec<RequestId> = vec![13, 2, 7, 19, 0];
+        let mut bufs = s.get_many_mut(&ids);
+        for (k, buf) in bufs.iter_mut().enumerate() {
+            buf[1] = 100.0 + k as f32; // all five borrows live at once
+        }
+        for (k, buf) in bufs.iter().enumerate() {
+            assert_eq!(buf[0], ids[k] as f32, "batch order must follow ids");
+            assert_eq!(buf[1], 100.0 + k as f32);
+        }
+        drop(bufs);
+        // Untouched entries must be exactly as allocated.
+        assert_eq!(s.entry(1)[1], 0.0);
+        assert_eq!(s.entry(13)[1], 100.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv cache missing")]
+    fn kvstore_get_many_mut_panics_on_missing_id() {
+        let mut s = KvStore::new(4);
+        s.entry(1);
+        let _ = s.get_many_mut(&[1, 2]);
     }
 
     #[test]

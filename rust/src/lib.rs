@@ -21,7 +21,23 @@
 //! the `pjrt` cargo feature: the default build is the fully offline
 //! simulation stack (no PJRT plugin required), which is what CI and the
 //! paper experiments run.
+//!
+//! ## Soundness & invariant enforcement
+//!
+//! `unsafe` is denied crate-wide; exactly two audited modules opt back
+//! in with a module-scoped `#![allow(unsafe_code)]` —
+//! [`simulator::stripes`] (the striped-borrow primitive under the
+//! sharded cluster loop) and [`kv`] (host-side batched buffer access).
+//! `tools/conformance_lint` enforces that allowlist plus `// SAFETY:`
+//! comments, virtual-clock purity and float-comparison hygiene; the
+//! [`audit`] module is the runtime invariant auditor (`NIYAMA_AUDIT=1`
+//! or `cluster.audit`) that checks conservation, KV accounting,
+//! append-only replica slots, clock monotonicity and SLO-autopsy
+//! closure at every coordinator barrier.
 
+#![deny(unsafe_code)]
+
+pub mod audit;
 pub mod config;
 pub mod engine;
 pub mod kv;

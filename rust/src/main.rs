@@ -9,6 +9,8 @@
 //! No CLI framework ships in this environment; flags are parsed by a
 //! small `Args` helper below (`--key value` / `--flag`).
 
+#![deny(unsafe_code)]
+
 use anyhow::{anyhow, bail, Result};
 use niyama::config::{Config, Policy};
 use niyama::engine::Engine;

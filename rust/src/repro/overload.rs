@@ -28,6 +28,7 @@ pub fn fig5(scale: Scale) -> Result<()> {
     for cap in [0.0, 0.01, 0.05, 0.10, 0.25, 1.0] {
         let mut cfg = Config::default();
         cfg.scheduler.relegation_cap = cap;
+        // float-eq: `cap` iterates literal sweep points; 0.0 is exact.
         if cap == 0.0 {
             cfg.scheduler.eager_relegation = false;
         }

@@ -285,6 +285,12 @@ pub struct Cluster {
     /// consumes it. Always maintained (two f64 writes per arrival) so the
     /// autopsy in `Summary` never depends on the observability block.
     pending_tag: AdmitTag,
+    /// Runtime invariant auditor (`NIYAMA_AUDIT=1` / `cluster.audit`;
+    /// `None` — the default — makes every audit hook a single branch).
+    /// Checks conservation, KV accounting, slot append-onlyness and
+    /// clock monotonicity at every coordinator barrier, panicking with a
+    /// replayable report on violation; it never feeds back into the run.
+    audit: Option<Box<crate::audit::Auditor>>,
     pub stats: ClusterStats,
 }
 
@@ -417,6 +423,10 @@ impl Cluster {
                 .map(|_| Box::new(TraceBuf::new())),
             series: cfg.cluster.observability.filter(|o| o.series).map(|_| Vec::new()),
             pending_tag: AdmitTag::default(),
+            audit: cfg
+                .cluster
+                .effective_audit()
+                .then(|| Box::new(crate::audit::Auditor::new(cfg.seed))),
             stats: ClusterStats {
                 dispatched: vec![0; replicas],
                 rejected: vec![0; n_tiers],
@@ -430,6 +440,13 @@ impl Cluster {
     /// Replica slots ever created (including warming and retired ones).
     pub fn replicas(&self) -> usize {
         self.engines.len()
+    }
+
+    /// Coordinator barriers the runtime invariant auditor has checked,
+    /// `None` when the auditor is off — lets tests pin that an audited
+    /// run actually audited something.
+    pub fn audit_barriers(&self) -> Option<u64> {
+        self.audit.as_deref().map(crate::audit::Auditor::barriers)
     }
 
     /// Per-replica lifecycle states, index-aligned with `engines`.
@@ -1508,6 +1525,7 @@ impl Cluster {
             let (t, tick) = (self.eval_time(), self.stats.control_ticks);
             self.sample_series(t, tick);
         }
+        self.audit_run_end();
     }
 
     /// The sequential event loop: one shared clock, earliest event first
@@ -1532,6 +1550,7 @@ impl Cluster {
                     self.clock = self.clock.max(c);
                     self.next_control_t = c + self.control.control_interval_s;
                     self.control_tick();
+                    self.audit_barrier();
                     self.stats.events += 1;
                     continue;
                 }
@@ -1644,7 +1663,7 @@ impl Cluster {
     /// at barriers instead of after each step, which may accept or order
     /// moves differently — still deterministically).
     fn run_parallel(&mut self, horizon_s: f64) {
-        let pool = ShardPool::new(self.workers);
+        let mut pool = ShardPool::new(self.workers);
         loop {
             if self.warming_count > 0 {
                 self.promote_warming();
@@ -1661,7 +1680,7 @@ impl Cluster {
             let safe_h = a.min(c).min(horizon_s);
             if let Some((t, _)) = engine_ev {
                 if t < safe_h {
-                    self.superstep_window(&pool, safe_h);
+                    self.superstep_window(&mut pool, safe_h);
                     continue;
                 }
             }
@@ -1675,6 +1694,7 @@ impl Cluster {
                     self.clock = self.clock.max(c);
                     self.next_control_t = c + self.control.control_interval_s;
                     self.control_tick();
+                    self.audit_barrier();
                     self.stats.events += 1;
                     continue;
                 }
@@ -1722,7 +1742,7 @@ impl Cluster {
     /// GPU-seconds, per-tier counters and event totals all merge
     /// associatively (sums, maxes and sorted replays), which is what
     /// makes the result worker-count-invariant.
-    fn superstep_window(&mut self, pool: &ShardPool, safe_h: f64) {
+    fn superstep_window(&mut self, pool: &mut ShardPool, safe_h: f64) {
         let window_start_clock = self.clock;
         let reports = pool.run_window(&mut self.engines, &self.states, &self.wedged, safe_h);
         let mut t_max: Option<f64> = None;
@@ -1765,6 +1785,82 @@ impl Cluster {
                 }
             }
         }
+        self.audit_barrier();
+    }
+
+    // ---- runtime invariant auditor (see `crate::audit`) -----------------
+
+    /// Snapshot everything the auditor inspects at one barrier: each
+    /// engine's own accounting probe, an independent sweep of its request
+    /// store, and the coordinator's dispatch/rejection counters. Built
+    /// only when the auditor is on (O(replicas + store entries)).
+    fn audit_view(&self) -> crate::audit::ClusterAuditView {
+        use crate::request::Phase;
+        let replicas = (0..self.engines.len())
+            .map(|i| {
+                let e = &self.engines[i];
+                let mut store_entries = 0usize;
+                let mut store_active = 0usize;
+                let mut store_active_kv = 0u64;
+                for r in e.store.iter() {
+                    if r.phase != Phase::Migrated {
+                        store_entries += 1;
+                    }
+                    if r.is_active() {
+                        store_active += 1;
+                        store_active_kv += r.kv_tokens() as u64;
+                    }
+                }
+                crate::audit::ReplicaAudit {
+                    pool: self.pool_of[i],
+                    probe: e.audit_probe(),
+                    store_entries,
+                    store_active,
+                    store_active_kv,
+                    dispatched: self.stats.dispatched[i],
+                    snapshot: (!self.snap_dirty[i])
+                        .then(|| (self.snaps[i].kv_used, self.snaps[i].active)),
+                    retired: self.retired_at[i].is_some(),
+                }
+            })
+            .collect();
+        crate::audit::ClusterAuditView {
+            t: self.clock,
+            tick: self.stats.control_ticks,
+            arrivals: self.next_arrival,
+            rejected: self.stats.rejected.iter().sum(),
+            replicas,
+            aligned: vec![
+                ("snaps", self.snaps.len()),
+                ("snap_dirty", self.snap_dirty.len()),
+                ("wedged", self.wedged.len()),
+                ("handoff_seen", self.handoff_seen.len()),
+                ("states", self.states.len()),
+                ("pool_of", self.pool_of.len()),
+                ("provisioned_at", self.provisioned_at.len()),
+                ("retired_at", self.retired_at.len()),
+                ("dispatched", self.stats.dispatched.len()),
+            ],
+        }
+    }
+
+    /// Audit hook at a coordinator barrier (control ticks in both event
+    /// loops, the merge point of every superstep window). A single
+    /// branch when the auditor is off.
+    fn audit_barrier(&mut self) {
+        let Some(mut aud) = self.audit.take() else { return };
+        aud.check_barrier(&self.audit_view());
+        self.audit = Some(aud);
+    }
+
+    /// Audit hook at the end of [`Cluster::run`]: the barrier checks
+    /// plus terminal-state and SLO-autopsy closure over every store.
+    fn audit_run_end(&mut self) {
+        let Some(mut aud) = self.audit.take() else { return };
+        let view = self.audit_view();
+        let stores: Vec<&RequestStore> = self.engines.iter().map(|e| &e.store).collect();
+        aud.check_run_end(&view, &stores);
+        self.audit = Some(aud);
     }
 }
 

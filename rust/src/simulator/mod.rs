@@ -13,7 +13,9 @@
 //! (drain acceleration + proactive rebalancing). [`parallel`] shards the
 //! engines across a worker-thread pool and runs the cluster loop as
 //! bulk-synchronous supersteps (`cluster.parallel` config block; the
-//! sequential loop remains the bit-for-bit oracle).
+//! sequential loop remains the bit-for-bit oracle), on top of the
+//! audited striped-borrow primitive in [`stripes`] — one of the two
+//! modules in the crate allowed to contain `unsafe`.
 
 pub mod cluster;
 pub mod control;
@@ -21,6 +23,7 @@ pub mod cost_model;
 pub mod dispatch;
 pub mod migration;
 pub mod parallel;
+pub mod stripes;
 
 pub use cluster::{silo_chunk_for_tier, silo_cluster_spec, Cluster, SiloGroup};
 pub use control::{ReplicaState, ScalingController, ScalingDecision};

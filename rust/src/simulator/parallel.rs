@@ -29,30 +29,35 @@
 //! mid-window relegation handoff) bit-identical to the sequential
 //! oracle.
 //!
-//! # Why raw pointers
+//! # Memory safety
 //!
 //! Workers need `&mut` access to *their* engines while the coordinator
 //! owns the `Vec<Engine<_>>`. The stripes are index-disjoint, which the
-//! borrow checker cannot see through a slice, so the pool passes a
-//! [`SharedView`] of raw pointers instead. Soundness argument:
+//! borrow checker cannot see through a slice, so the disjointness is
+//! packaged once, behind a safe API, in
+//! [`crate::simulator::stripes`]: [`ShardPool::run_window`] mints one
+//! [`StripeView`] per shard via [`stripes::run_window`], which holds
+//! the exclusive engine borrow until every view has dropped — blocking
+//! until all shards report IS the barrier. Replica lifecycle flags
+//! (wedged, draining), which the old implementation shared as raw
+//! `*const` pointers, travel as a per-window [`Arc`] snapshot instead.
+//! This module therefore contains no `unsafe` at all; the audited
+//! proofs live in `stripes.rs` (see `#![deny(unsafe_code)]` in lib.rs
+//! and `tools/conformance_lint`).
 //!
-//! * a view is built from `&mut [Engine<_>]` inside [`ShardPool::run_window`],
-//!   which holds that exclusive borrow until every shard has reported —
-//!   the coordinator never touches engines while a window is in flight;
-//! * shard `w` dereferences only indices `i` with `i % workers == w`
-//!   (see [`advance_stripe`]) — no two shards alias an engine;
-//! * `states` / `wedged` are read-only for every shard and mutated only
-//!   by the coordinator between windows;
-//! * workers hold the view only while processing one job; they own no
-//!   pointer across jobs, so reallocation of the engine vector between
-//!   windows (replica provisioning) is harmless — every window re-derives
-//!   fresh pointers.
+//! Workers own no pointer across jobs — every window mints fresh
+//! views — so reallocation of the engine vector between windows
+//! (replica provisioning) is harmless.
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::engine::{Engine, SimBackend};
 use crate::simulator::control::ReplicaState;
+use crate::simulator::stripes::{self, StripeView};
 
 // The whole module moves `Engine<SimBackend>` values across threads;
 // that is only sound because the engine (scheduler, store, backend) is
@@ -62,24 +67,20 @@ const _: fn() = || {
     assert_send::<Engine<SimBackend>>();
 };
 
-/// One superstep window's view of the coordinator's per-replica vectors.
-/// See the module docs for the aliasing argument that makes the `Send`
-/// impl sound.
-#[derive(Clone, Copy)]
-struct SharedView {
-    engines: *mut Engine<SimBackend>,
-    states: *const ReplicaState,
-    wedged: *const bool,
-    len: usize,
+/// Coordinator-owned replica lifecycle bits a shard must respect while
+/// advancing its stripe, snapshotted once per window (immutable for the
+/// window's duration, shared by `Arc`).
+#[derive(Debug, Clone, Copy)]
+struct EngineFlags {
+    /// No progress despite active work — skip until new work arrives.
+    wedged: bool,
+    /// Replica is draining: `advance_window` tracks the drain instant.
+    draining: bool,
 }
 
-// SAFETY: the pointed-to data is `Send` (asserted above) and the
-// run_window protocol guarantees exclusive, stripe-disjoint access — see
-// the module docs.
-unsafe impl Send for SharedView {}
-
 struct WindowJob {
-    view: SharedView,
+    view: StripeView<Engine<SimBackend>>,
+    flags: Arc<[EngineFlags]>,
     horizon: f64,
 }
 
@@ -103,55 +104,59 @@ pub struct ShardReport {
     pub drained: Vec<(f64, usize)>,
 }
 
-/// Advance shard `shard`'s stripe (indices `shard`, `shard + stride`,
-/// ...) through every engine event strictly before `horizon`.
-///
-/// # Safety
-///
-/// Caller must guarantee the [`SharedView`] protocol: `view` pointers
-/// valid for `view.len` elements, no other thread touching this stripe,
-/// `states`/`wedged` not written by anyone while the call runs.
-unsafe fn advance_stripe(
-    view: &SharedView,
-    shard: usize,
-    stride: usize,
+/// What a worker sends back at the end of a window: its report, or the
+/// panic payload of whatever blew up mid-stripe — so the coordinator
+/// can re-throw the *real* failure instead of an opaque recv error.
+enum ShardMsg {
+    Report(ShardReport),
+    Panicked { shard: usize, payload: Box<dyn Any + Send> },
+}
+
+/// Advance one stripe through every engine event strictly before
+/// `horizon`. Consumes the view; its drop at the end releases this
+/// stripe's share of the window barrier.
+fn advance_stripe(
+    view: StripeView<Engine<SimBackend>>,
+    flags: &[EngineFlags],
     horizon: f64,
 ) -> ShardReport {
     let mut rep = ShardReport::default();
-    let mut i = shard;
-    while i < view.len {
-        if !*view.wedged.add(i) {
-            let draining = matches!(*view.states.add(i), ReplicaState::Draining { .. });
-            let adv = (*view.engines.add(i)).advance_window(horizon, draining);
-            if adv.steps > 0 {
-                rep.steps += adv.steps;
-                rep.t_max = Some(rep.t_max.map_or(adv.t_last, |m: f64| m.max(adv.t_last)));
-                rep.stepped.push(i);
-            }
-            if adv.wedged {
-                rep.wedged.push(i);
-            }
-            if let Some(t) = adv.drained_at {
-                rep.drained.push((t, i));
-            }
+    view.for_each(|i, eng| {
+        let fl = flags[i];
+        if fl.wedged {
+            return;
         }
-        i += stride;
-    }
+        let adv = eng.advance_window(horizon, fl.draining);
+        if adv.steps > 0 {
+            rep.steps += adv.steps;
+            rep.t_max = Some(rep.t_max.map_or(adv.t_last, |m: f64| m.max(adv.t_last)));
+            rep.stepped.push(i);
+        }
+        if adv.wedged {
+            rep.wedged.push(i);
+        }
+        if let Some(t) = adv.drained_at {
+            rep.drained.push((t, i));
+        }
+    });
     rep
 }
 
-fn worker_loop(
-    shard: usize,
-    stride: usize,
-    jobs: Receiver<WindowJob>,
-    results: Sender<ShardReport>,
-) {
+fn worker_loop(shard: usize, jobs: Receiver<WindowJob>, results: Sender<ShardMsg>) {
     while let Ok(job) = jobs.recv() {
-        // SAFETY: run_window holds `&mut [Engine]` for the whole window
-        // and this shard only touches indices ≡ shard (mod stride).
-        let rep = unsafe { advance_stripe(&job.view, shard, stride, job.horizon) };
-        if results.send(rep).is_err() {
-            return; // pool dropped mid-window; nothing left to report to
+        let WindowJob { view, flags, horizon } = job;
+        // AssertUnwindSafe: on a panic the coordinator re-throws and the
+        // whole run (pool, engines and all) unwinds with it — the
+        // possibly-inconsistent engine state is never observed again.
+        // The view drops inside the catch either way, so the window
+        // barrier in `stripes::run_window` always releases.
+        let msg = match catch_unwind(AssertUnwindSafe(|| advance_stripe(view, &flags, horizon))) {
+            Ok(rep) => ShardMsg::Report(rep),
+            Err(payload) => ShardMsg::Panicked { shard, payload },
+        };
+        let died = matches!(msg, ShardMsg::Panicked { .. });
+        if results.send(msg).is_err() || died {
+            return;
         }
     }
 }
@@ -162,7 +167,7 @@ fn worker_loop(
 /// spawning would dominate exactly the fleet sizes the sharding is for.
 pub struct ShardPool {
     jobs: Vec<Sender<WindowJob>>,
-    results: Receiver<ShardReport>,
+    results: Receiver<ShardMsg>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -177,7 +182,7 @@ impl ShardPool {
             let res = res_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("niyama-shard-{w}"))
-                .spawn(move || worker_loop(w, workers, rx, res))
+                .spawn(move || worker_loop(w, rx, res))
                 .expect("failed to spawn shard worker");
             jobs.push(tx);
             handles.push(handle);
@@ -192,11 +197,15 @@ impl ShardPool {
 
     /// Run one superstep window: every engine advances through its
     /// events strictly before `horizon` in parallel; returns once all
-    /// shards have reported. Blocking until every report is in IS the
-    /// barrier — the exclusive `engines` borrow is held throughout, so
-    /// no coordinator state can race a shard.
+    /// shards have reported. `stripes::run_window` holds the exclusive
+    /// `engines` borrow until every stripe is done — that IS the
+    /// barrier — so no coordinator state can race a shard.
+    ///
+    /// A shard panic is re-thrown here with its original payload (the
+    /// worker ships it back before exiting), so an engine bug surfaces
+    /// with its real message instead of a dead-channel error.
     pub fn run_window(
-        &self,
+        &mut self,
         engines: &mut [Engine<SimBackend>],
         states: &[ReplicaState],
         wedged: &[bool],
@@ -204,20 +213,65 @@ impl ShardPool {
     ) -> Vec<ShardReport> {
         assert_eq!(engines.len(), states.len());
         assert_eq!(engines.len(), wedged.len());
-        let view = SharedView {
-            engines: engines.as_mut_ptr(),
-            states: states.as_ptr(),
-            wedged: wedged.as_ptr(),
-            len: engines.len(),
-        };
-        for tx in &self.jobs {
-            tx.send(WindowJob { view, horizon }).expect("shard worker exited early");
-        }
-        let mut out = Vec::with_capacity(self.jobs.len());
-        for _ in 0..self.jobs.len() {
-            out.push(self.results.recv().expect("shard worker died mid-window"));
+        let flags: Arc<[EngineFlags]> = states
+            .iter()
+            .zip(wedged)
+            .map(|(s, &w)| EngineFlags {
+                wedged: w,
+                draining: matches!(s, ReplicaState::Draining { .. }),
+            })
+            .collect();
+        stripes::run_window(engines, self.jobs.len(), |shard, view| {
+            let job = WindowJob { view, flags: Arc::clone(&flags), horizon };
+            // A send to a dead worker drops the job — and the view with
+            // it, releasing that stripe's share of the barrier. The
+            // death itself surfaces in collect_reports below.
+            let _ = self.jobs[shard].send(job);
+        });
+        self.collect_reports(self.jobs.len())
+    }
+
+    /// Drain `n` shard messages, re-throwing the first shard panic with
+    /// its real payload.
+    fn collect_reports(&mut self, n: usize) -> Vec<ShardReport> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.results.recv() {
+                Ok(ShardMsg::Report(rep)) => out.push(rep),
+                Ok(ShardMsg::Panicked { shard, payload }) => self.propagate_death(shard, payload),
+                Err(_) => self.propagate_lost_worker(),
+            }
         }
         out
+    }
+
+    /// A worker reported a panic: reap its thread, then resume unwinding
+    /// with the worker's own payload so the real failure (message,
+    /// backtrace origin) reaches the caller.
+    fn propagate_death(&mut self, shard: usize, payload: Box<dyn Any + Send>) -> ! {
+        if shard < self.handles.len() {
+            // The worker exits right after shipping the payload; the
+            // join cannot hang. (swap_remove breaks the shard→handle
+            // mapping, but the pool is dead after this — Drop joins the
+            // rest blindly.)
+            let _ = self.handles.swap_remove(shard).join();
+        }
+        eprintln!("niyama-shard-{shard}: worker panicked mid-window; re-throwing its panic");
+        std::panic::resume_unwind(payload)
+    }
+
+    /// The results channel disconnected without a message: every worker
+    /// is gone. Join whichever finished and surface its panic payload if
+    /// it has one; otherwise fail with an explicit diagnosis. (With the
+    /// in-band [`ShardMsg::Panicked`] path this is nearly unreachable —
+    /// it guards against workers dying without unwinding.)
+    fn propagate_lost_worker(&mut self) -> ! {
+        while let Some(pos) = self.handles.iter().position(|h| h.is_finished()) {
+            if let Err(payload) = self.handles.swap_remove(pos).join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        panic!("shard worker died mid-window without reporting");
     }
 }
 
@@ -235,9 +289,9 @@ impl Drop for ShardPool {
 mod tests {
     use super::*;
     use crate::config::Config;
+    use crate::util::Rng;
     use crate::workload::datasets::Dataset;
     use crate::workload::WorkloadSpec;
-    use crate::util::Rng;
 
     fn loaded_engine(seed: u64) -> Engine<SimBackend> {
         let cfg = Config::default();
@@ -272,7 +326,7 @@ mod tests {
         let mut inline: Vec<Engine<SimBackend>> = (0..5u64).map(loaded_engine).collect();
         let states = vec![ReplicaState::Active; 5];
         let wedged = vec![false; 5];
-        let pool = ShardPool::new(3);
+        let mut pool = ShardPool::new(3);
         let reports = pool.run_window(&mut pooled, &states, &wedged, 20.0);
         let (mut steps, mut t_max) = (0u64, f64::NEG_INFINITY);
         for r in &reports {
@@ -303,5 +357,72 @@ mod tests {
         seen.sort_unstable();
         seen.dedup();
         assert_eq!(seen.len(), reports.iter().map(|r| r.stepped.len()).sum::<usize>());
+    }
+
+    #[test]
+    fn pool_survives_engine_realloc_between_windows() {
+        // Workers mint fresh stripe views every window, so growing the
+        // engine vector (reallocating its buffer, as mid-run replica
+        // provisioning does) between windows must be invisible.
+        fn run_both(
+            engines: &mut [Engine<SimBackend>],
+            twins: &mut [Engine<SimBackend>],
+            pool: &mut ShardPool,
+            horizon: f64,
+        ) {
+            let n = engines.len();
+            let states = vec![ReplicaState::Active; n];
+            let wedged = vec![false; n];
+            pool.run_window(engines, &states, &wedged, horizon);
+            for e in twins.iter_mut() {
+                e.advance_window(horizon, false);
+            }
+        }
+        let mut engines: Vec<Engine<SimBackend>> = (0..2u64).map(loaded_engine).collect();
+        let mut twins: Vec<Engine<SimBackend>> = (0..2u64).map(loaded_engine).collect();
+        let mut pool = ShardPool::new(4);
+        run_both(&mut engines, &mut twins, &mut pool, 8.0);
+        // Force a reallocation: reserve far past the current capacity
+        // and append fresh replicas, exactly like provision_replica.
+        engines.reserve(64);
+        for s in 10..13u64 {
+            engines.push(loaded_engine(s));
+            twins.push(loaded_engine(s));
+        }
+        run_both(&mut engines, &mut twins, &mut pool, 25.0);
+        assert_eq!(engines.len(), 5);
+        for (p, s) in engines.iter().zip(&twins) {
+            assert_eq!(p.now().to_bits(), s.now().to_bits());
+            assert_eq!(p.stats.iterations, s.stats.iterations);
+        }
+    }
+
+    #[test]
+    fn shard_panic_surfaces_with_its_real_payload() {
+        // Seed a poisoned window directly through the module internals:
+        // advance_stripe indexes `flags[i]`, so an empty flags slice
+        // makes every shard with a non-empty stripe panic mid-window
+        // with a real bounds error — standing in for any engine bug.
+        // The pool must re-throw that payload, not a recv error.
+        let mut pool = ShardPool::new(2);
+        let mut engines: Vec<Engine<SimBackend>> = (0..2u64).map(loaded_engine).collect();
+        let empty: Arc<[EngineFlags]> = Vec::new().into();
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            stripes::run_window(&mut engines, 2, |shard, view| {
+                let job = WindowJob { view, flags: Arc::clone(&empty), horizon: 5.0 };
+                let _ = pool.jobs[shard].send(job);
+            });
+            pool.collect_reports(2)
+        }))
+        .expect_err("a poisoned window must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| err.downcast_ref::<&str>().copied())
+            .unwrap_or("<non-string payload>");
+        assert!(
+            msg.contains("index out of bounds"),
+            "want the worker's real panic message, got: {msg}"
+        );
     }
 }

@@ -1,0 +1,272 @@
+//! Audited striped-slice primitive: hand out disjoint interleaved
+//! stripes of one `&mut [T]` to worker threads for the duration of a
+//! window, with the borrow released only once every stripe is done.
+//!
+//! This is one of exactly two modules in the crate permitted to contain
+//! `unsafe` (the other is [`crate::kv`], for its batched decode-buffer
+//! access); everything else builds on the safe API here — in
+//! particular [`crate::simulator::parallel`], the sharded cluster
+//! loop, contains no `unsafe` at all. `tools/conformance_lint` enforces
+//! the allowlist.
+//!
+//! # The protocol
+//!
+//! [`run_window`] splits a `&mut [T]` into `shards` interleaved
+//! stripes (stripe `s` owns the indices `{i : i % shards == s}`), wraps
+//! each in a [`StripeView`] and passes it to the caller's `dispatch`
+//! closure — typically a channel send to a persistent worker thread.
+//! It then **blocks until every view created for this window has been
+//! dropped** before returning and thereby releasing the `&mut [T]`
+//! borrow. A view can only dereference its pointers inside
+//! [`StripeView::for_each`], which consumes the view, so:
+//!
+//! * no two views alias (stripe index sets are a partition);
+//! * no view outlives the window in a usable form — stashing a view
+//!   instead of consuming it deadlocks `run_window` (it waits for the
+//!   drop signal forever), it cannot produce a dangling dereference;
+//! * a panic inside `dispatch` or inside a worker's `for_each` still
+//!   drops the in-flight views during unwinding, so the window guard
+//!   (which also runs on unwind) still sees every drop signal before
+//!   the slice borrow is released.
+//!
+//! The drop signal is an [`mpsc`] message sent from [`StripeView`]'s
+//! `Drop` impl; `run_window` counts one signal per view it created.
+//! Leaking a view (`mem::forget`) loses its signal and parks
+//! `run_window` forever — a deadlock, which is safe; never
+//! use-after-free.
+
+#![allow(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Sends the window-completion signal for one stripe when dropped.
+/// Field of [`StripeView`] so the signal fires on *any* drop path:
+/// normal `for_each` completion, unwinding, or the view being discarded
+/// unconsumed (e.g. a channel send to a dead worker returning the job).
+struct DoneGuard(Sender<()>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        // The receiver may itself be gone mid-unwind; nothing to do then.
+        let _ = self.0.send(());
+    }
+}
+
+/// One stripe of a [`run_window`] slice: exclusive access to the
+/// indices `{i : i % stride == shard, i < len}` for the duration of the
+/// window. Not `Clone`, not publicly constructible — every live view
+/// was minted by `run_window`, which is what the aliasing proof below
+/// leans on.
+pub struct StripeView<T> {
+    base: *mut T,
+    len: usize,
+    shard: usize,
+    stride: usize,
+    _done: DoneGuard,
+}
+
+// SAFETY: a `StripeView<T>` is exclusive access to a subset of a
+// `&mut [T]` (see the module docs for why no two views alias and why
+// none outlives its window), so moving it to another thread moves
+// access to `T` values across threads — sound exactly when `T: Send`.
+// The embedded `Sender<()>` is itself `Send`.
+unsafe impl<T: Send> Send for StripeView<T> {}
+
+impl<T> StripeView<T> {
+    /// Stripe index (also the first element index).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Stripe stride == the window's shard count.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Length of the *underlying slice* (not of the stripe).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the underlying slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Visit every element of this stripe (`&mut`, with its slice
+    /// index), consuming the view. Dropping the view at the end is what
+    /// signals the window that this stripe is done — on the normal exit
+    /// and on unwind alike.
+    pub fn for_each(self, mut f: impl FnMut(usize, &mut T)) {
+        let mut i = self.shard;
+        while i < self.len {
+            // SAFETY: `base` points at the first element of a live
+            // `&mut [T]` of length `len` held exclusively by the
+            // `run_window` frame that minted this view, and which does
+            // not return (releasing that borrow) until this view drops.
+            // `i < len` bounds the offset, and only this view touches
+            // indices ≡ shard (mod stride) — stripes partition the
+            // index space, so no other view (nor the coordinator) can
+            // hold a reference to element `i` right now.
+            let item = unsafe { &mut *self.base.add(i) };
+            f(i, item);
+            i += self.stride;
+        }
+    }
+}
+
+/// Blocks until the `outstanding` views minted for this window have all
+/// dropped. Lives *above* the dispatch loop in [`run_window`] so its
+/// `Drop` runs even when `dispatch` panics mid-window — the exclusive
+/// slice borrow must never be released while a view is live.
+struct WindowGuard {
+    done_rx: Receiver<()>,
+    outstanding: usize,
+}
+
+impl Drop for WindowGuard {
+    fn drop(&mut self) {
+        for _ in 0..self.outstanding {
+            // Err means a signal sender leaked (a view was forgotten):
+            // every remaining recv would fail too, and blocking forever
+            // on a closed channel is pointless — bail out. This cannot
+            // un-leak the view; the caller's borrow stays pinned by the
+            // leak itself (leaked views never dereference again, as
+            // `for_each` is the only deref path and it consumes).
+            if self.done_rx.recv().is_err() {
+                break;
+            }
+        }
+    }
+}
+
+/// Run one window: mint `shards` disjoint [`StripeView`]s over `slice`,
+/// feed each to `dispatch` (shard index, view), and return only once
+/// every view has been dropped — i.e. once every stripe's work is done.
+/// The exclusive `slice` borrow is held for the whole window; this
+/// function *is* the barrier.
+///
+/// Entirely safe to call with any closure: misuse (stashing a view,
+/// forgetting it) degrades to a deadlock or a leak, never to undefined
+/// behavior.
+pub fn run_window<T>(
+    slice: &mut [T],
+    shards: usize,
+    mut dispatch: impl FnMut(usize, StripeView<T>),
+) {
+    let shards = shards.max(1);
+    let (done_tx, done_rx) = channel();
+    // Created before any view exists and updated as each one is minted,
+    // so the unwind path waits for exactly the views that are real.
+    let mut guard = WindowGuard { done_rx, outstanding: 0 };
+    let base = slice.as_mut_ptr();
+    let len = slice.len();
+    for shard in 0..shards {
+        let view = StripeView {
+            base,
+            len,
+            shard,
+            stride: shards,
+            _done: DoneGuard(done_tx.clone()),
+        };
+        guard.outstanding += 1;
+        dispatch(shard, view);
+    }
+    // Dropping the guard blocks until all `outstanding` signals arrive.
+    drop(guard);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripes_partition_the_index_space() {
+        let mut data = vec![0u8; 11];
+        let mut per_shard: Vec<Vec<usize>> = Vec::new();
+        run_window(&mut data, 4, |shard, view| {
+            assert_eq!(view.shard(), shard);
+            assert_eq!(view.stride(), 4);
+            assert_eq!(view.len(), 11);
+            let mut mine = Vec::new();
+            view.for_each(|i, x| {
+                *x += 1;
+                mine.push(i);
+            });
+            per_shard.push(mine);
+        });
+        for (shard, mine) in per_shard.iter().enumerate() {
+            for &i in mine {
+                assert_eq!(i % 4, shard, "stripe visited a foreign index");
+            }
+        }
+        let mut all: Vec<usize> = per_shard.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..11).collect::<Vec<_>>(), "not a partition");
+        assert!(data.iter().all(|&x| x == 1), "some element touched != once");
+    }
+
+    #[test]
+    fn more_shards_than_elements_and_empty_slices_are_fine() {
+        let mut two = [10u32, 20];
+        let mut visited = Vec::new();
+        run_window(&mut two, 8, |shard, view| {
+            view.for_each(|i, x| {
+                *x += 1;
+                visited.push((shard, i));
+            });
+        });
+        assert_eq!(visited, vec![(0, 0), (1, 1)]);
+        assert_eq!(two, [11, 21]);
+
+        let mut empty: [u32; 0] = [];
+        run_window(&mut empty, 3, |_, view| {
+            assert!(view.is_empty());
+            view.for_each(|_, _| panic!("no element to visit in an empty slice"));
+        });
+    }
+
+    #[test]
+    fn run_window_is_the_barrier_for_cross_thread_stripes() {
+        // Views go to real threads; run_window must not return (and the
+        // data must not be readable below) until every thread has
+        // finished writing its stripe.
+        let mut data = vec![0u64; 37];
+        let mut handles = Vec::new();
+        run_window(&mut data, 4, |_, view| {
+            handles.push(std::thread::spawn(move || {
+                view.for_each(|i, x| *x = 2 * i as u64 + 1);
+            }));
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, 2 * i as u64 + 1, "write not visible after the window");
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn a_panicking_stripe_still_releases_the_window() {
+        // A worker panic drops its view mid-unwind; run_window must
+        // still return (all signals delivered) instead of deadlocking.
+        let mut data = vec![0u32; 8];
+        let mut handles = Vec::new();
+        run_window(&mut data, 2, |shard, view| {
+            handles.push(std::thread::spawn(move || {
+                view.for_each(|i, x| {
+                    if shard == 1 && i >= 3 {
+                        panic!("seeded stripe failure");
+                    }
+                    *x = 7;
+                });
+            }));
+        });
+        let outcomes: Vec<bool> = handles.into_iter().map(|h| h.join().is_ok()).collect();
+        assert_eq!(outcomes, vec![true, false]);
+        // Shard 0 finished all of its stripe; shard 1 stopped at i == 3.
+        assert_eq!(data, [7, 7, 7, 0, 7, 0, 7, 0]);
+    }
+}

@@ -54,6 +54,7 @@ impl Json {
 
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
+            // float-eq: integerness test; fract() is exact for in-range integers.
             if n >= 0.0 && n.fract() == 0.0 {
                 Some(n as usize)
             } else {
@@ -131,6 +132,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
+                // float-eq: integral numbers render without a decimal point.
                 if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {

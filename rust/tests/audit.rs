@@ -1,0 +1,140 @@
+//! Runtime invariant auditor (ISSUE 9 acceptance):
+//!
+//! 1. an audited run (`cluster.audit`) is **bit-for-bit** the unaudited
+//!    run — the auditor observes and panics, it never feeds back — on a
+//!    scenario exercising dispatch + autoscale + drain + live migration
+//!    together, under both the sequential and the sharded event loop;
+//! 2. the auditor actually audits: barriers are checked at every
+//!    control tick (both loops) and at every superstep merge point;
+//! 3. a deliberately corrupted ledger trips the auditor with its
+//!    structured violation report.
+//!
+//! The tests pin the auditor through explicit `cluster.audit` blocks
+//! rather than `NIYAMA_AUDIT` (the env var is process-global and test
+//! threads share it; the CI matrix has a dedicated env leg instead).
+
+use niyama::config::{
+    AuditConfig, AutoscalePolicy, Config, DispatchPolicy, InterconnectConfig, ParallelConfig,
+};
+use niyama::metrics::Summary;
+use niyama::request::RequestSpec;
+use niyama::simulator::cluster::Cluster;
+use niyama::simulator::ReplicaState;
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::{ArrivalProcess, WorkloadSpec};
+
+const LT: u32 = 6251;
+
+/// Base load plus a burst: enough pressure for predictive scale-ups,
+/// a trough that drains capacity back down, and decode backlogs deep
+/// enough for live KV migration during the forced mid-run drain.
+fn trace() -> Vec<RequestSpec> {
+    let mut base = WorkloadSpec::uniform(Dataset::azure_code(), 0.5, 500.0);
+    base.arrivals = ArrivalProcess::Poisson { qps: 0.5 };
+    let mut trace = base.generate(&mut Rng::new(3));
+    let mut surge = WorkloadSpec::uniform(Dataset::azure_code(), 1.0, 500.0);
+    surge.arrivals = ArrivalProcess::Burst {
+        base_qps: 0.0,
+        burst_qps: 15.0,
+        burst_start_s: 150.0,
+        burst_end_s: 260.0,
+    };
+    surge.tier_shares = vec![0.6, 0.2, 0.2];
+    trace.extend(surge.generate(&mut Rng::new(4)));
+    trace
+}
+
+fn scenario_cfg(workers: usize, audited: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+    cfg.cluster.control.autoscale = AutoscalePolicy::Predictive;
+    cfg.cluster.control.min_replicas = 1;
+    cfg.cluster.control.max_replicas = 4;
+    cfg.cluster.control.warmup_s = 10.0;
+    cfg.cluster.control.control_interval_s = 2.5;
+    cfg.cluster.control.hold_s = 5.0;
+    cfg.cluster.interconnect = Some(InterconnectConfig::default());
+    cfg.cluster.parallel = Some(ParallelConfig { workers });
+    // Explicit block either way, so the assertions hold regardless of
+    // what NIYAMA_AUDIT says in this process's environment.
+    cfg.cluster.audit = Some(AuditConfig { enabled: audited });
+    cfg
+}
+
+/// Surge to mid-burst, force-drain an active replica while decodes are
+/// in flight (pinning drain + live migration), then run to completion.
+fn run_scenario(workers: usize, audited: bool) -> (Cluster, Summary) {
+    let cfg = scenario_cfg(workers, audited);
+    let mut cluster = Cluster::new(&cfg, 1);
+    cluster.submit_trace(trace());
+    cluster.run(200.0);
+    let active: Vec<usize> = cluster
+        .replica_states()
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| matches!(s, ReplicaState::Active))
+        .map(|(i, _)| i)
+        .collect();
+    if active.len() >= 2 {
+        cluster.drain_replica(active[0]);
+    }
+    cluster.run(4000.0);
+    let s = cluster.summary(LT);
+    (cluster, s)
+}
+
+fn assert_audit_transparent(label: &str, workers: usize) {
+    let off = run_scenario(workers, false);
+    let on = run_scenario(workers, true);
+    assert_eq!(off.0.audit_barriers(), None, "{label}: auditor must be absent when off");
+    let barriers = on.0.audit_barriers().expect("auditor must be live when on");
+    assert!(barriers > 0, "{label}: the audited run must actually audit");
+    // The run end is audited on top of every barrier hook.
+    assert!(
+        barriers > on.0.stats.control_ticks,
+        "{label}: every control tick plus the run end must be audited"
+    );
+    assert_eq!(
+        off.1.fingerprint(),
+        on.1.fingerprint(),
+        "{label}: the audited Summary must be byte-identical to the unaudited one"
+    );
+    assert_eq!(
+        off.0.eval_time().to_bits(),
+        on.0.eval_time().to_bits(),
+        "{label}: evaluation horizon must match to the bit"
+    );
+    assert_eq!(off.0.stats.events, on.0.stats.events, "{label}: event count");
+    assert_eq!(off.0.stats.dispatched, on.0.stats.dispatched, "{label}: per-replica dispatch");
+    assert_eq!(off.0.stats.control_ticks, on.0.stats.control_ticks, "{label}: control ticks");
+    assert_eq!(off.0.replica_timeline(), on.0.replica_timeline(), "{label}: timelines");
+    assert_eq!(off.0.replica_states(), on.0.replica_states(), "{label}: lifecycle states");
+    // Premises: the scenario exercises the invariants worth auditing.
+    assert!(on.0.stats.scale_ups > 0, "premise: the surge must trigger scale-ups");
+    assert!(on.0.stats.retired > 0, "premise: capacity must drain back down");
+    assert!(on.1.total > 300, "premise: a real workload, not a toy");
+}
+
+#[test]
+fn audited_sequential_run_is_bitforbit_the_unaudited_run() {
+    assert_audit_transparent("sequential", 1);
+}
+
+#[test]
+fn audited_sharded_run_is_bitforbit_the_unaudited_run() {
+    // workers > 1 additionally audits every superstep merge point.
+    assert_audit_transparent("workers=4", 4);
+}
+
+#[test]
+#[should_panic(expected = "NIYAMA_AUDIT violation: conservation")]
+fn corrupted_dispatch_ledger_trips_the_auditor() {
+    let cfg = scenario_cfg(1, true);
+    let mut cluster = Cluster::new(&cfg, 1);
+    cluster.submit_trace(trace());
+    cluster.run(100.0);
+    // Seed the violation: one phantom dispatch the trace never produced.
+    cluster.stats.dispatched[0] += 1;
+    cluster.run(4000.0);
+}

@@ -1,0 +1,544 @@
+//! Repo conformance lint (std-only; CI step + local pre-commit).
+//!
+//! Enforces the soundness conventions the compiler cannot:
+//!
+//! 1. **unsafe-allowlist** — the `unsafe` keyword appears only in the
+//!    two audited modules (`rust/src/simulator/stripes.rs`,
+//!    `rust/src/kv/mod.rs`); everywhere else the crate-level
+//!    `#![deny(unsafe_code)]` is backed up at the source level, so a
+//!    module-scoped `#[allow]` cannot sneak past review.
+//! 2. **safety-comment** — every `unsafe` keyword in the allowlisted
+//!    modules is preceded by a `// SAFETY:` proof within the previous
+//!    12 lines.
+//! 3. **wall-clock** — no `Instant::now` / `SystemTime` in simulator,
+//!    scheduler or observability code: the simulation is virtual-time
+//!    pure. Exempt: the real-execution server/runtime, `repro/`'s
+//!    wall-clock progress logging, `main.rs`, and benches.
+//! 4. **float-eq** — no raw `==`/`!=` against a float literal (or
+//!    `.fract()`) in non-test `rust/src` code; exact float equality
+//!    belongs to `to_bits` fingerprint paths. A deliberate integerness
+//!    check carries a `// float-eq:` waiver comment on the same or
+//!    preceding line. (Variable-vs-variable float equality is beyond a
+//!    token lint; this catches the literal-operand hazard.)
+//!
+//! Comments and string literals are masked out before token matching,
+//! so prose about `unsafe` or a `"=="` inside a format string never
+//! trips a rule. Usage: `conformance_lint [repo-root]` (default `.`);
+//! exits non-zero listing every violation.
+
+use std::path::{Path, PathBuf};
+
+const UNSAFE_ALLOWLIST: &[&str] = &["rust/src/simulator/stripes.rs", "rust/src/kv/mod.rs"];
+
+/// Paths (prefixes) where wall-clock reads are legitimate: real-time
+/// serving, the PJRT runtime, repro progress logging, the CLI, benches.
+const WALL_CLOCK_EXEMPT: &[&str] =
+    &["rust/src/server/", "rust/src/runtime/", "rust/src/repro/", "rust/src/main.rs"];
+
+/// How far above an `unsafe` keyword its `// SAFETY:` proof may sit.
+const SAFETY_WINDOW: usize = 12;
+
+#[derive(Debug, PartialEq)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    detail: String,
+}
+
+fn main() {
+    let root = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    let root = PathBuf::from(root);
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust"), &mut files);
+    if files.is_empty() {
+        eprintln!("conformance_lint: no .rs files under {}/rust", root.display());
+        std::process::exit(2);
+    }
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = rel_path(&root, path);
+        let source = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("conformance_lint: cannot read {rel}: {e}");
+                std::process::exit(2);
+            }
+        };
+        violations.extend(check_file(&rel, &source));
+    }
+    if violations.is_empty() {
+        println!("conformance_lint: {} files clean", files.len());
+        return;
+    }
+    for v in &violations {
+        eprintln!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.detail);
+    }
+    eprintln!("conformance_lint: {} violation(s)", violations.len());
+    std::process::exit(1);
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root).unwrap_or(path).to_string_lossy().replace('\\', "/")
+}
+
+/// Run every rule over one file. `rel` is the repo-root-relative path
+/// with forward slashes (e.g. `rust/src/kv/mod.rs`).
+fn check_file(rel: &str, source: &str) -> Vec<Violation> {
+    let masked = mask_comments_and_strings(source);
+    let raw_lines: Vec<&str> = source.lines().collect();
+    let masked_lines: Vec<&str> = masked.lines().collect();
+    let mut out = Vec::new();
+    check_unsafe(rel, &raw_lines, &masked_lines, &mut out);
+    if rel.starts_with("rust/src/") && !WALL_CLOCK_EXEMPT.iter().any(|p| rel.starts_with(p)) {
+        check_wall_clock(rel, &masked_lines, &mut out);
+    }
+    if rel.starts_with("rust/src/") {
+        check_float_eq(rel, &raw_lines, &masked_lines, &mut out);
+    }
+    out
+}
+
+/// Rules 1 + 2: the `unsafe` keyword is confined to the allowlist, and
+/// there it always carries a nearby `// SAFETY:` proof.
+fn check_unsafe(rel: &str, raw: &[&str], masked: &[&str], out: &mut Vec<Violation>) {
+    let allowlisted = UNSAFE_ALLOWLIST.contains(&rel);
+    for (i, line) in masked.iter().enumerate() {
+        if !has_word(line, "unsafe") {
+            continue;
+        }
+        if !allowlisted {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "unsafe-allowlist",
+                detail: format!(
+                    "`unsafe` outside the audited modules ({})",
+                    UNSAFE_ALLOWLIST.join(", ")
+                ),
+            });
+            continue;
+        }
+        let start = i.saturating_sub(SAFETY_WINDOW);
+        if !raw[start..=i].iter().any(|l| l.contains("SAFETY:")) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "safety-comment",
+                detail: format!(
+                    "`unsafe` without a `// SAFETY:` proof in the previous {SAFETY_WINDOW} lines"
+                ),
+            });
+        }
+    }
+}
+
+/// Rule 3: simulation and scheduling code never reads the wall clock.
+fn check_wall_clock(rel: &str, masked: &[&str], out: &mut Vec<Violation>) {
+    for (i, line) in masked.iter().enumerate() {
+        for needle in ["Instant::now", "SystemTime"] {
+            if line.contains(needle) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "wall-clock",
+                    detail: format!(
+                        "`{needle}` in virtual-time code (exempt: {})",
+                        WALL_CLOCK_EXEMPT.join(", ")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 4: no raw float-literal equality in non-test `src` code. Test
+/// regions (everything from the first `#[cfg(test)]` line on — test
+/// modules sit at file end by repo convention) are exempt, as are
+/// lines carrying `to_bits` or a `// float-eq:` waiver on the same or
+/// preceding line.
+fn check_float_eq(rel: &str, raw: &[&str], masked: &[&str], out: &mut Vec<Violation>) {
+    let test_start = raw
+        .iter()
+        .position(|l| l.contains("#[cfg(test)]"))
+        .unwrap_or(raw.len());
+    for (i, line) in masked.iter().enumerate().take(test_start) {
+        if !has_float_eq(line) {
+            continue;
+        }
+        if line.contains("to_bits") {
+            continue;
+        }
+        let waived = raw[i].contains("float-eq:")
+            || (i > 0 && raw[i - 1].contains("float-eq:"));
+        if waived {
+            continue;
+        }
+        out.push(Violation {
+            file: rel.to_string(),
+            line: i + 1,
+            rule: "float-eq",
+            detail: "raw float equality — compare via `to_bits`, a tolerance, or add a \
+                     `// float-eq:` waiver"
+                .to_string(),
+        });
+    }
+}
+
+/// Whether `line` compares a float-ish operand with `==`/`!=`: a float
+/// literal on either side of the operator, or `.fract()` on the left.
+fn has_float_eq(line: &str) -> bool {
+    let b = line.as_bytes();
+    for i in 0..b.len().saturating_sub(1) {
+        if &b[i..i + 2] != b"==" && &b[i..i + 2] != b"!=" {
+            continue;
+        }
+        // Skip `<=`, `>=`, `=>`, `===`-like runs: require a real
+        // two-char operator (previous char not `=`, `<`, `>`, `!`).
+        if i > 0 && matches!(b[i - 1], b'=' | b'<' | b'>' | b'!') {
+            continue;
+        }
+        if i + 2 < b.len() && b[i + 2] == b'=' {
+            continue;
+        }
+        let left = line[..i].trim_end();
+        let right = line[i + 2..].trim_start();
+        if starts_with_float_literal(right)
+            || ends_with_float_literal(left)
+            || left.ends_with(".fract()")
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// `0.0`, `-1.5`, `12.` — a leading (possibly negated) float literal.
+fn starts_with_float_literal(s: &str) -> bool {
+    let s = s.strip_prefix('-').unwrap_or(s);
+    let digits = s.bytes().take_while(|b| b.is_ascii_digit()).count();
+    digits > 0 && s.as_bytes().get(digits) == Some(&b'.')
+}
+
+/// A trailing float literal: digits, a dot, then optional digits.
+fn ends_with_float_literal(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = b.len();
+    while i > 0 && b[i - 1].is_ascii_digit() {
+        i -= 1;
+    }
+    let frac_digits = b.len() - i;
+    if i == 0 || b[i - 1] != b'.' {
+        return false;
+    }
+    // Require digits before the dot too (`x.0` is a tuple field, not a
+    // float, when `x` is not a digit — but `1.0` qualifies).
+    let mut j = i - 1;
+    let mut int_digits = 0;
+    while j > 0 && b[j - 1].is_ascii_digit() {
+        int_digits += 1;
+        j -= 1;
+    }
+    if j == 0 && b[0].is_ascii_digit() {
+        int_digits += 1;
+    }
+    int_digits > 0 && (frac_digits > 0 || i == b.len())
+}
+
+/// Whether `line` contains `word` with identifier boundaries on both
+/// sides (so `unsafe_code` does not count as `unsafe`).
+fn has_word(line: &str, word: &str) -> bool {
+    let b = line.as_bytes();
+    let w = word.len();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(word) {
+        let start = from + p;
+        let pre_ok = start == 0 || !is_ident(b[start - 1]);
+        let post_ok = start + w >= b.len() || !is_ident(b[start + w]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = start + w;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Replace the contents of comments, string literals and char literals
+/// with spaces (newlines preserved), so token rules only ever see code.
+fn mask_comments_and_strings(source: &str) -> String {
+    let b: Vec<char> = source.chars().collect();
+    let mut out = String::with_capacity(source.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        // Line comment (`//`, `///`, `//!`).
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, nesting like Rust.
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 0;
+            while i < b.len() {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string literal `r"..."` / `r#"..."#` (and `br...`).
+        if (c == 'r' || (c == 'b' && b.get(i + 1) == Some(&'r')))
+            && raw_string_hashes(&b, i).is_some()
+        {
+            let (start_quote, hashes) = raw_string_hashes(&b, i).unwrap();
+            for _ in i..=start_quote {
+                out.push(' ');
+            }
+            i = start_quote + 1;
+            // Scan for `"` followed by `hashes` `#`s.
+            while i < b.len() {
+                if b[i] == '"' && (0..hashes).all(|k| b.get(i + 1 + k) == Some(&'#')) {
+                    for _ in 0..=hashes {
+                        out.push(' ');
+                    }
+                    i += 1 + hashes;
+                    break;
+                }
+                out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            continue;
+        }
+        // String literal with escapes.
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    // Keep the newline of a `\`-at-end-of-line string
+                    // continuation so line numbers stay aligned.
+                    out.push(' ');
+                    if let Some(&n) = b.get(i + 1) {
+                        out.push(if n == '\n' { '\n' } else { ' ' });
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime: `'x'` / `'\n'` are literals, `'a`
+        // (no closing quote nearby) is a lifetime.
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                out.push_str("  ");
+                i += 2;
+                while i < b.len() && b[i] != '\'' {
+                    out.push(' ');
+                    i += 1;
+                }
+                if i < b.len() {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if b.get(i + 2) == Some(&'\'') {
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            out.push(' ');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// If position `i` starts a raw string (`r`, `br` + `#*` + `"`),
+/// return (index of the opening quote, number of hashes).
+fn raw_string_hashes(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + 1;
+    if b.get(i) == Some(&'b') {
+        j += 1;
+    }
+    // Guard: `r` must be a standalone prefix, not the tail of an
+    // identifier like `var` (the caller can't see boundaries).
+    if i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == '_') {
+        return None;
+    }
+    let mut hashes = 0;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&'"') {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(violations: &[Violation]) -> Vec<&'static str> {
+        violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn seeded_unsafe_outside_the_allowlist_fires() {
+        let src = "fn f(p: *mut u8) { unsafe { *p = 0; } }\n";
+        let v = check_file("rust/src/scheduler/mod.rs", src);
+        assert_eq!(rules(&v), ["unsafe-allowlist"]);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn seeded_missing_safety_comment_fires_in_an_audited_module() {
+        let src = "fn f(p: *mut u8) {\n    unsafe { *p = 0; }\n}\n";
+        let v = check_file("rust/src/kv/mod.rs", src);
+        assert_eq!(rules(&v), ["safety-comment"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_within_the_window_passes() {
+        let src = "fn f(p: *mut u8) {\n    // SAFETY: p is valid for writes.\n    \
+                   unsafe { *p = 0; }\n}\n";
+        assert!(check_file("rust/src/kv/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn prose_and_strings_about_unsafe_are_not_code() {
+        let src = "//! This module contains no `unsafe` at all.\n\
+                   fn f() -> &'static str { \"unsafe\" }\n\
+                   #![deny(unsafe_code)] // attribute, not the keyword\n";
+        assert!(check_file("rust/src/scheduler/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn seeded_wall_clock_read_fires_in_simulator_code() {
+        let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+        let v = check_file("rust/src/simulator/cluster.rs", src);
+        assert_eq!(rules(&v), ["wall-clock"]);
+    }
+
+    #[test]
+    fn wall_clock_is_legitimate_in_the_exempt_paths() {
+        let src = "fn t() { let _ = std::time::Instant::now(); }\n";
+        assert!(check_file("rust/src/repro/overload.rs", src).is_empty());
+        assert!(check_file("rust/src/server/mod.rs", src).is_empty());
+        assert!(check_file("rust/src/main.rs", src).is_empty());
+        // Benches are outside the rule's `rust/src/` scope entirely.
+        assert!(check_file("rust/benches/scheduler_hot_path.rs", src).is_empty());
+    }
+
+    #[test]
+    fn seeded_float_literal_equality_fires() {
+        let src = "fn f(x: f64) -> bool { x == 0.0 }\n";
+        let v = check_file("rust/src/obs/mod.rs", src);
+        assert_eq!(rules(&v), ["float-eq"]);
+        let src = "fn f(x: f64) -> bool { 1.5 != x }\n";
+        assert_eq!(rules(&check_file("rust/src/obs/mod.rs", src)), ["float-eq"]);
+        let src = "fn f(x: f64) -> bool { x.fract() == 0.0 }\n";
+        assert_eq!(rules(&check_file("rust/src/obs/mod.rs", src)), ["float-eq"]);
+    }
+
+    #[test]
+    fn integer_equality_sharing_a_line_with_floats_passes() {
+        // The operands decide, not the line: `den == 0` is an integer
+        // comparison even with float literals elsewhere on the line.
+        let src = "fn p(n: usize, d: usize) -> f64 { if d == 0 { 0.0 } else { 1.0 } }\n";
+        assert!(check_file("rust/src/metrics/mod.rs", src).is_empty());
+        let src = "fn f(t: usize) -> f64 { if t == 3 { 1.0 } else { 0.0 } }\n";
+        assert!(check_file("rust/src/repro/capacity.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_eq_escapes_to_bits_waivers_and_test_regions() {
+        let src = "fn f(a: f64, b: f64) -> bool { a.to_bits() == b.to_bits() }\n";
+        assert!(check_file("rust/src/metrics/mod.rs", src).is_empty());
+        let src = "fn f(n: f64) -> bool {\n    // float-eq: integerness check, not a \
+                   value comparison\n    n.fract() == 0.0\n}\n";
+        assert!(check_file("rust/src/util/json.rs", src).is_empty());
+        let src = "fn main() {}\n#[cfg(test)]\nmod tests {\n    fn t(x: f64) -> bool \
+                   { x == 0.5 }\n}\n";
+        assert!(check_file("rust/src/util/json.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comparison_operators_that_merely_contain_eq_pass() {
+        let src = "fn f(x: f64) -> bool { x >= 0.0 && x <= 1.0 }\n";
+        assert!(check_file("rust/src/qos/mod.rs", src).is_empty());
+        let src = "fn f(x: f64) -> f64 { match x { _ => 0.0 } }\n";
+        assert!(check_file("rust/src/qos/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn masking_strips_nested_comments_strings_and_lifetimes() {
+        let masked = mask_comments_and_strings(
+            "let s = \"unsafe == 0.0\"; /* outer /* unsafe */ still comment */ let c = 'x';\n\
+             let r = r#\"Instant::now\"#; fn f<'a>(x: &'a u32) {}\n",
+        );
+        assert!(!masked.contains("unsafe"));
+        assert!(!masked.contains("0.0"));
+        assert!(!masked.contains("Instant"));
+        assert!(!masked.contains("'x'"), "char literals are masked: {masked}");
+        assert!(masked.contains("let c"), "code outside literals survives: {masked}");
+        assert!(masked.contains("fn f<"), "lifetimes must not eat code: {masked}");
+    }
+
+    #[test]
+    fn the_real_allowlist_is_exactly_two_modules() {
+        assert_eq!(UNSAFE_ALLOWLIST.len(), 2);
+        assert!(UNSAFE_ALLOWLIST.contains(&"rust/src/simulator/stripes.rs"));
+        assert!(UNSAFE_ALLOWLIST.contains(&"rust/src/kv/mod.rs"));
+    }
+}
