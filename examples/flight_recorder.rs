@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let duration = 240.0;
     println!("== Recording the tier-0 surge ({duration}s, live migration on)\n");
     let obs = ObservabilityConfig { trace: true, series: true };
-    let cluster = surge_cluster(duration, true, Some(obs));
+    let cluster = surge_cluster(duration, true, Some(obs), true);
     let s = cluster.summary(6251);
 
     std::fs::create_dir_all("results")?;
@@ -44,6 +44,17 @@ fn main() -> anyhow::Result<()> {
     println!("   coordinator events {:>6}   migration windows {migrations}", coord.len());
     println!("   trace  -> {trace_path} ({} bytes, open in ui.perfetto.dev)", trace.len());
     println!("   series -> {series_path} ({} samples)", series.lines().count());
+
+    // The wall-clock profiler is the recorder's sibling: same run, real
+    // time axis — where the *simulator* spent its wall clock.
+    let prof_path = "results/flight_recorder_profile.json";
+    let profile = cluster.profile_json().expect("profiling was enabled");
+    std::fs::write(prof_path, &profile)?;
+    let ps = cluster.profile_summary().expect("profiling was enabled");
+    println!(
+        "   profile -> {prof_path} (coordinator {:.3}s, stripe {:.3}s, barrier {:.3}s)",
+        ps.coordinator_total_s, ps.stripe_busy_s, ps.barrier_wait_s
+    );
 
     println!("\n== Violation autopsy (per tier, shares of total lateness)\n");
     for (tier, a) in s.autopsy.iter().enumerate() {

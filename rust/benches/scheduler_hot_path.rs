@@ -10,6 +10,11 @@
 //! `BENCH_scheduler_hot_path.json` (override the path with
 //! `NIYAMA_BENCH_JSON`) so the perf trajectory is tracked across PRs;
 //! `NIYAMA_BENCH_ITERS` caps per-case iterations for CI smoke runs.
+//! `tools/bench_diff` compares two of these JSON files and gates on
+//! regressions past a threshold; the cluster rows additionally get a
+//! profiler-on `.prof` twin whose wall-clock split (coordinator /
+//! stripe / barrier, per-worker utilization) lands in the `profiles`
+//! section.
 
 use niyama::config::{Config, HardwareModel, Policy, SchedulerConfig};
 use niyama::predictor::LatencyPredictor;
@@ -123,6 +128,7 @@ fn write_json(
     stats: &[BenchStat],
     sims: &[(String, usize, u64, f64)],
     sessions: &[(String, f64, u64, f64)],
+    profiles: &[(String, niyama::obs::prof::ProfileSummary)],
 ) {
     let path = std::env::var("NIYAMA_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_scheduler_hot_path.json".to_string());
@@ -162,6 +168,29 @@ fn write_json(
             saved,
             wall,
             if i + 1 < sessions.len() { "," } else { "" }
+        ));
+    }
+    // Additive section (still schema v1): wall-clock split of the
+    // profiler-on cluster rows. `bench_diff` ignores sections it has no
+    // gate for, so readers of the v1 schema are unaffected.
+    s.push_str("  ],\n  \"profiles\": [\n");
+    for (i, (name, p)) in profiles.iter().enumerate() {
+        let util_min =
+            p.worker_util.iter().map(|w| w.utilization_pct).fold(f64::INFINITY, f64::min);
+        let util_max = p.worker_util.iter().map(|w| w.utilization_pct).fold(0.0f64, f64::max);
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"workers\": {}, \"supersteps\": {}, \
+             \"coordinator_s\": {:.6}, \"stripe_busy_s\": {:.6}, \"barrier_wait_s\": {:.6}, \
+             \"util_min_pct\": {:.2}, \"util_max_pct\": {:.2}}}{}\n",
+            json_escape(name),
+            p.workers,
+            p.supersteps,
+            p.coordinator_total_s,
+            p.stripe_busy_s,
+            p.barrier_wait_s,
+            if util_min.is_finite() { util_min } else { 0.0 },
+            util_max,
+            if i + 1 < profiles.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -335,8 +364,9 @@ fn main() {
     }
 
     println!("\n== cluster loop: sequential vs sharded supersteps ==");
+    let mut profiles: Vec<(String, niyama::obs::prof::ProfileSummary)> = Vec::new();
     {
-        use niyama::config::{DispatchPolicy, ParallelConfig};
+        use niyama::config::{DispatchPolicy, ParallelConfig, ProfilingConfig};
         use niyama::simulator::cluster::Cluster;
         // Static fleet, no control plane: these rows isolate the event
         // loop itself, so the w=1 column is the sequential oracle and
@@ -367,6 +397,32 @@ fn main() {
                     events as f64 / wall
                 );
                 sims.push((format!("cluster.r{replicas}.w{workers}"), n, events, wall));
+
+                // Profiler-on twin: the delta between this row and the
+                // one above is exactly what the profiler costs when on,
+                // and its summary is the worker-utilization story for
+                // this (replicas, workers) point.
+                c.cluster.profiling = Some(ProfilingConfig { enabled: true });
+                let t0 = Instant::now();
+                let mut cl = Cluster::new(&c, replicas);
+                cl.submit_trace(trace.clone());
+                cl.run(4000.0);
+                let wall = t0.elapsed().as_secs_f64();
+                let events = cl.stats.events;
+                let name = format!("cluster.r{replicas}.w{workers}.prof");
+                let p = cl.profile_summary().expect("profiling was enabled");
+                let utils: Vec<String> =
+                    p.worker_util.iter().map(|w| format!("{:.0}", w.utilization_pct)).collect();
+                println!(
+                    "        prof twin   {events} events in {wall:.3}s — coord {:.4}s, \
+                     stripe {:.4}s, barrier {:.4}s, util [{}]%",
+                    p.coordinator_total_s,
+                    p.stripe_busy_s,
+                    p.barrier_wait_s,
+                    utils.join(" ")
+                );
+                sims.push((name.clone(), n, events, wall));
+                profiles.push((name, p));
             }
         }
     }
@@ -434,5 +490,5 @@ fn main() {
         }
     }
 
-    write_json(&stats, &sims, &sessions);
+    write_json(&stats, &sims, &sessions, &profiles);
 }

@@ -744,6 +744,36 @@ impl AuditConfig {
     }
 }
 
+/// Wall-clock profiler knob (see [`crate::obs::prof`]). Configured
+/// under `cluster.profiling`; when the block is absent the
+/// `NIYAMA_PROF` environment variable decides, and the default is off.
+/// The profiler only reads the wall clock and aggregates it for export
+/// — never a simulation input — so a profiled run's output is
+/// bit-for-bit the unprofiled run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProfilingConfig {
+    /// Record per-superstep wall times and the coordinator phase
+    /// breakdown (exported via `Cluster::profile_json` and friends).
+    pub enabled: bool,
+}
+
+impl Default for ProfilingConfig {
+    fn default() -> Self {
+        ProfilingConfig { enabled: true }
+    }
+}
+
+impl ProfilingConfig {
+    /// Parse a JSON `profiling` object: present means on, overridden per
+    /// key (`{"enabled": false}` pins the profiler off even under
+    /// `NIYAMA_PROF=1`).
+    fn from_json(j: &Json) -> Result<ProfilingConfig> {
+        let mut k = ProfilingConfig::default();
+        override_bool(j, "enabled", &mut k.enabled);
+        Ok(k)
+    }
+}
+
 /// Elastic control-plane policy selector (see `simulator::control`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AutoscalePolicy {
@@ -846,6 +876,9 @@ pub struct ClusterConfig {
     /// Runtime invariant auditor (`None` = the `NIYAMA_AUDIT` env
     /// default, falling back to off).
     pub audit: Option<AuditConfig>,
+    /// Wall-clock profiler (`None` = the `NIYAMA_PROF` env default,
+    /// falling back to off).
+    pub profiling: Option<ProfilingConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -860,6 +893,7 @@ impl Default for ClusterConfig {
             parallel: None,
             observability: None,
             audit: None,
+            profiling: None,
         }
     }
 }
@@ -889,6 +923,20 @@ impl ClusterConfig {
             return a.enabled;
         }
         std::env::var("NIYAMA_AUDIT")
+            .map(|v| matches!(v.trim(), "1" | "true"))
+            .unwrap_or(false)
+    }
+
+    /// Whether the wall-clock profiler runs: the explicit `profiling`
+    /// block when present (so a config can pin it on *or* off), else the
+    /// `NIYAMA_PROF` environment override, else off. Anything but
+    /// `1`/`true` in the env counts as off. Same precedence as
+    /// [`ClusterConfig::effective_audit`].
+    pub fn effective_profiling(&self) -> bool {
+        if let Some(p) = &self.profiling {
+            return p.enabled;
+        }
+        std::env::var("NIYAMA_PROF")
             .map(|v| matches!(v.trim(), "1" | "true"))
             .unwrap_or(false)
     }
@@ -998,6 +1046,9 @@ impl Config {
             }
             if let Some(a) = c.get("audit") {
                 cfg.cluster.audit = Some(AuditConfig::from_json(a)?);
+            }
+            if let Some(p) = c.get("profiling") {
+                cfg.cluster.profiling = Some(ProfilingConfig::from_json(p)?);
             }
             if let Some(ctl) = c.get("control") {
                 // With pools configured, autoscale bounds live on the
@@ -1532,6 +1583,20 @@ mod tests {
         let c = Config::from_json_str(r#"{"cluster": {"audit": {"enabled": false}}}"#).unwrap();
         assert_eq!(c.cluster.audit, Some(AuditConfig { enabled: false }));
         assert!(!c.cluster.effective_audit());
+    }
+
+    #[test]
+    fn profiling_defaults_off_and_parses() {
+        assert!(Config::default().cluster.profiling.is_none());
+        // An empty block means "profile" — presence is the opt-in.
+        let c = Config::from_json_str(r#"{"cluster": {"profiling": {}}}"#).unwrap();
+        assert_eq!(c.cluster.profiling, Some(ProfilingConfig { enabled: true }));
+        assert!(c.cluster.effective_profiling());
+        // An explicit `enabled: false` pins the profiler off even under
+        // NIYAMA_PROF=1 (the block beats the env var).
+        let c = Config::from_json_str(r#"{"cluster": {"profiling": {"enabled": false}}}"#).unwrap();
+        assert_eq!(c.cluster.profiling, Some(ProfilingConfig { enabled: false }));
+        assert!(!c.cluster.effective_profiling());
     }
 
     #[test]

@@ -147,6 +147,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
     repro::set_obs_paths(repro::ObsPaths {
         trace: args.get("trace").map(str::to_string),
         series: args.get("series").map(str::to_string),
+        prof: args.get("prof").map(str::to_string),
     });
     repro::run(id, scale)
 }
@@ -218,9 +219,11 @@ fn usage() -> &'static str {
      serve     --artifacts DIR --addr HOST:PORT [--policy P]\n\
      simulate  --policy P --dataset D --qps N --duration S [--config FILE]\n\
      repro     --id <fig1|fig2|fig4|fig5|fig7a|fig7b|fig8|fig9|fig10|fig11|fig12|tab1|tab3|dispatch|autoscale|hetero|migration|sessions|all>\n\
-               [--quick|--full] [--trace FILE] [--series FILE]   (or: repro --list)\n\
+               [--quick|--full] [--trace FILE] [--series FILE] [--prof FILE]\n\
+               (or: repro --list)\n\
                (--trace / --series export the migration surge's Perfetto\n\
-                trace and per-tick time series; see docs in src/obs)\n\
+                trace and per-tick time series; --prof exports its wall-clock\n\
+                profile + a FILE.trace.json Chrome trace; see src/obs)\n\
      calibrate\n\
      \n\
      policies: niyama, sarathi-fcfs, sarathi-edf, sarathi-srpf, sarathi-sjf\n\

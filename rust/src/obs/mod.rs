@@ -25,6 +25,8 @@ use crate::qos::Slo;
 use crate::request::{Phase, Request, RequestId};
 use std::fmt::Write as _;
 
+pub mod prof;
+
 // ---------------------------------------------------------------------------
 // Event vocabulary
 // ---------------------------------------------------------------------------

@@ -1,0 +1,710 @@
+//! Wall-clock profiler for the simulator's own hot path (`NIYAMA_PROF=1`
+//! / `cluster.profiling`): where does a cluster run spend *real* time —
+//! stripe work, barrier stalls, or coordinator phases?
+//!
+//! The flight recorder (`crate::obs`) observes the *simulated system* on
+//! the virtual clock; this module observes the *simulator* on the wall
+//! clock. The two never mix: profiling is strictly output-only. Off is
+//! `Option::None` on the cluster (every hook one branch, zero
+//! allocation); on, the run's `Summary` fingerprint, replica timelines
+//! and every virtual-clock output are bit-for-bit the unprofiled run —
+//! wall time is read, aggregated and exported, but never fed back into
+//! a simulation decision (`tests/profiling.rs` pins this across worker
+//! counts 1/2/8 on both event loops).
+//!
+//! This is the **single** wall-clock-exempt module under the
+//! conformance lint's virtual-time purity rule (`tools/conformance_lint`,
+//! `WALL_CLOCK_EXEMPT`): every `Instant::now` read in simulator code
+//! lives here, behind [`WallTimer`]. `cluster.rs` and `parallel.rs`
+//! interact with real time only through this module's types.
+//!
+//! What is recorded:
+//!
+//! - **per superstep** (sharded loop): the safe horizon, the window's
+//!   wall time as the coordinator saw it, and each shard's stripe wall
+//!   time — from which per-worker barrier wait (max stripe minus own
+//!   stripe, an imbalance measure needing no cross-thread clock sync)
+//!   and a worker-utilization histogram follow;
+//! - **per coordinator phase**: dispatch, handoff scan, migration
+//!   planning, audit barrier, obs merge (series sampling + superstep
+//!   report merge) and scaling, as totals, call counts and individual
+//!   slices;
+//! - **sequential loop**: engine-step ("stripe") time and the same
+//!   coordinator phases, so the w=1 oracle profiles on the same axes.
+//!
+//! Exports: [`ProfileSummary`] (totals, percentages, utilization
+//! histogram, slowest-superstep top-K) as JSON, and a *wall-clock*
+//! Chrome trace with the coordinator and each worker thread as tracks
+//! (same event idioms as [`crate::obs::chrome_trace`], microsecond
+//! timestamps — but wall microseconds since the profiler started, not
+//! virtual time).
+
+use std::fmt::Write as _;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Number of slowest supersteps kept in the summary.
+const TOP_K: usize = 8;
+
+/// Utilization histogram buckets (each covers 10% of a window).
+const HIST_BUCKETS: usize = 10;
+
+/// A started wall-clock measurement. The only way simulator code touches
+/// real time: `Cluster`/`ShardPool` hold one per timed region and hand
+/// it back to the [`Profiler`], which turns it into an offset + duration
+/// against its own epoch. Reading it never affects the virtual clock.
+#[derive(Debug)]
+pub struct WallTimer {
+    t0: Instant,
+}
+
+impl WallTimer {
+    pub fn start() -> WallTimer {
+        WallTimer { t0: Instant::now() }
+    }
+
+    /// Seconds since [`WallTimer::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Coordinator phases of the cluster event loop, in breakdown order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordPhase {
+    /// Admission + dispatcher decision for one arrival.
+    Dispatch,
+    /// Relegation-handoff scan after a replica stepped / at a barrier.
+    HandoffScan,
+    /// Drain moves + live-migration planning at a control tick.
+    MigrationPlanning,
+    /// Runtime invariant auditor at a coordinator barrier.
+    AuditBarrier,
+    /// Observability merges: series sampling and superstep report merge.
+    ObsMerge,
+    /// Pool floors + autoscale controller decision and its execution.
+    Scaling,
+}
+
+impl CoordPhase {
+    pub const ALL: [CoordPhase; 6] = [
+        CoordPhase::Dispatch,
+        CoordPhase::HandoffScan,
+        CoordPhase::MigrationPlanning,
+        CoordPhase::AuditBarrier,
+        CoordPhase::ObsMerge,
+        CoordPhase::Scaling,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CoordPhase::Dispatch => "dispatch",
+            CoordPhase::HandoffScan => "handoff_scan",
+            CoordPhase::MigrationPlanning => "migration_planning",
+            CoordPhase::AuditBarrier => "audit_barrier",
+            CoordPhase::ObsMerge => "obs_merge",
+            CoordPhase::Scaling => "scaling",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            CoordPhase::Dispatch => 0,
+            CoordPhase::HandoffScan => 1,
+            CoordPhase::MigrationPlanning => 2,
+            CoordPhase::AuditBarrier => 3,
+            CoordPhase::ObsMerge => 4,
+            CoordPhase::Scaling => 5,
+        }
+    }
+}
+
+/// One coordinator phase slice (offsets in seconds since the profiler's
+/// epoch), kept for the Chrome-trace export.
+#[derive(Debug, Clone, Copy)]
+struct PhaseEvent {
+    phase: CoordPhase,
+    start_s: f64,
+    dur_s: f64,
+}
+
+/// One superstep window of the sharded loop, as the coordinator saw it.
+#[derive(Debug, Clone)]
+pub struct SuperstepRecord {
+    /// Window ordinal within this profiler's lifetime.
+    pub seq: u64,
+    /// Shared virtual clock when the window opened.
+    pub t_virtual: f64,
+    /// The window's global safe horizon (virtual seconds).
+    pub safe_horizon: f64,
+    /// Wall offset of the window start, seconds since the profiler epoch.
+    pub start_s: f64,
+    /// Full window wall time on the coordinator: job fan-out, all stripe
+    /// work, and the report barrier.
+    pub wall_s: f64,
+    /// Each shard's own stripe wall time (index = shard). The gap to
+    /// `wall_s` is coordinator-side channel overhead; the gap to the
+    /// slowest stripe is that worker's barrier wait.
+    pub stripe_wall_s: Vec<f64>,
+}
+
+impl SuperstepRecord {
+    /// Slowest stripe in this window (0.0 if no shard reported work).
+    pub fn max_stripe_s(&self) -> f64 {
+        self.stripe_wall_s.iter().fold(0.0, |m, &s| m.max(s))
+    }
+
+    /// Spread between the slowest and fastest stripe — the wall time the
+    /// fastest worker spent waiting at the barrier.
+    pub fn barrier_spread_s(&self) -> f64 {
+        let min = self.stripe_wall_s.iter().fold(f64::INFINITY, |m, &s| m.min(s));
+        if min.is_finite() {
+            (self.max_stripe_s() - min).max(0.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-worker utilization over the whole run.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerUtil {
+    pub worker: usize,
+    /// Wall seconds spent advancing this worker's stripes.
+    pub busy_s: f64,
+    /// Wall seconds waited at window barriers (slowest stripe minus own).
+    pub barrier_wait_s: f64,
+    /// `busy_s` as a percentage of the summed superstep window wall time
+    /// (sequential runs: of the run's total wall time).
+    pub utilization_pct: f64,
+}
+
+/// Coordinator phase totals.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseTotal {
+    pub phase: CoordPhase,
+    pub total_s: f64,
+    pub calls: u64,
+    /// Share of the run's total wall time.
+    pub pct_of_total: f64,
+}
+
+/// The aggregated profile: what [`Profiler::summary`] exports.
+#[derive(Debug, Clone)]
+pub struct ProfileSummary {
+    pub workers: usize,
+    /// Wall time from profiler construction to the summary call.
+    pub total_wall_s: f64,
+    /// Superstep windows recorded (0 on the sequential loop).
+    pub supersteps: u64,
+    /// Summed superstep window wall time.
+    pub superstep_wall_s: f64,
+    /// Sequential-loop engine steps recorded (0 on the sharded loop).
+    pub seq_steps: u64,
+    /// Summed sequential engine-step wall time.
+    pub seq_step_wall_s: f64,
+    pub coordinator: Vec<PhaseTotal>,
+    pub coordinator_total_s: f64,
+    /// Summed stripe busy time across workers (sequential runs: the
+    /// engine-step total).
+    pub stripe_busy_s: f64,
+    /// Summed barrier wait across workers and windows.
+    pub barrier_wait_s: f64,
+    pub worker_util: Vec<WorkerUtil>,
+    /// Count of (worker, window) samples per 10%-utilization bucket:
+    /// bucket `b` holds samples with stripe/window in `[10b%, 10b+10%)`.
+    pub utilization_histogram: [u64; HIST_BUCKETS],
+    /// Slowest superstep windows by wall time, descending.
+    pub slowest_supersteps: Vec<SuperstepRecord>,
+}
+
+/// Wall-clock profiler for one cluster. Held as `Option<Box<Profiler>>`
+/// so the off path allocates nothing; every record call is
+/// coordinator-side (the only cross-thread wall reads are the shards'
+/// own [`WallTimer`]s, whose durations travel back in `ShardReport`).
+#[derive(Debug)]
+pub struct Profiler {
+    t0: Instant,
+    workers: usize,
+    phase_total_s: [f64; 6],
+    phase_calls: [u64; 6],
+    phase_events: Vec<PhaseEvent>,
+    supersteps: Vec<SuperstepRecord>,
+    busy_s: Vec<f64>,
+    barrier_wait_s: Vec<f64>,
+    utilization_histogram: [u64; HIST_BUCKETS],
+    seq_steps: u64,
+    seq_step_wall_s: f64,
+}
+
+impl Profiler {
+    pub fn new(workers: usize) -> Profiler {
+        let workers = workers.max(1);
+        Profiler {
+            t0: Instant::now(),
+            workers,
+            phase_total_s: [0.0; 6],
+            phase_calls: [0; 6],
+            phase_events: Vec::new(),
+            supersteps: Vec::new(),
+            busy_s: vec![0.0; workers],
+            barrier_wait_s: vec![0.0; workers],
+            utilization_histogram: [0; HIST_BUCKETS],
+            seq_steps: 0,
+            seq_step_wall_s: 0.0,
+        }
+    }
+
+    /// Seconds since the profiler was built.
+    fn offset_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Close a coordinator phase slice started at `timer`.
+    pub fn record_phase(&mut self, phase: CoordPhase, timer: WallTimer) {
+        let dur = timer.elapsed_s();
+        let start = (self.offset_s() - dur).max(0.0);
+        self.phase_total_s[phase.idx()] += dur;
+        self.phase_calls[phase.idx()] += 1;
+        self.phase_events.push(PhaseEvent { phase, start_s: start, dur_s: dur });
+    }
+
+    /// One sequential-loop engine step (the w=1 analogue of stripe time).
+    pub fn record_seq_step(&mut self, timer: WallTimer) {
+        let dur = timer.elapsed_s();
+        self.seq_steps += 1;
+        self.seq_step_wall_s += dur;
+        self.busy_s[0] += dur;
+    }
+
+    /// Close one superstep window: `timer` was started just before the
+    /// window's job fan-out, `stripe_wall_s[w]` is shard `w`'s own
+    /// stripe time from its report.
+    pub fn record_superstep(
+        &mut self,
+        t_virtual: f64,
+        safe_horizon: f64,
+        timer: WallTimer,
+        stripe_wall_s: &[f64],
+    ) {
+        let wall = timer.elapsed_s();
+        let start = (self.offset_s() - wall).max(0.0);
+        let rec = SuperstepRecord {
+            seq: self.supersteps.len() as u64,
+            t_virtual,
+            safe_horizon,
+            start_s: start,
+            wall_s: wall,
+            stripe_wall_s: stripe_wall_s.to_vec(),
+        };
+        let max = rec.max_stripe_s();
+        for (w, &s) in stripe_wall_s.iter().enumerate() {
+            if w < self.busy_s.len() {
+                self.busy_s[w] += s;
+                self.barrier_wait_s[w] += (max - s).max(0.0);
+            }
+            let frac = if wall > 0.0 { (s / wall).clamp(0.0, 1.0) } else { 0.0 };
+            let bucket = ((frac * HIST_BUCKETS as f64) as usize).min(HIST_BUCKETS - 1);
+            self.utilization_histogram[bucket] += 1;
+        }
+        self.supersteps.push(rec);
+    }
+
+    /// Aggregate everything recorded so far.
+    pub fn summary(&self) -> ProfileSummary {
+        let total_wall_s = self.offset_s();
+        let superstep_wall_s: f64 = self.supersteps.iter().map(|r| r.wall_s).sum();
+        let coordinator_total_s: f64 = self.phase_total_s.iter().sum();
+        let denom = total_wall_s.max(1e-12);
+        let coordinator = CoordPhase::ALL
+            .iter()
+            .map(|&p| PhaseTotal {
+                phase: p,
+                total_s: self.phase_total_s[p.idx()],
+                calls: self.phase_calls[p.idx()],
+                pct_of_total: 100.0 * self.phase_total_s[p.idx()] / denom,
+            })
+            .collect();
+        // Utilization denominator: the time workers could have been
+        // busy — summed window wall on the sharded loop, the whole run
+        // on the sequential loop (there are no windows).
+        let util_denom =
+            if self.supersteps.is_empty() { denom } else { superstep_wall_s.max(1e-12) };
+        let worker_util = (0..self.workers)
+            .map(|w| WorkerUtil {
+                worker: w,
+                busy_s: self.busy_s[w],
+                barrier_wait_s: self.barrier_wait_s[w],
+                utilization_pct: 100.0 * self.busy_s[w] / util_denom,
+            })
+            .collect();
+        let mut slowest: Vec<SuperstepRecord> = self.supersteps.clone();
+        slowest.sort_by(|a, b| b.wall_s.total_cmp(&a.wall_s).then(a.seq.cmp(&b.seq)));
+        slowest.truncate(TOP_K);
+        ProfileSummary {
+            workers: self.workers,
+            total_wall_s,
+            supersteps: self.supersteps.len() as u64,
+            superstep_wall_s,
+            seq_steps: self.seq_steps,
+            seq_step_wall_s: self.seq_step_wall_s,
+            coordinator,
+            coordinator_total_s,
+            stripe_busy_s: self.busy_s.iter().sum(),
+            barrier_wait_s: self.barrier_wait_s.iter().sum(),
+            worker_util,
+            utilization_histogram: self.utilization_histogram,
+            slowest_supersteps: slowest,
+        }
+    }
+
+    /// Wall-clock Chrome trace (Perfetto-loadable): one process, the
+    /// coordinator as tid 0 (phase slices + superstep window slices) and
+    /// each worker thread as its own track (stripe slices). Timestamps
+    /// are wall microseconds since the profiler epoch — deliberately NOT
+    /// the virtual-time axis of [`crate::obs::chrome_trace`].
+    pub fn chrome_trace(&self) -> String {
+        let n_events =
+            self.phase_events.len() + self.supersteps.len() * (1 + self.workers) + self.workers + 2;
+        let mut out = String::with_capacity(128 * n_events + 256);
+        out.push_str("{\"traceEvents\":[");
+        let _ = write!(
+            out,
+            "\n{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+             \"args\":{{\"name\":\"niyama simulator (wall clock)\"}}}}"
+        );
+        let _ = write!(
+            out,
+            ",\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+             \"args\":{{\"name\":\"coordinator\"}}}}"
+        );
+        for w in 0..self.workers {
+            let _ = write!(
+                out,
+                ",\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\
+                 \"args\":{{\"name\":\"niyama-shard-{w}\"}}}}",
+                w + 1
+            );
+        }
+        for e in &self.phase_events {
+            let _ = write!(
+                out,
+                ",\n{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":0,\"ts\":{:.3},\
+                 \"dur\":{:.3}}}",
+                e.phase.name(),
+                e.start_s * 1e6,
+                e.dur_s * 1e6
+            );
+        }
+        for r in &self.supersteps {
+            let _ = write!(
+                out,
+                ",\n{{\"name\":\"superstep\",\"ph\":\"X\",\"pid\":0,\"tid\":0,\"ts\":{:.3},\
+                 \"dur\":{:.3},\"args\":{{\"seq\":{},\"t_virtual\":{:.6},\
+                 \"safe_horizon\":{:.6}}}}}",
+                r.start_s * 1e6,
+                r.wall_s * 1e6,
+                r.seq,
+                r.t_virtual,
+                r.safe_horizon
+            );
+            for (w, &s) in r.stripe_wall_s.iter().enumerate() {
+                let _ = write!(
+                    out,
+                    ",\n{{\"name\":\"stripe\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{:.3},\
+                     \"dur\":{:.3},\"args\":{{\"seq\":{}}}}}",
+                    w + 1,
+                    r.start_s * 1e6,
+                    s * 1e6,
+                    r.seq
+                );
+            }
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+}
+
+impl ProfileSummary {
+    /// Render as one JSON object (manual writer, same idiom as
+    /// [`crate::obs::SeriesRow::to_json_line`]).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n  \"schema\": \"niyama-wall-clock-profile-v1\",\n");
+        let _ = write!(s, "  \"workers\": {},\n", self.workers);
+        let _ = write!(s, "  \"total_wall_s\": {:.6},\n", self.total_wall_s);
+        let _ = write!(s, "  \"supersteps\": {},\n", self.supersteps);
+        let _ = write!(s, "  \"superstep_wall_s\": {:.6},\n", self.superstep_wall_s);
+        let _ = write!(s, "  \"seq_steps\": {},\n", self.seq_steps);
+        let _ = write!(s, "  \"seq_step_wall_s\": {:.6},\n", self.seq_step_wall_s);
+        s.push_str("  \"coordinator\": [\n");
+        for (i, p) in self.coordinator.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"phase\": \"{}\", \"total_s\": {:.6}, \"calls\": {}, \
+                 \"pct_of_total\": {:.2}}}{}\n",
+                p.phase.name(),
+                p.total_s,
+                p.calls,
+                p.pct_of_total,
+                if i + 1 < self.coordinator.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n");
+        let _ = write!(s, "  \"coordinator_total_s\": {:.6},\n", self.coordinator_total_s);
+        let _ = write!(s, "  \"stripe_busy_s\": {:.6},\n", self.stripe_busy_s);
+        let _ = write!(s, "  \"barrier_wait_s\": {:.6},\n", self.barrier_wait_s);
+        s.push_str("  \"worker_utilization\": [\n");
+        for (i, u) in self.worker_util.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"worker\": {}, \"busy_s\": {:.6}, \"barrier_wait_s\": {:.6}, \
+                 \"utilization_pct\": {:.2}}}{}\n",
+                u.worker,
+                u.busy_s,
+                u.barrier_wait_s,
+                u.utilization_pct,
+                if i + 1 < self.worker_util.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n  \"utilization_histogram\": [");
+        for (i, c) in self.utilization_histogram.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(s, "{c}");
+        }
+        s.push_str("],\n  \"slowest_supersteps\": [\n");
+        for (i, r) in self.slowest_supersteps.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"seq\": {}, \"t_virtual\": {:.6}, \"safe_horizon\": {:.6}, \
+                 \"wall_s\": {:.6}, \"max_stripe_s\": {:.6}, \"barrier_spread_s\": {:.6}}}{}\n",
+                r.seq,
+                r.t_virtual,
+                r.safe_horizon,
+                r.wall_s,
+                r.max_stripe_s(),
+                r.barrier_spread_s(),
+                if i + 1 < self.slowest_supersteps.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// The compact coordinator/stripe/barrier split the repro harness
+    /// appends next to `wall_clock_s` (one JSON object, no trailing
+    /// newline — it embeds mid-artifact).
+    pub fn split_json(&self) -> String {
+        format!(
+            "{{\"workers\": {}, \"supersteps\": {}, \"coordinator_s\": {:.6}, \
+             \"stripe_busy_s\": {:.6}, \"barrier_wait_s\": {:.6}, \"total_wall_s\": {:.6}}}",
+            self.workers,
+            self.supersteps,
+            self.coordinator_total_s,
+            self.stripe_busy_s,
+            self.barrier_wait_s,
+            self.total_wall_s
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide totals (repro artifacts)
+// ---------------------------------------------------------------------------
+
+/// Totals across every profiled cluster of this process, published when
+/// a [`Profiler`] drops. The repro harness renders them as the
+/// `wall_clock_profile` block of its JSON artifacts (an experiment runs
+/// many clusters; the per-cluster profiles are summed). Touched only
+/// when profiling is on, so the off path takes no lock.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GlobalTotals {
+    pub runs: u64,
+    pub workers_max: usize,
+    pub supersteps: u64,
+    pub seq_steps: u64,
+    pub coordinator_s: f64,
+    pub stripe_busy_s: f64,
+    pub barrier_wait_s: f64,
+    pub profiled_wall_s: f64,
+}
+
+static GLOBAL: Mutex<GlobalTotals> = Mutex::new(GlobalTotals {
+    runs: 0,
+    workers_max: 0,
+    supersteps: 0,
+    seq_steps: 0,
+    coordinator_s: 0.0,
+    stripe_busy_s: 0.0,
+    barrier_wait_s: 0.0,
+    profiled_wall_s: 0.0,
+});
+
+/// Snapshot of the process-wide totals (`runs == 0` until the first
+/// profiled cluster is dropped).
+pub fn global_totals() -> GlobalTotals {
+    *GLOBAL.lock().expect("profiler totals lock poisoned")
+}
+
+impl GlobalTotals {
+    /// The `wall_clock_profile` block for repro JSON artifacts (one
+    /// object, no trailing newline).
+    pub fn split_json(&self) -> String {
+        format!(
+            "{{\"runs\": {}, \"workers_max\": {}, \"supersteps\": {}, \"seq_steps\": {}, \
+             \"coordinator_s\": {:.6}, \"stripe_busy_s\": {:.6}, \"barrier_wait_s\": {:.6}, \
+             \"profiled_wall_s\": {:.6}}}",
+            self.runs,
+            self.workers_max,
+            self.supersteps,
+            self.seq_steps,
+            self.coordinator_s,
+            self.stripe_busy_s,
+            self.barrier_wait_s,
+            self.profiled_wall_s
+        )
+    }
+}
+
+impl Drop for Profiler {
+    fn drop(&mut self) {
+        let mut g = GLOBAL.lock().expect("profiler totals lock poisoned");
+        g.runs += 1;
+        g.workers_max = g.workers_max.max(self.workers);
+        g.supersteps += self.supersteps.len() as u64;
+        g.seq_steps += self.seq_steps;
+        g.coordinator_s += self.phase_total_s.iter().sum::<f64>();
+        g.stripe_busy_s += self.busy_s.iter().sum::<f64>();
+        g.barrier_wait_s += self.barrier_wait_s.iter().sum::<f64>();
+        g.profiled_wall_s += self.offset_s();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spin_for(timer: &WallTimer, s: f64) {
+        while timer.elapsed_s() < s {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn phase_totals_and_calls_accumulate() {
+        let mut p = Profiler::new(1);
+        for _ in 0..3 {
+            let t = WallTimer::start();
+            spin_for(&t, 1e-4);
+            p.record_phase(CoordPhase::Dispatch, t);
+        }
+        let t = WallTimer::start();
+        p.record_phase(CoordPhase::Scaling, t);
+        let s = p.summary();
+        let dispatch = &s.coordinator[CoordPhase::Dispatch.idx()];
+        assert_eq!(dispatch.calls, 3);
+        assert!(dispatch.total_s >= 3e-4, "dispatch total {}", dispatch.total_s);
+        assert_eq!(s.coordinator[CoordPhase::Scaling.idx()].calls, 1);
+        assert_eq!(s.coordinator[CoordPhase::HandoffScan.idx()].calls, 0);
+        assert!(s.total_wall_s >= s.coordinator_total_s);
+    }
+
+    #[test]
+    fn superstep_records_barrier_wait_as_imbalance() {
+        let mut p = Profiler::new(2);
+        let t = WallTimer::start();
+        spin_for(&t, 2e-4);
+        p.record_superstep(10.0, 12.5, t, &[2e-4, 5e-5]);
+        let s = p.summary();
+        assert_eq!(s.supersteps, 1);
+        assert_eq!(s.worker_util.len(), 2);
+        // Worker 0 was the slowest stripe: no barrier wait. Worker 1
+        // waited out the difference.
+        assert_eq!(s.worker_util[0].barrier_wait_s.to_bits(), 0.0f64.to_bits());
+        let want = 2e-4 - 5e-5;
+        assert!((s.worker_util[1].barrier_wait_s - want).abs() < 1e-12);
+        assert!(s.stripe_busy_s > 0.0);
+        // Two (worker, window) samples land in the histogram.
+        assert_eq!(s.utilization_histogram.iter().sum::<u64>(), 2);
+        let rec = &s.slowest_supersteps[0];
+        assert_eq!(rec.seq, 0);
+        assert_eq!(rec.t_virtual.to_bits(), 10.0f64.to_bits());
+        assert_eq!(rec.safe_horizon.to_bits(), 12.5f64.to_bits());
+        assert!((rec.barrier_spread_s() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowest_supersteps_are_top_k_by_wall_time() {
+        let mut p = Profiler::new(1);
+        for i in 0..(TOP_K + 4) {
+            let t = WallTimer::start();
+            // Make window i's wall time grow with i so the ordering is
+            // deterministic.
+            spin_for(&t, 1e-5 * (i as f64 + 1.0));
+            p.record_superstep(i as f64, i as f64 + 1.0, t, &[0.0]);
+        }
+        let s = p.summary();
+        assert_eq!(s.slowest_supersteps.len(), TOP_K);
+        for pair in s.slowest_supersteps.windows(2) {
+            assert!(pair[0].wall_s >= pair[1].wall_s, "top-K must be sorted descending");
+        }
+        assert_eq!(s.slowest_supersteps[0].seq, (TOP_K + 4 - 1) as u64);
+    }
+
+    #[test]
+    fn json_and_chrome_trace_are_balanced() {
+        let mut p = Profiler::new(2);
+        let t = WallTimer::start();
+        p.record_phase(CoordPhase::ObsMerge, t);
+        let t = WallTimer::start();
+        p.record_superstep(1.0, 2.0, t, &[1e-5, 2e-5]);
+        let t = WallTimer::start();
+        p.record_seq_step(t);
+        let s = p.summary();
+        for text in [s.to_json(), p.chrome_trace(), s.split_json()] {
+            let opens = text.matches('{').count();
+            let closes = text.matches('}').count();
+            assert_eq!(opens, closes, "unbalanced braces in: {text}");
+            let ob = text.matches('[').count();
+            let cb = text.matches(']').count();
+            assert_eq!(ob, cb, "unbalanced brackets in: {text}");
+        }
+        let json = s.to_json();
+        for key in [
+            "\"schema\": \"niyama-wall-clock-profile-v1\"",
+            "\"coordinator\"",
+            "\"worker_utilization\"",
+            "\"utilization_histogram\"",
+            "\"slowest_supersteps\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        let trace = p.chrome_trace();
+        assert!(trace.contains("\"name\":\"niyama-shard-1\""), "worker tracks: {trace}");
+        assert!(trace.contains("\"name\":\"superstep\""));
+        assert!(trace.contains("\"name\":\"stripe\""));
+    }
+
+    #[test]
+    fn dropping_a_profiler_publishes_global_totals() {
+        let before = global_totals();
+        {
+            let mut p = Profiler::new(4);
+            let t = WallTimer::start();
+            p.record_superstep(0.0, 1.0, t, &[1e-6, 1e-6, 1e-6, 1e-6]);
+            let t = WallTimer::start();
+            p.record_phase(CoordPhase::Dispatch, t);
+        }
+        let after = global_totals();
+        // Other tests may publish concurrently; assert monotone deltas,
+        // not exact values.
+        assert!(after.runs >= before.runs + 1);
+        assert!(after.supersteps >= before.supersteps + 1);
+        assert!(after.workers_max >= 4);
+        assert!(after.profiled_wall_s >= before.profiled_wall_s);
+        let block = after.split_json();
+        assert!(block.contains("\"coordinator_s\""), "{block}");
+    }
+}

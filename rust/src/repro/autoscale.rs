@@ -281,6 +281,9 @@ pub fn autoscale(scale: Scale) -> Result<()> {
     writeln!(out, "  \"experiment\": \"autoscale\",")?;
     writeln!(out, "  \"duration_s\": {duration},")?;
     writeln!(out, "  \"wall_clock_s\": {:.3},", wall_t0.elapsed().as_secs_f64())?;
+    if let Some(p) = super::wall_clock_profile_json() {
+        writeln!(out, "  \"wall_clock_profile\": {p},")?;
+    }
     writeln!(out, "  \"surge_window_s\": [{surge_start}, {surge_end}],")?;
     writeln!(out, "  \"requests\": {},", trace.len())?;
     writeln!(out, "  \"rows\": [")?;

@@ -231,6 +231,9 @@ pub fn hetero(scale: Scale) -> Result<()> {
     writeln!(out, "  \"experiment\": \"hetero\",")?;
     writeln!(out, "  \"duration_s\": {duration},")?;
     writeln!(out, "  \"wall_clock_s\": {:.3},", wall_t0.elapsed().as_secs_f64())?;
+    if let Some(p) = super::wall_clock_profile_json() {
+        writeln!(out, "  \"wall_clock_profile\": {p},")?;
+    }
     writeln!(out, "  \"requests\": {},", trace.len())?;
     writeln!(
         out,

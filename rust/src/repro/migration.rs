@@ -28,7 +28,9 @@
 //! the CSV.
 
 use super::{drain_budget, f, CsvOut, Scale};
-use crate::config::{Config, DispatchPolicy, InterconnectConfig, ObservabilityConfig};
+use crate::config::{
+    Config, DispatchPolicy, InterconnectConfig, ObservabilityConfig, ProfilingConfig,
+};
 use crate::metrics::Summary;
 use crate::qos::Importance;
 use crate::request::RequestSpec;
@@ -119,13 +121,14 @@ pub fn surge_trace(duration_s: f64) -> Vec<RequestSpec> {
 }
 
 /// Build and run the surge cluster, optionally with the flight recorder
-/// on, and return it for inspection (summary, trace, series). Shared by
-/// [`run_surge`], the experiment's traced export and the
-/// `flight_recorder` example.
+/// and/or wall-clock profiler on, and return it for inspection
+/// (summary, trace, series, profile). Shared by [`run_surge`], the
+/// experiment's traced export and the `flight_recorder` example.
 pub fn surge_cluster(
     duration_s: f64,
     live_migration: bool,
     obs: Option<ObservabilityConfig>,
+    prof: bool,
 ) -> Cluster {
     let mut cfg = Config::default();
     cfg.cluster.dispatch.policy = DispatchPolicy::RoundRobin;
@@ -134,6 +137,7 @@ pub fn surge_cluster(
     cfg.cluster.dispatch.relegation_handoff = true;
     cfg.cluster.control.control_interval_s = 2.5;
     cfg.cluster.observability = obs;
+    cfg.cluster.profiling = prof.then(|| ProfilingConfig { enabled: true });
     if live_migration {
         cfg.cluster.interconnect = Some(interconnect());
     }
@@ -147,7 +151,7 @@ pub fn surge_cluster(
 /// experiment and the regression tests.
 pub fn run_surge(duration_s: f64, live_migration: bool) -> Summary {
     let n = surge_trace(duration_s).len();
-    let cluster = surge_cluster(duration_s, live_migration, None);
+    let cluster = surge_cluster(duration_s, live_migration, None, false);
     let summary = cluster.summary(6251);
     assert_eq!(summary.total, n, "surge run must conserve requests");
     summary
@@ -224,14 +228,16 @@ pub fn migration(scale: Scale) -> Result<()> {
         }
     }
 
-    // ---- optional flight-recorder export ---------------------------------
-    // `--trace` / `--series` re-run the live surge with the recorder on
-    // (the headline numbers above stay from the recorder-off runs).
+    // ---- optional flight-recorder / profiler export ----------------------
+    // `--trace` / `--series` / `--prof` re-run the live surge with the
+    // recorder (and/or profiler) on (the headline numbers above stay
+    // from the instrumented-off runs).
     let paths = super::obs_paths();
-    if paths.trace.is_some() || paths.series.is_some() {
-        let obs =
-            ObservabilityConfig { trace: paths.trace.is_some(), series: paths.series.is_some() };
-        let cluster = surge_cluster(duration, true, Some(obs));
+    if paths.trace.is_some() || paths.series.is_some() || paths.prof.is_some() {
+        let obs = (paths.trace.is_some() || paths.series.is_some()).then(|| {
+            ObservabilityConfig { trace: paths.trace.is_some(), series: paths.series.is_some() }
+        });
+        let cluster = surge_cluster(duration, true, obs, paths.prof.is_some());
         if let (Some(path), Some(json)) = (&paths.trace, cluster.trace_json()) {
             std::fs::write(path, json)?;
             println!("wrote Perfetto trace to {path}");
@@ -239,6 +245,18 @@ pub fn migration(scale: Scale) -> Result<()> {
         if let (Some(path), Some(jsonl)) = (&paths.series, cluster.series_jsonl()) {
             std::fs::write(path, jsonl)?;
             println!("wrote time series to {path}");
+        }
+        if let (Some(path), Some(json)) = (&paths.prof, cluster.profile_json()) {
+            std::fs::write(path, json)?;
+            println!("wrote wall-clock profile to {path}");
+            // The wall-clock Chrome trace rides along as FILE.trace.json
+            // (a separate artifact: same format as --trace's but on the
+            // wall axis, with worker threads as tracks).
+            if let Some(trace) = cluster.profile_chrome_trace() {
+                let tpath = format!("{path}.trace.json");
+                std::fs::write(&tpath, trace)?;
+                println!("wrote wall-clock Chrome trace to {tpath}");
+            }
         }
     }
 
@@ -249,6 +267,9 @@ pub fn migration(scale: Scale) -> Result<()> {
     writeln!(out, "{{")?;
     writeln!(out, "  \"experiment\": \"migration\",")?;
     writeln!(out, "  \"wall_clock_s\": {:.3},", wall_t0.elapsed().as_secs_f64())?;
+    if let Some(p) = super::wall_clock_profile_json() {
+        writeln!(out, "  \"wall_clock_profile\": {p},")?;
+    }
     writeln!(out, "  \"drain\": {{")?;
     writeln!(out, "    \"handoff_only_drain_s\": {:.4},", base.drain_s)?;
     writeln!(out, "    \"live_migration_drain_s\": {:.4},", live.drain_s)?;

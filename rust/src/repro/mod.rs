@@ -59,14 +59,16 @@ impl Scale {
     }
 }
 
-/// Flight-recorder export paths requested on the CLI (`--trace PATH`,
-/// `--series PATH`). Set once before [`run`]; experiments that drive a
-/// traced run (the migration surge) consult them and write the merged
-/// Perfetto trace / series JSONL there.
+/// Flight-recorder / profiler export paths requested on the CLI
+/// (`--trace PATH`, `--series PATH`, `--prof PATH`). Set once before
+/// [`run`]; experiments that drive a traced run (the migration surge)
+/// consult them and write the merged Perfetto trace / series JSONL /
+/// wall-clock profile there.
 #[derive(Debug, Clone, Default)]
 pub struct ObsPaths {
     pub trace: Option<String>,
     pub series: Option<String>,
+    pub prof: Option<String>,
 }
 
 static OBS_PATHS: OnceLock<ObsPaths> = OnceLock::new();
@@ -80,6 +82,20 @@ pub fn set_obs_paths(paths: ObsPaths) {
 /// The installed export paths (default: none requested).
 pub fn obs_paths() -> ObsPaths {
     OBS_PATHS.get().cloned().unwrap_or_default()
+}
+
+/// The process-wide wall-clock profile as one JSON object value —
+/// appended under a `"wall_clock_profile"` key, right next to
+/// `"wall_clock_s"`, in every repro JSON artifact *when profiling is
+/// on* (`NIYAMA_PROF=1` / `cluster.profiling`). `None` when no profiled
+/// cluster has run, so unprofiled artifacts are byte-identical to
+/// before the profiler existed. An experiment runs many clusters; the
+/// block is the coordinator/stripe/barrier split summed over all of
+/// them (each cluster publishes its totals on drop — see
+/// `obs::prof::global_totals`).
+pub fn wall_clock_profile_json() -> Option<String> {
+    let g = crate::obs::prof::global_totals();
+    (g.runs > 0).then(|| g.split_json())
 }
 
 /// A summary's per-tier SLO-violation autopsy as one JSON array value —

@@ -160,6 +160,9 @@ pub fn sessions(scale: Scale) -> Result<()> {
     writeln!(out, "{{")?;
     writeln!(out, "  \"experiment\": \"sessions\",")?;
     writeln!(out, "  \"wall_clock_s\": {:.3},", wall_t0.elapsed().as_secs_f64())?;
+    if let Some(p) = super::wall_clock_profile_json() {
+        writeln!(out, "  \"wall_clock_profile\": {p},")?;
+    }
     writeln!(out, "  \"replicas\": {REPLICAS},")?;
     writeln!(out, "  \"gpus\": {gpus},")?;
     writeln!(out, "  \"duration_s\": {duration},")?;

@@ -100,6 +100,7 @@ use crate::config::{
 };
 use crate::engine::{AdmitTag, Engine, LoadSnapshot, SimBackend};
 use crate::metrics::{summarize_many, Summary};
+use crate::obs::prof::{CoordPhase, ProfileSummary, Profiler, WallTimer};
 use crate::obs::{Event, SeriesRow, TraceBuf};
 use crate::request::{RequestSpec, RequestStore};
 use crate::simulator::control::{
@@ -291,6 +292,14 @@ pub struct Cluster {
     /// clock monotonicity at every coordinator barrier, panicking with a
     /// replayable report on violation; it never feeds back into the run.
     audit: Option<Box<crate::audit::Auditor>>,
+    /// Wall-clock profiler (`NIYAMA_PROF=1` / `cluster.profiling`;
+    /// `None` — the default — makes every profiling hook a single
+    /// branch and allocates nothing). Strictly output-only: it records
+    /// superstep windows, stripe/barrier imbalance and coordinator
+    /// phases into `obs::prof`, and nothing it measures ever feeds a
+    /// simulation decision — profiled runs are fingerprint- and
+    /// timeline-identical to unprofiled ones (`tests/profiling.rs`).
+    prof: Option<Box<Profiler>>,
     pub stats: ClusterStats,
 }
 
@@ -427,6 +436,10 @@ impl Cluster {
                 .cluster
                 .effective_audit()
                 .then(|| Box::new(crate::audit::Auditor::new(cfg.seed))),
+            prof: cfg
+                .cluster
+                .effective_profiling()
+                .then(|| Box::new(Profiler::new(cfg.cluster.effective_workers()))),
             stats: ClusterStats {
                 dispatched: vec![0; replicas],
                 rejected: vec![0; n_tiers],
@@ -559,6 +572,7 @@ impl Cluster {
     /// Record one time-series sample of cluster gauges at virtual time
     /// `t`. Retired slots contribute only to the lifecycle counts.
     fn sample_series(&mut self, t: f64, tick: u64) {
+        let pt = self.prof_start();
         self.refresh_snapshots();
         let n_tiers = self.tiers.len();
         let mut row = SeriesRow {
@@ -593,6 +607,7 @@ impl Cluster {
             }
         }
         self.series.as_mut().expect("caller checked the sampler is on").push(row);
+        self.prof_phase(CoordPhase::ObsMerge, pt);
     }
 
     /// The coordinator-side trace buffer (`None` when tracing is off).
@@ -631,6 +646,44 @@ impl Cluster {
             out.push('\n');
         }
         Some(out)
+    }
+
+    // ---- wall-clock profiling (see `crate::obs::prof`) --------------------
+
+    /// Start a wall-clock measurement iff the profiler is on. The off
+    /// path is one branch and never reads the clock, keeping unprofiled
+    /// runs byte-identical to the pre-profiler system.
+    #[inline]
+    fn prof_start(&self) -> Option<WallTimer> {
+        self.prof.as_ref().map(|_| WallTimer::start())
+    }
+
+    /// Close a coordinator phase slice opened by [`Cluster::prof_start`].
+    #[inline]
+    fn prof_phase(&mut self, phase: CoordPhase, t: Option<WallTimer>) {
+        if let (Some(p), Some(t)) = (self.prof.as_mut(), t) {
+            p.record_phase(phase, t);
+        }
+    }
+
+    /// The aggregated wall-clock profile (`None` when profiling is off —
+    /// the off path holds no profiler state at all, which
+    /// `tests/profiling.rs` pins).
+    pub fn profile_summary(&self) -> Option<ProfileSummary> {
+        self.prof.as_ref().map(|p| p.summary())
+    }
+
+    /// The wall-clock profile rendered as JSON (`None` when off).
+    pub fn profile_json(&self) -> Option<String> {
+        self.profile_summary().map(|s| s.to_json())
+    }
+
+    /// The wall-clock Chrome trace — coordinator phases and worker
+    /// threads as tracks on the *wall* time axis (`None` when off).
+    /// Deliberately a separate artifact from [`Cluster::trace_json`],
+    /// which renders the *virtual* timeline.
+    pub fn profile_chrome_trace(&self) -> Option<String> {
+        self.prof.as_ref().map(|p| p.chrome_trace())
     }
 
     /// Whether replica `i`'s pool serves `tier` (affinity mask 0 = all).
@@ -1310,6 +1363,7 @@ impl Cluster {
         self.stats.control_ticks += 1;
         self.promote_warming();
         self.refresh_snapshots();
+        let pt = self.prof_start();
         for i in 0..self.engines.len() {
             if matches!(self.states[i], ReplicaState::Draining { .. }) {
                 self.try_drain_moves(i);
@@ -1317,9 +1371,11 @@ impl Cluster {
             }
         }
         self.live_rebalance_tick();
+        self.prof_phase(CoordPhase::MigrationPlanning, pt);
         if self.controller.is_none() {
             return;
         }
+        let pt = self.prof_start();
         // Enforce every pool's configured floor regardless of policy
         // signals: a pool started (or left) below `min_replicas`
         // re-orders capacity up to it — the floor is a guarantee, not a
@@ -1384,6 +1440,7 @@ impl Cluster {
                 }
             }
         }
+        self.prof_phase(CoordPhase::Scaling, pt);
     }
 
     /// Llumnix-style relegation handoff: after replica `origin` steps, try
@@ -1399,6 +1456,7 @@ impl Cluster {
         if self.engines.len() < 2 {
             return;
         }
+        let pt = self.prof_start();
         let candidates = self.engines[origin].handoff_candidates();
         for id in candidates {
             self.refresh_snapshots();
@@ -1492,6 +1550,7 @@ impl Cluster {
             self.reheap(origin);
             self.reheap(t);
         }
+        self.prof_phase(CoordPhase::HandoffScan, pt);
     }
 
     /// Run the cluster event loop until every replica drains or the next
@@ -1572,14 +1631,24 @@ impl Cluster {
                     self.clock = self.clock.max(a);
                     let spec = self.trace[self.next_arrival].clone();
                     self.next_arrival += 1;
+                    let pt = self.prof_start();
                     self.dispatch_arrival(spec);
+                    self.prof_phase(CoordPhase::Dispatch, pt);
                 }
                 (_, Some((t, i))) => {
                     if t >= horizon_s {
                         break;
                     }
                     self.clock = self.clock.max(t);
-                    if !self.engines[i].step() {
+                    let st = self.prof_start();
+                    let progressed = self.engines[i].step();
+                    if let (Some(p), Some(timer)) = (self.prof.as_mut(), st) {
+                        // The sequential loop's analogue of stripe time:
+                        // the engine-step work itself, booked to the one
+                        // "worker".
+                        p.record_seq_step(timer);
+                    }
+                    if !progressed {
                         // Active work but no schedulable batch (e.g. a
                         // baseline starved of KV headroom): park the
                         // replica until new work arrives.
@@ -1714,7 +1783,9 @@ impl Cluster {
                     self.clock = self.clock.max(at);
                     let spec = self.trace[self.next_arrival].clone();
                     self.next_arrival += 1;
+                    let pt = self.prof_start();
                     self.dispatch_arrival(spec);
+                    self.prof_phase(CoordPhase::Dispatch, pt);
                     self.stats.events += 1;
                 }
                 // Only replica events remain and none is before the safe
@@ -1744,7 +1815,18 @@ impl Cluster {
     /// makes the result worker-count-invariant.
     fn superstep_window(&mut self, pool: &mut ShardPool, safe_h: f64) {
         let window_start_clock = self.clock;
-        let reports = pool.run_window(&mut self.engines, &self.states, &self.wedged, safe_h);
+        let wt = self.prof_start();
+        let reports =
+            pool.run_window(&mut self.engines, &self.states, &self.wedged, safe_h, wt.is_some());
+        if let (Some(p), Some(wt)) = (self.prof.as_mut(), wt) {
+            // Reports arrive in completion order; attribute by shard.
+            let mut stripe_walls = vec![0.0; reports.len()];
+            for r in &reports {
+                stripe_walls[r.shard] = r.wall_s;
+            }
+            p.record_superstep(window_start_clock, safe_h, wt, &stripe_walls);
+        }
+        let mt = self.prof_start();
         let mut t_max: Option<f64> = None;
         let mut drains: Vec<(f64, usize)> = Vec::new();
         let mut stepped: Vec<usize> = Vec::new();
@@ -1775,6 +1857,9 @@ impl Cluster {
         if let Some(t) = t_max {
             self.clock = self.clock.max(t);
         }
+        // Close the merge phase before the handoff scans — try_handoff
+        // books its own HandoffScan slices.
+        self.prof_phase(CoordPhase::ObsMerge, mt);
         if self.relegation_handoff {
             stepped.sort_unstable();
             for i in stepped {
@@ -1849,18 +1934,22 @@ impl Cluster {
     /// branch when the auditor is off.
     fn audit_barrier(&mut self) {
         let Some(mut aud) = self.audit.take() else { return };
+        let pt = self.prof_start();
         aud.check_barrier(&self.audit_view());
         self.audit = Some(aud);
+        self.prof_phase(CoordPhase::AuditBarrier, pt);
     }
 
     /// Audit hook at the end of [`Cluster::run`]: the barrier checks
     /// plus terminal-state and SLO-autopsy closure over every store.
     fn audit_run_end(&mut self) {
         let Some(mut aud) = self.audit.take() else { return };
+        let pt = self.prof_start();
         let view = self.audit_view();
         let stores: Vec<&RequestStore> = self.engines.iter().map(|e| &e.store).collect();
         aud.check_run_end(&view, &stores);
         self.audit = Some(aud);
+        self.prof_phase(CoordPhase::AuditBarrier, pt);
     }
 }
 

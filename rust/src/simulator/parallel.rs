@@ -56,6 +56,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::engine::{Engine, SimBackend};
+use crate::obs::prof::WallTimer;
 use crate::simulator::control::ReplicaState;
 use crate::simulator::stripes::{self, StripeView};
 
@@ -82,6 +83,9 @@ struct WindowJob {
     view: StripeView<Engine<SimBackend>>,
     flags: Arc<[EngineFlags]>,
     horizon: f64,
+    /// Wall-clock profiling requested: time the stripe and report it in
+    /// [`ShardReport::wall_s`]. Off skips the clock reads entirely.
+    prof: bool,
 }
 
 /// What one shard did inside a window — everything the coordinator
@@ -89,6 +93,11 @@ struct WindowJob {
 /// sequential loop would have done mid-window.
 #[derive(Debug, Default)]
 pub struct ShardReport {
+    /// Which shard produced this report. Reports arrive at the barrier
+    /// in completion order, not shard order — consumers that attribute
+    /// per-worker data (the profiler) must index by this, not by
+    /// position.
+    pub shard: usize,
     /// Engine iterations executed (cluster events).
     pub steps: u64,
     /// Latest event start time processed; `None` if the stripe was idle.
@@ -102,6 +111,11 @@ pub struct ShardReport {
     /// order to stamp retirement edges exactly where the sequential loop
     /// would have.
     pub drained: Vec<(f64, usize)>,
+    /// Wall-clock seconds this shard spent advancing its stripe (0.0
+    /// when profiling is off). Output-only: the merge never reads it —
+    /// it flows straight into `obs::prof` for barrier-imbalance and
+    /// utilization reporting.
+    pub wall_s: f64,
 }
 
 /// What a worker sends back at the end of a window: its report, or the
@@ -119,7 +133,9 @@ fn advance_stripe(
     view: StripeView<Engine<SimBackend>>,
     flags: &[EngineFlags],
     horizon: f64,
+    prof: bool,
 ) -> ShardReport {
+    let timer = prof.then(WallTimer::start);
     let mut rep = ShardReport::default();
     view.for_each(|i, eng| {
         let fl = flags[i];
@@ -139,21 +155,28 @@ fn advance_stripe(
             rep.drained.push((t, i));
         }
     });
+    if let Some(t) = timer {
+        rep.wall_s = t.elapsed_s();
+    }
     rep
 }
 
 fn worker_loop(shard: usize, jobs: Receiver<WindowJob>, results: Sender<ShardMsg>) {
     while let Ok(job) = jobs.recv() {
-        let WindowJob { view, flags, horizon } = job;
+        let WindowJob { view, flags, horizon, prof } = job;
         // AssertUnwindSafe: on a panic the coordinator re-throws and the
         // whole run (pool, engines and all) unwinds with it — the
         // possibly-inconsistent engine state is never observed again.
         // The view drops inside the catch either way, so the window
         // barrier in `stripes::run_window` always releases.
-        let msg = match catch_unwind(AssertUnwindSafe(|| advance_stripe(view, &flags, horizon))) {
-            Ok(rep) => ShardMsg::Report(rep),
-            Err(payload) => ShardMsg::Panicked { shard, payload },
-        };
+        let msg =
+            match catch_unwind(AssertUnwindSafe(|| advance_stripe(view, &flags, horizon, prof))) {
+                Ok(mut rep) => {
+                    rep.shard = shard;
+                    ShardMsg::Report(rep)
+                }
+                Err(payload) => ShardMsg::Panicked { shard, payload },
+            };
         let died = matches!(msg, ShardMsg::Panicked { .. });
         if results.send(msg).is_err() || died {
             return;
@@ -204,12 +227,17 @@ impl ShardPool {
     /// A shard panic is re-thrown here with its original payload (the
     /// worker ships it back before exiting), so an engine bug surfaces
     /// with its real message instead of a dead-channel error.
+    ///
+    /// `prof` asks each shard to wall-clock its stripe into
+    /// [`ShardReport::wall_s`]; it changes nothing about the window's
+    /// simulation outcome.
     pub fn run_window(
         &mut self,
         engines: &mut [Engine<SimBackend>],
         states: &[ReplicaState],
         wedged: &[bool],
         horizon: f64,
+        prof: bool,
     ) -> Vec<ShardReport> {
         assert_eq!(engines.len(), states.len());
         assert_eq!(engines.len(), wedged.len());
@@ -222,7 +250,7 @@ impl ShardPool {
             })
             .collect();
         stripes::run_window(engines, self.jobs.len(), |shard, view| {
-            let job = WindowJob { view, flags: Arc::clone(&flags), horizon };
+            let job = WindowJob { view, flags: Arc::clone(&flags), horizon, prof };
             // A send to a dead worker drops the job — and the view with
             // it, releasing that stripe's share of the barrier. The
             // death itself surfaces in collect_reports below.
@@ -327,7 +355,7 @@ mod tests {
         let states = vec![ReplicaState::Active; 5];
         let wedged = vec![false; 5];
         let mut pool = ShardPool::new(3);
-        let reports = pool.run_window(&mut pooled, &states, &wedged, 20.0);
+        let reports = pool.run_window(&mut pooled, &states, &wedged, 20.0, false);
         let (mut steps, mut t_max) = (0u64, f64::NEG_INFINITY);
         for r in &reports {
             steps += r.steps;
@@ -336,6 +364,7 @@ mod tests {
             }
             assert!(r.wedged.is_empty());
             assert!(r.drained.is_empty());
+            assert_eq!(r.wall_s.to_bits(), 0.0f64.to_bits(), "profiling off reports no wall time");
         }
         let mut want_steps = 0;
         let mut want_t = f64::NEG_INFINITY;
@@ -373,7 +402,7 @@ mod tests {
             let n = engines.len();
             let states = vec![ReplicaState::Active; n];
             let wedged = vec![false; n];
-            pool.run_window(engines, &states, &wedged, horizon);
+            pool.run_window(engines, &states, &wedged, horizon, false);
             for e in twins.iter_mut() {
                 e.advance_window(horizon, false);
             }
@@ -398,6 +427,33 @@ mod tests {
     }
 
     #[test]
+    fn profiled_window_reports_stripe_wall_time_without_changing_state() {
+        // prof=true must populate wall_s on every busy shard while
+        // leaving the engines in exactly the unprofiled state.
+        let mut profiled: Vec<Engine<SimBackend>> = (0..4u64).map(loaded_engine).collect();
+        let mut plain: Vec<Engine<SimBackend>> = (0..4u64).map(loaded_engine).collect();
+        let states = vec![ReplicaState::Active; 4];
+        let wedged = vec![false; 4];
+        let mut pool = ShardPool::new(2);
+        let reports = pool.run_window(&mut profiled, &states, &wedged, 20.0, true);
+        for r in &reports {
+            if r.steps > 0 {
+                assert!(r.wall_s > 0.0, "a busy profiled stripe must report wall time");
+            }
+            assert!(r.wall_s.is_finite());
+        }
+        // Every shard reported exactly once, whatever the arrival order.
+        let mut shards: Vec<usize> = reports.iter().map(|r| r.shard).collect();
+        shards.sort_unstable();
+        assert_eq!(shards, vec![0, 1]);
+        pool.run_window(&mut plain, &states, &wedged, 20.0, false);
+        for (p, s) in profiled.iter().zip(&plain) {
+            assert_eq!(p.now().to_bits(), s.now().to_bits());
+            assert_eq!(p.stats.iterations, s.stats.iterations);
+        }
+    }
+
+    #[test]
     fn shard_panic_surfaces_with_its_real_payload() {
         // Seed a poisoned window directly through the module internals:
         // advance_stripe indexes `flags[i]`, so an empty flags slice
@@ -409,7 +465,7 @@ mod tests {
         let empty: Arc<[EngineFlags]> = Vec::new().into();
         let err = catch_unwind(AssertUnwindSafe(|| {
             stripes::run_window(&mut engines, 2, |shard, view| {
-                let job = WindowJob { view, flags: Arc::clone(&empty), horizon: 5.0 };
+                let job = WindowJob { view, flags: Arc::clone(&empty), horizon: 5.0, prof: false };
                 let _ = pool.jobs[shard].send(job);
             });
             pool.collect_reports(2)

@@ -1,0 +1,198 @@
+//! Wall-clock profiler neutrality (ISSUE 10 acceptance):
+//!
+//! 1. Profiling is strictly **output-only**: the same scenario run with
+//!    `cluster.profiling` on and off produces bit-identical `Summary`
+//!    fingerprints, replica timelines, retirement instants and cluster
+//!    stats — under the sequential loop (workers=1) and the sharded
+//!    loop (workers 2/8) alike.
+//! 2. The off path allocates no profiler state: every profile accessor
+//!    returns `None`.
+//! 3. The on path actually measures: supersteps (sharded) / sequential
+//!    steps (workers=1) are recorded, totals are finite and positive,
+//!    the utilization histogram is consistent with the superstep count,
+//!    and the JSON / Chrome-trace exports are well-formed.
+//!
+//! Both runs pin the config block explicitly (`enabled: true/false`) so
+//! a `NIYAMA_PROF` environment leg in CI cannot flip either side — the
+//! explicit block wins over the env var by the config precedence rule.
+
+use niyama::config::{
+    AutoscalePolicy, Config, DispatchPolicy, InterconnectConfig, ParallelConfig,
+    ProfilingConfig,
+};
+use niyama::metrics::Summary;
+use niyama::simulator::cluster::Cluster;
+use niyama::util::Rng;
+use niyama::workload::datasets::Dataset;
+use niyama::workload::{ArrivalProcess, WorkloadSpec};
+
+const LT: u32 = 6251;
+
+/// A compact everything-at-once scenario: Poisson base load plus a
+/// burst that triggers predictive scale-ups (Scaling + MigrationPlanning
+/// phases), on a dispatcher that exercises the Dispatch phase, with an
+/// interconnect so drains use live migration.
+fn trace() -> Vec<niyama::request::RequestSpec> {
+    let mut base = WorkloadSpec::uniform(Dataset::azure_code(), 0.5, 400.0);
+    base.arrivals = ArrivalProcess::Poisson { qps: 0.5 };
+    let mut t = base.generate(&mut Rng::new(3));
+    let mut surge = WorkloadSpec::uniform(Dataset::azure_code(), 1.0, 400.0);
+    surge.arrivals = ArrivalProcess::Burst {
+        base_qps: 0.0,
+        burst_qps: 12.0,
+        burst_start_s: 120.0,
+        burst_end_s: 220.0,
+    };
+    t.extend(surge.generate(&mut Rng::new(4)));
+    t
+}
+
+fn scenario_cfg(workers: usize, prof: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.dispatch.policy = DispatchPolicy::LeastLoaded;
+    cfg.cluster.control.autoscale = AutoscalePolicy::Predictive;
+    cfg.cluster.control.min_replicas = 1;
+    cfg.cluster.control.max_replicas = 3;
+    cfg.cluster.control.warmup_s = 10.0;
+    cfg.cluster.control.control_interval_s = 2.5;
+    cfg.cluster.control.hold_s = 5.0;
+    cfg.cluster.interconnect = Some(InterconnectConfig::default());
+    cfg.cluster.parallel = Some(ParallelConfig { workers });
+    // Explicit either way: the block wins over NIYAMA_PROF, so CI env
+    // legs cannot turn the "off" side on (or vice versa).
+    cfg.cluster.profiling = Some(ProfilingConfig { enabled: prof });
+    cfg
+}
+
+fn run_scenario(workers: usize, prof: bool) -> (Cluster, Summary) {
+    let mut cluster = Cluster::new(&scenario_cfg(workers, prof), 1);
+    cluster.submit_trace(trace());
+    cluster.run(4000.0);
+    let s = cluster.summary(LT);
+    (cluster, s)
+}
+
+fn assert_identical(label: &str, a: &(Cluster, Summary), b: &(Cluster, Summary)) {
+    assert_eq!(a.1.fingerprint(), b.1.fingerprint(), "{label}: Summary must be byte-identical");
+    assert_eq!(
+        a.0.eval_time().to_bits(),
+        b.0.eval_time().to_bits(),
+        "{label}: evaluation horizon must match to the bit"
+    );
+    assert_eq!(a.0.replica_timeline(), b.0.replica_timeline(), "{label}: timelines");
+    for (i, (x, y)) in a.0.retirement_times().iter().zip(b.0.retirement_times()).enumerate() {
+        assert_eq!(
+            x.map(f64::to_bits),
+            y.map(f64::to_bits),
+            "{label}: retirement instant of replica {i}"
+        );
+    }
+    assert_eq!(a.0.replica_states(), b.0.replica_states(), "{label}: lifecycle states");
+    assert_eq!(a.0.stats.events, b.0.stats.events, "{label}: event count");
+    assert_eq!(a.0.stats.dispatched, b.0.stats.dispatched, "{label}: per-replica dispatch");
+    assert_eq!(a.0.stats.scale_ups, b.0.stats.scale_ups, "{label}: scale-ups");
+    assert_eq!(a.0.stats.control_ticks, b.0.stats.control_ticks, "{label}: control ticks");
+}
+
+#[test]
+fn profiling_is_fingerprint_neutral_across_worker_counts() {
+    for workers in [1usize, 2, 8] {
+        let off = run_scenario(workers, false);
+        let on = run_scenario(workers, true);
+        assert!(on.1.total > 500, "premise: a real workload, not a toy");
+        assert!(
+            on.0.stats.scale_ups > 0,
+            "premise: the burst must exercise the scaling phase"
+        );
+        assert_identical(&format!("workers={workers} profiled vs unprofiled"), &off, &on);
+    }
+}
+
+#[test]
+fn off_path_allocates_no_profiler_state() {
+    let (cluster, _) = run_scenario(2, false);
+    assert!(cluster.profile_summary().is_none(), "no Profiler may exist when off");
+    assert!(cluster.profile_json().is_none());
+    assert!(cluster.profile_chrome_trace().is_none());
+    // `profiling` absent entirely (and no env override) is also off.
+    let mut cfg = scenario_cfg(2, false);
+    cfg.cluster.profiling = None;
+    if !cfg.cluster.effective_profiling() {
+        let cluster = Cluster::new(&cfg, 1);
+        assert!(cluster.profile_summary().is_none());
+    }
+}
+
+#[test]
+fn profiled_sharded_run_measures_supersteps_and_workers() {
+    let (cluster, _) = run_scenario(8, true);
+    let p = cluster.profile_summary().expect("profiling was on");
+    assert_eq!(p.workers, 8);
+    assert!(p.supersteps > 0, "the sharded loop runs in supersteps");
+    assert!(p.superstep_wall_s > 0.0 && p.superstep_wall_s.is_finite());
+    assert!(p.total_wall_s >= p.superstep_wall_s, "windows are part of the run");
+    assert_eq!(p.worker_util.len(), 8, "one utilization row per worker");
+    for w in &p.worker_util {
+        assert!(w.busy_s >= 0.0 && w.barrier_wait_s >= 0.0);
+        assert!((0.0..=100.0).contains(&w.utilization_pct), "{}", w.utilization_pct);
+    }
+    // Histogram buckets one sample per (superstep, worker).
+    let hist_total: u64 = p.utilization_histogram.iter().sum();
+    assert_eq!(hist_total, p.supersteps * 8, "histogram covers every stripe window");
+    assert!(!p.slowest_supersteps.is_empty());
+    assert!(
+        p.slowest_supersteps.windows(2).all(|w| w[0].wall_s >= w[1].wall_s),
+        "top-K sorted slowest-first"
+    );
+    // Coordinator phases observed in this scenario: at least dispatch
+    // and the superstep obs merge must have fired.
+    let by_name = |n: &str| {
+        p.coordinator
+            .iter()
+            .find(|t| t.phase.name() == n)
+            .unwrap_or_else(|| panic!("phase {n} missing"))
+            .calls
+    };
+    assert!(by_name("dispatch") > 0, "arrivals were dispatched");
+    assert!(by_name("obs_merge") > 0, "superstep merges were timed");
+}
+
+#[test]
+fn profiled_sequential_run_books_time_to_worker_zero() {
+    let (cluster, _) = run_scenario(1, true);
+    let p = cluster.profile_summary().expect("profiling was on");
+    assert_eq!(p.workers, 1);
+    assert!(p.seq_steps > 0, "the sequential loop records per-step timings");
+    assert!(p.seq_step_wall_s > 0.0);
+    assert_eq!(p.worker_util.len(), 1);
+    assert!(p.worker_util[0].busy_s > 0.0, "sequential time books to worker 0");
+}
+
+#[test]
+fn exports_are_well_formed() {
+    let (cluster, _) = run_scenario(2, true);
+    let json = cluster.profile_json().expect("profiling was on");
+    for (open, close) in [('{', '}'), ('[', ']')] {
+        assert_eq!(
+            json.matches(open).count(),
+            json.matches(close).count(),
+            "balanced {open}{close} in summary JSON"
+        );
+    }
+    for key in [
+        "niyama-wall-clock-profile-v1",
+        "worker_utilization",
+        "utilization_histogram",
+        "slowest_supersteps",
+        "coordinator_total_s",
+    ] {
+        assert!(json.contains(key), "summary JSON must carry {key}");
+    }
+    let trace = cluster.profile_chrome_trace().expect("profiling was on");
+    for (open, close) in [('{', '}'), ('[', ']')] {
+        assert_eq!(trace.matches(open).count(), trace.matches(close).count());
+    }
+    assert!(trace.contains("coordinator"), "coordinator track named");
+    assert!(trace.contains("niyama-shard-0"), "worker tracks named");
+    assert!(trace.contains("\"ph\":\"X\""), "complete events present");
+}

@@ -1,0 +1,528 @@
+//! Perf-regression gate over `BENCH_scheduler_hot_path.json` files
+//! (std-only; CI step + local check).
+//!
+//! Compares a candidate bench JSON against a baseline, prints a per-row
+//! delta table, and exits non-zero when any gated metric regresses past
+//! the threshold. "Regresses" is direction-aware: `median_us`, `p99_us`
+//! and `wall_s` are lower-is-better; `iters_per_s` and `hit_rate` are
+//! higher-is-better.
+//!
+//! Rows are keyed by `name` within each section (`cases`, `end_to_end`,
+//! `sessions`). Rows present only in the candidate are new work and are
+//! reported but never gated; rows present only in the baseline are
+//! reported as removed, also without gating (the bench row set evolves
+//! with the repo). A baseline with empty or missing sections — like the
+//! checked-in schema-only copy from the toolchain-less authoring
+//! container — is therefore neutral: the gate arms itself the moment a
+//! populated baseline is committed, with no CI change.
+//!
+//! Usage: `bench_diff <baseline.json> <candidate.json>
+//!         [--threshold-pct N]`   (default threshold: 25%)
+
+use std::process::ExitCode;
+
+/// Default tolerated worsening, percent. Microbenchmarks under CI noise
+/// need headroom; real regressions from algorithmic changes are far
+/// larger than this.
+const DEFAULT_THRESHOLD_PCT: f64 = 25.0;
+
+/// (section, metric, lower_is_better) triples the gate inspects. `p99`
+/// is deliberately gated at the same threshold as the median: a
+/// tail-only regression is exactly the kind the median hides.
+const GATES: &[(&str, &str, bool)] = &[
+    ("cases", "median_us", true),
+    ("cases", "p99_us", true),
+    ("end_to_end", "wall_s", true),
+    ("end_to_end", "iters_per_s", false),
+    ("sessions", "hit_rate", false),
+];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut threshold = DEFAULT_THRESHOLD_PCT;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--threshold-pct" {
+            let Some(v) = args.get(i + 1).and_then(|v| v.parse::<f64>().ok()) else {
+                eprintln!("bench_diff: --threshold-pct expects a number");
+                return ExitCode::from(2);
+            };
+            threshold = v;
+            i += 2;
+        } else {
+            paths.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let [base_path, cand_path] = paths.as_slice() else {
+        eprintln!(
+            "usage: bench_diff <baseline.json> <candidate.json> [--threshold-pct N]"
+        );
+        return ExitCode::from(2);
+    };
+    let base = match load(base_path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench_diff: {base_path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let cand = match load(cand_path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench_diff: {cand_path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let d = diff(&base, &cand, threshold);
+    print!("{}", d.render());
+    if d.regressions.is_empty() {
+        println!(
+            "bench_diff: OK — {} row(s) compared, {} skipped, threshold {threshold}%",
+            d.compared, d.skipped
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "bench_diff: {} regression(s) past {threshold}% (of {} compared row(s))",
+            d.regressions.len(),
+            d.compared
+        );
+        ExitCode::from(1)
+    }
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    parse_json(&text)
+}
+
+// ---- diff -------------------------------------------------------------
+
+/// One compared metric on one row.
+struct Delta {
+    section: &'static str,
+    name: String,
+    metric: &'static str,
+    base: f64,
+    cand: f64,
+    /// Signed worsening percent: positive means worse, whatever the
+    /// metric's direction.
+    worse_pct: f64,
+    regressed: bool,
+}
+
+struct Diff {
+    deltas: Vec<Delta>,
+    /// "section/name.metric" keys past the threshold.
+    regressions: Vec<String>,
+    compared: usize,
+    skipped: usize,
+    notes: Vec<String>,
+}
+
+impl Diff {
+    fn render(&self) -> String {
+        let mut out = String::new();
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        for d in &self.deltas {
+            out.push_str(&format!(
+                "  {:<10} {:<44} {:<12} {:>12.3} -> {:>12.3}  {:>+7.1}%{}\n",
+                d.section,
+                d.name,
+                d.metric,
+                d.base,
+                d.cand,
+                d.worse_pct,
+                if d.regressed { "  REGRESSION" } else { "" }
+            ));
+        }
+        out
+    }
+}
+
+/// Compare candidate against baseline over every gated (section,
+/// metric). Missing sections and rows are skipped, never failed.
+fn diff(base: &Json, cand: &Json, threshold_pct: f64) -> Diff {
+    let mut d = Diff {
+        deltas: Vec::new(),
+        regressions: Vec::new(),
+        compared: 0,
+        skipped: 0,
+        notes: Vec::new(),
+    };
+    for &(section, metric, lower_is_better) in GATES {
+        let base_rows = rows(base, section);
+        let cand_rows = rows(cand, section);
+        for (name, crow) in &cand_rows {
+            let Some(brow) = base_rows.iter().find(|(b, _)| b == name).map(|(_, r)| r)
+            else {
+                d.skipped += 1;
+                d.notes.push(format!("{section}/{name}: not in baseline, skipped"));
+                continue;
+            };
+            let (Some(bv), Some(cv)) = (num(brow, metric), num(crow, metric)) else {
+                d.skipped += 1;
+                continue;
+            };
+            // A zero/denormal baseline makes percent change meaningless
+            // (smoke runs can round a fast case to 0); skip, don't gate.
+            if bv.abs() < 1e-12 {
+                d.skipped += 1;
+                continue;
+            }
+            let change_pct = (cv - bv) / bv * 100.0;
+            let worse_pct = if lower_is_better { change_pct } else { -change_pct };
+            let regressed = worse_pct > threshold_pct;
+            d.compared += 1;
+            if regressed {
+                d.regressions.push(format!("{section}/{name}.{metric}"));
+            }
+            d.deltas.push(Delta {
+                section,
+                name: name.clone(),
+                metric,
+                base: bv,
+                cand: cv,
+                worse_pct,
+                regressed,
+            });
+        }
+        for (name, _) in &base_rows {
+            if !cand_rows.iter().any(|(c, _)| c == name) {
+                d.notes.push(format!("{section}/{name}: removed in candidate"));
+            }
+        }
+    }
+    // Dedup: notes repeat per gated metric of the same section.
+    d.notes.sort();
+    d.notes.dedup();
+    d
+}
+
+/// The `(name, row-object)` pairs of `doc[section]`, empty when the
+/// section is missing, not an array, or rows are malformed.
+fn rows<'a>(doc: &'a Json, section: &str) -> Vec<(String, &'a Json)> {
+    let Json::Obj(fields) = doc else { return Vec::new() };
+    let Some(Json::Arr(items)) = fields.iter().find(|(k, _)| k == section).map(|(_, v)| v)
+    else {
+        return Vec::new();
+    };
+    items
+        .iter()
+        .filter_map(|row| match row {
+            Json::Obj(f) => f.iter().find_map(|(k, v)| match (k.as_str(), v) {
+                ("name", Json::Str(s)) => Some((s.clone(), row)),
+                _ => None,
+            }),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Numeric field `key` of a row object.
+fn num(row: &Json, key: &str) -> Option<f64> {
+    let Json::Obj(fields) = row else { return None };
+    fields.iter().find_map(|(k, v)| match (k == key, v) {
+        (true, Json::Num(n)) => Some(*n),
+        _ => None,
+    })
+}
+
+// ---- minimal JSON parser ----------------------------------------------
+// The dependency-free environment has no serde; this recursive-descent
+// parser covers the full JSON grammar minus `\u` surrogate pairing
+// (bench names are plain ASCII), which is all the gate needs.
+
+#[derive(Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+fn parse_json(text: &str) -> Result<Json, String> {
+    let b = text.as_bytes();
+    let mut pos = 0;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing bytes at offset {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b'{') => parse_obj(b, pos),
+        Some(b'[') => parse_arr(b, pos),
+        Some(b'"') => parse_str(b, pos).map(Json::Str),
+        Some(b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(_) => parse_num(b, pos),
+        None => Err("unexpected end of input".to_string()),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at offset {pos}", pos = *pos))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .map(Json::Num)
+        .ok_or_else(|| format!("bad number at offset {start}"))
+}
+
+fn parse_str(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = Vec::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return String::from_utf8(out).map_err(|_| "bad utf8".to_string());
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push(b'"'),
+                    Some(b'\\') => out.push(b'\\'),
+                    Some(b'/') => out.push(b'/'),
+                    Some(b'n') => out.push(b'\n'),
+                    Some(b't') => out.push(b'\t'),
+                    Some(b'r') => out.push(b'\r'),
+                    Some(b'b') => out.push(0x08),
+                    Some(b'f') => out.push(0x0c),
+                    Some(b'u') => {
+                        // \uXXXX: decode the BMP code point (no
+                        // surrogate pairing — bench names are ASCII).
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .and_then(|h| u32::from_str_radix(h, 16).ok())
+                            .ok_or("bad \\u escape")?;
+                        let c = char::from_u32(hex).ok_or("bad \\u code point")?;
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at offset {pos}", pos = *pos)),
+                }
+                *pos += 1;
+            }
+            c => {
+                out.push(c);
+                *pos += 1;
+            }
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    *pos += 1; // '['
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(format!("expected ',' or ']' at offset {pos}", pos = *pos)),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    *pos += 1; // '{'
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b'"') {
+            return Err(format!("expected key at offset {pos}", pos = *pos));
+        }
+        let key = parse_str(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return Err(format!("expected ':' at offset {pos}", pos = *pos));
+        }
+        *pos += 1;
+        fields.push((key, parse_value(b, pos)?));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => return Err(format!("expected ',' or '}}' at offset {pos}", pos = *pos)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bench_doc(median: f64, wall: f64, hit: f64) -> Json {
+        parse_json(&format!(
+            r#"{{
+              "schema": "niyama-scheduler-hot-path-v1",
+              "cases": [
+                {{"name": "niyama.plan q=64", "median_us": {median}, "p99_us": {p99}, "iters_per_s": 1000.0}}
+              ],
+              "end_to_end": [
+                {{"name": "cluster.r8.w4", "requests": 100, "iterations": 5000, "wall_s": {wall}, "iters_per_s": 50.0}}
+              ],
+              "sessions": [
+                {{"name": "sessions.multi_turn", "hit_rate": {hit}, "prefill_tokens_saved": 9000, "wall_s": 1.0}}
+              ]
+            }}"#,
+            p99 = median * 2.0,
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn parser_handles_the_bench_schema_shapes() {
+        let j = parse_json(
+            r#"{"a": [1, -2.5, 1e3], "b": {"c": "x\n\"y\""}, "d": true, "e": null}"#,
+        )
+        .unwrap();
+        let Json::Obj(f) = &j else { panic!() };
+        assert_eq!(
+            f[0].1,
+            Json::Arr(vec![Json::Num(1.0), Json::Num(-2.5), Json::Num(1000.0)])
+        );
+        assert_eq!(num(&Json::Obj(vec![("k".into(), Json::Num(7.0))]), "k"), Some(7.0));
+        assert!(parse_json("{\"open\": [").is_err());
+        assert!(parse_json("[] trailing").is_err());
+    }
+
+    #[test]
+    fn identity_diff_is_clean() {
+        let base = bench_doc(100.0, 10.0, 0.8);
+        let d = diff(&base, &bench_doc(100.0, 10.0, 0.8), 25.0);
+        assert!(d.regressions.is_empty(), "{:?}", d.regressions);
+        assert_eq!(d.compared, 5, "all five gated metrics compared");
+    }
+
+    #[test]
+    fn seeded_regression_fires_per_direction() {
+        let base = bench_doc(100.0, 10.0, 0.8);
+        // median 100 -> 200 us: +100% on a lower-is-better metric.
+        let d = diff(&base, &bench_doc(200.0, 10.0, 0.8), 25.0);
+        assert!(d.regressions.contains(&"cases/niyama.plan q=64.median_us".to_string()));
+        // hit_rate 0.8 -> 0.4: -50% on a higher-is-better metric.
+        let d = diff(&base, &bench_doc(100.0, 10.0, 0.4), 25.0);
+        assert_eq!(d.regressions, ["sessions/sessions.multi_turn.hit_rate"]);
+    }
+
+    #[test]
+    fn improvements_and_sub_threshold_noise_pass() {
+        let base = bench_doc(100.0, 10.0, 0.8);
+        // Everything better: never a regression.
+        assert!(diff(&base, &bench_doc(50.0, 5.0, 0.95), 25.0).regressions.is_empty());
+        // 20% worse under a 25% threshold: noise, not a regression.
+        assert!(diff(&base, &bench_doc(120.0, 12.0, 0.8), 25.0).regressions.is_empty());
+        // Same 20% under a 10% threshold: now gated.
+        assert!(!diff(&base, &bench_doc(120.0, 12.0, 0.8), 10.0).regressions.is_empty());
+    }
+
+    #[test]
+    fn rows_missing_from_the_baseline_are_skipped_not_failed() {
+        let base = bench_doc(100.0, 10.0, 0.8);
+        let mut cand = bench_doc(100.0, 10.0, 0.8);
+        if let Json::Obj(fields) = &mut cand {
+            if let Some(Json::Arr(cases)) =
+                fields.iter_mut().find(|(k, _)| k == "cases").map(|(_, v)| v)
+            {
+                cases.push(
+                    parse_json(
+                        r#"{"name": "brand.new.case", "median_us": 1e9, "p99_us": 1e9, "iters_per_s": 0.001}"#,
+                    )
+                    .unwrap(),
+                );
+            }
+        }
+        let d = diff(&base, &cand, 25.0);
+        assert!(d.regressions.is_empty());
+        assert!(d.skipped >= 2, "both gated metrics of the new row skip");
+        assert!(d.notes.iter().any(|n| n.contains("brand.new.case")));
+    }
+
+    #[test]
+    fn schema_only_baseline_is_neutral() {
+        // The checked-in baseline from the toolchain-less container:
+        // empty cases/end_to_end, no sessions/profiles keys at all.
+        let base = parse_json(
+            r#"{"schema": "niyama-scheduler-hot-path-v1", "cases": [], "end_to_end": []}"#,
+        )
+        .unwrap();
+        let d = diff(&base, &bench_doc(100.0, 10.0, 0.8), 25.0);
+        assert!(d.regressions.is_empty());
+        assert_eq!(d.compared, 0);
+        assert_eq!(d.skipped, 5, "every candidate row skips for lack of a baseline twin");
+    }
+
+    #[test]
+    fn removed_rows_are_noted_not_gated() {
+        let base = bench_doc(100.0, 10.0, 0.8);
+        let cand = parse_json(
+            r#"{"schema": "niyama-scheduler-hot-path-v1", "cases": [], "end_to_end": [], "sessions": []}"#,
+        )
+        .unwrap();
+        let d = diff(&base, &cand, 25.0);
+        assert!(d.regressions.is_empty());
+        assert!(d.notes.iter().any(|n| n.contains("removed in candidate")));
+    }
+
+    #[test]
+    fn zero_baseline_values_cannot_divide_the_gate() {
+        let base = bench_doc(0.0, 10.0, 0.8);
+        let d = diff(&base, &bench_doc(500.0, 10.0, 0.8), 25.0);
+        assert!(d.regressions.iter().all(|r| !r.contains("median_us")));
+    }
+}
